@@ -1,0 +1,40 @@
+//! Optimizer shoot-out on the bundled preset — a quick Table 2 preview.
+//!
+//! ```bash
+//! cargo run --release --example compare_optimizers [-- steps]
+//! ```
+
+use alice_racs::bench::{bench_cfg, run_one, TablePrinter};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    let opts = ["sgd", "adam", "galore", "racs", "alice"];
+    println!("comparing {opts:?} for {steps} steps each…\n");
+    let mut table = TablePrinter::new(&["optimizer", "final eval ppl", "tokens/s"]);
+    let mut results = Vec::new();
+    for opt in opts {
+        let mut cfg = bench_cfg(opt, "compare", steps);
+        cfg.out_dir = format!("runs/compare/{opt}");
+        let s = run_one(cfg)?;
+        table.row(vec![
+            opt.into(),
+            format!("{:.2}", (s.final_eval_loss.unwrap_or(f32::NAN) as f64).exp()),
+            format!("{:.0}", s.tokens_per_sec),
+        ]);
+        results.push(s);
+    }
+    table.print();
+    // the paper's headline, in miniature
+    let adam = results.iter().find(|s| s.optimizer == "adam").unwrap();
+    let alice = results.iter().find(|s| s.optimizer == "alice").unwrap();
+    if let (Some(a), Some(b)) = (adam.final_eval_loss, alice.final_eval_loss) {
+        println!(
+            "\nAlice final loss {b:.4} vs Adam {a:.4} — {}",
+            if b < a { "Alice wins (paper shape holds)" } else { "unexpected: check hyperparams" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! End-to-end pre-training driver — the full-system validation run
+//! (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Trains the AOT-lowered transformer for several hundred steps on the
+//! synthetic corpus with a configurable optimizer, logging the loss curve,
+//! eval perplexity, throughput, and the coordinator phase profile. All
+//! three layers are exercised: Pallas kernels (inside the lowered HLO),
+//! the JAX model graph, and the rust coordinator.
+//!
+//! ```bash
+//! make artifacts                       # nano preset by default
+//! cargo run --release --example e2e_pretrain -- --opt alice --steps 300
+//! # bigger model (regenerates artifacts for the `small`/`large` preset):
+//! make artifacts PRESET=small && cargo run --release --example e2e_pretrain
+//! ```
+
+use alice_racs::cli::{config_from_args, Args};
+use alice_racs::coordinator::{run_with, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let mut cfg = config_from_args(&args)?;
+    if args.get("opt").is_none() {
+        cfg = cfg.tuned_for("alice");
+    }
+    if args.get("steps").is_none() {
+        cfg.steps = 300;
+    }
+    if args.get("out").is_none() {
+        cfg.out_dir = format!("runs/e2e/{}", cfg.optimizer);
+    }
+    cfg.eval_every = cfg.eval_every.min(cfg.steps / 6).max(1);
+    cfg.log_every = 10;
+    cfg.hp.rank = cfg.hp.rank.min(16);
+    cfg.hp.interval = cfg.hp.interval.min(50);
+
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let model = trainer.engine.manifest.model.clone();
+    println!(
+        "e2e: preset {} ({} params), optimizer {}, {} steps, batch {}x{}",
+        model.preset, model.num_params, cfg.optimizer, cfg.steps, model.batch, model.seq
+    );
+
+    let summary = run_with(&mut trainer)?;
+
+    let first = summary.eval_history.first();
+    let last = summary.eval_history.last();
+    println!("\n==== E2E SUMMARY ====");
+    println!("optimizer           : {}", summary.optimizer);
+    println!("steps               : {}", cfg.steps);
+    println!("tokens              : {}", summary.tokens);
+    println!("throughput          : {:.0} tokens/s", summary.tokens_per_sec);
+    println!("final train loss    : {:.4}", summary.last_train_loss);
+    if let (Some(&(s0, l0)), Some(&(s1, l1))) = (first, last) {
+        println!("eval loss           : {l0:.4} (step {s0}) → {l1:.4} (step {s1})");
+        println!("eval ppl            : {:.2} → {:.2}", (l0 as f64).exp(), (l1 as f64).exp());
+        assert!(l1 < l0, "e2e run must improve eval loss");
+    }
+    println!("loss curve          : {}/train.csv", cfg.out_dir);
+    println!("phase profile:\n{}", trainer.profile.report());
+    Ok(())
+}

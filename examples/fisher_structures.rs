@@ -1,0 +1,78 @@
+//! The paper's framework in action: solve Eq. (2) for every structural
+//! family on the same gradient stream and print the Frobenius
+//! approximation error — the generality ladder of Table 1 — plus the
+//! corresponding square-root NGD updates.
+//!
+//! ```bash
+//! cargo run --release --example fisher_structures
+//! ```
+
+use alice_racs::bench::TablePrinter;
+use alice_racs::fisher::{objective, solve, Structure};
+use alice_racs::linalg::{vec_cols, Mat};
+use alice_racs::util::Pcg;
+
+fn dense_fim(grads: &[Mat]) -> Mat {
+    let mn = grads[0].rows * grads[0].cols;
+    let mut f = Mat::zeros(mn, mn);
+    for g in grads {
+        let v = vec_cols(g);
+        for i in 0..mn {
+            for j in 0..mn {
+                f.data[i * mn + j] += v[i] * v[j] / grads.len() as f32;
+            }
+        }
+    }
+    f
+}
+
+fn main() {
+    let (m, n, k) = (6usize, 8usize, 40usize);
+    let mut rng = Pcg::seeded(2025);
+    // correlated gradient stream (shared left factor) so structure matters
+    let base = Mat::from_vec(m, m, rng.normal_vec(m * m, 1.0));
+    let grads: Vec<Mat> = (0..k)
+        .map(|_| base.matmul(&Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0))))
+        .collect();
+    let f = dense_fim(&grads);
+    let f_norm = f.fro_norm_sq();
+
+    println!("layer {m}x{n}, {k} gradient samples, ‖F‖²_F = {f_norm:.1}\n");
+    let mut table = TablePrinter::new(&[
+        "structure (paper section)", "optimizer", "‖F̃−F‖²_F", "relative",
+    ]);
+    let cases = [
+        (Structure::Diag, "Diag_v(v) (Prop. 1)", "Adam"),
+        (Structure::Normalization, "S ⊗ Iₘ (Prop. 2)", "column norm."),
+        (Structure::Whitening, "Iₙ ⊗ M (Prop. 2)", "whitening"),
+        (Structure::TwoSidedDiag, "S ⊗ Q (Prop. 3)", "RACS"),
+        (Structure::KronSqrt, "Rₙ^½ ⊗ Lₘ^½ (Thm 3.1)", "Shampoo"),
+        (Structure::BlockDiagSharedEig, "Diag_B(UDᵢUᵀ) (Thm 3.2)", "Eigen-Adam"),
+    ];
+    for (s, label, opt) in cases {
+        let sol = solve(s, &grads);
+        let err = objective(&sol.assemble(m, n), &f);
+        table.row(vec![
+            label.into(),
+            opt.into(),
+            format!("{err:.1}"),
+            format!("{:.3}", err / f_norm),
+        ]);
+    }
+    table.print();
+
+    // show the square-root NGD updates those solutions induce
+    println!("\nsquare-root NGD updates on a fresh gradient (max |Δ|):");
+    let g = base.matmul(&Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0)));
+    for (s, label, _) in cases {
+        let sol = solve(s, &grads);
+        let upd = sol.sqrt_ngd(&g);
+        println!("  {label:<28} -> {:.4}", upd.max_abs());
+    }
+    println!(
+        "\nReading: more general structures (down the table) fit F better; \
+         the paper's design question is how much of that generality you \
+         can afford — RACS picks S ⊗ Q, Alice makes Diag_B(UDᵢUᵀ) \
+         affordable via the low-rank extension."
+    );
+}

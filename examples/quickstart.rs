@@ -1,0 +1,30 @@
+//! Quickstart: load the AOT artifacts, train the bundled preset with
+//! Alice for 60 steps, print the loss curve.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use alice_racs::config::RunConfig;
+use alice_racs::coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default().tuned_for("alice");
+    cfg.artifacts = "artifacts".into();
+    cfg.out_dir = "runs/quickstart".into();
+    cfg.steps = 60;
+    cfg.eval_every = 20;
+    cfg.log_every = 5;
+    cfg.hp.rank = 16;
+    cfg.hp.leading = 6;
+    cfg.hp.interval = 20;
+
+    let summary = coordinator::run(cfg)?;
+    println!(
+        "\nquickstart done: final eval ppl {:.2} at {:.0} tokens/s",
+        (summary.final_eval_loss.unwrap_or(f32::NAN) as f64).exp(),
+        summary.tokens_per_sec
+    );
+    println!("curves: runs/quickstart/{{train,eval}}.csv");
+    Ok(())
+}

@@ -1,0 +1,375 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the rust
+coordinator (L3).
+
+Interchange is HLO *text*, not serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the XLA 0.5.1 runtime inside
+the rust ``xla`` crate rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced per (model preset, optimizer set):
+
+* ``grad_step``            (tokens, params…) → (loss, grads…)
+* ``eval_loss``            (tokens, params…) → (loss,)
+* ``train_step_<opt>``     (tokens, lr, t, params…, state…) →
+                           (loss, params'…, state'…)     — fused hot path
+* ``refresh_<opt>``        (tokens, seed, params…, state…) → (state'…)
+                           — the every-K-steps projection update
+* ``opt_update_<opt>_<m>x<n>`` (g, lr, t, state…) → (w_delta, state'…)
+                           — single-tensor update, exercises L1 kernels
+                             standalone from rust
+
+plus ``manifest.json`` pinning shapes, orderings, and hyperparameters.
+
+Python runs ONCE (``make artifacts``); it is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optimizers as O
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_list(a) -> list:
+    return list(a.shape)
+
+
+def _classify_init(a) -> str:
+    """Describe an init array so the rust side can reproduce it without
+    shipping the data: 'zeros' | 'eye' (identity prefix) | 'eye_scale:<c>'.
+    Falls back to 'zeros' only if the array really is all-zero."""
+    import numpy as np
+
+    arr = np.asarray(a)
+    if not arr.any():
+        return "zeros"
+    if arr.ndim == 2:
+        m, n = arr.shape
+        if np.array_equal(arr, np.eye(m, n, dtype=arr.dtype)):
+            return "eye"
+        if m == n:
+            d = np.diagonal(arr)
+            if np.allclose(arr, np.diag(d)) and np.allclose(d, d[0]):
+                return f"eye_scale:{float(d[0])!r}"
+    raise ValueError(f"unclassifiable state init (shape {arr.shape})")
+
+
+class Bundle:
+    """Accumulates artifacts + manifest entries for one preset."""
+
+    def __init__(self, cfg: M.ModelConfig, hp: O.HP, out_dir: str,
+                 last_layer_adam_fullrank: bool = True):
+        self.cfg = cfg
+        self.hp = hp
+        self.out = out_dir
+        self.entries: List[dict] = []
+        self.specs = M.param_specs(cfg)
+        self.last_layer_adam_fullrank = last_layer_adam_fullrank
+        os.makedirs(out_dir, exist_ok=True)
+
+    # ---------------------------------------------------------- helpers ---
+    def _write(self, name: str, lowered, inputs: List[dict],
+               outputs: List[dict], kind: str, extra: dict | None = None):
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": os.path.basename(path), "kind": kind,
+                 "inputs": inputs, "outputs": outputs}
+        if extra:
+            entry.update(extra)
+        self.entries.append(entry)
+        print(f"  wrote {name}.hlo.txt ({len(text) // 1024} KiB)")
+
+    def _param_inputs(self) -> List[dict]:
+        return [{"name": n, "dtype": "f32", "shape": list(s)}
+                for n, s, _ in self.specs]
+
+    def _tok_input(self) -> dict:
+        return {"name": "tokens", "dtype": "i32",
+                "shape": [self.cfg.batch, self.cfg.seq]}
+
+    # ----------------------------------------------- model-level steps ---
+    def emit_grad_step(self):
+        cfg = self.cfg
+
+        def fn(tokens, *params):
+            loss, grads = M.grad_step(list(params), tokens, cfg)
+            return (loss, *grads)
+
+        lowered = jax.jit(fn).lower(
+            _spec((cfg.batch, cfg.seq), I32),
+            *[_spec(s) for _, s, _ in self.specs])
+        outs = [{"name": "loss", "dtype": "f32", "shape": []}] + [
+            {"name": f"grad.{n}", "dtype": "f32", "shape": list(s)}
+            for n, s, _ in self.specs]
+        self._write("grad_step", lowered,
+                    [self._tok_input()] + self._param_inputs(), outs, "grad")
+
+    def emit_eval_loss(self):
+        cfg = self.cfg
+
+        def fn(tokens, *params):
+            return (M.loss_fn(list(params), tokens, cfg),)
+
+        lowered = jax.jit(fn).lower(
+            _spec((cfg.batch, cfg.seq), I32),
+            *[_spec(s) for _, s, _ in self.specs])
+        self._write("eval_loss", lowered,
+                    [self._tok_input()] + self._param_inputs(),
+                    [{"name": "loss", "dtype": "f32", "shape": []}], "eval")
+
+    # -------------------------------------------------- fused optimizer ---
+    def _routing(self, opt: str):
+        """Per-param optimizer routing (paper App. F.2 protocol):
+        matrix params → candidate; 1-D params → Adam; lm-head → Adam for
+        full-rank candidates, candidate itself for low-rank ones."""
+        low_rank = opt in ("galore", "fira", "alice", "alice0", "apollo_mini")
+        routes = []
+        for name, shape, _ in self.specs:
+            if len(shape) < 2:
+                routes.append("adam")
+            elif name == "lm_head" and self.last_layer_adam_fullrank \
+                    and not low_rank:
+                routes.append("adam")
+            else:
+                routes.append(opt)
+        return routes
+
+    def _state_template(self, opt: str):
+        """[(param_idx, route, state_dict_template)] in flat order."""
+        out = []
+        for idx, (name, shape, _) in enumerate(self.specs):
+            route = self._routing(opt)[idx]
+            if route == "adam" and len(shape) < 2:
+                st = O.adam_init(shape, self.hp)
+            elif route == "adam":
+                st = O.adam_init(shape, self.hp)
+            else:
+                st = O.init_state(route, shape, self.hp)
+            out.append((idx, route, st))
+        return out
+
+    def _flat_state_specs(self, opt: str) -> List[dict]:
+        flat = []
+        for idx, route, st in self._state_template(opt):
+            pname = self.specs[idx][0]
+            for k, a in st.items():
+                flat.append({"name": f"state.{pname}.{k}", "dtype": "f32",
+                             "shape": _shape_list(a), "param": pname,
+                             "key": k, "route": route,
+                             "init": _classify_init(a)})
+        return flat
+
+    def emit_train_step(self, opt: str):
+        cfg, hp = self.cfg, self.hp
+        tmpl = self._state_template(opt)
+        routes = [r for _, r, _ in tmpl]
+        keys = [list(st.keys()) for _, _, st in tmpl]
+
+        def fn(tokens, lr, t, *flat):
+            np_ = len(self.specs)
+            params = list(flat[:np_])
+            pos = np_
+            states = []
+            for ks in keys:
+                states.append({k: flat[pos + i] for i, k in enumerate(ks)})
+                pos += len(ks)
+            loss, grads = M.grad_step(params, tokens, cfg)
+            new_params, new_flat_states = [], []
+            for p, g, st, route in zip(params, grads, states, routes):
+                if route == "adam":
+                    if p.ndim < 2:
+                        m2 = hp.b1 * st["m"] + (1 - hp.b1) * g
+                        v2 = hp.b2 * st["v"] + (1 - hp.b2) * g * g
+                        bc1, bc2 = O._bc(hp, t)
+                        delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + hp.eps)
+                        st2 = {"m": m2, "v": v2}
+                    else:
+                        delta, st2 = O.adam_update(g, st, hp, t)
+                else:
+                    delta, st2 = O.update(route, g, st, hp, t)
+                new_params.append(p - lr * delta)
+                new_flat_states.extend(st2[k] for k in st2)
+            return (loss, *new_params, *new_flat_states)
+
+        state_specs = self._flat_state_specs(opt)
+        in_specs = [_spec((cfg.batch, cfg.seq), I32), _spec((), F32),
+                    _spec((), F32)]
+        in_specs += [_spec(s) for _, s, _ in self.specs]
+        in_specs += [_spec(e["shape"]) for e in state_specs]
+        lowered = jax.jit(fn).lower(*in_specs)
+        inputs = ([self._tok_input(),
+                   {"name": "lr", "dtype": "f32", "shape": []},
+                   {"name": "t", "dtype": "f32", "shape": []}]
+                  + self._param_inputs() + state_specs)
+        outputs = ([{"name": "loss", "dtype": "f32", "shape": []}]
+                   + self._param_inputs() + state_specs)
+        self._write(f"train_step_{opt}", lowered, inputs, outputs,
+                    "train_step", {"optimizer": opt, "routes": routes})
+
+    def emit_refresh(self, opt: str):
+        if O.OPTIMIZERS[opt].refresh is None:
+            return
+        cfg, hp = self.cfg, self.hp
+        tmpl = self._state_template(opt)
+        routes = [r for _, r, _ in tmpl]
+        keys = [list(st.keys()) for _, _, st in tmpl]
+
+        def fn(tokens, seed, *flat):
+            np_ = len(self.specs)
+            params = list(flat[:np_])
+            pos = np_
+            states = []
+            for ks in keys:
+                states.append({k: flat[pos + i] for i, k in enumerate(ks)})
+                pos += len(ks)
+            _, grads = M.grad_step(params, tokens, cfg)
+            new_flat = []
+            for i, (g, st, route) in enumerate(zip(grads, states, routes)):
+                if route == opt:
+                    st = O.refresh(route, g, st, hp, seed + i)
+                new_flat.extend(st[k] for k in st)
+            return tuple(new_flat)
+
+        state_specs = self._flat_state_specs(opt)
+        in_specs = [_spec((cfg.batch, cfg.seq), I32), _spec((), I32)]
+        in_specs += [_spec(s) for _, s, _ in self.specs]
+        in_specs += [_spec(e["shape"]) for e in state_specs]
+        lowered = jax.jit(fn).lower(*in_specs)
+        inputs = ([self._tok_input(),
+                   {"name": "seed", "dtype": "i32", "shape": []}]
+                  + self._param_inputs() + state_specs)
+        self._write(f"refresh_{opt}", lowered, inputs, state_specs,
+                    "refresh", {"optimizer": opt})
+
+    # ------------------------------------------- single-tensor updates ---
+    def emit_opt_update(self, opt: str, shape):
+        hp = self.hp
+        st0 = O.init_state(opt, shape, hp)
+        ks = list(st0.keys())
+
+        def fn(g, lr, t, *flat):
+            st = {k: flat[i] for i, k in enumerate(ks)}
+            delta, st2 = O.update(opt, g, st, hp, t)
+            return (lr * delta, *[st2[k] for k in ks])
+
+        in_specs = [_spec(shape), _spec((), F32), _spec((), F32)]
+        in_specs += [_spec(st0[k].shape) for k in ks]
+        lowered = jax.jit(fn).lower(*in_specs)
+        name = f"opt_update_{opt}_{shape[0]}x{shape[1]}"
+        sspecs = [{"name": f"state.{k}", "dtype": "f32",
+                   "shape": _shape_list(st0[k]), "key": k} for k in ks]
+        inputs = ([{"name": "g", "dtype": "f32", "shape": list(shape)},
+                   {"name": "lr", "dtype": "f32", "shape": []},
+                   {"name": "t", "dtype": "f32", "shape": []}] + sspecs)
+        outputs = ([{"name": "w_delta", "dtype": "f32",
+                     "shape": list(shape)}] + sspecs)
+        self._write(name, lowered, inputs, outputs, "opt_update",
+                    {"optimizer": opt, "shape": list(shape)})
+
+    # --------------------------------------------------------- manifest ---
+    def manifest(self, opts: List[str]) -> dict:
+        cfg = self.cfg
+        return {
+            "version": 1,
+            "model": {"preset": cfg.name, "vocab": cfg.vocab,
+                      "dim": cfg.dim, "inter": cfg.inter,
+                      "heads": cfg.heads, "layers": cfg.layers,
+                      "seq": cfg.seq, "batch": cfg.batch,
+                      "num_params": M.num_params(cfg)},
+            "params": [{"name": n, "shape": list(s), "init_std": std}
+                       for n, s, std in self.specs],
+            "optimizers": {
+                o: {"states": self._flat_state_specs(o),
+                    "routes": self._routing(o),
+                    "has_refresh": O.OPTIMIZERS[o].refresh is not None}
+                for o in opts},
+            "hyperparams": {k: getattr(self.hp, k)
+                            for k in self.hp.__dataclass_fields__},
+            "artifacts": self.entries,
+        }
+
+
+def distinct_matrix_shapes(cfg: M.ModelConfig):
+    seen, out = set(), []
+    for _, s, _ in M.param_specs(cfg):
+        if len(s) == 2 and s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--opts", default="adam,racs,alice",
+                    help="comma list for fused/refresh/update artifacts")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--leading", type=int, default=10)
+    ap.add_argument("--interval", type=int, default=100)
+    ap.add_argument("--skip-fused", action="store_true")
+    ap.add_argument("--ref-kernels", action="store_true",
+                    help="lower with pure-jnp oracles instead of "
+                         "interpret-mode Pallas (CPU perf; see "
+                         "EXPERIMENTS.md §Perf L2-1)")
+    ap.add_argument("--skip-updates", action="store_true")
+    args = ap.parse_args()
+
+    if args.ref_kernels:
+        from . import kernels
+
+        kernels.set_ref_mode(True)
+        print("[aot] ref-kernel mode: Pallas bypassed in lowered HLO")
+    cfg = M.PRESETS[args.preset]
+    hp = O.HP(rank=args.rank, leading=args.leading, interval=args.interval,
+              b2=0.9 if "alice" in args.opts else 0.999)
+    opts = [o.strip() for o in args.opts.split(",") if o.strip()]
+    for o in opts:
+        if o not in O.OPTIMIZERS:
+            raise SystemExit(f"unknown optimizer {o!r}")
+
+    b = Bundle(cfg, hp, args.out)
+    print(f"[aot] preset={cfg.name} ({M.num_params(cfg):,} params) "
+          f"opts={opts}")
+    b.emit_grad_step()
+    b.emit_eval_loss()
+    for o in opts:
+        if not args.skip_fused:
+            b.emit_train_step(o)
+            b.emit_refresh(o)
+        if not args.skip_updates:
+            for shape in distinct_matrix_shapes(cfg):
+                b.emit_opt_update(o, shape)
+    man = b.manifest(opts)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"[aot] manifest.json with {len(b.entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

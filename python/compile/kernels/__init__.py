@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernels for the paper's optimizer hot spots.
+
+Every kernel has a pure-jnp oracle of the same name in ``ref`` and is
+validated against it by ``python/tests/test_kernels.py``. All kernels lower
+with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); the
+BlockSpec tiling is nevertheless written for TPU VMEM — see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import ref  # noqa: F401
+from .adam_update import adam_fused  # noqa: F401
+from .compensation import compensation, compensation_pvec  # noqa: F401
+from .eigen_rotate import second_moment  # noqa: F401
+from .matmul import matmul, project, reconstruct  # noqa: F401
+from .newton_schulz import (  # noqa: F401
+    inv_fourth_root,
+    newton_schulz,
+    ns_step,
+    whiten,
+)
+from .racs_scale import (  # noqa: F401
+    racs_apply,
+    racs_col_stats,
+    racs_fixed_point,
+    racs_row_stats,
+)
+
+
+# --------------------------------------------------------------------------
+# Ref-mode switch (EXPERIMENTS.md §Perf L2-1): interpret-mode Pallas inside
+# a fused train step costs ~3-10x on CPU PJRT (it exists for TPU tiling
+# structure + correctness, not CPU speed). `set_ref_mode(True)` rebinds the
+# exported kernel names to their pure-jnp oracles before AOT lowering;
+# `aot.py --ref-kernels` uses it for CPU-production bundles. The Pallas
+# versions stay the default and are always exercised by the standalone
+# `opt_update_*` artifacts and the pytest suite.
+_PALLAS_IMPLS = {
+    "adam_fused": adam_fused,
+    "compensation": compensation,
+    "compensation_pvec": compensation_pvec,
+    "second_moment": second_moment,
+    "matmul": matmul,
+    "newton_schulz": newton_schulz,
+    "ns_step": ns_step,
+    "whiten": whiten,
+    "inv_fourth_root": inv_fourth_root,
+    "racs_apply": racs_apply,
+    "racs_col_stats": racs_col_stats,
+    "racs_fixed_point": racs_fixed_point,
+    "racs_row_stats": racs_row_stats,
+}
+
+
+def set_ref_mode(enabled: bool) -> None:
+    """Swap the module-level kernel bindings between Pallas and ref."""
+    import sys
+
+    mod = sys.modules[__name__]
+    src = ref if enabled else None
+    for name, pallas_fn in _PALLAS_IMPLS.items():
+        impl = getattr(ref, name) if enabled else pallas_fn
+        setattr(mod, name, impl)
+    # project/reconstruct are thin matmul wrappers
+    if enabled:
+        mod.project = lambda u, g: ref.matmul(u.T, g)
+        mod.reconstruct = lambda u, s: ref.matmul(u, s)
+    else:
+        from .matmul import project as _p, reconstruct as _r
+        mod.project = _p
+        mod.reconstruct = _r
+    del src

@@ -1,0 +1,43 @@
+"""Shared tiling utilities for the Pallas kernels.
+
+Block sizes are chosen for TPU VMEM (see DESIGN.md §Hardware-Adaptation):
+128x128 f32 tiles are 64 KiB per operand, so a 3-operand kernel with double
+buffering stays well under the ~16 MiB VMEM budget. Kernels require
+block-aligned shapes; the public wrappers pad with zeros (exact for the
+squared-reduction and elementwise kernels used here) and slice back.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Default VMEM tile. Rows x cols of an f32 tile = 64 KiB.
+BLOCK = 128
+INTERPRET = True
+
+
+def ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+def pad2(a: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to (ceil(m/bm)*bm, ceil(n/bn)*bn)."""
+    m, n = a.shape
+    pm, pn = ceil_to(m, bm) - m, ceil_to(n, bn) - n
+    if pm == 0 and pn == 0:
+        return a
+    return jnp.pad(a, ((0, pm), (0, pn)))
+
+
+def pad1(a: jnp.ndarray, b: int) -> jnp.ndarray:
+    n = a.shape[0]
+    p = ceil_to(n, b) - n
+    return a if p == 0 else jnp.pad(a, (0, p))
+
+
+def pick_block(dim: int, pref: int = BLOCK) -> int:
+    """Use the preferred tile unless the dim is smaller (tiny test shapes)."""
+    return min(pref, max(8, 1 << (dim - 1).bit_length())) if dim < pref else pref

@@ -1,0 +1,80 @@
+"""Alice compensation kernel (Algorithm 3 / Theorem 5.1).
+
+C = √(m−r) · (G − UUᵀG) · diag(p)^-½ — the optimal structured square-root
+NGD on the complement FIM F̃_c. The projector residual G − UUᵀG arrives
+precomputed (two ``matmul`` kernel calls); this kernel fuses the subtraction
+and the per-column rsqrt scaling in one VMEM pass.
+
+Also provides ``compensation_pvec``: the reduction
+1ₘᵀG⊙² − 1ᵣᵀ(UᵀG)⊙² feeding the EMA `p` (Alg. 3 line 2), as a Pallas
+column-reduction sharing the tiling of racs_col_stats.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import _util as U
+
+EPS = 1e-8
+
+
+def _comp_kernel(g_ref, pr_ref, p_ref, c_ref, o_ref):
+    scale = c_ref[0]
+    p = p_ref[...][None, :]
+    o_ref[...] = scale * (g_ref[...] - pr_ref[...]) * jax.lax.rsqrt(p + EPS)
+
+
+def compensation(g: jnp.ndarray, p_proj: jnp.ndarray, p_vec: jnp.ndarray,
+                 scale) -> jnp.ndarray:
+    """Matches ``ref.compensation``. `p_proj` = UUᵀG, `scale` = √(m−r)."""
+    m, n = g.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    gp, prp = U.pad2(g, bm, bn), U.pad2(p_proj, bm, bn)
+    pv = jnp.concatenate([p_vec, jnp.ones(gp.shape[1] - n, p_vec.dtype)])
+    c = jnp.asarray([scale], dtype=g.dtype)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _comp_kernel,
+        grid=(gp.shape[0] // bm, gp.shape[1] // bn),
+        in_specs=[tile, tile,
+                  pl.BlockSpec((bn,), lambda i, j: (j,)),
+                  pl.BlockSpec((1,), lambda i, j: (0,))],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(gp.shape, g.dtype),
+        interpret=U.INTERPRET,
+    )(gp, prp, pv, c)
+    return out[:m, :n]
+
+
+def _pvec_kernel(g_ref, o_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    o_ref[...] += jnp.sum(g * g, axis=0)
+
+
+def _colsq(x: jnp.ndarray) -> jnp.ndarray:
+    m, n = x.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    xp = U.pad2(x, bm, bn)
+    out = pl.pallas_call(
+        _pvec_kernel,
+        grid=(xp.shape[1] // bn, xp.shape[0] // bm),
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[1],), x.dtype),
+        interpret=U.INTERPRET,
+    )(xp)
+    return out[:n]
+
+
+def compensation_pvec(g: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Matches ``ref.compensation_pvec``: 1ₘᵀG⊙² − 1ᵣᵀσ⊙² per column."""
+    return _colsq(g) - _colsq(sigma)

@@ -1,0 +1,42 @@
+"""Rotated-space second-moment kernel for Eigen-Adam / Alice (Eq. 12/13).
+
+Fuses v' = β₂v + (1-β₂)σ⊙² with the normalized direction σ/√(v'+ε) in one
+elementwise VMEM pass over the projected gradient σ = UᵀG. Combined with
+``matmul.project`` / ``matmul.reconstruct`` this is the full Eigen-Adam
+update Mat(F̃^-½ ḡ) = U · (UᵀG)/√E[(UᵀG)⊙²].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import _util as U
+
+
+def _second_moment_kernel(s_ref, v_ref, c_ref, v_out, d_out):
+    b2, eps = c_ref[0], c_ref[1]
+    s = s_ref[...]
+    v2 = b2 * v_ref[...] + (1.0 - b2) * s * s
+    v_out[...] = v2
+    d_out[...] = s / (jnp.sqrt(v2) + eps)
+
+
+def second_moment(sigma: jnp.ndarray, v: jnp.ndarray, b2: float, eps: float):
+    """Matches ``ref.second_moment``: returns (v', σ/√(v'+ε))."""
+    m, n = sigma.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    sp, vp = U.pad2(sigma, bm, bn), U.pad2(v, bm, bn)
+    c = jnp.asarray([b2, eps], dtype=sigma.dtype)
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    shape = jax.ShapeDtypeStruct(sp.shape, sigma.dtype)
+    v_new, d = pl.pallas_call(
+        _second_moment_kernel,
+        grid=(sp.shape[0] // bm, sp.shape[1] // bn),
+        in_specs=[tile, tile, pl.BlockSpec((2,), lambda i, j: (0,))],
+        out_specs=(tile, tile),
+        out_shape=(shape, shape),
+        interpret=U.INTERPRET,
+    )(sp, vp, c)
+    return v_new[:m, :n], d[:m, :n]

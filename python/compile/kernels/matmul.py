@@ -1,0 +1,68 @@
+"""Blocked matmul Pallas kernel — the MXU-shaped workhorse.
+
+Every matrix-product hot spot of the optimizers routes through here:
+projections UᵀG and U·ω (Eigen-Adam / Alice / GaLore), the reconstruction
+UUᵀG for compensation, the Newton-Schulz iterations for whitening
+(Muon / SWAN / Shampoo roots), and the subspace-iteration step A·U.
+
+The grid is (M/bm, N/bn, K/bk) with K minor, so each output tile stays
+resident in VMEM across the contraction — the Pallas analogue of the paper's
+GPU threadblock accumulation. Zero padding is exact for matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import _util as U
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray,
+           bm: int | None = None, bn: int | None = None,
+           bk: int | None = None) -> jnp.ndarray:
+    """C = A @ B with VMEM tiling; matches ``ref.matmul``."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm = bm or U.pick_block(m)
+    bn = bn or U.pick_block(n)
+    bk = bk or U.pick_block(k)
+    ap = U.pad2(a, bm, bk)
+    bp = U.pad2(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=U.INTERPRET,
+    )(ap, bp)
+    return out[:m, :n].astype(a.dtype)
+
+
+def project(u: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """σ = Uᵀ G  (Alg. 4 line 11)."""
+    return matmul(u.T, g)
+
+
+def reconstruct(u: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """G̃ = U σ — the low-rank reconstructed gradient / update."""
+    return matmul(u, sigma)

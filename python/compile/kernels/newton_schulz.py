@@ -1,0 +1,53 @@
+"""Newton-Schulz square-root / inverse-square-root iteration (App. B.8).
+
+Substrate for the whitening operator (Sec. 3.3) used by the Muon and SWAN
+baselines and for Shampoo's inverse fourth roots — all expressed through the
+blocked ``matmul`` kernel so the contraction work lands on the MXU tiling.
+Five iterations suffice in practice (Huang et al. 2019).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+EPS = 1e-8
+
+
+def ns_step(y: jnp.ndarray, z: jnp.ndarray):
+    """One NS iteration; matches ``ref.ns_step``."""
+    n = y.shape[0]
+    t = 3.0 * jnp.eye(n, dtype=y.dtype) - matmul(z, y)
+    return 0.5 * matmul(y, t), 0.5 * matmul(t, z)
+
+
+def newton_schulz(a: jnp.ndarray, iters: int = 5):
+    """(√A, A^-½) for SPD A; matches ``ref.newton_schulz``."""
+    fro = jnp.sqrt(jnp.sum(a * a)) + EPS
+    y = a / fro
+    z = jnp.eye(a.shape[0], dtype=a.dtype)
+    for _ in range(iters):
+        y, z = ns_step(y, z)
+    return y * jnp.sqrt(fro), z / jnp.sqrt(fro)
+
+
+def whiten(g: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """(GGᵀ)^-½ G; matches ``ref.whiten``. The Muon/SWAN orthogonalizer."""
+    m = g.shape[0]
+    a = matmul(g, g.T) + 1e-4 * jnp.eye(m, dtype=g.dtype)
+    _, inv_sqrt = newton_schulz(a, iters)
+    return matmul(inv_sqrt, g)
+
+
+def inv_fourth_root(a: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """A^-¼ for SPD A via two nested NS runs: A^-¼ = (A^½)^-½.
+
+    Used by the Shampoo baseline (Alg. 5) to avoid LAPACK custom-calls that
+    the XLA 0.5.1 runtime cannot load — see DESIGN.md §Substitutions.
+    """
+    sqrt_a, _ = newton_schulz(a, iters)
+    m = a.shape[0]
+    sqrt_a = 0.5 * (sqrt_a + sqrt_a.T) + 1e-6 * jnp.eye(m, dtype=a.dtype)
+    _, inv_sqrt = newton_schulz(sqrt_a, iters)
+    return inv_sqrt

@@ -1,0 +1,140 @@
+"""Pallas kernels for RACS (Row and Column Scaled SGD), Algorithm 1.
+
+Three kernels:
+
+* ``racs_col_stats``  — s_raw[j] = Σ_i G²ᵢⱼ qᵢ   (Eq. 16, right scaling)
+* ``racs_row_stats``  — q_raw[i] = Σ_j G²ᵢⱼ sⱼ   (Eq. 16, left scaling)
+* ``racs_apply``      — Q^-½ G S^-½ · scale      (Alg. 1 line 8, one pass)
+
+The fixed-point loop itself (5 iterations per the paper) lives in
+``racs_fixed_point`` below and alternates the two stats kernels; the
+normalizations ‖q‖², ‖s‖² are O(m+n) and stay in plain jnp.
+
+Tiling: the stats kernels walk the grid with the reduction dimension as the
+*minor* (sequentially-iterated) axis and accumulate into a VMEM output block,
+the standard TPU reduction pattern. Zero padding is exact for squared
+reductions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import _util as U
+
+EPS = 1e-8
+
+
+def _col_stats_kernel(g_ref, q_ref, o_ref):
+    i = pl.program_id(1)  # reduction step over row-blocks
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    o_ref[...] += jnp.sum(g * g * q_ref[...][:, None], axis=0)
+
+
+def racs_col_stats(g: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """s_raw[j] = Σ_i G²ᵢⱼ qᵢ  — matches ``ref.racs_col_stats``."""
+    m, n = g.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    gp, qp = U.pad2(g, bm, bn), U.pad1(q, bm)
+    mp, np_ = gp.shape
+    out = pl.pallas_call(
+        _col_stats_kernel,
+        grid=(np_ // bn, mp // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), g.dtype),
+        interpret=U.INTERPRET,
+    )(gp, qp)
+    return out[:n]
+
+
+def _row_stats_kernel(g_ref, s_ref, o_ref):
+    j = pl.program_id(1)  # reduction step over column-blocks
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    o_ref[...] += jnp.sum(g * g * s_ref[...][None, :], axis=1)
+
+
+def racs_row_stats(g: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """q_raw[i] = Σ_j G²ᵢⱼ sⱼ  — matches ``ref.racs_row_stats``."""
+    m, n = g.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    gp, sp = U.pad2(g, bm, bn), U.pad1(s, bn)
+    mp, np_ = gp.shape
+    out = pl.pallas_call(
+        _row_stats_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), g.dtype),
+        interpret=U.INTERPRET,
+    )(gp, sp)
+    return out[:m]
+
+
+def _apply_kernel(g_ref, q_ref, s_ref, c_ref, o_ref):
+    g = g_ref[...]
+    q = q_ref[...][:, None]
+    s = s_ref[...][None, :]
+    o_ref[...] = c_ref[0] * g * jax.lax.rsqrt(q + EPS) * jax.lax.rsqrt(s + EPS)
+
+
+def racs_apply(g: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray,
+               scale=1.0) -> jnp.ndarray:
+    """Two-sided scaling Q^-½ G S^-½ · scale in a single fused pass.
+
+    Matches ``ref.racs_apply``. ``scale`` may fold in λ·η·α from Alg. 1.
+    """
+    m, n = g.shape
+    bm, bn = U.pick_block(m), U.pick_block(n)
+    gp = U.pad2(g, bm, bn)
+    # Pad the scaling vectors with ONES so rsqrt stays finite in dead tiles.
+    qp = jnp.concatenate([q, jnp.ones(gp.shape[0] - m, q.dtype)])
+    sp = jnp.concatenate([s, jnp.ones(gp.shape[1] - n, s.dtype)])
+    c = jnp.asarray([scale], dtype=g.dtype)
+    mp, np_ = gp.shape
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), g.dtype),
+        interpret=U.INTERPRET,
+    )(gp, qp, sp, c)
+    return out[:m, :n]
+
+
+def racs_fixed_point(g: jnp.ndarray, iters: int = 5):
+    """Proposition 3 fixed point via the Pallas stats kernels.
+
+    Matches ``ref.racs_fixed_point`` (q initialized to ones, 1-sample E[.]).
+    """
+    m, n = g.shape
+    q = jnp.ones((m,), g.dtype)
+    s = jnp.ones((n,), g.dtype)
+    for _ in range(iters):
+        s = racs_col_stats(g, q) / (jnp.sum(q * q) + EPS)
+        q = racs_row_stats(g, s) / (jnp.sum(s * s) + EPS)
+    return s, q

@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel in `racs_scale.py`,
+`adam_update.py`, `matmul.py`, `eigen_rotate.py`, `compensation.py` and
+`newton_schulz.py` is checked against the function of the same name here by
+`python/tests/test_kernels.py` (hypothesis sweeps over shapes / dtypes).
+
+All formulas reference the paper: Gong et al. 2025, "Towards Efficient
+Optimizer Design for LLM via Structured Fisher Approximation with a Low-Rank
+Extension" — equation / algorithm numbers quoted inline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------- RACS ----
+def racs_col_stats(g: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """s_raw[j] = sum_i G_ij^2 * q_i   (one half of the Eq. 16 fixed point).
+
+    With P = G^{.2} this is P^T q; dividing by ||q||^2 outside the kernel
+    gives the `s` update of Proposition 3.
+    """
+    return jnp.einsum("ij,i->j", g * g, q)
+
+
+def racs_row_stats(g: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """q_raw[i] = sum_j G_ij^2 * s_j   (the other half of Eq. 16)."""
+    return jnp.einsum("ij,j->i", g * g, s)
+
+
+def racs_fixed_point(g: jnp.ndarray, iters: int = 5):
+    """Proposition 3: iterate s,q to the principal singular pair of G^{.2}.
+
+    Returns (s, q) normalized the way Algorithm 1 consumes them (q init 1,
+    1-sample estimate of E[.]). Both stay strictly positive when G^{.2} is
+    positive (Perron-Frobenius).
+    """
+    m, n = g.shape
+    q = jnp.ones((m,), g.dtype)
+    s = jnp.ones((n,), g.dtype)
+    for _ in range(iters):
+        s = racs_col_stats(g, q) / (jnp.sum(q * q) + EPS)
+        q = racs_row_stats(g, s) / (jnp.sum(s * s) + EPS)
+    return s, q
+
+
+def racs_apply(g: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray,
+               scale: float | jnp.ndarray = 1.0) -> jnp.ndarray:
+    """Algorithm 1 line 8: G~ = Diag(q)^-1/2 G Diag(s)^-1/2, times a scale."""
+    return scale * g * jnp.power(q[:, None] + EPS, -0.5) \
+        * jnp.power(s[None, :] + EPS, -0.5)
+
+
+# ---------------------------------------------------------------- Adam ----
+def adam_fused(g, m, v, b1: float, b2: float, eps: float, bc1, bc2):
+    """One fused Adam step: EMA moments + bias-corrected update direction.
+
+    bc1 = 1 - b1^t and bc2 = 1 - b2^t are passed in (they depend on the step
+    counter which lives in the coordinator). Returns (m', v', delta).
+    """
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+    return m2, v2, delta
+
+
+# -------------------------------------------------------------- matmul ----
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain contraction; the Pallas twin is the blocked/tiled version."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------- rotated 2nd moment ----
+def second_moment(sigma: jnp.ndarray, v: jnp.ndarray, b2: float, eps: float):
+    """Eigen-Adam / Alice second moment in the rotated space (Eq. 13):
+    v' = b2 v + (1-b2) sigma^{.2};  out = sigma / sqrt(v' + eps).
+    Returns (v', out)."""
+    v2 = b2 * v + (1.0 - b2) * sigma * sigma
+    return v2, sigma / (jnp.sqrt(v2) + eps)
+
+
+# --------------------------------------------------------- compensation ----
+def compensation(g: jnp.ndarray, p_proj: jnp.ndarray, p_vec: jnp.ndarray,
+                 scale: float | jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 3 line 3 (Thm 5.1): C = scale * (G - U U^T G) diag(p)^-1/2.
+
+    `p_proj` is U U^T G (computed by the matmul kernel), `p_vec` the EMA of
+    1_m^T G^{.2} - 1_r^T (U^T G)^{.2}, `scale` is sqrt(m - r).
+    """
+    return scale * (g - p_proj) * jnp.power(p_vec[None, :] + EPS, -0.5)
+
+
+def compensation_pvec(g: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 3 line 2 innards: 1_m^T G^{.2} - 1_r^T (U^T G)^{.2}  (>= 0)."""
+    return jnp.sum(g * g, axis=0) - jnp.sum(sigma * sigma, axis=0)
+
+
+# ------------------------------------------------------- Newton-Schulz ----
+def ns_step(y: jnp.ndarray, z: jnp.ndarray):
+    """One Newton-Schulz iteration (App. B.8):
+    Y' = 0.5 * Y (3I - Z Y);  Z' = 0.5 * (3I - Z Y) Z."""
+    n = y.shape[0]
+    t = 3.0 * jnp.eye(n, dtype=y.dtype) - matmul(z, y)
+    return 0.5 * matmul(y, t), 0.5 * matmul(t, z)
+
+
+def newton_schulz(a: jnp.ndarray, iters: int = 5):
+    """Full NS run on SPD `a`: returns (sqrt(a), inv_sqrt(a)) estimates."""
+    fro = jnp.sqrt(jnp.sum(a * a)) + EPS
+    y = a / fro
+    z = jnp.eye(a.shape[0], dtype=a.dtype)
+    for _ in range(iters):
+        y, z = ns_step(y, z)
+    return y * jnp.sqrt(fro), z / jnp.sqrt(fro)
+
+
+def inv_fourth_root(a: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """A^-1/4 via nested NS — oracle for ``newton_schulz.inv_fourth_root``."""
+    sqrt_a, _ = newton_schulz(a, iters)
+    m = a.shape[0]
+    sqrt_a = 0.5 * (sqrt_a + sqrt_a.T) + 1e-6 * jnp.eye(m, dtype=a.dtype)
+    _, inv_sqrt = newton_schulz(sqrt_a, iters)
+    return inv_sqrt
+
+
+def whiten(g: jnp.ndarray, iters: int = 6) -> jnp.ndarray:
+    """Whitening operator (Sec. 3.3): (G G^T)^{-1/2} G via Newton-Schulz."""
+    m = g.shape[0]
+    a = matmul(g, g.T) + 1e-4 * jnp.eye(m, dtype=g.dtype)
+    _, inv_sqrt = newton_schulz(a, iters)
+    return matmul(inv_sqrt, g)
+
+
+# ------------------------------------------------- norm-growth limiter ----
+def limiter(delta_norm, phi_prev, gamma: float):
+    """Norm-growth limiter of Chen et al. 2024a used by RACS (Alg. 1 l.9-10)
+    and Alice compensation (Alg. 3 l.4-5): eta = gamma / max(dn/phi, gamma)
+    when phi > 0 else 1; phi' = eta * dn. Returns (eta, phi')."""
+    ratio = jnp.where(phi_prev > 0.0, delta_norm / (phi_prev + EPS), gamma)
+    eta = jnp.where(phi_prev > 0.0,
+                    gamma / jnp.maximum(ratio, gamma),
+                    jnp.ones_like(delta_norm))
+    return eta, eta * delta_norm

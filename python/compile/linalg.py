@@ -1,0 +1,110 @@
+"""LAPACK-free linear algebra in pure jnp.
+
+jax ≥ 0.5 lowers ``jnp.linalg.{eigh,qr,svd}`` to LAPACK FFI custom-calls
+that the XLA 0.5.1 runtime inside the rust ``xla`` crate cannot load, so
+every eigen/QR operation that must survive AOT lowering is implemented here
+with matmul/elementwise ops only (validated against numpy.linalg in
+``python/tests/test_linalg.py``).
+
+* ``mgs_qr``           — modified Gram-Schmidt orthonormalization
+* ``subspace_iter``    — block power method (paper Alg. 10), the paper's own
+                         recommended cheap EVD replacement ("1 step is
+                         enough", Sec. 5 / App. B.13)
+* ``full_eigh``        — orthogonal (QR-algorithm style) iteration for full
+                         eigendecompositions of small SPD matrices
+                         (Eigen-Adam / SOAP / Shampoo refreshes)
+* ``complete_basis``   — extend an orthonormal U[m,r] to a full basis,
+                         giving the complement U_c used by Alice switching
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def mgs_qr(a: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormalize the columns of ``a`` (m x r, r <= m) by modified
+    Gram-Schmidt (two projection passes for float32 robustness).
+
+    Columns are processed by a ``fori_loop`` over a zero-initialized buffer
+    Q: unfilled columns are zero, so projecting against *all* of Q projects
+    exactly against the filled prefix — one matvec per column instead of a
+    python-unrolled inner loop (keeps the traced HLO small for m ~ 10³).
+
+    Degenerate columns fall back to a canonical direction so Q always has
+    orthonormal columns.
+    """
+    m, r = a.shape
+    dtype = a.dtype
+    eye = jnp.eye(m, dtype=dtype)
+
+    def body(j, q):
+        v = jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]
+        v = v - q @ (q.T @ v)
+        v = v - q @ (q.T @ v)  # re-orthogonalize
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        fb = eye[:, j % m]
+        fb = fb - q @ (q.T @ fb)
+        fb = fb / (jnp.sqrt(jnp.sum(fb * fb)) + EPS)
+        v = jnp.where(nrm > 1e-6, v / (nrm + EPS), fb)
+        return q.at[:, j].set(v)
+
+    q0 = jnp.zeros((m, r), dtype)
+    return jax.lax.fori_loop(0, r, body, q0)
+
+
+def subspace_iter(a: jnp.ndarray, u0: jnp.ndarray, iters: int = 1):
+    """Algorithm 10 (block power method): top-r eigenpairs of symmetric
+    ``a`` starting from ``u0`` (m x r).
+
+    Returns (U, eigvals) with U's columns ordered by descending Rayleigh
+    quotient. The final small r x r problem is solved by orthogonal
+    iteration (``full_eigh``) as in the paper's last two lines.
+    """
+    u = u0
+    for _ in range(iters):
+        u = mgs_qr(a @ u)
+    v = u.T @ a @ u  # r x r
+    w, s = full_eigh(v, iters=30)
+    return u @ w, s
+
+
+def full_eigh(a: jnp.ndarray, iters: int = 40):
+    """Full eigendecomposition of a small symmetric matrix by orthogonal
+    iteration: repeat V <- qr(A V). Converges for SPD matrices with
+    separated spectra; EMA-accumulated GGᵀ matrices in this codebase are
+    SPD + noise, which is the friendly case.
+
+    Returns (V, diag) with columns sorted by descending eigenvalue.
+    """
+    n = a.shape[0]
+
+    def body(_, v):
+        return mgs_qr(a @ v)
+
+    v = jax.lax.fori_loop(0, iters, body, jnp.eye(n, dtype=a.dtype))
+    lam = jnp.diagonal(v.T @ a @ v)
+    order = jnp.argsort(-lam)
+    return v[:, order], lam[order]
+
+
+def complete_basis(u: jnp.ndarray) -> jnp.ndarray:
+    """Given orthonormal U (m x r), return U_c (m x (m-r)) spanning the
+    orthogonal complement — the paper's ``QR(U)`` (Alg. 2 line 4).
+
+    Deterministic: the canonical basis vectors e_0..e_{m-r-1} are projected
+    off U and MGS-orthonormalized (with the mgs fallback covering any e_j
+    that lies in span(U)).
+    """
+    m, r = u.shape
+    cand = jnp.eye(m, dtype=u.dtype)[:, : m - r]
+    cand = cand - u @ (u.T @ cand)
+    return mgs_qr(cand)
+
+
+def spectral_norm_sq_upper(a: jnp.ndarray) -> jnp.ndarray:
+    """Cheap upper bound on the squared spectral norm (row-sum bound)."""
+    return jnp.max(jnp.sum(jnp.abs(a), axis=1)) ** 2

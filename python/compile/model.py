@@ -1,0 +1,176 @@
+"""Layer-2 model: LLaMA-style decoder-only transformer in pure JAX.
+
+Architecture follows Touvron et al. 2023 as used in the paper's experiments
+(App. F.2, Table 10): RMSNorm pre-normalization, rotary position embeddings,
+SwiGLU MLP, untied lm-head, next-token cross-entropy.
+
+Parameters are a FLAT ORDERED LIST of named 2-D/1-D tensors
+(``param_specs``) so the AOT manifest and the rust coordinator agree on
+ordering without pytree introspection. Matrix parameters are exactly the
+ones the paper's optimizers precondition; 1-D (norm) parameters are routed
+to Adam by the coordinator, and the lm-head policy ("Ppl" vs "Ppl*",
+Sec. 7.1) is a coordinator flag.
+
+Presets scale the paper's Table 10 grid down to CPU-feasible sizes (see
+DESIGN.md §Substitutions); `llama60m`/`llama130m`/`llama350m`/`llama1b` are
+kept for the analytic memory tables (Table 3) even though they are not
+trained here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    inter: int           # SwiGLU intermediate size
+    heads: int
+    layers: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # CPU-trainable scale ladder (synthetic corpus; DESIGN.md §Substitutions)
+    "nano": ModelConfig("nano", 256, 64, 176, 4, 2, 64, 8),
+    "tiny": ModelConfig("tiny", 512, 128, 344, 4, 4, 64, 8),
+    "small": ModelConfig("small", 1024, 256, 688, 8, 6, 128, 8),
+    "mid": ModelConfig("mid", 2048, 512, 1376, 8, 8, 128, 8),
+    "large": ModelConfig("large", 8192, 768, 2048, 12, 12, 128, 8),  # ~100M
+    # Paper Table 10 shapes (memory accounting only on this testbed)
+    "llama60m": ModelConfig("llama60m", 32000, 512, 1376, 8, 8, 256, 128),
+    "llama130m": ModelConfig("llama130m", 32000, 768, 2048, 12, 12, 256, 128),
+    "llama350m": ModelConfig("llama350m", 32000, 1024, 2736, 16, 24, 256, 128),
+    # Table 10 lists 4096x32 for "1.3B" (typo — that is ~6.4B); GaLore-lineage 1B:
+    "llama1b": ModelConfig("llama1b", 32000, 2048, 5461, 16, 24, 256, 256),
+    "llama7b": ModelConfig("llama7b", 32000, 4096, 11008, 32, 32, 256, 512),
+}
+
+
+# ------------------------------------------------------------ parameters ---
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """(name, shape, init_std) in the canonical flat order.
+
+    Linear weights are stored (in_features, out_features): y = x @ W.
+    """
+    d, f, v = cfg.dim, cfg.inter, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...], float]] = [
+        ("embed", (v, d), 0.02),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "attn_norm", (d,), 0.0),     # RMSNorm gain (init 1)
+            (p + "wq", (d, d), 0.02),
+            (p + "wk", (d, d), 0.02),
+            (p + "wv", (d, d), 0.02),
+            (p + "wo", (d, d), 0.02 / math.sqrt(2 * cfg.layers)),
+            (p + "mlp_norm", (d,), 0.0),
+            (p + "w_gate", (d, f), 0.02),
+            (p + "w_up", (d, f), 0.02),
+            (p + "w_down", (f, d), 0.02 / math.sqrt(2 * cfg.layers)),
+        ]
+    specs += [
+        ("final_norm", (d,), 0.0),
+        ("lm_head", (d, v), 0.02),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape, std in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if std == 0.0:
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s, _ in param_specs(cfg))
+
+
+# --------------------------------------------------------------- forward ---
+def _rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _rotary(x: jnp.ndarray, base: float = 10000.0):
+    """x: [B, T, H, Dh] -> rotary-embedded."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(-math.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, dh)
+    k = (x @ wk).reshape(b, t, h, dh)
+    v = (x @ wv).reshape(b, t, h, dh)
+    q, k = _rotary(q), _rotary(k)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+    return ctx @ wo
+
+
+def _mlp(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def forward(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """tokens [B, T] int32 -> logits [B, T, V]."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    embed = nxt()
+    x = embed[tokens]
+    for _ in range(cfg.layers):
+        attn_norm, wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt(), nxt()
+        mlp_norm, w_gate, w_up, w_down = nxt(), nxt(), nxt(), nxt()
+        x = x + _attention(_rms_norm(x, attn_norm), wq, wk, wv, wo, cfg)
+        x = x + _mlp(_rms_norm(x, mlp_norm), w_gate, w_up, w_down)
+    final_norm, lm_head = nxt(), nxt()
+    return _rms_norm(x, final_norm) @ lm_head
+
+
+def loss_fn(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross entropy over [B, T-1]."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def grad_step(params: List[jnp.ndarray], tokens: jnp.ndarray,
+              cfg: ModelConfig):
+    """(loss, [grads...]) — what `grad_step.hlo` computes."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(ps, tokens, cfg))(params)
+    return loss, grads

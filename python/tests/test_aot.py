@@ -1,0 +1,115 @@
+"""AOT bundle: manifest ↔ HLO consistency on a minimal nano bundle.
+
+Lowers a small artifact set into a temp dir (adam only, no fused step to
+keep the test fast) and checks the manifest contract the rust side relies
+on: input/output ordering, init classification, shape agreement.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from compile import aot, model as M, optimizers as O
+
+
+@pytest.fixture(scope="module")
+def bundle(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = M.PRESETS["nano"]
+    hp = O.HP(rank=8, leading=3, interval=20)
+    b = aot.Bundle(cfg, hp, str(out))
+    b.emit_grad_step()
+    b.emit_eval_loss()
+    b.emit_opt_update("adam", (64, 176))
+    b.emit_opt_update("racs", (64, 176))
+    man = b.manifest(["adam", "racs", "alice"])
+    (out / "manifest.json").write_text(json.dumps(man))
+    return out, man, cfg
+
+
+def test_artifacts_written(bundle):
+    out, man, _ = bundle
+    for e in man["artifacts"]:
+        f = out / e["file"]
+        assert f.exists() and f.stat().st_size > 1000, e["name"]
+        head = f.read_text()[:200]
+        assert head.startswith("HloModule"), e["name"]
+
+
+def test_grad_step_signature(bundle):
+    _, man, cfg = bundle
+    gs = next(a for a in man["artifacts"] if a["name"] == "grad_step")
+    assert gs["inputs"][0]["name"] == "tokens"
+    assert gs["inputs"][0]["shape"] == [cfg.batch, cfg.seq]
+    # one grad output per param, in order, plus the loss
+    assert gs["outputs"][0]["name"] == "loss"
+    params = man["params"]
+    assert len(gs["outputs"]) == 1 + len(params)
+    for p, o in zip(params, gs["outputs"][1:]):
+        assert o["name"] == f"grad.{p['name']}"
+        assert o["shape"] == p["shape"]
+
+
+def test_state_specs_have_valid_init(bundle):
+    _, man, _ = bundle
+    for opt, spec in man["optimizers"].items():
+        for s in spec["states"]:
+            init = s["init"]
+            assert (
+                init in ("zeros", "eye") or init.startswith("eye_scale:")
+            ), (opt, s["name"], init)
+
+
+def test_alice_states_follow_paper_memory_table(bundle):
+    # Table 6: Alice = mn (weight) + 2nr + mr + n + r² (+φ scalar)
+    _, man, _ = bundle
+    spec = man["optimizers"]["alice"]
+    by_param = {}
+    for s in spec["states"]:
+        by_param.setdefault(s["param"], []).append(s)
+    # embed is (256, 64): wide→transposed to (64, 256), r = 8
+    states = {s["key"]: s["shape"] for s in by_param["embed"]}
+    m, n, r = 64, 256, 8
+    assert states["u"] == [m, r]
+    assert states["qt"] == [r, r]
+    assert states["m"] == [r, n]
+    assert states["v"] == [r, n]
+    assert states["p"] == [n]
+    assert states["phi"] == []
+
+
+def test_routes_respect_last_layer_policy(bundle):
+    _, man, _ = bundle
+    params = [p["name"] for p in man["params"]]
+    head = params.index("lm_head")
+    # adam/racs are full-rank → lm_head routed to adam (paper protocol)
+    assert man["optimizers"]["racs"]["routes"][head] == "adam"
+    # alice is low-rank → lm_head trained by alice itself ("Ppl" column)
+    assert man["optimizers"]["alice"]["routes"][head] == "alice"
+    # 1-D params always adam
+    for i, p in enumerate(man["params"]):
+        if len(p["shape"]) == 1:
+            assert man["optimizers"]["alice"]["routes"][i] == "adam"
+
+
+def test_opt_update_roundtrip_shapes(bundle):
+    _, man, _ = bundle
+    upd = next(a for a in man["artifacts"]
+               if a["name"] == "opt_update_adam_64x176")
+    assert upd["inputs"][0]["shape"] == [64, 176]
+    assert upd["outputs"][0]["name"] == "w_delta"
+    # state inputs and outputs pair up
+    assert [i["shape"] for i in upd["inputs"][3:]] == \
+        [o["shape"] for o in upd["outputs"][1:]]
+
+
+def test_classify_init_rules():
+    import numpy as np
+    assert aot._classify_init(np.zeros((3, 4))) == "zeros"
+    assert aot._classify_init(np.eye(5, 2)) == "eye"
+    assert aot._classify_init(1e-4 * np.eye(4)).startswith("eye_scale:")
+    with pytest.raises(ValueError):
+        aot._classify_init(np.ones((2, 2)))

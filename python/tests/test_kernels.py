@@ -1,0 +1,202 @@
+"""Pallas kernels vs pure-jnp oracles — the L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-tile-aligned and degenerate dims)
+and dtypes; every kernel must match its `ref` twin to f32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import kernels as K
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+dims = st.integers(min_value=1, max_value=150)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(seed, *shape, dtype=np.float32):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(dtype))
+
+
+def close(a, b, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------------ RACS ---
+@given(m=dims, n=dims, seed=seeds)
+def test_racs_col_stats(m, n, seed):
+    g = rand(seed, m, n)
+    q = jnp.abs(rand(seed + 1, m)) + 0.1
+    close(K.racs_col_stats(g, q), ref.racs_col_stats(g, q), rtol=1e-3)
+
+
+@given(m=dims, n=dims, seed=seeds)
+def test_racs_row_stats(m, n, seed):
+    g = rand(seed, m, n)
+    s = jnp.abs(rand(seed + 1, n)) + 0.1
+    close(K.racs_row_stats(g, s), ref.racs_row_stats(g, s), rtol=1e-3)
+
+
+@given(m=dims, n=dims, seed=seeds)
+def test_racs_fixed_point_and_apply(m, n, seed):
+    g = rand(seed, m, n)
+    s, q = K.racs_fixed_point(g, 3)
+    s_r, q_r = ref.racs_fixed_point(g, 3)
+    close(s, s_r, rtol=1e-3)
+    close(q, q_r, rtol=1e-3)
+    close(K.racs_apply(g, q, s, 0.7), ref.racs_apply(g, q_r, s_r, 0.7),
+          rtol=1e-3)
+
+
+def test_racs_fixed_point_positivity():
+    # Perron-Frobenius (Prop. 3): strictly positive scalings
+    g = rand(0, 33, 77)
+    s, q = K.racs_fixed_point(g, 5)
+    assert np.all(np.asarray(s) > 0)
+    assert np.all(np.asarray(q) > 0)
+
+
+# ------------------------------------------------------------------ Adam ---
+@given(m=dims, n=dims, seed=seeds,
+       t=st.integers(min_value=1, max_value=1000))
+def test_adam_fused(m, n, seed, t):
+    g, mm, vv = rand(seed, m, n), rand(seed + 1, m, n), \
+        jnp.abs(rand(seed + 2, m, n))
+    bc1, bc2 = 1 - 0.9 ** t, 1 - 0.999 ** t
+    out = K.adam_fused(g, mm, vv, 0.9, 0.999, 1e-8, bc1, bc2)
+    want = ref.adam_fused(g, mm, vv, 0.9, 0.999, 1e-8, bc1, bc2)
+    for a, b in zip(out, want):
+        close(a, b, rtol=1e-3)
+
+
+def test_adam_fused_1d():
+    g = rand(3, 40)
+    m = jnp.zeros_like(g)
+    out = K.adam_fused(g, m, m, 0.9, 0.999, 1e-8, 0.1, 0.001)
+    want = ref.adam_fused(g, m, m, 0.9, 0.999, 1e-8, 0.1, 0.001)
+    for a, b in zip(out, want):
+        close(a, b)
+
+
+# ---------------------------------------------------------------- matmul ---
+@given(m=dims, k=dims, n=dims, seed=seeds)
+def test_matmul(m, k, n, seed):
+    a, b = rand(seed, m, k), rand(seed + 1, k, n)
+    close(K.matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-3)
+
+
+@given(seed=seeds)
+def test_matmul_block_boundary_shapes(seed):
+    # exactly at/around the 128 tile edge
+    for m, k, n in [(128, 128, 128), (129, 127, 130), (1, 128, 1)]:
+        a, b = rand(seed, m, k), rand(seed + 1, k, n)
+        close(K.matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_project_reconstruct():
+    u, g = rand(0, 64, 8), rand(1, 64, 96)
+    close(K.project(u, g), ref.matmul(u.T, g), rtol=1e-3, atol=1e-3)
+    sig = K.project(u, g)
+    close(K.reconstruct(u, sig), ref.matmul(u, sig), rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- 2nd moment ---
+@given(r=st.integers(1, 64), n=dims, seed=seeds)
+def test_second_moment(r, n, seed):
+    sigma = rand(seed, r, n)
+    v = jnp.abs(rand(seed + 1, r, n))
+    out = K.second_moment(sigma, v, 0.9, 1e-8)
+    want = ref.second_moment(sigma, v, 0.9, 1e-8)
+    for a, b in zip(out, want):
+        close(a, b, rtol=1e-3)
+
+
+# ---------------------------------------------------------- compensation ---
+@given(m=st.integers(2, 100), n=dims, seed=seeds)
+def test_compensation(m, n, seed):
+    r = max(1, m // 4)
+    g = rand(seed, m, n)
+    u = rand(seed + 1, m, r)
+    sigma = ref.matmul(u.T, g)
+    pv = ref.compensation_pvec(g, sigma)
+    close(K.compensation_pvec(g, sigma), pv, rtol=1e-2, atol=1e-2)
+    p_proj = ref.matmul(u, sigma)
+    scale = float(np.sqrt(m - r))
+    close(K.compensation(g, p_proj, jnp.abs(pv) + 0.5, scale),
+          ref.compensation(g, p_proj, jnp.abs(pv) + 0.5, scale),
+          rtol=1e-3, atol=1e-3)
+
+
+def test_compensation_pvec_nonnegative_for_orthonormal_u():
+    # Thm 5.1 quantity 1ₘᵀG⊙² − 1ᵣᵀ(UᵀG)⊙² ≥ 0 when U has orthonormal cols
+    g = rand(0, 48, 64)
+    q, _ = np.linalg.qr(np.asarray(rand(1, 48, 8)))
+    pv = np.asarray(K.compensation_pvec(g, K.project(jnp.asarray(q), g)))
+    assert (pv > -1e-3).all()
+
+
+# ---------------------------------------------------------- Newton-Schulz ---
+def test_ns_step_matches_ref():
+    a = rand(0, 24, 24)
+    spd = ref.matmul(a, a.T) + 0.5 * jnp.eye(24)
+    y = spd / jnp.sqrt(jnp.sum(spd * spd))
+    z = jnp.eye(24)
+    out = K.ns_step(y, z)
+    want = ref.ns_step(y, z)
+    for x, w in zip(out, want):
+        close(x, w, rtol=1e-3, atol=1e-3)
+
+
+def test_newton_schulz_inverse_sqrt_property():
+    a = rand(5, 16, 16)
+    spd = ref.matmul(a, a.T) + 0.5 * jnp.eye(16)
+    _, isq = K.newton_schulz(spd, 25)
+    ident = ref.matmul(ref.matmul(isq, spd), isq)
+    close(ident, jnp.eye(16), rtol=0.0, atol=5e-2)
+
+
+@given(m=st.integers(2, 48), n=st.integers(2, 100), seed=seeds)
+def test_whiten(m, n, seed):
+    if m > n:
+        m, n = n, m
+    g = rand(seed, m, n)
+    close(K.whiten(g, 8), ref.whiten(g, 8), rtol=1e-2, atol=1e-2)
+
+
+def test_whiten_orthogonalizes():
+    g = rand(2, 12, 80)
+    w = np.asarray(K.whiten(g, 25))
+    np.testing.assert_allclose(w @ w.T, np.eye(12), atol=0.1)
+
+
+def test_inv_fourth_root_property():
+    a = rand(7, 10, 10)
+    spd = ref.matmul(a, a.T) + 0.5 * jnp.eye(10)
+    r = np.asarray(K.inv_fourth_root(spd, 25))
+    ident = np.linalg.matrix_power(r, 4) @ np.asarray(spd)
+    np.testing.assert_allclose(ident, np.eye(10), atol=0.1)
+
+
+# ----------------------------------------------------------- limiter ------
+@given(dn=st.floats(0.01, 100.0),
+       phi=st.one_of(st.just(0.0), st.floats(1e-3, 100.0)))
+def test_limiter_bounds_growth(dn, phi):
+    eta, phi2 = ref.limiter(jnp.asarray(dn), jnp.asarray(phi), 1.01)
+    eta, phi2 = float(eta), float(phi2)
+    if phi > 0:
+        assert eta * dn <= 1.01 * phi + 1e-3
+    else:
+        assert eta == pytest.approx(1.0)
+    assert phi2 == pytest.approx(eta * dn, rel=1e-4)

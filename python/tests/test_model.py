@@ -1,0 +1,103 @@
+"""L2 model: shapes, loss sanity, gradient flow, preset sync with rust."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def toks(cfg, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(batch or 2, cfg.seq)), jnp.int32)
+
+
+def test_param_count_constants_shared_with_rust():
+    # rust/src/config/presets.rs hard-codes these — keep in sync
+    assert M.num_params(M.PRESETS["nano"]) == 133_440
+    assert M.num_params(M.PRESETS["tiny"]) == 922_752
+    assert M.num_params(M.PRESETS["small"]) == 5_270_784
+    assert M.num_params(M.PRESETS["mid"]) == 27_402_752
+
+
+def test_large_preset_is_about_100m():
+    n = M.num_params(M.PRESETS["large"])
+    assert 8e7 < n < 1.2e8, n
+
+
+def test_forward_shapes():
+    cfg = M.PRESETS["nano"]
+    ps = M.init_params(cfg, 0)
+    logits = M.forward(ps, toks(cfg), cfg)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+
+
+def test_initial_loss_near_uniform_entropy():
+    cfg = M.PRESETS["nano"]
+    ps = M.init_params(cfg, 0)
+    loss = float(M.loss_fn(ps, toks(cfg), cfg))
+    assert abs(loss - np.log(cfg.vocab)) < 0.25
+
+
+def test_grads_cover_every_param():
+    cfg = M.PRESETS["nano"]
+    ps = M.init_params(cfg, 1)
+    loss, grads = M.grad_step(ps, toks(cfg, 1), cfg)
+    assert len(grads) == len(ps)
+    for (name, shape, _), g in zip(M.param_specs(cfg), grads):
+        assert g.shape == tuple(shape), name
+        assert bool(jnp.all(jnp.isfinite(g))), name
+        # every tensor should receive some gradient signal
+        assert float(jnp.abs(g).max()) > 0.0, name
+
+
+def test_causality():
+    # changing a future token must not affect earlier logits
+    cfg = M.PRESETS["nano"]
+    ps = M.init_params(cfg, 2)
+    t1 = toks(cfg, 3, batch=1)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab)
+    l1 = M.forward(ps, t1, cfg)
+    l2 = M.forward(ps, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1[0, -1]) - np.asarray(l2[0, -1])).max() > 1e-6
+
+
+def test_one_sgd_step_reduces_loss():
+    cfg = M.PRESETS["nano"]
+    ps = M.init_params(cfg, 4)
+    batch = toks(cfg, 5, batch=4)
+    loss0, grads = M.grad_step(ps, batch, cfg)
+    ps2 = [p - 0.5 * g for p, g in zip(ps, grads)]
+    loss1 = float(M.loss_fn(ps2, batch, cfg))
+    assert loss1 < float(loss0)
+
+
+def test_rotary_preserves_norm():
+    x = jnp.asarray(
+        np.random.default_rng(6).normal(size=(1, 8, 2, 16)).astype(np.float32))
+    y = M._rotary(x)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(x * x, -1)), np.asarray(jnp.sum(y * y, -1)),
+        rtol=1e-4)
+
+
+def test_jit_lowering_has_no_custom_calls():
+    # the whole point of the pure-jnp stack: XLA 0.5.1 must be able to load
+    # the grad step — no LAPACK/FFI custom-calls allowed (DESIGN.md)
+    from compile.aot import to_hlo_text
+    cfg = M.PRESETS["nano"]
+
+    def fn(tokens, *params):
+        loss, grads = M.grad_step(list(params), tokens, cfg)
+        return (loss, *grads)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((2, cfg.seq), jnp.int32),
+        *[jax.ShapeDtypeStruct(s, jnp.float32)
+          for _, s, _ in M.param_specs(cfg)])
+    hlo = to_hlo_text(lowered)
+    assert "custom-call" not in hlo, "grad_step must stay custom-call-free"

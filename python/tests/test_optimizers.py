@@ -1,0 +1,155 @@
+"""L2 optimizer semantics: shapes, finiteness, paper identities."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optimizers as O
+
+HP = O.HP(rank=8, leading=3, eig_iters=40)
+T1 = jnp.asarray(1.0)
+
+
+def rand(seed, *shape):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", sorted(O.OPTIMIZERS))
+@pytest.mark.parametrize("shape", [(24, 40), (40, 24), (8, 8)])
+def test_update_shape_and_finite(name, shape):
+    g = rand(0, *shape)
+    st = O.init_state(name, shape, HP)
+    d, st2 = O.update(name, g, st, HP, T1)
+    assert d.shape == g.shape
+    assert bool(jnp.all(jnp.isfinite(d)))
+    st3 = O.refresh(name, g, st2, HP, 11)
+    d2, _ = O.update(name, g, st3, HP, T1 + 1)
+    assert bool(jnp.all(jnp.isfinite(d2)))
+
+
+def test_adam_first_step_signlike():
+    g = jnp.asarray([[2.0, -0.5, 0.0]])
+    st = O.init_state("adam", (1, 3), HP)
+    d, _ = O.update("adam", g, st, HP, T1)
+    np.testing.assert_allclose(np.asarray(d), [[1.0, -1.0, 0.0]], atol=1e-3)
+
+
+def test_eigen_adam_equals_adam_before_refresh():
+    # U = I initially ⇒ identical trajectories (Eq. 9 with U = I is Prop. 1)
+    shape = (12, 20)
+    st_e = O.init_state("eigen_adam", shape, HP)
+    st_a = O.init_state("adam", shape, HP)
+    for t in range(1, 4):
+        g = rand(t, *shape)
+        de, st_e = O.update("eigen_adam", g, st_e, HP, jnp.asarray(float(t)))
+        da, st_a = O.update("adam", g, st_a, HP, jnp.asarray(float(t)))
+        np.testing.assert_allclose(np.asarray(de), np.asarray(da),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_soap_equals_adam_before_refresh():
+    shape = (10, 14)
+    st_s = O.init_state("soap", shape, HP)
+    st_a = O.init_state("adam", shape, HP)
+    g = rand(5, *shape)
+    ds, _ = O.update("soap", g, st_s, HP, T1)
+    da, _ = O.update("adam", g, st_a, HP, T1)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(da),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_galore_update_in_span_u():
+    shape = (16, 24)
+    g = rand(7, *shape)
+    st = O.init_state("galore", shape, HP)
+    st = O.refresh("galore", g, st, HP, 0)
+    d, st = O.update("galore", g, st, HP, T1)
+    u = np.asarray(st["u"])
+    d = np.asarray(d)
+    resid = d - u @ (u.T @ d)
+    assert np.abs(resid).max() < 1e-3
+
+
+def test_fira_and_alice_updates_are_full_rank():
+    shape = (16, 24)
+    g = rand(8, *shape)
+    for name in ["fira", "alice"]:
+        st = O.init_state(name, shape, HP)
+        st = O.refresh(name, g, st, HP, 0)
+        d, st = O.update(name, g, st, HP, T1)
+        u = np.asarray(st["u"])
+        d = np.asarray(d)
+        resid = d - u @ (u.T @ d)
+        assert np.abs(resid).max() > 1e-4, name
+
+
+def test_alice_none_compensation_is_galore_like():
+    hp = dataclasses.replace(HP, compen="none")
+    shape = (16, 24)
+    g = rand(9, *shape)
+    st = O.init_state("alice", shape, hp)
+    st = O.refresh("alice", g, st, hp, 0)
+    d, st = O.update("alice", g, st, hp, T1)
+    u = np.asarray(st["u"])
+    d = np.asarray(d)
+    resid = d - u @ (u.T @ d)
+    assert np.abs(resid).max() < 1e-3
+
+
+@pytest.mark.parametrize("strategy",
+                         ["switch", "evd", "gaussian", "gaussian_mix",
+                          "full_basis"])
+def test_alice_switch_strategies(strategy):
+    hp = dataclasses.replace(HP, switch=strategy)
+    shape = (20, 28)
+    g = rand(10, *shape)
+    st = O.init_state("alice", shape, hp)
+    st = O.refresh("alice", g, st, hp, 3)
+    u = np.asarray(st["u"])
+    assert u.shape == (20, 8)
+    if strategy in ("switch", "evd", "full_basis"):
+        np.testing.assert_allclose(u.T @ u, np.eye(8), atol=1e-3)
+    else:  # gaussian variants: unit columns only
+        np.testing.assert_allclose((u * u).sum(0), 1.0, atol=1e-3)
+
+
+def test_alice0_matches_alice_with_b3_zero():
+    shape = (12, 16)
+    hp0 = dataclasses.replace(HP, b3=0.0)
+    st_a = O.init_state("alice", shape, hp0)
+    st_0 = O.init_state("alice0", shape, HP)
+    g = rand(11, *shape)
+    da, _ = O.update("alice", g, st_a, hp0, T1)
+    d0, _ = O.update("alice0", g, st_0, HP, T1)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(d0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_racs_limiter_caps_step_growth():
+    shape = (8, 12)
+    st = O.init_state("racs", shape, HP)
+    d1, st = O.update("racs", rand(1, *shape), st, HP, T1)
+    n1 = float(jnp.sqrt(jnp.sum(d1 * d1)))
+    # hit it with a 100x bigger gradient — limiter must cap ~gamma growth
+    d2, st = O.update("racs", 100.0 * rand(2, *shape), st, HP, T1 + 1)
+    n2 = float(jnp.sqrt(jnp.sum(d2 * d2)))
+    assert n2 <= HP.gamma * n1 * 1.05, (n1, n2)
+
+
+def test_muon_output_near_orthogonal():
+    hp = dataclasses.replace(HP, b1=0.0, ns_iters=25)
+    g = rand(12, 10, 40)
+    st = O.init_state("muon", (10, 40), hp)
+    d, _ = O.update("muon", g, st, hp, T1)
+    d = np.asarray(d)
+    np.testing.assert_allclose(d @ d.T, np.eye(10), atol=0.1)
+
+
+def test_state_keys_deterministic():
+    ks1 = O.state_keys("alice", (16, 24), HP)
+    ks2 = O.state_keys("alice", (16, 24), HP)
+    assert ks1 == ks2 == ["u", "qt", "m", "v", "p", "phi"]
+    assert O.state_keys("alice0", (16, 24), HP) == ["u", "m", "v", "p", "phi"]

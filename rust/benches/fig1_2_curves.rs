@@ -1,0 +1,44 @@
+//! Figures 1 & 2 — eval-perplexity-vs-steps curves for all optimizers,
+//! with and without the Adam-trained lm-head ("+lm head").
+//!
+//! Emits CSV series under runs/bench/fig1_2/ (one train.csv + eval.csv per
+//! run — the figure is the eval.csv family) and prints the final points.
+
+use alice_racs::bench::{artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, TablePrinter};
+
+fn main() {
+    if !artifacts_available() {
+        return;
+    }
+    let steps = bench_steps(150);
+    let opts = bench_opts(&["adam", "galore", "fira", "racs", "alice"]);
+    println!("== Fig. 1/2 analogue: eval curves, {steps} steps ==");
+    let mut table = TablePrinter::new(&["run", "final eval ppl", "curve file"]);
+    for opt in &opts {
+        for head_adam in [true, false] {
+            // full-rank methods only have the +lm-head protocol (paper)
+            if !head_adam && matches!(opt.as_str(), "adam" | "racs") {
+                continue;
+            }
+            let tag = if head_adam { "lmhead_adam" } else { "lmhead_self" };
+            let mut cfg = bench_cfg(opt, "fig1_2", steps);
+            cfg.out_dir = format!("runs/bench/fig1_2/{opt}_{tag}");
+            cfg.last_layer_adam = head_adam;
+            cfg.eval_every = (steps / 15).max(1); // dense curve
+            match run_one(cfg.clone()) {
+                Ok(s) => table.row(vec![
+                    format!("{opt} ({tag})"),
+                    format!("{:.2}", (s.final_eval_loss.unwrap_or(f32::NAN) as f64).exp()),
+                    format!("{}/eval.csv", cfg.out_dir),
+                ]),
+                Err(e) => eprintln!("{opt}/{tag}: {e:#}"),
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\nPlot eval.csv (step vs eval_ppl) per run to reproduce the \
+         figures; paper shape: Alice/RACS curves sit strictly below Adam, \
+         GaLore benefits most from '+lm head'."
+    );
+}

@@ -1,0 +1,61 @@
+//! Figure 4 — memory footprint per optimizer, plus the "-layerwise"
+//! variant (only the live layer's gradient resident).
+//!
+//! Two views: (a) analytic bytes for the paper's llama presets (exact),
+//! (b) measured optimizer-state elements held by a live trainer on the
+//! AOT bundle (coordinator path), which must agree with the analytic
+//! accounting for the same preset.
+
+use alice_racs::bench::{artifacts_available, bench_cfg, TablePrinter};
+use alice_racs::config::presets::{param_shapes, preset};
+use alice_racs::coordinator::{estimate, Trainer};
+use alice_racs::opt::Hyper;
+use alice_racs::util::human_bytes;
+
+fn main() {
+    // (a) analytic, llama1b (the Fig. 4 model)
+    let p = preset("llama1b").unwrap();
+    let hp = Hyper { rank: 512, ..Hyper::default() };
+    println!("== Fig. 4(a): analytic footprint, llama1b, BF16 ==");
+    let mut table = TablePrinter::new(&["optimizer", "total", "weights", "opt state", "grad(full)", "grad(layerwise)"]);
+    // full gradient = weights; layerwise = max single tensor
+    let full_grad: u64 = param_shapes(p)
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>() as u64 * 2)
+        .sum();
+    let layerwise: u64 = param_shapes(p)
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>() as u64 * 2)
+        .max()
+        .unwrap();
+    for opt in ["adam", "galore", "fira", "apollo_mini", "racs", "alice0", "alice"] {
+        let e = estimate(p, opt, &hp, true).unwrap();
+        table.row(vec![
+            opt.into(),
+            human_bytes(e.total_bytes + full_grad),
+            human_bytes(e.weight_bytes),
+            human_bytes(e.matrix_state_bytes + e.adam_side_bytes),
+            human_bytes(full_grad),
+            human_bytes(layerwise),
+        ]);
+    }
+    table.print();
+
+    // (b) measured on the live trainer
+    if artifacts_available() {
+        println!("\n== Fig. 4(b): measured optimizer-state elements (live trainer, AOT preset) ==");
+        let mut table = TablePrinter::new(&["optimizer", "state elems (measured)"]);
+        for opt in ["adam", "racs", "galore", "alice", "alice0"] {
+            let cfg = bench_cfg(opt, "fig4", 1);
+            match Trainer::new(cfg) {
+                Ok(tr) => table.row(vec![opt.into(), tr.state_elems().to_string()]),
+                Err(e) => eprintln!("{opt}: {e:#}"),
+            }
+        }
+        table.print();
+    }
+    println!(
+        "\nPaper shape: Adam ≈ 3x weights; RACS/Apollo ≈ weights + ε; \
+         Alice ≈ GaLore + r² + n; layerwise shaves the full-gradient term."
+    );
+}

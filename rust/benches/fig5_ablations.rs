@@ -1,0 +1,111 @@
+//! Figure 5 — the five ablation panels (paper Sec. 7.2 / App. F.7):
+//! (a) tracking × switching        (b) switching strategies
+//! (c) compensation strategies     (d) last-layer effect
+//! (e) RACS with/without EMA
+//!
+//! Each panel = a family of short runs; curves land in
+//! runs/bench/fig5/<panel>/<variant>/eval.csv, final points printed here.
+
+use alice_racs::bench::{artifacts_available, bench_cfg, bench_steps, run_one, TablePrinter};
+use alice_racs::config::RunConfig;
+use alice_racs::opt::{Compen, Switch};
+
+fn show(panel: &str, rows: &[(String, anyhow::Result<f32>)]) {
+    println!("\n-- Fig. 5({panel}) --");
+    let mut table = TablePrinter::new(&["variant", "final eval ppl"]);
+    for (label, res) in rows {
+        match res {
+            Ok(l) => table.row(vec![label.clone(), format!("{:.2}", (*l as f64).exp())]),
+            Err(e) => table.row(vec![label.clone(), format!("FAILED: {e}")]),
+        }
+    }
+    table.print();
+}
+
+fn run(cfg: RunConfig) -> anyhow::Result<f32> {
+    Ok(run_one(cfg)?.final_eval_loss.unwrap_or(f32::NAN))
+}
+
+fn main() {
+    if !artifacts_available() {
+        return;
+    }
+    let steps = bench_steps(100);
+    println!("== Fig. 5 ablations ({steps} steps each) ==");
+
+    // (a) tracking x switching, compensation disabled
+    let mut rows = Vec::new();
+    for (label, tracking, switch) in [
+        ("tracking+switch", true, Switch::Switch),
+        ("tracking, no switch", true, Switch::Evd),
+        ("no tracking, switch", false, Switch::Switch),
+        ("no tracking, no switch", false, Switch::Evd),
+    ] {
+        let mut cfg = bench_cfg("alice", "fig5/a", steps);
+        cfg.out_dir = format!("runs/bench/fig5/a/{}", label.replace([' ', ','], "_"));
+        cfg.hp.tracking = tracking;
+        cfg.hp.switch = switch;
+        cfg.hp.compen = Compen::None;
+        rows.push((label.to_string(), run(cfg)));
+    }
+    show("a: tracking x switch, compen off", &rows);
+
+    // (b) switching strategies
+    let mut rows = Vec::new();
+    for (label, sw) in [
+        ("switch (paper)", Switch::Switch),
+        ("gaussian", Switch::Gaussian),
+        ("gaussian_mix", Switch::GaussianMix),
+        ("full_basis", Switch::FullBasis),
+    ] {
+        let mut cfg = bench_cfg("alice", "fig5/b", steps);
+        cfg.out_dir = format!("runs/bench/fig5/b/{}", label.replace([' ', '(', ')'], "_"));
+        cfg.hp.switch = sw;
+        rows.push((label.to_string(), run(cfg)));
+    }
+    show("b: switching strategies", &rows);
+
+    // (c) compensation strategies
+    let mut rows = Vec::new();
+    for (label, c) in [
+        ("optimal (Thm 5.1)", Compen::Optimal),
+        ("fira", Compen::Fira),
+        ("fira+", Compen::FiraPlus),
+        ("none", Compen::None),
+    ] {
+        let mut cfg = bench_cfg("alice", "fig5/c", steps);
+        cfg.out_dir = format!("runs/bench/fig5/c/{}", label.replace([' ', '(', ')', '.', '+'], "_"));
+        cfg.hp.compen = c;
+        rows.push((label.to_string(), run(cfg)));
+    }
+    show("c: compensation strategies", &rows);
+
+    // (d) last-layer effect (GaLore vs Alice, ± Adam lm-head)
+    let mut rows = Vec::new();
+    for opt in ["galore", "alice"] {
+        for head in [true, false] {
+            let mut cfg = bench_cfg(opt, "fig5/d", steps);
+            cfg.out_dir = format!("runs/bench/fig5/d/{opt}_head{head}");
+            cfg.last_layer_adam = head;
+            rows.push((format!("{opt} (+lm head: {head})"), run(cfg)));
+        }
+    }
+    show("d: last-layer effect", &rows);
+
+    // (e) RACS EMA
+    let mut rows = Vec::new();
+    for ema in [true, false] {
+        let mut cfg = bench_cfg("racs", "fig5/e", steps);
+        cfg.out_dir = format!("runs/bench/fig5/e/ema{ema}");
+        cfg.hp.racs_ema = ema;
+        rows.push((format!("racs (ema: {ema})"), run(cfg)));
+    }
+    show("e: RACS EMA", &rows);
+
+    println!(
+        "\nPaper shapes: (a) tracking needs switching; (b) paper switch \
+         beats gaussian variants; (c) optimal > fira+ > fira > none; \
+         (d) GaLore degrades without the Adam lm-head far more than Alice; \
+         (e) EMA is necessary for RACS."
+    );
+}

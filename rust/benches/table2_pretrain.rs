@@ -1,0 +1,83 @@
+//! Table 2 — pre-training performance: eval perplexity per optimizer,
+//! speed-up in steps vs Adam, throughput (TP) and effective TP.
+//!
+//! Substituted workload (DESIGN.md): synthetic Zipf×Markov corpus on the
+//! AOT-lowered preset instead of C4 on LLaMA-60M..1.3B. The reproduction
+//! target is the *ordering* and the ≥2× step-speed-up of Alice over Adam.
+//!
+//! Scale with AR_BENCH_STEPS (default 120) and AR_BENCH_OPTS.
+
+use alice_racs::bench::{artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, TablePrinter};
+use alice_racs::coordinator::Summary;
+
+fn main() {
+    if !artifacts_available() {
+        return;
+    }
+    let steps = bench_steps(120);
+    let opts = bench_opts(&[
+        "adam", "galore", "fira", "apollo_mini", "racs", "alice0", "alice",
+    ]);
+    println!("== Table 2 analogue: {steps} steps per optimizer ==");
+
+    let mut results: Vec<Summary> = Vec::new();
+    for opt in &opts {
+        // Ppl* protocol: full-rank candidates get an Adam-trained lm-head;
+        // low-rank candidates train it themselves (paper Sec. 7.1).
+        let cfg = bench_cfg(opt, "table2", steps);
+        match run_one(cfg) {
+            Ok(s) => {
+                println!(
+                    "  {:<12} eval_loss {:.4}  ppl {:.2}  tp {:.0} tok/s",
+                    opt,
+                    s.final_eval_loss.unwrap_or(f32::NAN),
+                    (s.final_eval_loss.unwrap_or(f32::NAN) as f64).exp(),
+                    s.tokens_per_sec
+                );
+                results.push(s);
+            }
+            Err(e) => eprintln!("  {opt}: FAILED: {e:#}"),
+        }
+    }
+
+    let adam = results.iter().find(|s| s.optimizer == "adam").cloned();
+    let mut table = TablePrinter::new(&[
+        "optimizer",
+        "eval ppl",
+        "steps-to-Adam-final",
+        "speed-up",
+        "TP tok/s",
+        "effective TP",
+    ]);
+    for s in &results {
+        let (steps_to, speedup, etp) = match &adam {
+            Some(a) => {
+                let target = a.final_eval_loss.unwrap_or(f32::NEG_INFINITY);
+                let st = s.steps_to_reach(target);
+                let sp = st
+                    .map(|x| steps as f64 / x as f64)
+                    .map(|x| format!("{x:.2}x"))
+                    .unwrap_or_else(|| "-".into());
+                (
+                    st.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+                    sp,
+                    format!("{:.0}", s.effective_tokens_per_sec(a)),
+                )
+            }
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        table.row(vec![
+            s.optimizer.clone(),
+            format!("{:.2}", (s.final_eval_loss.unwrap_or(f32::NAN) as f64).exp()),
+            steps_to,
+            speedup,
+            format!("{:.0}", s.tokens_per_sec),
+            etp,
+        ]);
+    }
+    table.print();
+    println!(
+        "\nPaper shape to verify: Alice ≈ Alice-0 < RACS < Apollo/Fira < \
+         GaLore ≤ Adam in final ppl; Alice ≥ 2x fewer steps than Adam."
+    );
+}

@@ -1,0 +1,47 @@
+//! Table 3 — estimated optimizer memory per model size (exact arithmetic
+//! over the paper's LLaMA presets; BF16, paper App. F.4 accounting).
+//! "Mem" = candidate trains the lm-head; "Mem*" = Adam trains it.
+
+use alice_racs::bench::TablePrinter;
+use alice_racs::config::presets::{num_params, preset};
+use alice_racs::coordinator::estimate;
+use alice_racs::opt::Hyper;
+
+fn gib(b: u64) -> String {
+    format!("{:.2}G", b as f64 / (1024.0 * 1024.0 * 1024.0))
+}
+
+fn main() {
+    // paper rank choices: 128 / 256 / 256 / 512 for 60M..1.3B
+    let sizes = [
+        ("llama60m", 128usize),
+        ("llama130m", 256),
+        ("llama350m", 256),
+        ("llama1b", 512),
+    ];
+    let opts = ["adam", "galore", "fira", "apollo_mini", "racs", "alice0", "alice"];
+    let mut table = TablePrinter::new(&[
+        "optimizer", "60M Mem/Mem*", "130M Mem/Mem*", "350M Mem/Mem*", "1.3B Mem/Mem*",
+    ]);
+    for opt in opts {
+        let mut cells = vec![opt.to_string()];
+        for (name, rank) in sizes {
+            let p = preset(name).unwrap();
+            let hp = Hyper { rank, ..Hyper::default() };
+            let mem = estimate(p, opt, &hp, false).unwrap().total_bytes;
+            let mem_star = estimate(p, opt, &hp, true).unwrap().total_bytes;
+            cells.push(format!("{}/{}", gib(mem), gib(mem_star)));
+        }
+        table.row(cells);
+    }
+    println!("== Table 3: estimated memory (weights + optimizer states, BF16) ==");
+    for (name, _) in sizes {
+        let p = preset(name).unwrap();
+        println!("  {name}: {} params", num_params(p));
+    }
+    table.print();
+    println!(
+        "\nPaper anchors: Adam 0.75G @130M*, 7.48G @1.3B*; RACS 0.43G/2.98G; \
+         Alice 0.59G/4.6G; GaLore/Fira 0.57G/4.43G."
+    );
+}

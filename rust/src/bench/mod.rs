@@ -1,0 +1,170 @@
+//! Benchmark harness shared by `rust/benches/*` — criterion-style timing
+//! (warmup + measured iterations, mean ± σ) plus the training-run drivers
+//! that regenerate the paper's tables and figures.
+//!
+//! Scaling: the benches honor two env vars so the same binaries serve both
+//! CI smoke runs and full reproductions:
+//! * `AR_BENCH_STEPS`  — optimizer steps per training run (default 120)
+//! * `AR_BENCH_OPTS`   — comma list overriding the optimizer sweep
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{self, Summary, Trainer};
+use crate::util::{mean, std_dev, Timer};
+
+/// Measured wallclock stats for one micro-bench.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<34} {:>10.3} ms ± {:>7.3} ({} iters)",
+            self.name, self.mean_ms, self.std_ms, self.iters
+        )
+    }
+}
+
+/// Criterion-style measurement: warm up, then time `iters` runs.
+pub fn time_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.millis());
+    }
+    Timing {
+        name: name.to_string(),
+        mean_ms: mean(&samples),
+        std_ms: std_dev(&samples),
+        iters,
+    }
+}
+
+/// Steps per bench training run (env-scalable).
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("AR_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Optimizer sweep for the table benches (env-overridable).
+pub fn bench_opts(default: &[&str]) -> Vec<String> {
+    match std::env::var("AR_BENCH_OPTS") {
+        Ok(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        Err(_) => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// A standard bench run config against the default artifact bundle.
+pub fn bench_cfg(opt: &str, tag: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default().tuned_for(opt);
+    cfg.artifacts = "artifacts".into();
+    cfg.out_dir = format!("runs/bench/{tag}/{opt}");
+    cfg.steps = steps;
+    cfg.eval_every = (steps / 8).max(1);
+    cfg.eval_batches = 4;
+    cfg.log_every = usize::MAX;
+    // artifact bundle is lowered with rank 16 / interval 50 (Makefile
+    // defaults); the native path follows the same geometry
+    cfg.hp.rank = 16;
+    cfg.hp.leading = 6;
+    cfg.hp.interval = 50;
+    cfg
+}
+
+/// Train one optimizer and return its summary.
+pub fn run_one(cfg: RunConfig) -> Result<Summary> {
+    let mut trainer = Trainer::new(cfg)?;
+    coordinator::run_with(&mut trainer)
+}
+
+pub fn artifacts_available() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("bench requires artifacts: run `make artifacts` first");
+    }
+    ok
+}
+
+/// Markdown-ish table printer shared by the table benches.
+pub struct TablePrinter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> Self {
+        TablePrinter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let t = time_fn("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_ms < 10.0);
+        assert!(t.row().contains("noop"));
+    }
+
+    #[test]
+    fn table_printer_aligns() {
+        let mut t = TablePrinter::new(&["a", "bbbb"]);
+        t.row(vec!["xx".into(), "y".into()]);
+        t.print(); // smoke — no panic, alignment covered by width logic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn env_scaling_defaults() {
+        std::env::remove_var("AR_BENCH_STEPS");
+        assert_eq!(bench_steps(120), 120);
+        assert_eq!(bench_opts(&["adam", "racs"]), vec!["adam", "racs"]);
+    }
+}

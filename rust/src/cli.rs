@@ -1,0 +1,253 @@
+//! Hand-rolled CLI (no `clap` offline — DESIGN.md §Substitutions).
+//!
+//! ```text
+//! alice-racs train   [--config run.toml] [--opt alice] [--steps N] ...
+//! alice-racs eval    --artifacts DIR --ckpt FILE
+//! alice-racs memory  [--preset llama1b] [--opt racs] [--rank 512]
+//! alice-racs inspect [--artifacts DIR]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ExecPath, RunConfig};
+use crate::coordinator;
+use crate::opt;
+use crate::runtime::Engine;
+
+/// Parsed `--key value` / `--flag` arguments after the subcommand.
+pub struct Args {
+    pub cmd: String,
+    pairs: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        // flags-only argv (the examples) has no subcommand
+        let (cmd, mut i) = match argv.first() {
+            Some(a) if a.starts_with("--") => ("".to_string(), 0),
+            Some(a) => (a.clone(), 1),
+            None => ("help".to_string(), 1),
+        };
+        let mut pairs = Vec::new();
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                pairs.push((key.to_string(), argv[i + 1].clone()));
+                i += 2;
+            } else {
+                pairs.push((key.to_string(), "true".to_string()));
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, pairs })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+}
+
+const HELP: &str = "\
+alice-racs — structured-Fisher optimizers (RACS / Alice) training coordinator
+
+USAGE:
+  alice-racs train   [--config FILE] [--opt NAME] [--steps N] [--lr F]
+                     [--artifacts DIR] [--out DIR] [--path coordinator|fused]
+                     [--rank N] [--interval N] [--seed N] [--tuned]
+  alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
+  alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
+  alice-racs inspect [--artifacts DIR]
+  alice-racs help
+
+Optimizers: sgd adam adafactor lion signum muon swan racs eigen_adam
+            shampoo soap galore fira apollo_mini alice alice0
+";
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "memory" => cmd_memory(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+pub fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(opt) = args.get("opt") {
+        if args.get("tuned").is_some() {
+            cfg = cfg.tuned_for(opt);
+        } else {
+            cfg.optimizer = opt.to_string();
+        }
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts = a.to_string();
+    }
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = o.to_string();
+    }
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.lr = args.f64_or("lr", cfg.lr as f64)? as f32;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.hp.rank = args.usize_or("rank", cfg.hp.rank)?;
+    cfg.hp.interval = args.usize_or("interval", cfg.hp.interval)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    if let Some(p) = args.get("path") {
+        cfg.path = match p {
+            "fused" => ExecPath::Fused,
+            "coordinator" => ExecPath::Coordinator,
+            other => bail!("--path must be coordinator|fused, got {other:?}"),
+        };
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let summary = coordinator::run(cfg)?;
+    println!(
+        "final: train_loss={:.4} eval_loss={:?} tokens/s={:.0}",
+        summary.last_train_loss, summary.final_eval_loss, summary.tokens_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let ckpt_path = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt FILE required"))?;
+    let mut trainer = coordinator::Trainer::new(cfg)?;
+    let ck = coordinator::Checkpoint::load(ckpt_path)?;
+    trainer.restore(&ck)?;
+    let batches = args.usize_or("batches", 8)?;
+    let loss = trainer.eval(batches)?;
+    println!("eval_loss={loss:.4} ppl={:.3} (step {})", (loss as f64).exp(), ck.step);
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let preset_name = args.get("preset").unwrap_or("llama1b");
+    let p = crate::config::presets::preset(preset_name)
+        .ok_or_else(|| anyhow!("unknown preset {preset_name:?}"))?;
+    let mut hp = opt::Hyper::default();
+    hp.rank = args.usize_or("rank", 512)?;
+    let head_adam = args.get("no-head-adam").is_none();
+    let opts: Vec<&str> = match args.get("opt") {
+        Some(o) => vec![o],
+        None => opt::ALL.to_vec(),
+    };
+    println!("memory estimate — preset {preset_name}, rank {}, lm-head adam: {head_adam}", hp.rank);
+    println!("{:<12} {:>12} {:>14} {:>12} {:>12}", "optimizer", "weights", "matrix-state", "adam-side", "total");
+    for o in opts {
+        let e = coordinator::estimate(p, o, &hp, head_adam)?;
+        println!(
+            "{:<12} {:>12} {:>14} {:>12} {:>12}",
+            o,
+            crate::util::human_bytes(e.weight_bytes),
+            crate::util::human_bytes(e.matrix_state_bytes),
+            crate::util::human_bytes(e.adam_side_bytes),
+            crate::util::human_bytes(e.total_bytes),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let engine = Engine::new(dir)?;
+    let m = &engine.manifest;
+    println!(
+        "preset {} — {} params in {} tensors; platform {}",
+        m.model.preset,
+        m.model.num_params,
+        m.params.len(),
+        engine.platform()
+    );
+    println!("artifacts:");
+    for a in m.artifacts.values() {
+        println!(
+            "  {:<30} kind={:<10} inputs={} outputs={}",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    println!("optimizers with artifacts: {:?}", m.optimizers.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_values() {
+        let a = Args::parse(&argv(&["train", "--opt", "racs", "--steps", "50", "--tuned"])).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("opt"), Some("racs"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert_eq!(a.get("tuned"), Some("true"));
+        assert_eq!(a.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&argv(&["train", "oops"])).is_err());
+    }
+
+    #[test]
+    fn config_overrides() {
+        let a = Args::parse(&argv(&[
+            "train", "--opt", "racs", "--tuned", "--steps", "7", "--path", "fused",
+        ]))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.optimizer, "racs");
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.path, ExecPath::Fused);
+        assert!((cfg.hp.alpha - 0.2).abs() < 1e-6); // tuned racs alpha
+    }
+
+    #[test]
+    fn bad_path_rejected() {
+        let a = Args::parse(&argv(&["train", "--path", "warp"])).unwrap();
+        assert!(config_from_args(&a).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Typed run configuration: TOML file → `RunConfig`, plus the paper's
+//! model-size presets used by the analytic memory tables.
+
+pub mod presets;
+pub mod toml;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::opt::{Compen, Hyper, Switch};
+use toml::View;
+
+/// Which execution path the trainer uses (DESIGN.md §1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// grad_step HLO + native Rust per-layer optimizers (default).
+    Coordinator,
+    /// fully fused train_step_<opt> HLO (perf hot path).
+    Fused,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts: String,
+    pub out_dir: String,
+    pub optimizer: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_frac: f32,
+    pub min_lr_frac: f32,
+    pub seed: u64,
+    pub grad_accum: usize,
+    /// Simulated data-parallel workers (grads averaged = all-reduce).
+    pub workers: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Train the lm-head with full-rank Adam (the paper's "Ppl*" setup).
+    pub last_layer_adam: bool,
+    pub path: ExecPath,
+    pub hp: Hyper,
+    /// Corpus knobs.
+    pub corpus_mix: f64,
+    pub corpus_seed: u64,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Checkpoint every N steps (0 = only at end).
+    pub ckpt_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            out_dir: "runs/default".into(),
+            optimizer: "alice".into(),
+            steps: 300,
+            lr: 0.02,
+            warmup_frac: 0.1,
+            min_lr_frac: 0.1,
+            seed: 42,
+            grad_accum: 1,
+            workers: 1,
+            eval_every: 50,
+            eval_batches: 4,
+            last_layer_adam: true,
+            path: ExecPath::Coordinator,
+            hp: Hyper::default(),
+            corpus_mix: 0.65,
+            corpus_seed: 0x5eed,
+            log_every: 10,
+            ckpt_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let table = toml::parse(text)?;
+        let v = View::new(&table);
+        let d = RunConfig::default();
+        let hp_d = Hyper::default();
+        let hp = Hyper {
+            b1: v.f64_or("optimizer", "b1", hp_d.b1 as f64) as f32,
+            b2: v.f64_or("optimizer", "b2", hp_d.b2 as f64) as f32,
+            b3: v.f64_or("optimizer", "b3", hp_d.b3 as f64) as f32,
+            eps: v.f64_or("optimizer", "eps", hp_d.eps as f64) as f32,
+            rank: v.usize_or("optimizer", "rank", hp_d.rank),
+            leading: v.usize_or("optimizer", "leading", hp_d.leading),
+            interval: v.usize_or("optimizer", "interval", hp_d.interval),
+            alpha: v.f64_or("optimizer", "alpha", hp_d.alpha as f64) as f32,
+            alpha_c: v.f64_or("optimizer", "alpha_c", hp_d.alpha_c as f64) as f32,
+            gamma: v.f64_or("optimizer", "gamma", hp_d.gamma as f64) as f32,
+            beta_racs: v.f64_or("optimizer", "beta_racs", hp_d.beta_racs as f64) as f32,
+            racs_iters: v.usize_or("optimizer", "racs_iters", hp_d.racs_iters),
+            ns_iters: v.usize_or("optimizer", "ns_iters", hp_d.ns_iters),
+            eig_sweeps: v.usize_or("optimizer", "eig_sweeps", hp_d.eig_sweeps),
+            sub_iters: v.usize_or("optimizer", "sub_iters", hp_d.sub_iters),
+            switch: Switch::parse(&v.str_or("optimizer", "switch", "switch"))?,
+            compen: Compen::parse(&v.str_or("optimizer", "compen", "optimal"))?,
+            racs_ema: v.bool_or("optimizer", "racs_ema", hp_d.racs_ema),
+            bias_correction: v.bool_or("optimizer", "bias_correction", true),
+            tracking: v.bool_or("optimizer", "tracking", true),
+        };
+        let path = match v.str_or("train", "path", "coordinator").as_str() {
+            "fused" => ExecPath::Fused,
+            _ => ExecPath::Coordinator,
+        };
+        Ok(RunConfig {
+            artifacts: v.str_or("", "artifacts", &d.artifacts),
+            out_dir: v.str_or("", "out_dir", &d.out_dir),
+            optimizer: v.str_or("train", "optimizer", &d.optimizer),
+            steps: v.usize_or("train", "steps", d.steps),
+            lr: v.f64_or("train", "lr", d.lr as f64) as f32,
+            warmup_frac: v.f64_or("train", "warmup_frac", d.warmup_frac as f64) as f32,
+            min_lr_frac: v.f64_or("train", "min_lr_frac", d.min_lr_frac as f64) as f32,
+            seed: v.usize_or("train", "seed", d.seed as usize) as u64,
+            grad_accum: v.usize_or("train", "grad_accum", d.grad_accum).max(1),
+            workers: v.usize_or("train", "workers", d.workers).max(1),
+            eval_every: v.usize_or("train", "eval_every", d.eval_every),
+            eval_batches: v.usize_or("train", "eval_batches", d.eval_batches),
+            last_layer_adam: v.bool_or("train", "last_layer_adam", d.last_layer_adam),
+            path,
+            hp,
+            corpus_mix: v.f64_or("data", "mix", d.corpus_mix),
+            corpus_seed: v.usize_or("data", "seed", d.corpus_seed as usize) as u64,
+            log_every: v.usize_or("train", "log_every", d.log_every),
+            ckpt_every: v.usize_or("train", "ckpt_every", d.ckpt_every),
+        })
+    }
+
+    /// Paper-faithful per-optimizer defaults (App. F.2 tables 7-11),
+    /// applied when the config doesn't override.
+    pub fn tuned_for(mut self, optimizer: &str) -> Self {
+        self.optimizer = optimizer.to_string();
+        match optimizer {
+            "adam" => {
+                self.lr = 0.001;
+            }
+            "racs" => {
+                self.lr = 0.02;
+                // paper Table 9 uses α = 0.05 at 131k-token batches; on
+                // this testbed's 512-token batches α = 0.2 is the sweep
+                // optimum (EXPERIMENTS.md §Tuning)
+                self.hp.alpha = 0.2;
+                self.hp.beta_racs = 0.9;
+            }
+            "alice" | "alice0" => {
+                self.lr = 0.02;
+                self.hp.alpha = 0.3;
+                self.hp.alpha_c = 0.4;
+                self.hp.b2 = 0.9;
+                self.hp.b3 = 0.999;
+                self.hp.tracking = optimizer == "alice";
+            }
+            "galore" | "fira" => {
+                self.lr = 0.02;
+                self.hp.alpha = 0.3;
+            }
+            "apollo_mini" => {
+                self.lr = 0.02;
+                self.hp.alpha = 0.3;
+            }
+            "muon" | "swan" => {
+                self.lr = 0.02;
+                self.hp.alpha = 0.2;
+            }
+            "sgd" => {
+                self.lr = 0.1;
+            }
+            "lion" | "signum" => {
+                self.lr = 0.003;
+            }
+            "shampoo" | "soap" | "eigen_adam" => {
+                self.lr = 0.003;
+            }
+            "adafactor" => {
+                self.lr = 0.005;
+            }
+            _ => {}
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let c = RunConfig::from_toml("").unwrap();
+        assert_eq!(c.optimizer, "alice");
+        assert_eq!(c.steps, 300);
+        assert_eq!(c.path, ExecPath::Coordinator);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::from_toml(
+            r#"
+artifacts = "artifacts"
+out_dir = "runs/x"
+[train]
+optimizer = "racs"
+steps = 100
+lr = 0.01
+path = "fused"
+last_layer_adam = false
+workers = 4
+[optimizer]
+rank = 16
+switch = "gaussian_mix"
+compen = "fira"
+[data]
+mix = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.optimizer, "racs");
+        assert_eq!(c.path, ExecPath::Fused);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.hp.rank, 16);
+        assert_eq!(c.hp.switch, crate::opt::Switch::GaussianMix);
+        assert_eq!(c.hp.compen, crate::opt::Compen::Fira);
+        assert!((c.corpus_mix - 0.5).abs() < 1e-12);
+        assert!(!c.last_layer_adam);
+    }
+
+    #[test]
+    fn tuned_defaults_follow_paper() {
+        let c = RunConfig::default().tuned_for("racs");
+        assert!((c.lr - 0.02).abs() < 1e-6);
+        assert!((c.hp.alpha - 0.2).abs() < 1e-6);
+        let a = RunConfig::default().tuned_for("alice0");
+        assert!(!a.hp.tracking);
+        assert!((a.hp.b2 - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_switch_rejected() {
+        assert!(RunConfig::from_toml("[optimizer]\nswitch = \"bogus\"").is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! TOML-subset parser (no `toml` crate offline).
+//!
+//! Supports what the run configs need: `[section]` headers, `key = value`
+//! with string / integer / float / bool / flat array values, `#` comments.
+//! Nested tables beyond one level and multi-line values are rejected with
+//! a clear error.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value. Top-level (pre-section) keys live under "".
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Table> {
+    let mut out: Table = BTreeMap::new();
+    let mut section = String::new();
+    out.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: unterminated section header", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.contains('[') || section.contains('.') {
+                bail!("line {}: nested tables are not supported", lineno + 1);
+            }
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        out.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let end = body
+            .find('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if body[end + 1..].trim() != "" {
+            bail!("trailing characters after string");
+        }
+        return Ok(Value::Str(body[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Typed lookup helpers over a parsed table.
+pub struct View<'a> {
+    pub table: &'a Table,
+}
+
+impl<'a> View<'a> {
+    pub fn new(table: &'a Table) -> Self {
+        View { table }
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&'a Value> {
+        self.table.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+title = "demo"
+
+[train]
+steps = 500
+lr = 0.02          # cosine-decayed
+optimizer = "alice"
+last_layer_adam = true
+sizes = [60, 130, 350]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(SAMPLE).unwrap();
+        let v = View::new(&t);
+        assert_eq!(v.str_or("", "title", "?"), "demo");
+        assert_eq!(v.usize_or("train", "steps", 0), 500);
+        assert!((v.f64_or("train", "lr", 0.0) - 0.02).abs() < 1e-12);
+        assert_eq!(v.str_or("train", "optimizer", "?"), "alice");
+        assert!(v.bool_or("train", "last_layer_adam", false));
+        match &t["train"]["sizes"] {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = parse("").unwrap();
+        let v = View::new(&t);
+        assert_eq!(v.usize_or("train", "steps", 7), 7);
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(parse("[a.b]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("s = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let t = parse("x = \"a # b\"").unwrap();
+        assert_eq!(t[""]["x"], Value::Str("a # b".into()));
+    }
+}

@@ -1,0 +1,128 @@
+//! Binary checkpointing of parameters + optimizer state + step counter.
+//!
+//! Format (little-endian): magic "ARCK" u32-version, then a count-prefixed
+//! list of named f32 blobs. Save/restore must round-trip exactly — the
+//! resume-equivalence integration test trains 2N steps vs N + resume + N
+//! and demands identical parameters.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"ARCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    /// name → (shape, data)
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn insert(&mut self, name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) {
+        self.tensors.insert(name.into(), (shape, data));
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, (shape, data)) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(&(data.len() as u64).to_le_bytes())?;
+            for &x in data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a checkpoint file");
+        }
+        let ver = read_u32(&mut r)?;
+        if ver != VERSION {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let step = read_u64(&mut r)?;
+        let count = read_u64(&mut r)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let len = read_u64(&mut r)? as usize;
+            let mut data = Vec::with_capacity(len);
+            let mut buf = [0u8; 4];
+            for _ in 0..len {
+                r.read_exact(&mut buf)?;
+                data.push(f32::from_le_bytes(buf));
+            }
+            tensors.insert(String::from_utf8(name)?, (shape, data));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut ck = Checkpoint { step: 42, ..Default::default() };
+        ck.insert("w", vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, f32::MIN_POSITIVE, 7.0]);
+        ck.insert("state.m", vec![3], vec![0.1, 0.2, 0.3]);
+        let path = std::env::temp_dir().join(format!("arck_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("arck_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

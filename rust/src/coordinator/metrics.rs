@@ -1,0 +1,225 @@
+//! Run metrics: CSV curves (the Fig. 1/2/5 series), JSONL summaries, and
+//! throughput meters (Table 2 TP / effective-TP inputs).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Timer;
+
+/// Writes train/eval curves and a final summary for one run.
+pub struct MetricsLogger {
+    dir: PathBuf,
+    train_csv: BufWriter<File>,
+    eval_csv: BufWriter<File>,
+    timer: Timer,
+    pub tokens_seen: u64,
+    pub last_train_loss: f32,
+    pub eval_history: Vec<(usize, f32)>,
+}
+
+impl MetricsLogger {
+    pub fn create(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut train_csv =
+            BufWriter::new(File::create(dir.join("train.csv"))?);
+        writeln!(train_csv, "step,loss,lr,tokens,elapsed_s,tokens_per_s")?;
+        let mut eval_csv = BufWriter::new(File::create(dir.join("eval.csv"))?);
+        writeln!(eval_csv, "step,eval_loss,eval_ppl,elapsed_s")?;
+        Ok(MetricsLogger {
+            dir,
+            train_csv,
+            eval_csv,
+            timer: Timer::start(),
+            tokens_seen: 0,
+            last_train_loss: f32::NAN,
+            eval_history: Vec::new(),
+        })
+    }
+
+    pub fn train_step(&mut self, step: usize, loss: f32, lr: f32, tokens: u64) -> Result<()> {
+        self.tokens_seen += tokens;
+        self.last_train_loss = loss;
+        let el = self.timer.secs();
+        let tps = self.tokens_seen as f64 / el.max(1e-9);
+        writeln!(
+            self.train_csv,
+            "{step},{loss},{lr},{},{el:.3},{tps:.1}",
+            self.tokens_seen
+        )?;
+        Ok(())
+    }
+
+    pub fn eval_point(&mut self, step: usize, eval_loss: f32) -> Result<()> {
+        let el = self.timer.secs();
+        writeln!(
+            self.eval_csv,
+            "{step},{eval_loss},{},{el:.3}",
+            (eval_loss as f64).exp()
+        )?;
+        self.eval_history.push((step, eval_loss));
+        Ok(())
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.timer.secs()
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_seen as f64 / self.timer.secs().max(1e-9)
+    }
+
+    /// Final summary JSON consumed by the bench harness.
+    pub fn finish(mut self, optimizer: &str, extra: Vec<(&str, Json)>) -> Result<Summary> {
+        self.train_csv.flush()?;
+        self.eval_csv.flush()?;
+        let final_eval = self.eval_history.last().map(|&(_, l)| l);
+        let summary = Summary {
+            optimizer: optimizer.to_string(),
+            final_eval_loss: final_eval,
+            last_train_loss: self.last_train_loss,
+            tokens: self.tokens_seen,
+            elapsed_s: self.timer.secs(),
+            tokens_per_sec: self.tokens_per_sec(),
+            eval_history: self.eval_history.clone(),
+        };
+        let mut pairs = vec![
+            ("optimizer", s(optimizer)),
+            ("final_eval_loss", final_eval.map(|l| num(l as f64)).unwrap_or(Json::Null)),
+            ("last_train_loss", num(self.last_train_loss as f64)),
+            ("tokens", num(self.tokens_seen as f64)),
+            ("elapsed_s", num(self.timer.secs())),
+            ("tokens_per_sec", num(self.tokens_per_sec())),
+            (
+                "eval_history",
+                Json::Arr(
+                    self.eval_history
+                        .iter()
+                        .map(|&(st, l)| {
+                            Json::Arr(vec![num(st as f64), num(l as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        pairs.extend(extra);
+        fs::write(self.dir.join("summary.json"), obj(pairs).to_string())?;
+        Ok(summary)
+    }
+}
+
+/// Parsed result of a finished run (also reconstructable from
+/// summary.json — used by the table benches to aggregate runs).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub optimizer: String,
+    pub final_eval_loss: Option<f32>,
+    pub last_train_loss: f32,
+    pub tokens: u64,
+    pub elapsed_s: f64,
+    pub tokens_per_sec: f64,
+    pub eval_history: Vec<(usize, f32)>,
+}
+
+impl Summary {
+    /// First step at which eval loss ≤ target (the paper's speed-up-in-
+    /// steps metric, Table 2). None if never reached.
+    pub fn steps_to_reach(&self, target: f32) -> Option<usize> {
+        self.eval_history
+            .iter()
+            .find(|&&(_, l)| l <= target)
+            .map(|&(s, _)| s)
+    }
+
+    /// Effective throughput vs a reference run (Table 2 / App. F.5):
+    /// reference tokens ÷ candidate time to reach the reference's final
+    /// eval loss. 0.0 when the target is never reached.
+    pub fn effective_tokens_per_sec(&self, reference: &Summary) -> f64 {
+        let Some(target) = reference.final_eval_loss else {
+            return 0.0;
+        };
+        let Some(step) = self.steps_to_reach(target) else {
+            return 0.0;
+        };
+        let total_steps = self.eval_history.last().map(|&(s, _)| s).unwrap_or(1);
+        let frac = step as f64 / total_steps as f64;
+        let time_to_target = self.elapsed_s * frac;
+        reference.tokens as f64 / time_to_target.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("alice_racs_metrics_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_csvs_and_summary() {
+        let dir = tmpdir("a");
+        let mut m = MetricsLogger::create(&dir).unwrap();
+        m.train_step(1, 5.0, 0.01, 512).unwrap();
+        m.train_step(2, 4.5, 0.01, 512).unwrap();
+        m.eval_point(2, 4.4).unwrap();
+        let s = m.finish("adam", vec![]).unwrap();
+        assert_eq!(s.tokens, 1024);
+        assert_eq!(s.final_eval_loss, Some(4.4));
+        let csv = fs::read_to_string(dir.join("train.csv")).unwrap();
+        assert!(csv.lines().count() == 3);
+        let js = fs::read_to_string(dir.join("summary.json")).unwrap();
+        assert!(js.contains("\"optimizer\":\"adam\""));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn steps_to_reach_finds_crossing() {
+        let s = Summary {
+            optimizer: "x".into(),
+            final_eval_loss: Some(3.0),
+            last_train_loss: 3.0,
+            tokens: 1000,
+            elapsed_s: 10.0,
+            tokens_per_sec: 100.0,
+            eval_history: vec![(10, 5.0), (20, 4.0), (30, 3.0)],
+        };
+        assert_eq!(s.steps_to_reach(4.0), Some(20));
+        assert_eq!(s.steps_to_reach(2.0), None);
+    }
+
+    #[test]
+    fn effective_tp_rewards_fast_convergence() {
+        let slow = Summary {
+            optimizer: "adam".into(),
+            final_eval_loss: Some(4.0),
+            last_train_loss: 4.0,
+            tokens: 10_000,
+            elapsed_s: 100.0,
+            tokens_per_sec: 100.0,
+            eval_history: vec![(50, 4.5), (100, 4.0)],
+        };
+        let fast = Summary {
+            optimizer: "alice".into(),
+            final_eval_loss: Some(3.5),
+            last_train_loss: 3.5,
+            tokens: 10_000,
+            elapsed_s: 100.0,
+            tokens_per_sec: 100.0,
+            eval_history: vec![(50, 4.0), (100, 3.5)],
+        };
+        // fast reaches 4.0 at half its run → effective TP = 10000/50 = 200
+        let etp = fast.effective_tokens_per_sec(&slow);
+        assert!((etp - 200.0).abs() < 1.0, "{etp}");
+        // the reference against itself = its own TP
+        let self_etp = slow.effective_tokens_per_sec(&slow);
+        assert!((self_etp - 100.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training loop and everything it owns — LR schedule,
+//! metrics, memory accounting, checkpointing. See `trainer` for the two
+//! execution paths (coordinator vs fused).
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use memory::{estimate, MemoryBreakdown};
+pub use metrics::{MetricsLogger, Summary};
+pub use schedule::LrSchedule;
+pub use trainer::{run, run_with, Trainer};

@@ -1,0 +1,69 @@
+//! Learning-rate schedule: linear warmup over the first `warmup_frac` of
+//! training, then cosine decay to `min_lr_frac · lr` (paper App. F.2:
+//! "first 10% warm-up, cosine decay to 10% of the original LR").
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub min_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base: f32, total_steps: usize, warmup_frac: f32, min_frac: f32) -> Self {
+        let warmup_steps = ((total_steps as f32) * warmup_frac).round() as usize;
+        LrSchedule { base, total_steps: total_steps.max(1), warmup_steps, min_frac }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn at(&self, t: usize) -> f32 {
+        let t = t.min(self.total_steps);
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.base * t as f32 / self.warmup_steps as f32;
+        }
+        let span = (self.total_steps - self.warmup_steps).max(1) as f32;
+        let progress = (t - self.warmup_steps) as f32 / span;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        let floor = self.base * self.min_frac;
+        floor + (self.base - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(0.02, 100, 0.1, 0.1);
+        assert!((s.at(5) - 0.01).abs() < 1e-6);
+        assert!((s.at(10) - 0.02).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(0.02, 100, 0.1, 0.1);
+        assert!((s.at(100) - 0.002).abs() < 1e-5);
+        // midpoint between peak and floor
+        let mid = s.at(55);
+        assert!(mid < 0.02 && mid > 0.002);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::new(0.01, 200, 0.05, 0.1);
+        let mut prev = f32::MAX;
+        for t in 11..=200 {
+            let lr = s.at(t);
+            assert!(lr <= prev + 1e-9, "non-monotone at {t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_ok() {
+        let s = LrSchedule::new(0.01, 50, 0.0, 0.5);
+        assert!((s.at(1) - 0.01).abs() < 1e-3);
+    }
+}

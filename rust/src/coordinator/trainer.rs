@@ -1,0 +1,452 @@
+//! The training coordinator — the L3 loop that owns parameters, optimizer
+//! state, data, the K-interval refresh schedule, and metrics.
+//!
+//! Two execution paths (DESIGN.md §1):
+//!
+//! * **Coordinator** (default): the `grad_step` HLO produces per-layer
+//!   gradients; native Rust optimizers (`opt::Slot`) update each parameter.
+//!   Per-param routing follows the paper's App. F.2 protocol: matrix
+//!   params → candidate optimizer, 1-D params → Adam, lm-head → Adam when
+//!   `last_layer_adam` ("Ppl*") else the candidate ("Ppl").
+//! * **Fused**: one `train_step_<opt>` executable carries params + states
+//!   through each step; rust only schedules, feeds batches, and fires
+//!   `refresh_<opt>` every K steps.
+//!
+//! Gradient accumulation doubles as the simulated data-parallel all-reduce:
+//! `workers × grad_accum` microbatches are averaged before the update,
+//! reproducing the semantics of synchronous DP without multi-process PJRT
+//! (unavailable on this CPU testbed — DESIGN.md §Substitutions).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ExecPath, RunConfig};
+use crate::data::{CorpusConfig, SyncBatcher};
+use crate::info;
+use crate::linalg::Mat;
+use crate::opt::{build, Slot};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::timer::Profile;
+use crate::util::{Pcg, Timer};
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{MetricsLogger, Summary};
+use super::schedule::LrSchedule;
+
+/// Per-parameter routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Candidate,
+    Adam,
+}
+
+pub struct Trainer {
+    pub engine: Engine,
+    pub cfg: RunConfig,
+    /// Flat parameter list in manifest order.
+    pub params: Vec<HostTensor>,
+    /// Optimizer slot per parameter (coordinator path).
+    slots: Vec<Slot>,
+    routes: Vec<Route>,
+    /// Fused-path optimizer state tensors (manifest order).
+    fused_state: Vec<HostTensor>,
+    batcher: SyncBatcher,
+    eval_seed: u64,
+    pub step: u64,
+    pub profile: Profile,
+    rng: Pcg,
+    /// Fig. 6 instrumentation: (step, param, per-index cos) per refresh.
+    pub cos_log: Vec<(u64, String, Vec<f32>)>,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        let engine = Engine::new(&cfg.artifacts)
+            .with_context(|| format!("loading artifacts from {}", cfg.artifacts))?;
+        Self::with_engine(engine, cfg)
+    }
+
+    pub fn with_engine(engine: Engine, cfg: RunConfig) -> Result<Self> {
+        let model = engine.manifest.model.clone();
+        let mut rng = Pcg::seeded(cfg.seed);
+
+        // -------- parameter init (manifest init_std; own RNG — the init
+        // *distribution* matters, not jax's exact draws)
+        let mut params = Vec::with_capacity(engine.manifest.params.len());
+        for p in &engine.manifest.params {
+            let elems: usize = p.shape.iter().product();
+            let data = if p.init_std == 0.0 {
+                vec![1.0f32; elems] // RMSNorm gains
+            } else {
+                rng.normal_vec(elems, p.init_std)
+            };
+            params.push(HostTensor::f32(p.shape.clone(), data));
+        }
+
+        // -------- per-param routing + native slots
+        let mut slots = Vec::new();
+        let mut routes = Vec::new();
+        for p in &engine.manifest.params {
+            let is_matrix = p.shape.len() == 2;
+            let low_rank = matches!(
+                cfg.optimizer.as_str(),
+                "galore" | "fira" | "alice" | "alice0" | "apollo_mini"
+            );
+            let route = if !is_matrix {
+                Route::Adam
+            } else if p.name == "lm_head" && cfg.last_layer_adam && !low_rank {
+                Route::Adam
+            } else if p.name == "lm_head" && cfg.last_layer_adam && low_rank {
+                Route::Adam
+            } else if is_matrix {
+                Route::Candidate
+            } else {
+                Route::Adam
+            };
+            let (rows, cols) = if p.shape.len() == 2 {
+                (p.shape[0], p.shape[1])
+            } else {
+                (1, p.shape[0])
+            };
+            let opt = match route {
+                Route::Adam => build("adam", &cfg.hp)?,
+                Route::Candidate => build(&cfg.optimizer, &cfg.hp)?,
+            };
+            slots.push(Slot::new(opt, rows, cols));
+            routes.push(route);
+        }
+
+        // -------- fused-path state init from the manifest
+        let fused_state = if cfg.path == ExecPath::Fused {
+            let spec = engine.manifest.optimizer(&cfg.optimizer)?;
+            spec.states
+                .iter()
+                .map(|s| Ok(HostTensor::f32(s.shape.clone(), s.init_data()?)))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            Vec::new()
+        };
+
+        let corpus = CorpusConfig {
+            vocab: model.vocab,
+            mix: cfg.corpus_mix,
+            seed: cfg.corpus_seed,
+            ..Default::default()
+        };
+        let batcher = SyncBatcher::new(corpus, model.batch, model.seq, cfg.seed ^ 0x7ea1);
+
+        Ok(Trainer {
+            engine,
+            eval_seed: cfg.corpus_seed ^ 0xeeee,
+            cfg,
+            params,
+            slots,
+            routes,
+            fused_state,
+            batcher,
+            step: 0,
+            profile: Profile::new(),
+            rng,
+            cos_log: Vec::new(),
+        })
+    }
+
+    fn model_batch_tokens(&self) -> u64 {
+        let m = &self.engine.manifest.model;
+        (m.batch * m.seq) as u64
+    }
+
+    fn tokens_input(&mut self) -> HostTensor {
+        let m = &self.engine.manifest.model;
+        let shape = vec![m.batch, m.seq];
+        HostTensor::i32(shape, self.batcher.next())
+    }
+
+    /// One optimizer step (one or more microbatches). Returns train loss.
+    pub fn train_step(&mut self, lr: f32) -> Result<f32> {
+        self.step += 1;
+        match self.cfg.path {
+            ExecPath::Coordinator => self.step_coordinator(lr),
+            ExecPath::Fused => self.step_fused(lr),
+        }
+    }
+
+    // ------------------------------------------------- coordinator path ---
+    fn step_coordinator(&mut self, lr: f32) -> Result<f32> {
+        let micro = self.cfg.grad_accum * self.cfg.workers;
+        let mut loss_acc = 0.0f32;
+        let mut grads: Vec<Mat> = Vec::new();
+        for _ in 0..micro {
+            let t_data = Timer::start();
+            let tokens = self.tokens_input();
+            self.profile.add("data", t_data.secs());
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
+            inputs.push(&tokens);
+            inputs.extend(self.params.iter());
+            let t0 = Timer::start();
+            let outs = self.engine.run_refs("grad_step", &inputs)?;
+            self.profile.add("grad_exec", t0.secs());
+            loss_acc += outs[0].scalar()?;
+            // all-reduce: average microbatch grads
+            for (i, out) in outs.into_iter().skip(1).enumerate() {
+                let g = host_to_mat(out)?;
+                if grads.len() <= i {
+                    grads.push(g);
+                } else {
+                    grads[i].ema_(1.0, &g, 1.0);
+                }
+            }
+        }
+        if micro > 1 {
+            for g in &mut grads {
+                *g = g.scale(1.0 / micro as f32);
+            }
+        }
+
+        // refresh schedule (paper Alg. 4 line 5: t == 1 or t mod K == 0)
+        let k = self.cfg.hp.interval.max(1) as u64;
+        let do_refresh = self.step == 1 || self.step % k == 0;
+        let t0 = Timer::start();
+        for i in 0..self.params.len() {
+            if do_refresh && self.routes[i] == Route::Candidate {
+                let seed = self.rng.next_u64() ^ (i as u64);
+                self.slots[i].refresh(&grads[i], seed);
+                if let Some(cos) = self.slots[i].state.vecs.get("diag_cos") {
+                    self.cos_log.push((
+                        self.step,
+                        self.engine.manifest.params[i].name.clone(),
+                        cos.clone(),
+                    ));
+                }
+            }
+            let delta = self.slots[i].step(&grads[i], self.step);
+            let w = self.params[i].as_f32_mut()?;
+            for (wi, &di) in w.iter_mut().zip(&delta.data) {
+                *wi -= lr * di;
+            }
+        }
+        self.profile.add("opt_update", t0.secs());
+        Ok(loss_acc / micro as f32)
+    }
+
+    // ------------------------------------------------------- fused path ---
+    fn step_fused(&mut self, lr: f32) -> Result<f32> {
+        let name = format!("train_step_{}", self.cfg.optimizer);
+        let k = self.cfg.hp.interval.max(1) as u64;
+        if self.step == 1 || self.step % k == 0 {
+            self.refresh_fused()?;
+        }
+        let t_data = Timer::start();
+            let tokens = self.tokens_input();
+            self.profile.add("data", t_data.secs());
+        let lr_t = HostTensor::scalar_f32(lr);
+        let step_t = HostTensor::scalar_f32(self.step as f32);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(3 + self.params.len() + self.fused_state.len());
+        inputs.push(&tokens);
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.fused_state.iter());
+        let t0 = Timer::start();
+        let mut outs = self.engine.run_refs(&name, &inputs)?;
+        self.profile.add("fused_exec", t0.secs());
+        let loss = outs[0].scalar()?;
+        let np = self.params.len();
+        let rest = outs.split_off(1 + np);
+        self.params = outs.into_iter().skip(1).collect();
+        self.fused_state = rest;
+        Ok(loss)
+    }
+
+    fn refresh_fused(&mut self) -> Result<()> {
+        let name = format!("refresh_{}", self.cfg.optimizer);
+        if !self.engine.manifest.artifacts.contains_key(&name) {
+            return Ok(()); // optimizer without refresh (e.g. adam)
+        }
+        let tokens = self.tokens_input();
+        let seed = (self.rng.next_u32() & 0x7fff_ffff) as i32;
+        let seed_t = HostTensor::scalar_i32(seed);
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(2 + self.params.len() + self.fused_state.len());
+        inputs.push(&tokens);
+        inputs.push(&seed_t);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.fused_state.iter());
+        let t0 = Timer::start();
+        self.fused_state = self.engine.run_refs(&name, &inputs)?;
+        self.profile.add("refresh_exec", t0.secs());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- eval ---
+    /// Mean loss over `batches` deterministic eval batches (fixed seed →
+    /// the same held-out set every call).
+    pub fn eval(&mut self, batches: usize) -> Result<f32> {
+        let m = self.engine.manifest.model.clone();
+        let corpus = CorpusConfig {
+            vocab: m.vocab,
+            mix: self.cfg.corpus_mix,
+            seed: self.cfg.corpus_seed,
+            ..Default::default()
+        };
+        let mut eval_batcher = SyncBatcher::new(corpus, m.batch, m.seq, self.eval_seed);
+        let mut acc = 0.0f32;
+        let t0 = Timer::start();
+        for _ in 0..batches.max(1) {
+            let tokens = HostTensor::i32(vec![m.batch, m.seq], eval_batcher.next());
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
+            inputs.push(&tokens);
+            inputs.extend(self.params.iter());
+            let outs = self.engine.run_refs("eval_loss", &inputs)?;
+            acc += outs[0].scalar()?;
+        }
+        self.profile.add("eval", t0.secs());
+        Ok(acc / batches.max(1) as f32)
+    }
+
+    // ------------------------------------------------------ checkpoints ---
+    pub fn checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint { step: self.step, ..Default::default() };
+        for (p, spec) in self.params.iter().zip(&self.engine.manifest.params) {
+            ck.insert(
+                format!("param.{}", spec.name),
+                p.shape().to_vec(),
+                p.as_f32().unwrap().to_vec(),
+            );
+        }
+        for (i, slot) in self.slots.iter().enumerate() {
+            let pname = &self.engine.manifest.params[i].name;
+            for (k, m) in &slot.state.mats {
+                ck.insert(
+                    format!("state.{pname}.{k}"),
+                    vec![m.rows, m.cols],
+                    m.data.clone(),
+                );
+            }
+            for (k, v) in &slot.state.vecs {
+                ck.insert(format!("state.{pname}.{k}"), vec![v.len()], v.clone());
+            }
+            for (k, &s) in &slot.state.scalars {
+                ck.insert(format!("state.{pname}.{k}"), vec![], vec![s]);
+            }
+        }
+        ck
+    }
+
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.step = ck.step;
+        for (p, spec) in self.params.iter_mut().zip(&self.engine.manifest.params) {
+            let (shape, data) = ck
+                .tensors
+                .get(&format!("param.{}", spec.name))
+                .ok_or_else(|| anyhow!("checkpoint missing param {}", spec.name))?;
+            if shape != p.shape() {
+                bail!("checkpoint shape mismatch for {}", spec.name);
+            }
+            p.as_f32_mut()?.copy_from_slice(data);
+        }
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let pname = self.engine.manifest.params[i].name.clone();
+            for (k, m) in slot.state.mats.iter_mut() {
+                if let Some((_, data)) = ck.tensors.get(&format!("state.{pname}.{k}")) {
+                    m.data.copy_from_slice(data);
+                }
+            }
+            for (k, v) in slot.state.vecs.iter_mut() {
+                if let Some((_, data)) = ck.tensors.get(&format!("state.{pname}.{k}")) {
+                    v.copy_from_slice(data);
+                }
+            }
+            let keys: Vec<&'static str> = slot.state.scalars.keys().copied().collect();
+            for k in keys {
+                if let Some((_, data)) = ck.tensors.get(&format!("state.{pname}.{k}")) {
+                    slot.state.scalars.insert(k, data[0]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total optimizer-state elements currently held (Fig. 4 measured
+    /// footprint, coordinator path).
+    pub fn state_elems(&self) -> u64 {
+        self.slots.iter().map(|s| s.state_elems()).sum()
+    }
+}
+
+fn host_to_mat(t: HostTensor) -> Result<Mat> {
+    // consume the tensor: the gradient buffer moves into the Mat with no
+    // copy (EXPERIMENTS.md §Perf L3-2)
+    let (shape, data) = match t {
+        HostTensor::F32 { shape, data } => (shape, data),
+        HostTensor::I32 { .. } => bail!("gradient tensor is i32"),
+    };
+    Ok(match shape.len() {
+        2 => Mat::from_vec(shape[0], shape[1], data),
+        1 => {
+            let n = shape[0];
+            Mat::from_vec(1, n, data)
+        }
+        0 => Mat::from_vec(1, 1, data),
+        _ => bail!("unexpected gradient rank {}", shape.len()),
+    })
+}
+
+/// Run a full configured training job; returns the summary.
+pub fn run(cfg: RunConfig) -> Result<Summary> {
+    let mut trainer = Trainer::new(cfg.clone())?;
+    run_with(&mut trainer)
+}
+
+/// Drive an existing trainer through `cfg.steps` with schedule + metrics.
+pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
+    let cfg = trainer.cfg.clone();
+    let sched = LrSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac, cfg.min_lr_frac);
+    let mut metrics = MetricsLogger::create(&cfg.out_dir)?;
+    let batch_tokens =
+        trainer.model_batch_tokens() * (cfg.grad_accum * cfg.workers) as u64;
+    info!(
+        "run: opt={} path={:?} steps={} preset={} ({} params)",
+        cfg.optimizer,
+        cfg.path,
+        cfg.steps,
+        trainer.engine.manifest.model.preset,
+        trainer.engine.manifest.model.num_params
+    );
+    for t in 1..=cfg.steps {
+        let lr = sched.at(t);
+        let loss = trainer.train_step(lr)?;
+        metrics.train_step(t, loss, lr, batch_tokens)?;
+        if t % cfg.log_every.max(1) == 0 || t == 1 {
+            info!("step {t:>5}  loss {loss:.4}  lr {lr:.5}");
+        }
+        if cfg.eval_every > 0 && (t % cfg.eval_every == 0 || t == cfg.steps) {
+            let ev = trainer.eval(cfg.eval_batches)?;
+            metrics.eval_point(t, ev)?;
+            info!("step {t:>5}  eval_loss {ev:.4}  ppl {:.2}", (ev as f64).exp());
+        }
+        if cfg.ckpt_every > 0 && t % cfg.ckpt_every == 0 {
+            trainer
+                .checkpoint()
+                .save(format!("{}/ckpt_{t}.bin", cfg.out_dir))?;
+        }
+    }
+    trainer.checkpoint().save(format!("{}/ckpt_final.bin", cfg.out_dir))?;
+    // Fig. 6 data
+    if !trainer.cos_log.is_empty() {
+        let mut csv = String::from("step,param,index,cos\n");
+        for (st, name, cos) in &trainer.cos_log {
+            for (i, c) in cos.iter().enumerate() {
+                csv.push_str(&format!("{st},{name},{i},{c}\n"));
+            }
+        }
+        std::fs::write(format!("{}/eigen_cos.csv", cfg.out_dir), csv)?;
+    }
+    info!(
+        "done: {:.1}s, {:.0} tok/s; profile:\n{}",
+        metrics.elapsed(),
+        metrics.tokens_per_sec(),
+        trainer.profile.report()
+    );
+    metrics.finish(&cfg.optimizer, vec![])
+}

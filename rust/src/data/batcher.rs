@@ -1,0 +1,100 @@
+//! Double-buffered batch iterator: generation happens on a background
+//! thread so token synthesis never sits on the training hot path (the
+//! coordinator-side analogue of an async input pipeline; std threads —
+//! no tokio offline).
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::corpus::{Corpus, CorpusConfig};
+use crate::util::Pcg;
+
+/// Streaming [batch, seq] i32 token blocks.
+pub struct Batcher {
+    rx: mpsc::Receiver<Vec<i32>>,
+    pub batch: usize,
+    pub seq: usize,
+    _worker: thread::JoinHandle<()>,
+}
+
+impl Batcher {
+    /// `depth` controls how many batches may be prefetched (bounded queue =
+    /// backpressure: the generator blocks when the trainer lags).
+    pub fn spawn(cfg: CorpusConfig, batch: usize, seq: usize, seed: u64, depth: usize) -> Self {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let worker = thread::spawn(move || {
+            let corpus = Corpus::new(cfg);
+            let mut rng = Pcg::new(seed, 0xbeef);
+            let mut buf = Vec::new();
+            loop {
+                corpus.fill_batch(batch, seq, &mut rng, &mut buf);
+                if tx.send(std::mem::take(&mut buf)).is_err() {
+                    return; // trainer dropped the receiver — shut down
+                }
+            }
+        });
+        Batcher { rx, batch, seq, _worker: worker }
+    }
+
+    /// Blocking fetch of the next token block (row-major [batch, seq]).
+    pub fn next(&self) -> Vec<i32> {
+        self.rx.recv().expect("batch generator thread died")
+    }
+}
+
+/// Deterministic single-threaded variant for eval sets and tests: the same
+/// seed always yields the same sequence of batches.
+pub struct SyncBatcher {
+    corpus: Corpus,
+    rng: Pcg,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl SyncBatcher {
+    pub fn new(cfg: CorpusConfig, batch: usize, seq: usize, seed: u64) -> Self {
+        SyncBatcher { corpus: Corpus::new(cfg), rng: Pcg::new(seed, 0xe7a1), batch, seq }
+    }
+
+    pub fn next(&mut self) -> Vec<i32> {
+        let mut buf = Vec::new();
+        self.corpus.fill_batch(self.batch, self.seq, &mut self.rng, &mut buf);
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_and_sync_agree() {
+        let cfg = CorpusConfig::default();
+        let b = Batcher::spawn(cfg.clone(), 2, 16, 7, 2);
+        let mut s = SyncBatcher::new(cfg, 2, 16, 7);
+        // different internal stream tags → both deterministic, but compare
+        // shape/vocab only
+        let ab = b.next();
+        let sb = s.next();
+        assert_eq!(ab.len(), sb.len());
+        assert!(ab.iter().all(|&t| t >= 0));
+    }
+
+    #[test]
+    fn sync_batcher_is_reproducible() {
+        let cfg = CorpusConfig::default();
+        let mut a = SyncBatcher::new(cfg.clone(), 2, 16, 9);
+        let mut b = SyncBatcher::new(cfg, 2, 16, 9);
+        for _ in 0..3 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn backpressure_does_not_deadlock() {
+        let b = Batcher::spawn(CorpusConfig::default(), 1, 8, 1, 1);
+        for _ in 0..10 {
+            let _ = b.next();
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic pre-training corpus (DESIGN.md §Substitutions: replaces C4).
+//!
+//! A Zipf(1.1) unigram distribution mixed with an order-2 Markov chain over
+//! the model vocabulary: the unigram part gives realistic heavy-tailed
+//! marginals, the Markov part gives learnable sequential structure so the
+//! cross-entropy actually *decreases* with training and separates
+//! optimizers. Fully deterministic given the seed.
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::{Batcher, SyncBatcher};
+pub use corpus::{Corpus, CorpusConfig};

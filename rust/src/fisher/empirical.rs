@@ -1,0 +1,101 @@
+//! Streaming empirical-FIM statistics with EMA — the practical estimator
+//! the paper uses in place of E[·] (Sec. 2.1 note).
+//!
+//! Tracks, per layer: E[GGᵀ], E[GᵀG], E[G⊙²] under a β-EMA, from which any
+//! of the `Structure` solutions can be extracted online. Used by the
+//! structure-comparison bench (Table 1) and the fisher tests.
+
+use crate::linalg::Mat;
+
+#[derive(Debug, Clone)]
+pub struct EmpiricalFim {
+    pub beta: f32,
+    pub ggt: Mat,
+    pub gtg: Mat,
+    pub g2: Mat,
+    pub count: u64,
+}
+
+impl EmpiricalFim {
+    pub fn new(m: usize, n: usize, beta: f32) -> Self {
+        EmpiricalFim {
+            beta,
+            ggt: Mat::zeros(m, m),
+            gtg: Mat::zeros(n, n),
+            g2: Mat::zeros(m, n),
+            count: 0,
+        }
+    }
+
+    /// Fold one gradient sample into the EMAs (bias-corrected on read).
+    pub fn update(&mut self, g: &Mat) {
+        let b = self.beta;
+        self.ggt.ema_(b, &g.matmul_nt(g), 1.0 - b);
+        self.gtg.ema_(b, &g.matmul_tn(g), 1.0 - b);
+        for (x, &gi) in self.g2.data.iter_mut().zip(&g.data) {
+            *x = b * *x + (1.0 - b) * gi * gi;
+        }
+        self.count += 1;
+    }
+
+    fn corr(&self) -> f32 {
+        1.0 - self.beta.powi(self.count as i32)
+    }
+
+    /// Bias-corrected E[GGᵀ].
+    pub fn e_ggt(&self) -> Mat {
+        self.ggt.scale(1.0 / self.corr().max(1e-12))
+    }
+
+    /// Bias-corrected E[GᵀG].
+    pub fn e_gtg(&self) -> Mat {
+        self.gtg.scale(1.0 / self.corr().max(1e-12))
+    }
+
+    /// Bias-corrected E[G⊙²] — the matrix whose principal singular pair is
+    /// the RACS fixed point (Prop. 3).
+    pub fn e_g2(&self) -> Mat {
+        self.g2.scale(1.0 / self.corr().max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn ema_converges_to_mean_for_constant_input() {
+        let mut fim = EmpiricalFim::new(3, 4, 0.9);
+        let g = Mat::from_fn(3, 4, |i, j| (i + j) as f32 * 0.1);
+        for _ in 0..200 {
+            fim.update(&g);
+        }
+        let want = g.matmul_nt(&g);
+        assert!(fim.e_ggt().sub(&want).max_abs() < 1e-3);
+        let g2 = g.map(|x| x * x);
+        assert!(fim.e_g2().sub(&g2).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn bias_correction_early_steps() {
+        let mut fim = EmpiricalFim::new(2, 2, 0.99);
+        let g = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        fim.update(&g);
+        // after one update the corrected estimate equals the sample itself
+        assert!(fim.e_ggt().sub(&g.matmul_nt(&g)).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn symmetric_accumulators() {
+        let mut rng = Pcg::seeded(60);
+        let mut fim = EmpiricalFim::new(4, 6, 0.9);
+        for _ in 0..10 {
+            fim.update(&Mat::from_vec(4, 6, rng.normal_vec(24, 1.0)));
+        }
+        let a = fim.e_ggt();
+        assert!(a.sub(&a.transpose()).max_abs() < 1e-5);
+        let b = fim.e_gtg();
+        assert!(b.sub(&b.transpose()).max_abs() < 1e-5);
+    }
+}

@@ -1,0 +1,430 @@
+//! Structured FIM approximation — the paper's framework (Sec. 3-5) as a
+//! standalone, testable library.
+//!
+//! Everything revolves around Eq. (2):  min_{F̃ ∈ H} ‖F̃ − F‖_F²  with
+//! F = E[ḡ ḡᵀ] the layer-wise empirical Fisher. Each `Structure` variant is
+//! one family H from the paper; `solve` returns the paper's analytic /
+//! fixed-point solution; `assemble` materializes the (mn × mn) matrix for
+//! small shapes so tests can check optimality against brute force and
+//! random perturbations.
+
+pub mod empirical;
+
+use crate::linalg::{block_diag, diag_v, jacobi_eigh, kron, Mat};
+use crate::opt::racs::fixed_point;
+
+pub use empirical::EmpiricalFim;
+
+const EPS: f32 = 1e-8;
+
+/// The structural families of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Structure {
+    /// H = {Diag_v(v)} — Adam (Proposition 1).
+    Diag,
+    /// H = {Iₙ ⊗ M}, SPD M — whitening (Proposition 2).
+    Whitening,
+    /// H = {S ⊗ Iₘ}, positive diagonal S — normalization (Proposition 2).
+    Normalization,
+    /// H = {S ⊗ Q}, positive diagonals — RACS (Proposition 3).
+    TwoSidedDiag,
+    /// H = {Rₙ^½ ⊗ Lₘ^½}, SPD — Shampoo (Theorem 3.1 upper bound).
+    KronSqrt,
+    /// H = {Diag_B(U Dᵢ Uᵀ)} shared eigenspace — Eigen-Adam (Theorem 3.2).
+    BlockDiagSharedEig,
+}
+
+/// A solved structured approximation, with enough pieces to assemble the
+/// dense F̃ and to derive the corresponding square-root NGD update.
+#[derive(Debug, Clone)]
+pub enum Solution {
+    Diag { v: Vec<f32> },
+    Whitening { m: Mat },
+    Normalization { s: Vec<f32> },
+    TwoSidedDiag { s: Vec<f32>, q: Vec<f32> },
+    KronSqrt { r: Mat, l: Mat },
+    BlockDiagSharedEig { u: Mat, d: Mat },
+}
+
+/// Solve Eq. (2) for the given structure from gradient samples (each an
+/// m×n matrix; E[·] is the sample mean, as the paper estimates with EMA).
+pub fn solve(structure: Structure, grads: &[Mat]) -> Solution {
+    assert!(!grads.is_empty());
+    let (m, n) = (grads[0].rows, grads[0].cols);
+    let k = grads.len() as f32;
+    match structure {
+        Structure::Diag => {
+            // Prop. 1: v = E[ḡ²] (column-stacked order)
+            let mut v = vec![0.0f32; m * n];
+            for g in grads {
+                for j in 0..n {
+                    for i in 0..m {
+                        v[j * m + i] += g.at(i, j) * g.at(i, j) / k;
+                    }
+                }
+            }
+            Solution::Diag { v }
+        }
+        Structure::Whitening => {
+            // Prop. 2: M* = E[GGᵀ]/n
+            let mut acc = Mat::zeros(m, m);
+            for g in grads {
+                acc.ema_(1.0, &g.matmul_nt(g), 1.0 / (k * n as f32));
+            }
+            Solution::Whitening { m: acc }
+        }
+        Structure::Normalization => {
+            // Prop. 2: S* = E[diag(gᵢᵀgᵢ)]/m
+            let mut s = vec![0.0f32; n];
+            for g in grads {
+                for (sj, c) in s.iter_mut().zip(g.col_sq_norms()) {
+                    *sj += c / (k * m as f32);
+                }
+            }
+            Solution::Normalization { s }
+        }
+        Structure::TwoSidedDiag => {
+            // Prop. 3 fixed point on E[G⊙²] — realized by stacking the
+            // samples into one √-mean-square matrix (fixed_point squares).
+            let mut p = Mat::zeros(m, n);
+            for g in grads {
+                for (pi, &gi) in p.data.iter_mut().zip(&g.data) {
+                    *pi += gi * gi / k;
+                }
+            }
+            let sqrt_p = p.map(|x| x.sqrt());
+            let (s, q) = fixed_point(&sqrt_p, 30);
+            Solution::TwoSidedDiag { s, q }
+        }
+        Structure::KronSqrt => {
+            // Thm 3.1: Rₙ = E[GᵀG]/m, Lₘ = E[GGᵀ]/n
+            let mut r = Mat::zeros(n, n);
+            let mut l = Mat::zeros(m, m);
+            for g in grads {
+                r.ema_(1.0, &g.matmul_tn(g), 1.0 / (k * m as f32));
+                l.ema_(1.0, &g.matmul_nt(g), 1.0 / (k * n as f32));
+            }
+            Solution::KronSqrt { r, l }
+        }
+        Structure::BlockDiagSharedEig => {
+            // Thm 3.2: U = EVD(E[GGᵀ]); D̃ = Diag_M(E[(UᵀG)⊙²])
+            let mut q = Mat::zeros(m, m);
+            for g in grads {
+                q.ema_(1.0, &g.matmul_nt(g), 1.0 / k);
+            }
+            let (u, _) = jacobi_eigh(&q, 40);
+            let mut d = Mat::zeros(m, n);
+            for g in grads {
+                let rot = u.matmul_tn(g);
+                for (di, &ri) in d.data.iter_mut().zip(&rot.data) {
+                    *di += ri * ri / k;
+                }
+            }
+            Solution::BlockDiagSharedEig { u, d }
+        }
+    }
+}
+
+impl Solution {
+    /// Materialize the dense (mn × mn) F̃ — small shapes only (tests).
+    pub fn assemble(&self, m: usize, n: usize) -> Mat {
+        match self {
+            Solution::Diag { v } => diag_v(v),
+            Solution::Whitening { m: mat } => kron(&Mat::eye(n), mat),
+            Solution::Normalization { s } => kron(&diag_v(s), &Mat::eye(m)),
+            Solution::TwoSidedDiag { s, q } => kron(&diag_v(s), &diag_v(q)),
+            Solution::KronSqrt { r, l } => {
+                let rs = sqrt_spd(r);
+                let ls = sqrt_spd(l);
+                kron(&rs, &ls)
+            }
+            Solution::BlockDiagSharedEig { u, d } => {
+                // Diag_B(U Dᵢ Uᵀ) with Dᵢ = diag(column i of d)
+                let blocks: Vec<Mat> = (0..n)
+                    .map(|j| {
+                        let di = diag_v(&d.col_vec(j));
+                        u.matmul(&di).matmul_nt(u)
+                    })
+                    .collect();
+                block_diag(&blocks)
+            }
+        }
+    }
+
+    /// The square-root NGD update Mat(F̃^-½ ḡ) for this structure
+    /// (App. C derivations) applied to a gradient G.
+    pub fn sqrt_ngd(&self, g: &Mat) -> Mat {
+        match self {
+            Solution::Diag { v } => {
+                let m = g.rows;
+                Mat::from_fn(g.rows, g.cols, |i, j| {
+                    g.at(i, j) / (v[j * m + i].sqrt() + EPS)
+                })
+            }
+            Solution::Whitening { m: mat } => {
+                // App. C.2: √n · M^-½ G (with M = E[GGᵀ]/n)
+                let (_, inv_sqrt) = crate::linalg::newton_schulz(mat, 25);
+                inv_sqrt.matmul(g)
+            }
+            Solution::Normalization { s } => Mat::from_fn(g.rows, g.cols, |i, j| {
+                g.at(i, j) / (s[j].sqrt() + EPS)
+            }),
+            Solution::TwoSidedDiag { s, q } => {
+                crate::opt::racs::apply_scaling(g, q, s)
+            }
+            Solution::KronSqrt { r, l } => {
+                // App. C.1: L^-¼ G R^-¼
+                let li = crate::linalg::inv_fourth_root(l, 25);
+                let ri = crate::linalg::inv_fourth_root(r, 25);
+                li.matmul(g).matmul(&ri)
+            }
+            Solution::BlockDiagSharedEig { u, d } => {
+                // Eq. 12: U (UᵀG) / √E[(UᵀG)⊙²]
+                let rot = u.matmul_tn(g);
+                let dir = Mat::from_fn(rot.rows, rot.cols, |i, j| {
+                    rot.at(i, j) / (d.at(i, j).sqrt() + EPS)
+                });
+                u.matmul(&dir)
+            }
+        }
+    }
+}
+
+fn sqrt_spd(a: &Mat) -> Mat {
+    let (sq, _) = crate::linalg::newton_schulz(a, 30);
+    sq
+}
+
+/// Frobenius objective of Eq. (2): ‖F̃ − F‖²_F for dense matrices.
+pub fn objective(f_tilde: &Mat, f: &Mat) -> f32 {
+    f_tilde.sub(f).fro_norm_sq()
+}
+
+/// Theorem 5.1: optimal compensation scaling
+/// Diag(S) = √(m−r) / √E[1ₘᵀG⊙² − 1ᵣᵀ(UᵀG)⊙²].
+pub fn optimal_compensation_scale(grads: &[Mat], u: &Mat) -> Vec<f32> {
+    let (m, r) = (u.rows, u.cols);
+    let n = grads[0].cols;
+    let k = grads.len() as f32;
+    let mut p = vec![0.0f32; n];
+    for g in grads {
+        let sigma = u.matmul_tn(g);
+        for ((pj, gc), sc) in
+            p.iter_mut().zip(g.col_sq_norms()).zip(sigma.col_sq_norms())
+        {
+            *pj += (gc - sc) / k;
+        }
+    }
+    let scale = ((m - r).max(1) as f32).sqrt();
+    p.iter().map(|&x| scale / (x.max(0.0).sqrt() + EPS)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{random_orthonormal, vec_cols};
+    use crate::util::Pcg;
+
+    fn samples(m: usize, n: usize, k: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Pcg::seeded(seed);
+        (0..k)
+            .map(|_| Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0)))
+            .collect()
+    }
+
+    fn dense_fim(grads: &[Mat]) -> Mat {
+        let mn = grads[0].rows * grads[0].cols;
+        let mut f = Mat::zeros(mn, mn);
+        for g in grads {
+            let v = vec_cols(g);
+            for i in 0..mn {
+                for j in 0..mn {
+                    f.data[i * mn + j] += v[i] * v[j] / grads.len() as f32;
+                }
+            }
+        }
+        f
+    }
+
+    /// The analytic solution must beat random perturbations of itself —
+    /// a local-optimality probe of Props. 1-3.
+    fn check_local_optimality(structure: Structure, seed: u64) {
+        let grads = samples(4, 5, 12, seed);
+        let f = dense_fim(&grads);
+        let sol = solve(structure, &grads);
+        let base = objective(&sol.assemble(4, 5), &f);
+        let mut rng = Pcg::seeded(seed + 1);
+        for _ in 0..20 {
+            let perturbed = match &sol {
+                Solution::Diag { v } => Solution::Diag {
+                    v: v.iter().map(|&x| x * (1.0 + 0.1 * rng.normal())).collect(),
+                },
+                Solution::Normalization { s } => Solution::Normalization {
+                    s: s.iter().map(|&x| x * (1.0 + 0.1 * rng.normal())).collect(),
+                },
+                Solution::TwoSidedDiag { s, q } => Solution::TwoSidedDiag {
+                    s: s.iter().map(|&x| (x * (1.0 + 0.1 * rng.normal())).max(1e-6)).collect(),
+                    q: q.iter().map(|&x| (x * (1.0 + 0.1 * rng.normal())).max(1e-6)).collect(),
+                },
+                Solution::Whitening { m } => {
+                    let noise = rng.normal_vec(m.rows * m.cols, 0.05);
+                    let mut pm = m.clone();
+                    for (x, n) in pm.data.iter_mut().zip(noise) {
+                        *x *= 1.0 + n;
+                    }
+                    pm.symmetrize_();
+                    Solution::Whitening { m: pm }
+                }
+                other => other.clone(),
+            };
+            let obj = objective(&perturbed.assemble(4, 5), &f);
+            assert!(
+                obj + 1e-4 >= base,
+                "{structure:?}: perturbation improved objective {base} -> {obj}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop1_diag_is_locally_optimal() {
+        check_local_optimality(Structure::Diag, 50);
+    }
+
+    #[test]
+    fn prop2_normalization_is_locally_optimal() {
+        check_local_optimality(Structure::Normalization, 51);
+    }
+
+    #[test]
+    fn prop2_whitening_is_locally_optimal() {
+        check_local_optimality(Structure::Whitening, 52);
+    }
+
+    #[test]
+    fn prop3_two_sided_is_locally_optimal() {
+        check_local_optimality(Structure::TwoSidedDiag, 53);
+    }
+
+    #[test]
+    fn prop1_diag_matches_brute_force() {
+        // Purely diagonal: the optimum is elementwise, so brute force is
+        // exact: v_i = F_ii.
+        let grads = samples(3, 4, 10, 54);
+        let f = dense_fim(&grads);
+        if let Solution::Diag { v } = solve(Structure::Diag, &grads) {
+            for (i, &vi) in v.iter().enumerate() {
+                assert!((vi - f.at(i, i)).abs() < 1e-4, "v[{i}]");
+            }
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn generality_ordering_of_objectives() {
+        // More general structures achieve lower (or equal) Frobenius error:
+        // Diag vs Normalization vs TwoSidedDiag; Eigen-Adam ≤ Diag.
+        let grads = samples(4, 5, 16, 55);
+        let f = dense_fim(&grads);
+        let obj = |s: Structure| objective(&solve(s, &grads).assemble(4, 5), &f);
+        let diag = obj(Structure::Diag);
+        let norm = obj(Structure::Normalization);
+        let two = obj(Structure::TwoSidedDiag);
+        let eig = obj(Structure::BlockDiagSharedEig);
+        assert!(two <= norm + 1e-3, "two-sided {two} vs norm {norm}");
+        assert!(eig <= diag + 1e-3, "eigen {eig} vs diag {diag}");
+        // and normalization can't beat the strictly more general two-sided
+        assert!(diag > 0.0 && norm > 0.0);
+    }
+
+    #[test]
+    fn sqrt_ngd_matches_adam_shape() {
+        let grads = samples(4, 5, 8, 56);
+        let sol = solve(Structure::Diag, &grads);
+        let upd = sol.sqrt_ngd(&grads[0]);
+        assert_eq!((upd.rows, upd.cols), (4, 5));
+        assert!(upd.is_finite());
+    }
+
+    #[test]
+    fn proposition4_decomposition() {
+        // Construct gradients sharing a fixed eigenbasis; verify
+        // Q* = Σ G̃G̃ᵀ + U_c Σ U_cᵀ (Prop. 4).
+        let m = 6;
+        let r = 3;
+        let mut rng = Pcg::seeded(57);
+        let basis = random_orthonormal(m, m, &mut rng);
+        let u = basis.take_cols(r);
+        let uc = Mat::from_fn(m, m - r, |i, j| basis.at(i, j + r));
+        let mut q_true = Mat::zeros(m, m);
+        let mut q_low = Mat::zeros(m, m);
+        let mut sigma_acc = Mat::zeros(m - r, m - r);
+        for _ in 0..5 {
+            // G with the shared eigenbasis: G Gᵀ = basis Λ basisᵀ
+            let lam: Vec<f32> = (0..m).map(|_| rng.f32() + 0.1).collect();
+            // G = basis diag(sqrt(lam)) Wᵀ for any orthonormal W (n = m)
+            let w = random_orthonormal(m, m, &mut rng);
+            let mut bs = basis.clone();
+            for i in 0..m {
+                for j in 0..m {
+                    *bs.at_mut(i, j) *= lam[j].sqrt();
+                }
+            }
+            let g = bs.matmul_nt(&w);
+            q_true.ema_(1.0, &g.matmul_nt(&g), 1.0);
+            let gt = u.matmul(&u.matmul_tn(&g)); // G̃ = U Uᵀ G
+            q_low.ema_(1.0, &gt.matmul_nt(&gt), 1.0);
+            // Σ contribution: U_cᵀ G Gᵀ U_c (diagonal in exact arithmetic)
+            let proj = uc.matmul_tn(&g);
+            sigma_acc.ema_(1.0, &proj.matmul_nt(&proj), 1.0);
+        }
+        let rhs = q_low.add(&uc.matmul(&sigma_acc).matmul_nt(&uc));
+        assert!(
+            q_true.sub(&rhs).max_abs() < 1e-3 * q_true.max_abs(),
+            "Prop. 4 decomposition violated: {}",
+            q_true.sub(&rhs).max_abs()
+        );
+    }
+
+    #[test]
+    fn thm51_compensation_beats_uniform_scaling() {
+        // The Thm 5.1 scaling must achieve a lower complement-FIM
+        // reconstruction loss than uniform scalings.
+        let grads = samples(6, 8, 10, 58);
+        let mut rng = Pcg::seeded(59);
+        let u = random_orthonormal(6, 2, &mut rng);
+        let s_opt = optimal_compensation_scale(&grads, &u);
+        assert!(s_opt.iter().all(|&x| x > 0.0));
+        // reconstruction loss ‖(S^-2 ⊗ U_cU_cᵀ) − F̃_c‖² via the paper's
+        // derivation reduces to Σⱼ [(m−r)·Oⱼⱼ² − 2·Oⱼⱼ·pⱼ] + C with
+        // Oⱼⱼ = 1/sⱼ² — check optimality of the analytic Oⱼⱼ = pⱼ/(m−r).
+        let m = 6usize;
+        let r = 2usize;
+        let k = grads.len() as f32;
+        let mut p = vec![0.0f32; 8];
+        for g in &grads {
+            let sg = u.matmul_tn(g);
+            for ((pj, gc), sc) in
+                p.iter_mut().zip(g.col_sq_norms()).zip(sg.col_sq_norms())
+            {
+                *pj += (gc - sc) / k;
+            }
+        }
+        let loss = |o: &[f32]| -> f32 {
+            o.iter()
+                .zip(&p)
+                .map(|(&oj, &pj)| (m - r) as f32 * oj * oj - 2.0 * oj * pj)
+                .sum()
+        };
+        let o_opt: Vec<f32> =
+            s_opt.iter().map(|&s| 1.0 / (s * s)).collect();
+        let base = loss(&o_opt);
+        for _ in 0..20 {
+            let o_rand: Vec<f32> = o_opt
+                .iter()
+                .map(|&x| (x * (1.0 + 0.2 * rng.normal())).max(1e-6))
+                .collect();
+            assert!(loss(&o_rand) + 1e-5 >= base);
+        }
+    }
+}

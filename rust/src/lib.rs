@@ -1,0 +1,31 @@
+//! # alice-racs
+//!
+//! Production-style reproduction of *"Towards Efficient Optimizer Design
+//! for LLM via Structured Fisher Approximation with a Low-Rank Extension"*
+//! (Gong, Scetbon, Ma, Meeds 2025): the structured-FIM optimizer framework,
+//! the RACS and Alice optimizers, every baseline the paper compares
+//! against, and the benchmark harness regenerating each table and figure.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** Pallas kernels + **L2** JAX model/optimizers live in `python/`
+//!   and are AOT-lowered to HLO text by `make artifacts`.
+//! * **L3** (this crate) is the training coordinator: it owns config, data,
+//!   the training loop, optimizer state, the K-interval refresh schedule,
+//!   metrics, and executes the AOT artifacts through the PJRT CPU client
+//!   (`runtime`). Python is never on the training path.
+//!
+//! Native Rust implementations of all optimizers (`opt`) and of the FIM
+//! approximation theory (`fisher`) serve as baselines, enable ablations
+//! without re-lowering, and cross-validate the HLO path in `rust/tests/`.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fisher;
+pub mod linalg;
+pub mod opt;
+pub mod runtime;
+pub mod testing;
+pub mod util;

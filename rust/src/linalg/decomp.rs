@@ -1,0 +1,343 @@
+//! Decompositions: Householder-style MGS QR, Jacobi eigendecomposition,
+//! subspace iteration (paper Algorithm 10), Newton-Schulz roots (App. B.8).
+//!
+//! These are the substrate for the native optimizer suite (Eigen-Adam /
+//! SOAP / Shampoo / GaLore / Alice refreshes) and for the `fisher` library.
+//! Validated against known decompositions and reconstruction identities in
+//! the unit tests below plus property tests in `testing`.
+
+use crate::util::Pcg;
+
+use super::mat::Mat;
+
+const EPS: f32 = 1e-8;
+
+/// Modified Gram-Schmidt with re-orthogonalization. Returns Q (m x r) with
+/// orthonormal columns; degenerate input columns fall back to canonical
+/// directions projected off the accepted prefix (so Q is always full rank).
+pub fn mgs_qr(a: &Mat) -> Mat {
+    let (m, r) = (a.rows, a.cols);
+    assert!(r <= m, "mgs_qr needs tall input, got {m}x{r}");
+    let mut q = Mat::zeros(m, r);
+    for j in 0..r {
+        let mut v = a.col_vec(j);
+        for pass in 0..2 {
+            let _ = pass;
+            for jj in 0..j {
+                let qc = q.col_vec(jj);
+                let dot: f32 = qc.iter().zip(&v).map(|(a, b)| a * b).sum();
+                for (vi, qi) in v.iter_mut().zip(&qc) {
+                    *vi -= dot * qi;
+                }
+            }
+        }
+        let nrm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if nrm > 1e-6 {
+            for vi in &mut v {
+                *vi /= nrm;
+            }
+        } else {
+            // canonical fallback
+            let mut fb = vec![0.0f32; m];
+            fb[j % m] = 1.0;
+            for jj in 0..j {
+                let qc = q.col_vec(jj);
+                let dot: f32 = qc.iter().zip(&fb).map(|(a, b)| a * b).sum();
+                for (fi, qi) in fb.iter_mut().zip(&qc) {
+                    *fi -= dot * qi;
+                }
+            }
+            let fn_ = fb.iter().map(|x| x * x).sum::<f32>().sqrt() + EPS;
+            v = fb.into_iter().map(|x| x / fn_).collect();
+        }
+        q.set_col(j, &v);
+    }
+    q
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (V, λ) with columns of V sorted by descending eigenvalue:
+/// A = V diag(λ) Vᵀ.
+pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+    let n = a.rows;
+    assert_eq!(n, a.cols);
+    let mut w = a.clone();
+    w.symmetrize_();
+    let mut v = Mat::eye(n);
+    for _ in 0..sweeps {
+        let mut off = 0.0f32;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += w.at(p, q) * w.at(p, q);
+            }
+        }
+        if off.sqrt() < 1e-9 * (1.0 + w.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = w.at(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = w.at(p, p);
+                let aqq = w.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of w
+                for k in 0..n {
+                    let wkp = w.at(k, p);
+                    let wkq = w.at(k, q);
+                    *w.at_mut(k, p) = c * wkp - s * wkq;
+                    *w.at_mut(k, q) = s * wkp + c * wkq;
+                }
+                for k in 0..n {
+                    let wpk = w.at(p, k);
+                    let wqk = w.at(q, k);
+                    *w.at_mut(p, k) = c * wpk - s * wqk;
+                    *w.at_mut(q, k) = s * wpk + c * wqk;
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut lam: Vec<f32> = (0..n).map(|i| w.at(i, i)).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
+    let vs = Mat::from_fn(n, n, |i, j| v.at(i, order[j]));
+    lam = order.iter().map(|&i| lam[i]).collect();
+    (vs, lam)
+}
+
+/// Subspace iteration (paper Algorithm 10): top-r eigenpairs of symmetric
+/// `a`, warm-started at `u0` (m x r). The small r x r Rayleigh problem is
+/// solved by Jacobi, as the paper's last two lines do with EVD.
+pub fn subspace_iter(a: &Mat, u0: &Mat, iters: usize) -> (Mat, Vec<f32>) {
+    let mut u = u0.clone();
+    for _ in 0..iters.max(1) {
+        u = mgs_qr(&a.matmul(&u));
+    }
+    let small = u.matmul_tn(&a.matmul(&u)); // Uᵀ A U
+    let (w, lam) = jacobi_eigh(&small, 30);
+    (u.matmul(&w), lam)
+}
+
+/// Orthonormal complement of U (m x r) → (m x (m-r)); the paper's `QR(U)`
+/// (Algorithm 2 line 4). Deterministic construction from canonical vectors.
+pub fn complete_basis(u: &Mat) -> Mat {
+    let (m, r) = (u.rows, u.cols);
+    assert!(r <= m);
+    if r == m {
+        return Mat::zeros(m, 0);
+    }
+    // Project ALL canonical vectors off U, pick the (m - r) with the largest
+    // residuals, then MGS them (fallback covers degeneracies).
+    let mut resid = Mat::eye(m); // columns e_k
+    let ut_e = u.transpose(); // (r x m): column k of resid needs U (Uᵀ e_k)
+    for k in 0..m {
+        // e_k - U (Uᵀ e_k); Uᵀ e_k is column k of Uᵀ = row k of U
+        let coeff: Vec<f32> = (0..r).map(|j| u.at(k, j)).collect();
+        let corr = // U @ coeff
+            (0..m).map(|i| {
+                (0..r).map(|j| u.at(i, j) * coeff[j]).sum::<f32>()
+            }).collect::<Vec<f32>>();
+        for i in 0..m {
+            *resid.at_mut(i, k) -= corr[i];
+        }
+    }
+    let _ = ut_e;
+    let mut norms: Vec<(usize, f32)> = (0..m)
+        .map(|k| {
+            let n: f32 = (0..m).map(|i| resid.at(i, k).powi(2)).sum();
+            (k, n)
+        })
+        .collect();
+    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let picked: Vec<usize> = norms[..m - r].iter().map(|&(k, _)| k).collect();
+    let cand = Mat::from_fn(m, m - r, |i, j| resid.at(i, picked[j]));
+    mgs_qr(&cand)
+}
+
+/// One Newton-Schulz step (App. B.8).
+pub fn ns_step(y: &Mat, z: &Mat) -> (Mat, Mat) {
+    let n = y.rows;
+    let mut t = Mat::eye(n).scale(3.0);
+    let zy = z.matmul(y);
+    t = t.sub(&zy);
+    (y.matmul(&t).scale(0.5), t.matmul(z).scale(0.5))
+}
+
+/// Newton-Schulz: (√A, A^-½) for SPD A.
+pub fn newton_schulz(a: &Mat, iters: usize) -> (Mat, Mat) {
+    let fro = a.fro_norm() + EPS;
+    let mut y = a.scale(1.0 / fro);
+    let mut z = Mat::eye(a.rows);
+    for _ in 0..iters {
+        let (y2, z2) = ns_step(&y, &z);
+        y = y2;
+        z = z2;
+    }
+    (y.scale(fro.sqrt()), z.scale(1.0 / fro.sqrt()))
+}
+
+/// Whitening operator (Sec. 3.3): (GGᵀ)^-½ G. Expects rows <= cols.
+pub fn whiten(g: &Mat, iters: usize) -> Mat {
+    let m = g.rows;
+    let mut a = g.matmul_nt(g);
+    for i in 0..m {
+        *a.at_mut(i, i) += 1e-4;
+    }
+    let (_, inv_sqrt) = newton_schulz(&a, iters);
+    inv_sqrt.matmul(g)
+}
+
+/// A^-¼ via nested Newton-Schulz (Shampoo roots).
+pub fn inv_fourth_root(a: &Mat, iters: usize) -> Mat {
+    let (mut sqrt_a, _) = newton_schulz(a, iters);
+    sqrt_a.symmetrize_();
+    for i in 0..a.rows {
+        *sqrt_a.at_mut(i, i) += 1e-6;
+    }
+    let (_, inv_sqrt) = newton_schulz(&sqrt_a, iters);
+    inv_sqrt
+}
+
+/// Random orthonormal m x r (Gaussian + QR) — test helper and the
+/// "gaussian" switching ablation.
+pub fn random_orthonormal(m: usize, r: usize, rng: &mut Pcg) -> Mat {
+    let g = Mat::from_vec(m, r, rng.normal_vec(m * r, 1.0));
+    mgs_qr(&g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::seeded(seed);
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+        let mut a = b.matmul_nt(&b);
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.5;
+        }
+        a
+    }
+
+    fn ortho_err(q: &Mat) -> f32 {
+        let qtq = q.matmul_tn(q);
+        qtq.sub(&Mat::eye(q.cols)).max_abs()
+    }
+
+    #[test]
+    fn qr_orthonormal() {
+        let mut rng = Pcg::seeded(5);
+        let a = Mat::from_vec(30, 8, rng.normal_vec(240, 1.0));
+        let q = mgs_qr(&a);
+        assert!(ortho_err(&q) < 1e-4);
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // two identical columns: second must fall back, Q stays orthonormal
+        let mut rng = Pcg::seeded(6);
+        let c = rng.normal_vec(20, 1.0);
+        let mut data = c.clone();
+        data.extend_from_slice(&c);
+        let a = Mat::from_vec(20, 2, {
+            // interleave into row-major (20 x 2)
+            let mut v = vec![0.0; 40];
+            for i in 0..20 {
+                v[2 * i] = c[i];
+                v[2 * i + 1] = c[i];
+            }
+            v
+        });
+        let _ = data;
+        let q = mgs_qr(&a);
+        assert!(ortho_err(&q) < 1e-3);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let a = spd(12, 1);
+        let (v, lam) = jacobi_eigh(&a, 30);
+        assert!(ortho_err(&v) < 1e-4);
+        // V diag(lam) Vᵀ == A
+        let mut vd = v.clone();
+        for i in 0..v.rows {
+            for j in 0..v.cols {
+                *vd.at_mut(i, j) *= lam[j];
+            }
+        }
+        let rec = vd.matmul_nt(&v);
+        assert!(rec.sub(&a).max_abs() < 1e-3 * a.max_abs());
+        // sorted descending
+        for w in lam.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+    }
+
+    #[test]
+    fn subspace_finds_top_eigs() {
+        let a = spd(16, 2);
+        let (vf, lf) = jacobi_eigh(&a, 40);
+        let _ = vf;
+        let mut rng = Pcg::seeded(7);
+        let u0 = random_orthonormal(16, 4, &mut rng);
+        let (u, lam) = subspace_iter(&a, &u0, 25);
+        assert!(ortho_err(&u) < 1e-3);
+        for (got, want) in lam.iter().zip(&lf[..4]) {
+            assert!((got - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn complete_basis_is_complement() {
+        let mut rng = Pcg::seeded(9);
+        let u = random_orthonormal(14, 5, &mut rng);
+        let uc = complete_basis(&u);
+        assert_eq!(uc.cols, 9);
+        assert!(ortho_err(&uc) < 1e-3);
+        // Uᵀ U_c == 0
+        let cross = u.matmul_tn(&uc);
+        assert!(cross.max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn newton_schulz_roots() {
+        let a = spd(10, 3);
+        let (sq, isq) = newton_schulz(&a, 30);
+        assert!(sq.matmul(&sq).sub(&a).max_abs() < 1e-2 * a.max_abs());
+        let ident = isq.matmul(&a).matmul(&isq);
+        assert!(ident.sub(&Mat::eye(10)).max_abs() < 1e-2);
+    }
+
+    #[test]
+    fn whiten_orthogonalizes() {
+        let mut rng = Pcg::seeded(4);
+        let g = Mat::from_vec(8, 24, rng.normal_vec(192, 1.0));
+        let w = whiten(&g, 30);
+        let wwt = w.matmul_nt(&w);
+        assert!(wwt.sub(&Mat::eye(8)).max_abs() < 5e-2);
+    }
+
+    #[test]
+    fn inv_fourth_root_property() {
+        let a = spd(8, 8);
+        let r = inv_fourth_root(&a, 30);
+        // (A^-¼)⁴ A ≈ I
+        let r2 = r.matmul(&r);
+        let r4 = r2.matmul(&r2);
+        let ident = r4.matmul(&a);
+        assert!(ident.sub(&Mat::eye(8)).max_abs() < 5e-2,
+                "err {}", ident.sub(&Mat::eye(8)).max_abs());
+    }
+}

@@ -1,0 +1,114 @@
+//! Kronecker-product utilities (paper App. B.2).
+//!
+//! Only used by the `fisher` library for small-scale verification of the
+//! structural identities — (A ⊗ B) Vec(C) = Vec(B C Aᵀ), square-root
+//! factorization, block-diagonal assembly — never on the training path
+//! (there the identities are applied implicitly, which is the whole point).
+
+use super::mat::Mat;
+
+/// Dense Kronecker product A ⊗ B. O((ma·mb)·(na·nb)) memory — test use only.
+pub fn kron(a: &Mat, b: &Mat) -> Mat {
+    let (ma, na) = (a.rows, a.cols);
+    let (mb, nb) = (b.rows, b.cols);
+    Mat::from_fn(ma * mb, na * nb, |i, j| {
+        a.at(i / mb, j / nb) * b.at(i % mb, j % nb)
+    })
+}
+
+/// Column-stacking vectorization Vec(C) (paper Sec. 2.1: stack columns).
+pub fn vec_cols(c: &Mat) -> Vec<f32> {
+    let mut out = Vec::with_capacity(c.rows * c.cols);
+    for j in 0..c.cols {
+        for i in 0..c.rows {
+            out.push(c.at(i, j));
+        }
+    }
+    out
+}
+
+/// Inverse of `vec_cols`: Mat(v) with given rows/cols.
+pub fn mat_cols(v: &[f32], rows: usize, cols: usize) -> Mat {
+    assert_eq!(v.len(), rows * cols);
+    Mat::from_fn(rows, cols, |i, j| v[j * rows + i])
+}
+
+/// Block-diagonal assembly Diag_B(M₁, …, Mₙ).
+pub fn block_diag(blocks: &[Mat]) -> Mat {
+    let rows: usize = blocks.iter().map(|b| b.rows).sum();
+    let cols: usize = blocks.iter().map(|b| b.cols).sum();
+    let mut out = Mat::zeros(rows, cols);
+    let (mut ro, mut co) = (0, 0);
+    for b in blocks {
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                *out.at_mut(ro + i, co + j) = b.at(i, j);
+            }
+        }
+        ro += b.rows;
+        co += b.cols;
+    }
+    out
+}
+
+/// Diag_v(v): expand a vector to a diagonal matrix.
+pub fn diag_v(v: &[f32]) -> Mat {
+    let n = v.len();
+    let mut m = Mat::zeros(n, n);
+    for i in 0..n {
+        *m.at_mut(i, i) = v[i];
+    }
+    m
+}
+
+/// Diag_M(M): stack the elements of M column-wise into a big pure-diagonal
+/// matrix (paper App. A example).
+pub fn diag_m(m: &Mat) -> Mat {
+    diag_v(&vec_cols(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn kron_identity_property() {
+        // (A ⊗ B) Vec(C) == Vec(B C Aᵀ) — Eq. 24
+        let mut rng = Pcg::seeded(21);
+        let a = Mat::from_vec(3, 3, rng.normal_vec(9, 1.0));
+        let b = Mat::from_vec(2, 2, rng.normal_vec(4, 1.0));
+        let c = Mat::from_vec(2, 3, rng.normal_vec(6, 1.0));
+        let lhs = kron(&a, &b).matvec(&vec_cols(&c));
+        let rhs = vec_cols(&b.matmul(&c).matmul_nt(&a));
+        for (x, y) in lhs.iter().zip(&rhs) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn vec_mat_roundtrip() {
+        let c = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        let v = vec_cols(&c);
+        let back = mat_cols(&v, 3, 4);
+        assert_eq!(back.data, c.data);
+    }
+
+    #[test]
+    fn block_diag_shape() {
+        let m1 = Mat::eye(2);
+        let m2 = Mat::from_vec(1, 1, vec![5.0]);
+        let bd = block_diag(&[m1, m2]);
+        assert_eq!((bd.rows, bd.cols), (3, 3));
+        assert_eq!(bd.at(2, 2), 5.0);
+        assert_eq!(bd.at(0, 2), 0.0);
+    }
+
+    #[test]
+    fn diag_m_matches_paper_example() {
+        // App. A: Diag_M([[a11,a12],[a21,a22]]) = diag(a11,a21,a12,a22)
+        let m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]); // rows: [1,2],[3,4]
+        let d = diag_m(&m);
+        assert_eq!(d.diag(), vec![1., 3., 2., 4.]);
+    }
+}

@@ -1,0 +1,376 @@
+//! Dense row-major f32 matrix with the operations the optimizer suite
+//! needs. Hot paths (`matmul`, `matmul_tn`, `matmul_nt`) are blocked for
+//! cache locality — see EXPERIMENTS.md §Perf for measurements.
+
+use std::fmt;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)
+    }
+}
+
+/// Cache block edge for the matmul kernels (f32: 64*64*4 = 16 KiB/tile).
+const BLK: usize = 64;
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col_vec(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    // ---------------------------------------------------------- matmul ---
+    /// C = A @ B, blocked i-k-j loop (unit-stride inner loop).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul {self:?} @ {b:?}");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for i0 in (0..m).step_by(BLK) {
+            for k0 in (0..k).step_by(BLK) {
+                for j0 in (0..n).step_by(BLK) {
+                    let i1 = (i0 + BLK).min(m);
+                    let k1 = (k0 + BLK).min(k);
+                    let j1 = (j0 + BLK).min(n);
+                    for i in i0..i1 {
+                        let arow = &self.data[i * k..(i + 1) * k];
+                        let crow = &mut c.data[i * n..(i + 1) * n];
+                        for kk in k0..k1 {
+                            let a = arow[kk];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let brow = &b.data[kk * n..(kk + 1) * n];
+                            for j in j0..j1 {
+                                crow[j] += a * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ @ B without materializing Aᵀ (A is self).
+    pub fn matmul_tn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn {self:?} ᵀ@ {b:?}");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A @ Bᵀ without materializing Bᵀ.
+    pub fn matmul_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt {self:?} @ᵀ {b:?}");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                crow[j] = acc;
+            }
+        }
+        c
+    }
+
+    /// y = A @ x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                row.iter().zip(x).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------ elementwise ---
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// self ← a*self + b*other (EMA update, in place, no allocation).
+    pub fn ema_(&mut self, a: f32, other: &Mat, b: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, &y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn fro_norm_sq(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Squared column l2 norms (the `S` of the normalization operator,
+    /// Sec. 3.3).
+    pub fn col_sq_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += x * x;
+            }
+        }
+        out
+    }
+
+    /// Squared row l2 norms.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| x * x).sum())
+            .collect()
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).collect()
+    }
+
+    /// Symmetrize in place: (A + Aᵀ)/2.
+    pub fn symmetrize_(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let avg = 0.5 * (self.at(i, j) + self.at(j, i));
+                *self.at_mut(i, j) = avg;
+                *self.at_mut(j, i) = avg;
+            }
+        }
+    }
+
+    /// First `r` columns as a new matrix.
+    pub fn take_cols(&self, r: usize) -> Mat {
+        assert!(r <= self.cols);
+        Mat::from_fn(self.rows, r, |i, j| self.at(i, j))
+    }
+
+    /// Horizontal concatenation.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        Mat::from_fn(self.rows, self.cols + other.cols, |i, j| {
+            if j < self.cols {
+                self.at(i, j)
+            } else {
+                other.at(i, j - self.cols)
+            }
+        })
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Mat, b: &Mat, tol: f32) -> bool {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data
+                .iter()
+                .zip(&b.data)
+                .all(|(x, y)| (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
+        assert!(approx(&a.matmul(&Mat::eye(7)), &a, 1e-6));
+        assert!(approx(&Mat::eye(5).matmul(&a), &a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_large() {
+        // exercise the blocked path across block boundaries
+        let mut rng = crate::util::Pcg::seeded(11);
+        let a = Mat::from_vec(70, 130, rng.normal_vec(70 * 130, 1.0));
+        let b = Mat::from_vec(130, 90, rng.normal_vec(130 * 90, 1.0));
+        let c = a.matmul(&b);
+        let mut naive = Mat::zeros(70, 90);
+        for i in 0..70 {
+            for j in 0..90 {
+                let mut acc = 0.0;
+                for k in 0..130 {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *naive.at_mut(i, j) = acc;
+            }
+        }
+        assert!(approx(&c, &naive, 1e-4));
+    }
+
+    #[test]
+    fn matmul_tn_nt_match_transpose() {
+        let mut rng = crate::util::Pcg::seeded(3);
+        let a = Mat::from_vec(20, 30, rng.normal_vec(600, 1.0));
+        let b = Mat::from_vec(20, 10, rng.normal_vec(200, 1.0));
+        assert!(approx(&a.matmul_tn(&b), &a.transpose().matmul(&b), 1e-4));
+        let c = Mat::from_vec(40, 30, rng.normal_vec(1200, 1.0));
+        assert!(approx(&a.matmul_nt(&c), &a.matmul(&c.transpose()), 1e-4));
+    }
+
+    #[test]
+    fn norms_and_reductions() {
+        let a = Mat::from_vec(2, 2, vec![3., 0., 0., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.col_sq_norms(), vec![9.0, 16.0]);
+        assert_eq!(a.row_sq_norms(), vec![9.0, 16.0]);
+        assert_eq!(a.diag(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn ema_inplace() {
+        let mut a = Mat::from_vec(1, 3, vec![1., 1., 1.]);
+        let b = Mat::from_vec(1, 3, vec![2., 4., 6.]);
+        a.ema_(0.5, &b, 0.5);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn hcat_take_cols() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 1, vec![9., 8.]);
+        let c = a.hcat(&b);
+        assert_eq!(c.cols, 3);
+        assert_eq!(c.at(0, 2), 9.0);
+        assert_eq!(c.take_cols(2).data, a.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i + 2 * j) as f32);
+        assert!(approx(&a.transpose().transpose(), &a, 0.0));
+    }
+}

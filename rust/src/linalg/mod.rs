@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK offline): `Mat` plus the
+//! decompositions the paper's optimizers need — MGS QR, Jacobi EVD,
+//! subspace iteration (Alg. 10), Newton-Schulz roots (App. B.8) — and
+//! Kronecker utilities for the `fisher` verification suite.
+
+pub mod decomp;
+pub mod kron;
+pub mod mat;
+
+pub use decomp::{
+    complete_basis, inv_fourth_root, jacobi_eigh, mgs_qr, newton_schulz,
+    ns_step, random_orthonormal, subspace_iter, whiten,
+};
+pub use kron::{block_diag, diag_m, diag_v, kron, mat_cols, vec_cols};
+pub use mat::Mat;

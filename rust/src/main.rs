@@ -1,0 +1,9 @@
+//! `alice-racs` — launcher CLI for the training coordinator and the
+//! table/figure benchmark harness. See `cli.rs` for commands.
+
+fn main() {
+    if let Err(e) = alice_racs::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,354 @@
+//! Alice / Alice-0 — the paper's low-rank extension of Eigen-Adam
+//! (Sec. 5, Algorithm 4), built from the three framework steps:
+//!
+//! * **tracking**   — Q̃ EMA of the projected σσᵀ (Eq. 17), r² state
+//!   (disabled for Alice-0 via `hp.tracking = false`);
+//! * **switching**  — Algorithm 2: mix the leading eigenbasis with columns
+//!   sampled from the orthogonal complement (Prop. 4 motivates why);
+//! * **compensation** — Theorem 5.1's optimal column scaling of the
+//!   projector residual (Algorithm 3), turning the low-rank update
+//!   full-rank.
+//!
+//! Instrumentation: each refresh records per-index cosine similarity
+//! between old and new basis columns into `state.vecs["diag_cos"]` — the
+//! data behind Fig. 6.
+
+use crate::linalg::{complete_basis, subspace_iter, Mat};
+use crate::util::Pcg;
+
+use super::{bias_corr, limiter, lowrank::eff_rank, Compen, Hyper, Optimizer, State, Switch, EPS};
+
+pub struct Alice {
+    pub hp: Hyper,
+}
+
+impl Alice {
+    fn compensation(
+        &self,
+        g: &Mat,
+        u: &Mat,
+        sigma: &Mat,
+        state: &mut State,
+        t: u64,
+    ) -> Mat {
+        let hp = &self.hp;
+        match hp.compen {
+            Compen::None => Mat::zeros(g.rows, g.cols),
+            Compen::Fira | Compen::FiraPlus => {
+                let resid = g.sub(&u.matmul(sigma));
+                let scale = 1.0 / (sigma.fro_norm() + EPS);
+                let (c, phi) =
+                    limiter(resid.scale(scale), state.scalar("phi"), hp.gamma);
+                state.scalars.insert("phi", phi);
+                c
+            }
+            Compen::Optimal => {
+                // Alg. 3: p ← β₁ p + (1-β₁)(1ₘᵀG⊙² − 1ᵣᵀσ⊙²)
+                let g_col = g.col_sq_norms();
+                let s_col = sigma.col_sq_norms();
+                let b = if t <= 1 { 0.0 } else { hp.b1 };
+                let p = state.vecs.get_mut("p").unwrap();
+                for ((pi, &gc), &sc) in p.iter_mut().zip(&g_col).zip(&s_col) {
+                    *pi = b * *pi + (1.0 - b) * (gc - sc);
+                }
+                let p = p.clone();
+                let m_rows = g.rows;
+                let r = sigma.rows;
+                let scale = ((m_rows - r).max(1) as f32).sqrt();
+                let resid = g.sub(&u.matmul(sigma));
+                let c = Mat::from_fn(g.rows, g.cols, |i, j| {
+                    scale * resid.at(i, j)
+                        / (p[j].max(0.0) + EPS).sqrt()
+                });
+                let (c, phi) = limiter(c, state.scalar("phi"), hp.gamma);
+                state.scalars.insert("phi", phi);
+                c
+            }
+        }
+    }
+
+    /// Algorithm 2 + the Fig. 5(b) strategy ablations.
+    fn switch(&self, q_rec: &Mat, u_prev: &Mat, seed: u64) -> Mat {
+        let hp = &self.hp;
+        let m = q_rec.rows;
+        let r = u_prev.cols;
+        let l = hp.leading.min(r);
+        let mut rng = Pcg::seeded(seed.wrapping_mul(0x2545f491).wrapping_add(7));
+
+        if hp.switch == Switch::Gaussian {
+            let mut u = Mat::from_vec(m, r, rng.normal_vec(m * r, 1.0));
+            // unit column norms (paper's Gaussian ablation setup, App. F.7)
+            for j in 0..r {
+                let nrm: f32 =
+                    (0..m).map(|i| u.at(i, j).powi(2)).sum::<f32>().sqrt() + EPS;
+                for i in 0..m {
+                    *u.at_mut(i, j) /= nrm;
+                }
+            }
+            return u;
+        }
+
+        let (u_new, _) = subspace_iter(q_rec, u_prev, hp.sub_iters);
+        if hp.switch == Switch::Evd || r == l || m == r {
+            return u_new;
+        }
+        let top = u_new.take_cols(l);
+        match hp.switch {
+            Switch::GaussianMix => {
+                let mut gs = Mat::from_vec(m, r - l, rng.normal_vec(m * (r - l), 1.0));
+                for j in 0..(r - l) {
+                    let nrm: f32 = (0..m)
+                        .map(|i| gs.at(i, j).powi(2))
+                        .sum::<f32>()
+                        .sqrt()
+                        + EPS;
+                    for i in 0..m {
+                        *gs.at_mut(i, j) /= nrm;
+                    }
+                }
+                top.hcat(&gs)
+            }
+            Switch::FullBasis => {
+                let u_c = complete_basis(&u_new);
+                let tail = Mat::from_fn(m, r - l, |i, j| u_new.at(i, j + l));
+                let pool = tail.hcat(&u_c); // m x (m - l)
+                let mut idx: Vec<usize> = (0..pool.cols).collect();
+                rng.shuffle(&mut idx);
+                let picked =
+                    Mat::from_fn(m, r - l, |i, j| pool.at(i, idx[j]));
+                top.hcat(&picked)
+            }
+            _ => {
+                // the paper's strategy: sample ONLY from the complement
+                let u_c = complete_basis(&u_new);
+                let mut idx: Vec<usize> = (0..u_c.cols).collect();
+                rng.shuffle(&mut idx);
+                let picked =
+                    Mat::from_fn(m, r - l, |i, j| u_c.at(i, idx[j]));
+                top.hcat(&picked)
+            }
+        }
+    }
+}
+
+impl Optimizer for Alice {
+    fn name(&self) -> &'static str {
+        if self.hp.tracking {
+            "alice"
+        } else {
+            "alice0"
+        }
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let r = eff_rank(&self.hp, rows, cols);
+        let mut st = State::default();
+        st.mats.insert(
+            "u",
+            Mat::from_fn(rows, r, |i, j| if i == j { 1.0 } else { 0.0 }),
+        );
+        if self.hp.tracking {
+            st.mats.insert("qt", Mat::zeros(r, r));
+        }
+        st.mats.insert("m", Mat::zeros(r, cols));
+        st.mats.insert("v", Mat::zeros(r, cols));
+        st.vecs.insert("p", vec![0.0; cols]);
+        st.scalars.insert("phi", 0.0);
+        st
+    }
+
+    /// Algorithm 4 lines 11-17.
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let u = state.mat("u").clone();
+        let sigma = u.matmul_tn(g);
+        if hp.tracking {
+            let sst = sigma.matmul_nt(&sigma);
+            state.mats.get_mut("qt").unwrap().ema_(hp.b3, &sst, 1.0 - hp.b3);
+        }
+        state.mats.get_mut("m").unwrap().ema_(hp.b1, &sigma, 1.0 - hp.b1);
+        let v = state.mats.get_mut("v").unwrap();
+        for (vi, &si) in v.data.iter_mut().zip(&sigma.data) {
+            *vi = hp.b2 * *vi + (1.0 - hp.b2) * si * si;
+        }
+        let (bc1, bc2) = bias_corr(hp, t);
+        let m = state.mat("m");
+        let v = state.mat("v");
+        let omega = Mat::from_fn(sigma.rows, sigma.cols, |i, j| {
+            (m.at(i, j) / bc1) / ((v.at(i, j) / bc2).sqrt() + hp.eps)
+        });
+        let comp = self.compensation(g, &u, &sigma, state, t);
+        u.matmul(&omega)
+            .add(&comp.scale(hp.alpha_c))
+            .scale(hp.alpha)
+    }
+
+    /// Algorithm 4 lines 6-7: reconstruct Q, switch basis. Records Fig. 6
+    /// cosine diagnostics.
+    fn refresh(&self, g: &Mat, state: &mut State, seed: u64) {
+        let hp = &self.hp;
+        let u = state.mat("u").clone();
+        let ggt = g.matmul_nt(g);
+        let q_rec = if hp.tracking {
+            // β₃ U Q̃ Uᵀ + (1-β₃) G Gᵀ
+            let uq = u.matmul(state.mat("qt"));
+            let rec = uq.matmul_nt(&u);
+            rec.scale(hp.b3).add(&ggt.scale(1.0 - hp.b3))
+        } else {
+            ggt
+        };
+        let u_new = self.switch(&q_rec, &u, seed);
+        // Fig. 6 instrumentation: cos∠(uᵢ, uᵢ') per index.
+        let r = u.cols.min(u_new.cols);
+        let cos: Vec<f32> = (0..r)
+            .map(|j| {
+                let a = u.col_vec(j);
+                let b = u_new.col_vec(j);
+                let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+                let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+                (dot / (na * nb + EPS)).abs()
+            })
+            .collect();
+        state.vecs.insert("diag_cos", cos);
+        state.mats.insert("u", u_new);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        let r = eff_rank(&self.hp, rows, cols);
+        let tracking = if self.hp.tracking { (r * r) as u64 } else { 0 };
+        // u + m + v + p + phi (+ Q̃); diag_cos only exists post-refresh
+        (rows * r + 2 * r * cols + cols + 1) as u64 + tracking
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(seed: u64, m: usize, n: usize) -> Mat {
+        let mut rng = Pcg::seeded(seed);
+        Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0))
+    }
+
+    fn alice(hp: Hyper) -> Alice {
+        Alice { hp }
+    }
+
+    #[test]
+    fn update_is_full_rank_with_compensation() {
+        let hp = Hyper { rank: 4, leading: 2, ..Hyper::alice_defaults() };
+        let a = alice(hp);
+        let mut st = a.init(12, 16);
+        let g = grad(40, 12, 16);
+        a.refresh(&g, &mut st, 1);
+        let d = a.step(&g, &mut st, 1);
+        let u = st.mat("u");
+        let resid = d.sub(&u.matmul(&u.matmul_tn(&d)));
+        assert!(resid.fro_norm() > 1e-4, "compensation must add rank");
+    }
+
+    #[test]
+    fn no_compensation_stays_in_subspace() {
+        let hp = Hyper {
+            rank: 4,
+            leading: 2,
+            compen: Compen::None,
+            ..Hyper::alice_defaults()
+        };
+        let a = alice(hp);
+        let mut st = a.init(12, 16);
+        let g = grad(41, 12, 16);
+        a.refresh(&g, &mut st, 1);
+        let d = a.step(&g, &mut st, 1);
+        let u = st.mat("u");
+        let resid = d.sub(&u.matmul(&u.matmul_tn(&d)));
+        assert!(resid.max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn switching_output_is_orthonormal_for_every_strategy() {
+        // Orthogonal-by-construction strategies must give exactly
+        // orthonormal bases; the Gaussian ones only guarantee unit columns
+        // (that overlap is the paper's explanation for their worse
+        // performance, Sec. 7.2).
+        for sw in [Switch::Switch, Switch::Evd, Switch::FullBasis] {
+            let hp = Hyper { rank: 5, leading: 2, switch: sw,
+                             ..Hyper::alice_defaults() };
+            let a = alice(hp);
+            let mut st = a.init(14, 18);
+            let g = grad(42, 14, 18);
+            a.refresh(&g, &mut st, 9);
+            let u = st.mat("u");
+            let err = u.matmul_tn(u).sub(&Mat::eye(u.cols)).max_abs();
+            assert!(err < 1e-3, "{sw:?}: orthonormality err {err}");
+        }
+        for sw in [Switch::Gaussian, Switch::GaussianMix] {
+            let hp = Hyper { rank: 5, leading: 2, switch: sw,
+                             ..Hyper::alice_defaults() };
+            let a = alice(hp);
+            let mut st = a.init(14, 18);
+            let g = grad(42, 14, 18);
+            a.refresh(&g, &mut st, 9);
+            let u = st.mat("u");
+            for j in 0..u.cols {
+                let nrm: f32 =
+                    (0..u.rows).map(|i| u.at(i, j).powi(2)).sum::<f32>();
+                assert!((nrm - 1.0).abs() < 1e-3, "{sw:?}: column norm {nrm}");
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_records_cosine_diagnostics() {
+        let hp = Hyper { rank: 4, leading: 2, ..Hyper::alice_defaults() };
+        let a = alice(hp);
+        let mut st = a.init(10, 12);
+        let g = grad(43, 10, 12);
+        a.step(&g, &mut st, 1);
+        a.refresh(&g, &mut st, 5);
+        let cos = st.vec("diag_cos");
+        assert_eq!(cos.len(), 4);
+        assert!(cos.iter().all(|c| (0.0..=1.0 + 1e-4).contains(c)));
+    }
+
+    #[test]
+    fn alice0_has_no_tracking_state() {
+        let hp = Hyper { rank: 4, tracking: false, ..Hyper::alice_defaults() };
+        let a = alice(hp);
+        let st = a.init(10, 12);
+        assert!(!st.mats.contains_key("qt"));
+        assert_eq!(a.name(), "alice0");
+    }
+
+    #[test]
+    fn tracking_changes_refresh_basis() {
+        // With tracking, the reconstructed Q mixes history ⇒ different U
+        // than Alice-0's pure GGᵀ refresh (the Fig. 5(a) mechanism).
+        let mk = |tracking| {
+            Alice { hp: Hyper { rank: 4, leading: 4, switch: Switch::Evd,
+                                tracking, ..Hyper::alice_defaults() } }
+        };
+        let (a1, a0) = (mk(true), mk(false));
+        let mut s1 = a1.init(10, 12);
+        let mut s0 = a0.init(10, 12);
+        for t in 1..=6 {
+            let g = grad(100 + t, 10, 12);
+            a1.step(&g, &mut s1, t);
+            a0.step(&g, &mut s0, t);
+        }
+        let g = grad(200, 10, 12);
+        a1.refresh(&g, &mut s1, 3);
+        a0.refresh(&g, &mut s0, 3);
+        let diff = s1.mat("u").sub(s0.mat("u")).max_abs();
+        assert!(diff > 1e-4, "tracking should alter the refreshed basis");
+    }
+}

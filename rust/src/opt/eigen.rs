@@ -1,0 +1,257 @@
+//! Full-rank structured optimizers: Eigen-Adam (Thm 3.2 / Alg. 7),
+//! Shampoo (Thm 3.1 / Alg. 5), SOAP (Thm 3.3 / Alg. 6).
+//!
+//! These are the "general structure" end of the paper's
+//! generality-vs-efficiency trade-off (Table 1): better FIM approximations,
+//! O(m²) – O(m²+n²) state. Eigen-basis refreshes are amortized to the
+//! coordinator's K-interval schedule.
+
+use crate::linalg::{inv_fourth_root, jacobi_eigh, Mat};
+
+use super::{bias_corr, Hyper, Optimizer, State};
+
+// ---------------------------------------------------------- Eigen-Adam ----
+/// Structure: Diag_B(U D₁ Uᵀ, …, U Dₙ Uᵀ) with shared full-rank eigenspace
+/// (Eq. 9). Update: Adam in the rotated space (Eq. 12/13).
+pub struct EigenAdam {
+    pub hp: Hyper,
+}
+
+impl Optimizer for EigenAdam {
+    fn name(&self) -> &'static str {
+        "eigen_adam"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("q", Mat::zeros(rows, rows));
+        st.mats.insert("u", Mat::eye(rows));
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st.mats.insert("v", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let ggt = g.matmul_nt(g);
+        state.mats.get_mut("q").unwrap().ema_(hp.b3, &ggt, 1.0 - hp.b3);
+        state.mats.get_mut("m").unwrap().ema_(hp.b1, g, 1.0 - hp.b1);
+        let u = state.mat("u").clone();
+        let sigma = u.matmul_tn(g); // Uᵀ G
+        let v = state.mats.get_mut("v").unwrap();
+        for (vi, &si) in v.data.iter_mut().zip(&sigma.data) {
+            *vi = hp.b2 * *vi + (1.0 - hp.b2) * si * si;
+        }
+        let (bc1, bc2) = bias_corr(hp, t);
+        let m_rot = u.matmul_tn(state.mat("m"));
+        let v = state.mat("v");
+        let direction = Mat::from_fn(m_rot.rows, m_rot.cols, |i, j| {
+            (m_rot.at(i, j) / bc1) / ((v.at(i, j) / bc2).sqrt() + hp.eps)
+        });
+        u.matmul(&direction).scale(hp.alpha)
+    }
+
+    fn refresh(&self, _g: &Mat, state: &mut State, _seed: u64) {
+        let (u, _) = jacobi_eigh(state.mat("q"), self.hp.eig_sweeps);
+        state.mats.insert("u", u);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (2 * rows * rows + 2 * rows * cols) as u64
+    }
+}
+
+// -------------------------------------------------------------- Shampoo ----
+/// Structure: Rₙ^½ ⊗ Lₘ^½ (Thm 3.1). Accumulators L += GGᵀ, R += GᵀG;
+/// update Δ = L^-¼ G R^-¼; roots recomputed at refreshes (Anil et al.).
+pub struct Shampoo {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Shampoo {
+    fn name(&self) -> &'static str {
+        "shampoo"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("l", Mat::eye(rows).scale(1e-4));
+        st.mats.insert("r", Mat::eye(cols).scale(1e-4));
+        st.mats.insert("li4", Mat::eye(rows));
+        st.mats.insert("ri4", Mat::eye(cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let ggt = g.matmul_nt(g);
+        let gtg = g.matmul_tn(g);
+        state.mats.get_mut("l").unwrap().ema_(1.0, &ggt, 1.0);
+        state.mats.get_mut("r").unwrap().ema_(1.0, &gtg, 1.0);
+        state
+            .mat("li4")
+            .matmul(g)
+            .matmul(state.mat("ri4"))
+            .scale(hp.alpha)
+    }
+
+    fn refresh(&self, _g: &Mat, state: &mut State, _seed: u64) {
+        let li4 = inv_fourth_root(state.mat("l"), self.hp.ns_iters);
+        let ri4 = inv_fourth_root(state.mat("r"), self.hp.ns_iters);
+        state.mats.insert("li4", li4);
+        state.mats.insert("ri4", ri4);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        2 * (rows * rows + cols * cols) as u64
+    }
+}
+
+// ----------------------------------------------------------------- SOAP ----
+/// Structure: (U_R ⊗ U_L) D̃ (U_R ⊗ U_L)ᵀ (Eq. 14) — Adam in Shampoo's
+/// two-sided eigenbasis (Alg. 6).
+pub struct Soap {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Soap {
+    fn name(&self) -> &'static str {
+        "soap"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("l", Mat::zeros(rows, rows));
+        st.mats.insert("r", Mat::zeros(cols, cols));
+        st.mats.insert("ul", Mat::eye(rows));
+        st.mats.insert("ur", Mat::eye(cols));
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st.mats.insert("v", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let ggt = g.matmul_nt(g);
+        let gtg = g.matmul_tn(g);
+        state.mats.get_mut("l").unwrap().ema_(hp.b3, &ggt, 1.0 - hp.b3);
+        state.mats.get_mut("r").unwrap().ema_(hp.b3, &gtg, 1.0 - hp.b3);
+        state.mats.get_mut("m").unwrap().ema_(hp.b1, g, 1.0 - hp.b1);
+        let (ul, ur) = (state.mat("ul").clone(), state.mat("ur").clone());
+        let g_rot = ul.matmul_tn(g).matmul(&ur); // U_Lᵀ G U_R
+        let v = state.mats.get_mut("v").unwrap();
+        for (vi, &gi) in v.data.iter_mut().zip(&g_rot.data) {
+            *vi = hp.b2 * *vi + (1.0 - hp.b2) * gi * gi;
+        }
+        let (bc1, bc2) = bias_corr(hp, t);
+        let m_rot = ul.matmul_tn(state.mat("m")).matmul(&ur);
+        let v = state.mat("v");
+        let dir = Mat::from_fn(m_rot.rows, m_rot.cols, |i, j| {
+            (m_rot.at(i, j) / bc1) / ((v.at(i, j) / bc2).sqrt() + hp.eps)
+        });
+        ul.matmul(&dir).matmul_nt(&ur).scale(hp.alpha)
+    }
+
+    fn refresh(&self, _g: &Mat, state: &mut State, _seed: u64) {
+        let (ul, _) = jacobi_eigh(state.mat("l"), self.hp.eig_sweeps);
+        let (ur, _) = jacobi_eigh(state.mat("r"), self.hp.eig_sweeps);
+        state.mats.insert("ul", ul);
+        state.mats.insert("ur", ur);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (2 * rows * rows + 2 * cols * cols + 2 * rows * cols) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn eigen_adam_with_identity_u_is_adam() {
+        // Before any refresh U = I, so Eigen-Adam must equal Adam exactly.
+        let hp = Hyper::default();
+        let ea = EigenAdam { hp: hp.clone() };
+        let adam = super::super::simple::Adam { hp };
+        let mut st_e = ea.init(6, 9);
+        let mut st_a = adam.init(6, 9);
+        let mut rng = Pcg::seeded(20);
+        for t in 1..=4 {
+            let g = Mat::from_vec(6, 9, rng.normal_vec(54, 1.0));
+            let de = ea.step(&g, &mut st_e, t);
+            let da = adam.step(&g, &mut st_a, t);
+            assert!(de.sub(&da).max_abs() < 1e-5, "t={t}");
+        }
+    }
+
+    #[test]
+    fn eigen_adam_rotation_is_orthonormal_after_refresh() {
+        let ea = EigenAdam { hp: Hyper { eig_sweeps: 30, ..Hyper::default() } };
+        let mut st = ea.init(8, 12);
+        let mut rng = Pcg::seeded(21);
+        for t in 1..=5 {
+            let g = Mat::from_vec(8, 12, rng.normal_vec(96, 1.0));
+            ea.step(&g, &mut st, t);
+        }
+        let g = Mat::from_vec(8, 12, rng.normal_vec(96, 1.0));
+        ea.refresh(&g, &mut st, 0);
+        let u = st.mat("u");
+        let err = u.matmul_tn(u).sub(&Mat::eye(8)).max_abs();
+        assert!(err < 1e-3, "U not orthonormal: {err}");
+    }
+
+    #[test]
+    fn shampoo_update_uses_roots() {
+        let sh = Shampoo { hp: Hyper { ns_iters: 25, ..Hyper::default() } };
+        let mut st = sh.init(6, 6);
+        let mut rng = Pcg::seeded(22);
+        for t in 1..=6 {
+            let g = Mat::from_vec(6, 6, rng.normal_vec(36, 1.0));
+            sh.step(&g, &mut st, t);
+        }
+        let g = Mat::from_vec(6, 6, rng.normal_vec(36, 1.0));
+        sh.refresh(&g, &mut st, 0);
+        let d = sh.step(&g, &mut st, 7);
+        assert!(d.is_finite());
+        // preconditioned step differs from raw gradient
+        assert!(d.sub(&g).max_abs() > 1e-3);
+    }
+
+    #[test]
+    fn soap_with_identity_bases_is_adam() {
+        let hp = Hyper::default();
+        let soap = Soap { hp: hp.clone() };
+        let adam = super::super::simple::Adam { hp };
+        let mut st_s = soap.init(5, 7);
+        let mut st_a = adam.init(5, 7);
+        let mut rng = Pcg::seeded(23);
+        for t in 1..=3 {
+            let g = Mat::from_vec(5, 7, rng.normal_vec(35, 1.0));
+            let ds = soap.step(&g, &mut st_s, t);
+            let da = adam.step(&g, &mut st_a, t);
+            assert!(ds.sub(&da).max_abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Low-rank optimizers: GaLore (App. B.11 / Alg. 8), Fira (its
+//! compensated extension), Apollo-mini (App. B.12 / Alg. 9).
+//!
+//! The paper's Sec. 5.4 observation — GaLore is Alice without tracking,
+//! switching, and compensation — is validated as an integration test
+//! (`rust/tests/optimizer_semantics.rs`).
+
+use crate::linalg::{subspace_iter, Mat};
+use crate::util::Pcg;
+
+use super::{bias_corr, limiter, Hyper, Optimizer, State, EPS};
+
+pub(crate) fn eff_rank(hp: &Hyper, rows: usize, cols: usize) -> usize {
+    hp.rank.clamp(1, rows.min(cols))
+}
+
+fn adam_on(
+    sigma: &Mat,
+    m: &mut Mat,
+    v: &mut Mat,
+    hp: &Hyper,
+    t: u64,
+) -> Mat {
+    m.ema_(hp.b1, sigma, 1.0 - hp.b1);
+    for (vi, &si) in v.data.iter_mut().zip(&sigma.data) {
+        *vi = hp.b2 * *vi + (1.0 - hp.b2) * si * si;
+    }
+    let (bc1, bc2) = bias_corr(hp, t);
+    Mat::from_fn(sigma.rows, sigma.cols, |i, j| {
+        (m.at(i, j) / bc1) / ((v.at(i, j) / bc2).sqrt() + hp.eps)
+    })
+}
+
+/// Identity-prefix initial projection (matches the python twin: the first
+/// refresh at t == 1 replaces it with the data-driven basis).
+fn init_proj(rows: usize, r: usize) -> Mat {
+    Mat::from_fn(rows, r, |i, j| if i == j { 1.0 } else { 0.0 })
+}
+
+// --------------------------------------------------------------- GaLore ----
+pub struct GaLore {
+    pub hp: Hyper,
+}
+
+impl Optimizer for GaLore {
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let r = eff_rank(&self.hp, rows, cols);
+        let mut st = State::default();
+        st.mats.insert("u", init_proj(rows, r));
+        st.mats.insert("m", Mat::zeros(r, cols));
+        st.mats.insert("v", Mat::zeros(r, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let u = state.mat("u").clone();
+        let sigma = u.matmul_tn(g);
+        let mut m = state.mats.remove("m").unwrap();
+        let mut v = state.mats.remove("v").unwrap();
+        let omega = adam_on(&sigma, &mut m, &mut v, hp, t);
+        state.mats.insert("m", m);
+        state.mats.insert("v", v);
+        u.matmul(&omega).scale(hp.alpha)
+    }
+
+    fn refresh(&self, g: &Mat, state: &mut State, _seed: u64) {
+        let q = g.matmul_nt(g);
+        let (u, _) = subspace_iter(&q, state.mat("u"), self.hp.sub_iters);
+        state.mats.insert("u", u);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        let r = eff_rank(&self.hp, rows, cols);
+        (rows * r + 2 * r * cols) as u64
+    }
+}
+
+// ----------------------------------------------------------------- Fira ----
+pub struct Fira {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Fira {
+    fn name(&self) -> &'static str {
+        "fira"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let r = eff_rank(&self.hp, rows, cols);
+        let mut st = State::default();
+        st.mats.insert("u", init_proj(rows, r));
+        st.mats.insert("m", Mat::zeros(r, cols));
+        st.mats.insert("v", Mat::zeros(r, cols));
+        st.scalars.insert("phi", 0.0);
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let u = state.mat("u").clone();
+        let sigma = u.matmul_tn(g);
+        let mut m = state.mats.remove("m").unwrap();
+        let mut v = state.mats.remove("v").unwrap();
+        let omega = adam_on(&sigma, &mut m, &mut v, hp, t);
+        state.mats.insert("m", m);
+        state.mats.insert("v", v);
+        let low = u.matmul(&omega);
+        let resid = g.sub(&u.matmul(&sigma));
+        let scale = omega.fro_norm() / (sigma.fro_norm() + EPS);
+        let (comp, phi) = limiter(resid.scale(scale), state.scalar("phi"), hp.gamma);
+        state.scalars.insert("phi", phi);
+        low.add(&comp).scale(hp.alpha)
+    }
+
+    fn refresh(&self, g: &Mat, state: &mut State, _seed: u64) {
+        let q = g.matmul_nt(g);
+        let (u, _) = subspace_iter(&q, state.mat("u"), self.hp.sub_iters);
+        state.mats.insert("u", u);
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        let r = eff_rank(&self.hp, rows, cols);
+        (rows * r + 2 * r * cols + 1) as u64
+    }
+}
+
+// ---------------------------------------------------------- Apollo-mini ----
+/// Rank-1 random sketch; the Adam-in-subspace norm ratio scales the RAW
+/// gradient (SGD-like memory: 1·m + 2·n + 1).
+pub struct ApolloMini {
+    pub hp: Hyper,
+}
+
+impl Optimizer for ApolloMini {
+    fn name(&self) -> &'static str {
+        "apollo_mini"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("u", Mat::zeros(rows, 1));
+        st.mats.insert("m", Mat::zeros(1, cols));
+        st.mats.insert("v", Mat::zeros(1, cols));
+        st.scalars.insert("phi", 0.0);
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let u = state.mat("u").clone();
+        let sigma = u.matmul_tn(g); // 1 x n
+        let mut m = state.mats.remove("m").unwrap();
+        let mut v = state.mats.remove("v").unwrap();
+        let omega = adam_on(&sigma, &mut m, &mut v, hp, t);
+        state.mats.insert("m", m);
+        state.mats.insert("v", v);
+        let scale = omega.fro_norm() / (sigma.fro_norm() + EPS);
+        let (delta, phi) = limiter(g.scale(scale), state.scalar("phi"), hp.gamma);
+        state.scalars.insert("phi", phi);
+        delta.scale(hp.alpha)
+    }
+
+    fn refresh(&self, _g: &Mat, state: &mut State, seed: u64) {
+        let rows = state.mat("u").rows;
+        let mut rng = Pcg::seeded(seed.wrapping_mul(0x9e3779b9).wrapping_add(1));
+        state
+            .mats
+            .insert("u", Mat::from_vec(rows, 1, rng.normal_vec(rows, 1.0)));
+    }
+
+    fn has_refresh(&self) -> bool {
+        true
+    }
+
+    fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows + 2 * cols + 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn galore_projects_to_rank_r() {
+        let hp = Hyper { rank: 4, ..Hyper::default() };
+        let gl = GaLore { hp };
+        let mut st = gl.init(12, 20);
+        assert_eq!(st.mat("m").rows, 4);
+        let mut rng = Pcg::seeded(30);
+        let g = Mat::from_vec(12, 20, rng.normal_vec(240, 1.0));
+        gl.refresh(&g, &mut st, 0);
+        let d = gl.step(&g, &mut st, 1);
+        // the update lies in span(U): (I - UUᵀ) Δ == 0
+        let u = st.mat("u");
+        let proj = u.matmul(&u.matmul_tn(&d));
+        assert!(d.sub(&proj).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn fira_is_full_rank_update() {
+        let hp = Hyper { rank: 4, ..Hyper::default() };
+        let fira = Fira { hp };
+        let mut st = fira.init(12, 20);
+        let mut rng = Pcg::seeded(31);
+        let g = Mat::from_vec(12, 20, rng.normal_vec(240, 1.0));
+        fira.refresh(&g, &mut st, 0);
+        let d = fira.step(&g, &mut st, 1);
+        let u = st.mat("u");
+        let resid = d.sub(&u.matmul(&u.matmul_tn(&d)));
+        // Fira adds energy OUTSIDE span(U) — that's the point
+        assert!(resid.fro_norm() > 1e-3);
+    }
+
+    #[test]
+    fn apollo_scales_raw_gradient() {
+        let ap = ApolloMini { hp: Hyper::default() };
+        let mut st = ap.init(8, 10);
+        ap.refresh(&Mat::zeros(8, 10), &mut st, 3);
+        let mut rng = Pcg::seeded(32);
+        let g = Mat::from_vec(8, 10, rng.normal_vec(80, 1.0));
+        let d = ap.step(&g, &mut st, 1);
+        // direction is proportional to g (global scaling only)
+        let ratio0 = d.data[0] / g.data[0];
+        for (di, gi) in d.data.iter().zip(&g.data) {
+            if gi.abs() > 1e-4 {
+                assert!((di / gi - ratio0).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_clamped_to_short_side() {
+        let hp = Hyper { rank: 1000, ..Hyper::default() };
+        assert_eq!(eff_rank(&hp, 12, 20), 12);
+        let gl = GaLore { hp };
+        let st = gl.init(12, 20);
+        assert_eq!(st.mat("u").cols, 12);
+    }
+}

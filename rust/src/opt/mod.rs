@@ -1,0 +1,364 @@
+//! Native Rust implementations of every optimizer in the paper.
+//!
+//! These serve three roles (DESIGN.md §1 L3):
+//! 1. the coordinator's default per-layer update path (grads come from the
+//!    AOT `grad_step` executable, updates happen here);
+//! 2. the baselines required to regenerate Tables 1-5 / Figures 1-6 without
+//!    a new AOT artifact per variant;
+//! 3. an independent reference cross-checked against the HLO optimizer
+//!    artifacts in `rust/tests/parity.rs` (same gradients → same update).
+//!
+//! Semantics mirror `python/compile/optimizers.py` exactly (same EPS, same
+//! warm-start rules, same limiter) so parity holds to f32 tolerance.
+
+pub mod alice;
+pub mod eigen;
+pub mod lowrank;
+pub mod racs;
+pub mod simple;
+pub mod whiten_ops;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+
+pub const EPS: f32 = 1e-8;
+
+/// Hyperparameters — mirrors `optimizers.HP` (paper App. F.2 defaults).
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub b1: f32,
+    pub b2: f32,
+    pub b3: f32,
+    pub eps: f32,
+    pub rank: usize,
+    pub leading: usize,
+    pub interval: usize,
+    pub alpha: f32,
+    pub alpha_c: f32,
+    pub gamma: f32,
+    pub beta_racs: f32,
+    pub racs_iters: usize,
+    pub ns_iters: usize,
+    pub eig_sweeps: usize,
+    pub sub_iters: usize,
+    pub switch: Switch,
+    pub compen: Compen,
+    pub racs_ema: bool,
+    pub bias_correction: bool,
+    /// Alice tracking (β₃ EMA of the projected Q̃) — false for Alice-0.
+    pub tracking: bool,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            b1: 0.9,
+            b2: 0.999,
+            b3: 0.999,
+            eps: 1e-8,
+            rank: 32,
+            leading: 10,
+            interval: 200,
+            alpha: 1.0,
+            alpha_c: 0.4,
+            gamma: 1.01,
+            beta_racs: 0.9,
+            racs_iters: 5,
+            ns_iters: 6,
+            eig_sweeps: 20,
+            sub_iters: 1,
+            switch: Switch::Switch,
+            compen: Compen::Optimal,
+            racs_ema: true,
+            bias_correction: true,
+            tracking: true,
+        }
+    }
+}
+
+impl Hyper {
+    /// Paper Table 11 Alice defaults (β₂ = 0.9).
+    pub fn alice_defaults() -> Self {
+        Hyper { b2: 0.9, ..Default::default() }
+    }
+}
+
+/// Subspace-switching strategies — Fig. 5(b) ablation axis (Alg. 2 = Switch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Switch {
+    Switch,
+    Evd,
+    Gaussian,
+    GaussianMix,
+    FullBasis,
+}
+
+impl Switch {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "switch" => Switch::Switch,
+            "evd" => Switch::Evd,
+            "gaussian" => Switch::Gaussian,
+            "gaussian_mix" => Switch::GaussianMix,
+            "full_basis" => Switch::FullBasis,
+            _ => return Err(anyhow!("unknown switch strategy {s:?}")),
+        })
+    }
+}
+
+/// Compensation strategies — Fig. 5(c) ablation axis (Thm 5.1 = Optimal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compen {
+    Optimal,
+    None,
+    Fira,
+    FiraPlus,
+}
+
+impl Compen {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "optimal" => Compen::Optimal,
+            "none" => Compen::None,
+            "fira" => Compen::Fira,
+            "fira_plus" => Compen::FiraPlus,
+            _ => return Err(anyhow!("unknown compensation strategy {s:?}")),
+        })
+    }
+}
+
+/// Generic optimizer state: named matrices / vectors / scalars.
+/// Byte accounting over the actual contents drives Table 3 and Fig. 4.
+#[derive(Debug, Clone, Default)]
+pub struct State {
+    pub mats: BTreeMap<&'static str, Mat>,
+    pub vecs: BTreeMap<&'static str, Vec<f32>>,
+    pub scalars: BTreeMap<&'static str, f32>,
+}
+
+impl State {
+    pub fn mat(&self, k: &str) -> &Mat {
+        self.mats.get(k).unwrap_or_else(|| panic!("state mat {k:?} missing"))
+    }
+
+    pub fn vec(&self, k: &str) -> &[f32] {
+        self.vecs.get(k).unwrap_or_else(|| panic!("state vec {k:?} missing"))
+    }
+
+    pub fn scalar(&self, k: &str) -> f32 {
+        *self.scalars.get(k).unwrap_or(&0.0)
+    }
+
+    /// Optimizer-state footprint in elements (the paper counts elements;
+    /// bytes = elements * dtype size — Table 3 uses BF16 = 2 bytes).
+    /// `diag_*` entries are instrumentation (Fig. 6) and not counted.
+    pub fn elems(&self) -> u64 {
+        let m: u64 = self
+            .mats
+            .iter()
+            .filter(|(k, _)| !k.starts_with("diag"))
+            .map(|(_, m)| (m.rows * m.cols) as u64)
+            .sum();
+        let v: u64 = self
+            .vecs
+            .iter()
+            .filter(|(k, _)| !k.starts_with("diag"))
+            .map(|(_, v)| v.len() as u64)
+            .sum();
+        m + v + self.scalars.len() as u64
+    }
+}
+
+/// The norm-growth limiter shared by RACS / Fira / Alice compensation
+/// (Alg. 1 lines 9-10). Returns (scaled delta, new phi).
+pub fn limiter(delta: Mat, phi: f32, gamma: f32) -> (Mat, f32) {
+    let dn = delta.fro_norm() + EPS;
+    let (eta, phi2) = if phi > 0.0 {
+        let ratio = dn / (phi + EPS);
+        let eta = gamma / ratio.max(gamma);
+        (eta, eta * dn)
+    } else {
+        (1.0, dn)
+    };
+    (delta.scale(eta), phi2)
+}
+
+/// Bias-correction denominators (1 - βᵗ).
+pub fn bias_corr(hp: &Hyper, t: u64) -> (f32, f32) {
+    if !hp.bias_correction {
+        return (1.0, 1.0);
+    }
+    let t = t as f32;
+    (1.0 - hp.b1.powf(t), 1.0 - hp.b2.powf(t))
+}
+
+/// Optimizer interface over a single 2-D parameter.
+pub trait Optimizer: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fresh state for an (already orientation-normalized) rows x cols
+    /// parameter.
+    fn init(&self, rows: usize, cols: usize) -> State;
+
+    /// One step: gradient → descent direction (trainer applies W -= lr·Δ).
+    /// `t` is the 1-based step counter.
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat;
+
+    /// Projection / eigenbasis refresh — called by the coordinator every
+    /// `interval` steps (and at t == 1). Default: no-op.
+    fn refresh(&self, _g: &Mat, _state: &mut State, _seed: u64) {}
+
+    fn has_refresh(&self) -> bool {
+        false
+    }
+
+    /// Whether wide matrices (rows > cols) should be transposed before
+    /// `init`/`step` so the projection side is the short one (paper m ≤ n).
+    fn transpose_wide(&self) -> bool {
+        false
+    }
+
+    /// Analytic state-size in elements for Table 1 / Table 3 (must agree
+    /// with `State::elems()` of `init` — property-tested).
+    fn state_elems(&self, rows: usize, cols: usize) -> u64;
+}
+
+/// Orientation-aware wrapper: handles the transpose_wide protocol.
+pub struct Slot {
+    pub opt: Box<dyn Optimizer>,
+    pub state: State,
+    transposed: bool,
+}
+
+impl Slot {
+    pub fn new(opt: Box<dyn Optimizer>, rows: usize, cols: usize) -> Self {
+        let transposed = opt.transpose_wide() && rows > cols;
+        let (r, c) = if transposed { (cols, rows) } else { (rows, cols) };
+        let state = opt.init(r, c);
+        Slot { opt, state, transposed }
+    }
+
+    pub fn step(&mut self, g: &Mat, t: u64) -> Mat {
+        if self.transposed {
+            let gt = g.transpose();
+            self.opt.step(&gt, &mut self.state, t).transpose()
+        } else {
+            self.opt.step(g, &mut self.state, t)
+        }
+    }
+
+    pub fn refresh(&mut self, g: &Mat, seed: u64) {
+        if !self.opt.has_refresh() {
+            return;
+        }
+        if self.transposed {
+            let gt = g.transpose();
+            self.opt.refresh(&gt, &mut self.state, seed);
+        } else {
+            self.opt.refresh(g, &mut self.state, seed);
+        }
+    }
+
+    pub fn state_elems(&self) -> u64 {
+        self.state.elems()
+    }
+}
+
+/// Factory: name → optimizer instance. The single registry shared by the
+/// trainer, the benches, and the CLI.
+pub fn build(name: &str, hp: &Hyper) -> Result<Box<dyn Optimizer>> {
+    let hp = hp.clone();
+    Ok(match name {
+        "sgd" => Box::new(simple::Sgd { hp }),
+        "adam" => Box::new(simple::Adam { hp }),
+        "adafactor" => Box::new(simple::Adafactor { hp }),
+        "lion" => Box::new(simple::Lion { hp }),
+        "signum" => Box::new(simple::Signum { hp }),
+        "muon" => Box::new(whiten_ops::Muon { hp }),
+        "swan" => Box::new(whiten_ops::Swan { hp }),
+        "racs" => Box::new(racs::Racs { hp }),
+        "eigen_adam" => Box::new(eigen::EigenAdam { hp }),
+        "shampoo" => Box::new(eigen::Shampoo { hp }),
+        "soap" => Box::new(eigen::Soap { hp }),
+        "galore" => Box::new(lowrank::GaLore { hp }),
+        "fira" => Box::new(lowrank::Fira { hp }),
+        "apollo_mini" => Box::new(lowrank::ApolloMini { hp }),
+        // "alice" honors hp.tracking (default true) so the Table 5 /
+        // Fig. 5(a) / Fig. 6 ablations can toggle it; "alice0" pins it off.
+        "alice" => Box::new(alice::Alice { hp }),
+        "alice0" => Box::new(alice::Alice { hp: Hyper { tracking: false, ..hp } }),
+        _ => return Err(anyhow!("unknown optimizer {name:?}")),
+    })
+}
+
+/// All registry names (bench sweeps iterate this).
+pub const ALL: [&str; 16] = [
+    "sgd", "adam", "adafactor", "lion", "signum", "muon", "swan", "racs",
+    "eigen_adam", "shampoo", "soap", "galore", "fira", "apollo_mini",
+    "alice", "alice0",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn registry_builds_all() {
+        let hp = Hyper::default();
+        for name in ALL {
+            let opt = build(name, &hp).unwrap();
+            assert_eq!(opt.name(), name);
+        }
+        assert!(build("nope", &hp).is_err());
+    }
+
+    #[test]
+    fn every_optimizer_runs_and_matches_state_accounting() {
+        let hp = Hyper { rank: 8, leading: 3, interval: 10, ..Hyper::default() };
+        let mut rng = Pcg::seeded(42);
+        for name in ALL {
+            for (r, c) in [(24, 40), (40, 24)] {
+                let opt = build(name, &hp).unwrap();
+                let mut slot = Slot::new(opt, r, c);
+                let g = Mat::from_vec(r, c, rng.normal_vec(r * c, 0.1));
+                slot.refresh(&g, 1);
+                let d = slot.step(&g, 1);
+                assert_eq!((d.rows, d.cols), (r, c), "{name}");
+                assert!(d.is_finite(), "{name} produced non-finite update");
+                let (er, ec) = if slot.transposed { (c, r) } else { (r, c) };
+                assert_eq!(
+                    slot.state.elems(),
+                    slot.opt.state_elems(er, ec),
+                    "{name}: state_elems formula disagrees with actual state"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn limiter_caps_growth() {
+        let big = Mat::from_vec(1, 2, vec![30.0, 40.0]); // norm 50
+        let (d1, phi) = limiter(big.clone(), 0.0, 1.01);
+        assert!((phi - 50.0).abs() < 1e-3);
+        assert_eq!(d1.data, big.data); // first step passes through
+        let bigger = Mat::from_vec(1, 2, vec![60.0, 80.0]); // norm 100
+        let (d2, phi2) = limiter(bigger, phi, 1.01);
+        // capped to gamma * previous phi
+        assert!((d2.fro_norm() - 1.01 * 50.0).abs() < 0.5);
+        assert!(phi2 <= 1.01 * 50.0 + 0.5);
+    }
+
+    #[test]
+    fn bias_corr_values() {
+        let hp = Hyper::default();
+        let (a, b) = bias_corr(&hp, 1);
+        assert!((a - 0.1).abs() < 1e-6);
+        assert!((b - 0.001).abs() < 1e-7);
+        let hp2 = Hyper { bias_correction: false, ..hp };
+        assert_eq!(bias_corr(&hp2, 5), (1.0, 1.0));
+    }
+}

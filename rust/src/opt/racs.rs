@@ -1,0 +1,186 @@
+//! RACS — Row and Column Scaled SGD (paper Sec. 4, Algorithm 1).
+//!
+//! The structure is H = {S ⊗ Q} with positive diagonal S, Q (Eq. 15); the
+//! Frobenius-optimal solution is the Proposition 3 fixed point, whose
+//! iterates converge to the principal singular pair of E[G⊙²]
+//! (Perron-Frobenius ⇒ strictly positive, so the square-root inverse
+//! scaling is always well-defined — property-tested in `fisher`).
+//!
+//! Memory: s[n] + q[m] + limiter scalar = m + n + 1 — "SGD-like".
+
+use crate::linalg::Mat;
+
+use super::{limiter, Hyper, Optimizer, State, EPS};
+
+/// Proposition 3 fixed point on P = G⊙²: s ∝ Pᵀq/‖q‖², q ∝ Ps/‖s‖².
+/// Returns (s, q) after `iters` sweeps starting from q = 1 (the paper's
+/// practical initialization).
+pub fn fixed_point(g: &Mat, iters: usize) -> (Vec<f32>, Vec<f32>) {
+    let (m, n) = (g.rows, g.cols);
+    let mut q = vec![1.0f32; m];
+    let mut s = vec![1.0f32; n];
+    for _ in 0..iters {
+        // s = Pᵀ q / ||q||²
+        let qn: f32 = q.iter().map(|x| x * x).sum::<f32>() + EPS;
+        for sj in s.iter_mut() {
+            *sj = 0.0;
+        }
+        for i in 0..m {
+            let qi = q[i];
+            let row = g.row(i);
+            for (sj, &gij) in s.iter_mut().zip(row) {
+                *sj += gij * gij * qi;
+            }
+        }
+        for sj in s.iter_mut() {
+            *sj /= qn;
+        }
+        // q = P s / ||s||²
+        let sn: f32 = s.iter().map(|x| x * x).sum::<f32>() + EPS;
+        for (i, qi) in q.iter_mut().enumerate() {
+            let row = g.row(i);
+            let mut acc = 0.0f32;
+            for (&gij, &sj) in row.iter().zip(&s) {
+                acc += gij * gij * sj;
+            }
+            *qi = acc / sn;
+        }
+    }
+    (s, q)
+}
+
+/// Two-sided scaling Q^-½ G S^-½ (Alg. 1 line 8).
+pub fn apply_scaling(g: &Mat, q: &[f32], s: &[f32]) -> Mat {
+    let qr: Vec<f32> = q.iter().map(|&x| 1.0 / (x + EPS).sqrt()).collect();
+    let sr: Vec<f32> = s.iter().map(|&x| 1.0 / (x + EPS).sqrt()).collect();
+    Mat::from_fn(g.rows, g.cols, |i, j| g.at(i, j) * qr[i] * sr[j])
+}
+
+pub struct Racs {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Racs {
+    fn name(&self) -> &'static str {
+        "racs"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.vecs.insert("s", vec![0.0; cols]);
+        st.vecs.insert("q", vec![0.0; rows]);
+        st.scalars.insert("phi", 0.0);
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let (s_new, q_new) = fixed_point(g, hp.racs_iters);
+        let (s, q) = if hp.racs_ema {
+            // EMA warm start: plain assignment at t == 1 (python twin).
+            let b = if t <= 1 { 0.0 } else { hp.beta_racs };
+            let s_st = state.vecs.get_mut("s").unwrap();
+            for (x, &y) in s_st.iter_mut().zip(&s_new) {
+                *x = b * *x + (1.0 - b) * y;
+            }
+            let s = s_st.clone();
+            let q_st = state.vecs.get_mut("q").unwrap();
+            for (x, &y) in q_st.iter_mut().zip(&q_new) {
+                *x = b * *x + (1.0 - b) * y;
+            }
+            (s, q_st.clone())
+        } else {
+            (s_new, q_new)
+        };
+        let delta = apply_scaling(g, &q, &s);
+        let phi = state.scalar("phi");
+        let (delta, phi2) = limiter(delta, phi, hp.gamma);
+        state.scalars.insert("phi", phi2);
+        delta.scale(hp.alpha)
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows + cols + 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn fixed_point_is_positive() {
+        // Perron-Frobenius: with positive G⊙², s and q stay positive.
+        let mut rng = Pcg::seeded(13);
+        let g = Mat::from_vec(12, 20, rng.normal_vec(240, 1.0));
+        let (s, q) = fixed_point(&g, 5);
+        assert!(s.iter().all(|&x| x > 0.0));
+        assert!(q.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn fixed_point_matches_rank1_structure() {
+        // If G⊙² = q₀ s₀ᵀ exactly (rank 1), the fixed point recovers the
+        // factors up to scale after one sweep.
+        let q0 = [1.0f32, 4.0, 0.25];
+        let s0 = [2.0f32, 0.5, 1.0, 3.0];
+        let g = Mat::from_fn(3, 4, |i, j| (q0[i] * s0[j]).sqrt());
+        let (s, q) = fixed_point(&g, 6);
+        // ratios must match
+        for j in 1..4 {
+            let want = s0[j] / s0[0];
+            let got = s[j] / s[0];
+            assert!((want - got).abs() < 1e-4, "{want} vs {got}");
+        }
+        for i in 1..3 {
+            let want = q0[i] / q0[0];
+            let got = q[i] / q[0];
+            assert!((want - got).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn scaling_normalizes_rank1() {
+        // On exact rank-1 |G|, the scaled matrix has constant magnitude.
+        let q0 = [1.0f32, 9.0];
+        let s0 = [4.0f32, 1.0, 16.0];
+        let g = Mat::from_fn(2, 3, |i, j| (q0[i] * s0[j]).sqrt());
+        let (s, q) = fixed_point(&g, 8);
+        let scaled = apply_scaling(&g, &q, &s);
+        let mags: Vec<f32> = scaled.data.iter().map(|x| x.abs()).collect();
+        for w in mags.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-3, "{mags:?}");
+        }
+    }
+
+    #[test]
+    fn racs_step_finite_and_limited() {
+        let racs = Racs { hp: Hyper::default() };
+        let mut st = racs.init(10, 16);
+        let mut rng = Pcg::seeded(14);
+        for t in 1..=5 {
+            let g = Mat::from_vec(10, 16, rng.normal_vec(160, 1.0));
+            let d = racs.step(&g, &mut st, t);
+            assert!(d.is_finite());
+        }
+        // limiter phi must be positive after steps
+        assert!(st.scalar("phi") > 0.0);
+    }
+
+    #[test]
+    fn ema_vs_no_ema_differ_after_two_steps() {
+        let mk = |ema| Racs { hp: Hyper { racs_ema: ema, ..Hyper::default() } };
+        let (r1, r2) = (mk(true), mk(false));
+        let mut s1 = r1.init(6, 8);
+        let mut s2 = r2.init(6, 8);
+        let mut rng = Pcg::seeded(15);
+        let g1 = Mat::from_vec(6, 8, rng.normal_vec(48, 1.0));
+        let g2 = Mat::from_vec(6, 8, rng.normal_vec(48, 1.0));
+        r1.step(&g1, &mut s1, 1);
+        r2.step(&g1, &mut s2, 1);
+        let d1 = r1.step(&g2, &mut s1, 2);
+        let d2 = r2.step(&g2, &mut s2, 2);
+        assert!(d1.sub(&d2).max_abs() > 1e-6);
+    }
+}

@@ -1,0 +1,250 @@
+//! Diagonal-structure optimizers: SGD, Adam (Prop. 1), Adafactor, Lion,
+//! Signum. These are the memory/quality anchors of Table 2.
+
+use crate::linalg::Mat;
+
+use super::{bias_corr, Hyper, Optimizer, State};
+
+// ----------------------------------------------------------------- SGD ----
+pub struct Sgd {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn init(&self, _rows: usize, _cols: usize) -> State {
+        State::default()
+    }
+
+    fn step(&self, g: &Mat, _state: &mut State, _t: u64) -> Mat {
+        g.scale(self.hp.alpha)
+    }
+
+    fn state_elems(&self, _rows: usize, _cols: usize) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------- Adam ----
+/// Proposition 1: the optimal purely-diagonal FIM approximation is
+/// Diag_v(E[ḡ²]) — Adam's second moment. State 2mn (paper Table 1: 3mn
+/// including the weight).
+pub struct Adam {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st.mats.insert("v", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, t: u64) -> Mat {
+        let hp = &self.hp;
+        let (bc1, bc2) = bias_corr(hp, t);
+        let m = state.mats.get_mut("m").unwrap();
+        m.ema_(hp.b1, g, 1.0 - hp.b1);
+        let m = m.clone();
+        let v = state.mats.get_mut("v").unwrap();
+        for (vi, &gi) in v.data.iter_mut().zip(&g.data) {
+            *vi = hp.b2 * *vi + (1.0 - hp.b2) * gi * gi;
+        }
+        let mut delta = m;
+        for (di, &vi) in delta.data.iter_mut().zip(&state.mat("v").data) {
+            *di = (*di / bc1) / ((vi / bc2).sqrt() + hp.eps) * hp.alpha;
+        }
+        delta
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        2 * (rows * cols) as u64
+    }
+}
+
+// ----------------------------------------------------------- Adafactor ----
+/// Rank-1 factored second moment (Shazeer & Stern 2018, simplified —
+/// matches the python twin). State m + n.
+pub struct Adafactor {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Adafactor {
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.vecs.insert("r", vec![0.0; rows]);
+        st.vecs.insert("c", vec![0.0; cols]);
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let (rows, cols) = (g.rows, g.cols);
+        let row_mean: Vec<f32> = (0..rows)
+            .map(|i| g.row(i).iter().map(|x| x * x).sum::<f32>() / cols as f32)
+            .collect();
+        let mut col_mean = vec![0.0f32; cols];
+        for i in 0..rows {
+            for (cm, &x) in col_mean.iter_mut().zip(g.row(i)) {
+                *cm += x * x;
+            }
+        }
+        for cm in &mut col_mean {
+            *cm /= rows as f32;
+        }
+        let r = state.vecs.get_mut("r").unwrap();
+        for (ri, &nm) in r.iter_mut().zip(&row_mean) {
+            *ri = hp.b2 * *ri + (1.0 - hp.b2) * nm;
+        }
+        let r = r.clone();
+        let c = state.vecs.get_mut("c").unwrap();
+        for (ci, &nm) in c.iter_mut().zip(&col_mean) {
+            *ci = hp.b2 * *ci + (1.0 - hp.b2) * nm;
+        }
+        let r_mean = r.iter().sum::<f32>() / rows as f32 + super::EPS;
+        let c = state.vec("c").to_vec();
+        Mat::from_fn(rows, cols, |i, j| {
+            let vhat = r[i] * c[j] / r_mean;
+            hp.alpha * g.at(i, j) / (vhat.sqrt() + hp.eps)
+        })
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows + cols) as u64
+    }
+}
+
+// ---------------------------------------------------------------- Lion ----
+pub struct Lion {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Lion {
+    fn name(&self) -> &'static str {
+        "lion"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let m = state.mat("m");
+        let delta = Mat::from_fn(g.rows, g.cols, |i, j| {
+            hp.alpha * (hp.b1 * m.at(i, j) + (1.0 - hp.b1) * g.at(i, j)).signum()
+        });
+        state.mats.get_mut("m").unwrap().ema_(hp.b2, g, 1.0 - hp.b2);
+        delta
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows * cols) as u64
+    }
+}
+
+// -------------------------------------------------------------- Signum ----
+pub struct Signum {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Signum {
+    fn name(&self) -> &'static str {
+        "signum"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let m = state.mats.get_mut("m").unwrap();
+        m.ema_(hp.b1, g, 1.0 - hp.b1);
+        m.map(|x| hp.alpha * x.signum())
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows * cols) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn adam_first_step_is_sign_like() {
+        // with bias correction, step 1 gives g/|g| (+eps fuzz)
+        let hp = Hyper::default();
+        let adam = Adam { hp };
+        let mut st = adam.init(1, 3);
+        let g = Mat::from_vec(1, 3, vec![0.5, -2.0, 0.0]);
+        let d = adam.step(&g, &mut st, 1);
+        assert!((d.data[0] - 1.0).abs() < 1e-3);
+        assert!((d.data[1] + 1.0).abs() < 1e-3);
+        assert_eq!(d.data[2], 0.0);
+    }
+
+    #[test]
+    fn adam_moments_accumulate() {
+        let adam = Adam { hp: Hyper::default() };
+        let mut st = adam.init(2, 2);
+        let g = Mat::from_vec(2, 2, vec![1.0; 4]);
+        for t in 1..=10 {
+            adam.step(&g, &mut st, t);
+        }
+        // m -> 1 - 0.9^10
+        let want = 1.0 - 0.9f32.powi(10);
+        assert!((st.mat("m").data[0] - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lion_is_sign_bounded() {
+        let lion = Lion { hp: Hyper::default() };
+        let mut st = lion.init(4, 4);
+        let mut rng = Pcg::seeded(2);
+        let g = Mat::from_vec(4, 4, rng.normal_vec(16, 3.0));
+        let d = lion.step(&g, &mut st, 1);
+        assert!(d.data.iter().all(|&x| x.abs() <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn adafactor_scales_by_factored_rms() {
+        let af = Adafactor { hp: Hyper { b2: 0.0, ..Hyper::default() } };
+        let mut st = af.init(2, 2);
+        // rank-1 magnitude structure: v reconstructs exactly
+        let g = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        let d = af.step(&g, &mut st, 1);
+        // all entries should normalize to roughly the same magnitude
+        let mags: Vec<f32> = d.data.iter().map(|x| x.abs()).collect();
+        for w in mags.windows(2) {
+            assert!((w[0] - w[1]).abs() < 0.15, "{mags:?}");
+        }
+    }
+
+    #[test]
+    fn sgd_passthrough() {
+        let s = Sgd { hp: Hyper { alpha: 2.0, ..Hyper::default() } };
+        let g = Mat::from_vec(1, 2, vec![3.0, -1.0]);
+        let d = s.step(&g, &mut State::default(), 1);
+        assert_eq!(d.data, vec![6.0, -2.0]);
+    }
+}

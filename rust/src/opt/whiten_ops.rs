@@ -1,0 +1,123 @@
+//! Whitening-operator optimizers: Muon (App. B.9) and SWAN (App. B.7).
+//!
+//! Sec. 3.3 of the paper shows both are square-root NGD under simple
+//! block-diagonal structures: whitening ↔ H = {Iₙ ⊗ M}, normalization ↔
+//! H = {S ⊗ Iₘ} (Proposition 2), with 1-sample estimates of E[·].
+
+use crate::linalg::{whiten, Mat};
+
+use super::{Hyper, Optimizer, State};
+
+fn whiten_short_side(x: &Mat, iters: usize) -> Mat {
+    if x.rows <= x.cols {
+        whiten(x, iters)
+    } else {
+        whiten(&x.transpose(), iters).transpose()
+    }
+}
+
+// ---------------------------------------------------------------- Muon ----
+pub struct Muon {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Muon {
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+
+    fn init(&self, rows: usize, cols: usize) -> State {
+        let mut st = State::default();
+        st.mats.insert("m", Mat::zeros(rows, cols));
+        st
+    }
+
+    fn step(&self, g: &Mat, state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let m = state.mats.get_mut("m").unwrap();
+        m.ema_(hp.b1, g, 1.0 - hp.b1);
+        whiten_short_side(&m.clone(), hp.ns_iters).scale(hp.alpha)
+    }
+
+    fn state_elems(&self, rows: usize, cols: usize) -> u64 {
+        (rows * cols) as u64
+    }
+}
+
+// ---------------------------------------------------------------- SWAN ----
+/// Stateless: row-wise GradNorm then GradWhitening (Eq. 30-32).
+pub struct Swan {
+    pub hp: Hyper,
+}
+
+impl Optimizer for Swan {
+    fn name(&self) -> &'static str {
+        "swan"
+    }
+
+    fn init(&self, _rows: usize, _cols: usize) -> State {
+        State::default()
+    }
+
+    fn step(&self, g: &Mat, _state: &mut State, _t: u64) -> Mat {
+        let hp = &self.hp;
+        let n = g.cols as f32;
+        // GradNorm: per-row mean/std across columns
+        let gn = {
+            let mut out = g.clone();
+            for i in 0..g.rows {
+                let row = g.row(i);
+                let mean = row.iter().sum::<f32>() / n;
+                let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+                let std = var.sqrt() + super::EPS;
+                for x in &mut out.data[i * g.cols..(i + 1) * g.cols] {
+                    *x = (*x - mean) / std;
+                }
+            }
+            out
+        };
+        whiten_short_side(&gn, hp.ns_iters).scale(hp.alpha)
+    }
+
+    fn state_elems(&self, _rows: usize, _cols: usize) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    #[test]
+    fn muon_output_is_orthogonal_like() {
+        let muon = Muon { hp: Hyper { b1: 0.0, ns_iters: 30, ..Hyper::default() } };
+        let mut st = muon.init(6, 20);
+        let mut rng = Pcg::seeded(8);
+        let g = Mat::from_vec(6, 20, rng.normal_vec(120, 1.0));
+        let d = muon.step(&g, &mut st, 1);
+        let ddt = d.matmul_nt(&d);
+        assert!(ddt.sub(&Mat::eye(6)).max_abs() < 0.1,
+                "whitened momentum should be near-orthogonal");
+    }
+
+    #[test]
+    fn swan_is_stateless_and_finite() {
+        let swan = Swan { hp: Hyper { ns_iters: 20, ..Hyper::default() } };
+        let mut st = swan.init(10, 14);
+        assert_eq!(st.elems(), 0);
+        let mut rng = Pcg::seeded(9);
+        let g = Mat::from_vec(10, 14, rng.normal_vec(140, 2.0));
+        let d = swan.step(&g, &mut st, 1);
+        assert!(d.is_finite());
+    }
+
+    #[test]
+    fn whiten_wide_and_tall_agree() {
+        let mut rng = Pcg::seeded(10);
+        let g = Mat::from_vec(5, 12, rng.normal_vec(60, 1.0));
+        let a = whiten_short_side(&g, 25);
+        let b = whiten_short_side(&g.transpose(), 25).transpose();
+        assert!(a.sub(&b).max_abs() < 1e-3);
+    }
+}

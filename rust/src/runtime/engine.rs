@@ -1,0 +1,279 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them with host tensors.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it (coordinator, benches, examples) speaks `HostTensor`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Timer;
+
+use super::manifest::Manifest;
+
+/// A host-side tensor: either f32 or i32, with explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product::<usize>().max(1)],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape().iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elems", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+            HostTensor::I32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            ty => bail!("unsupported output element type {ty:?}"),
+        }
+    }
+}
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative seconds spent compiling (reported once per run).
+    pub compile_secs: f64,
+    /// Cumulative seconds spent in execute + host transfers.
+    pub exec_secs: f64,
+    pub exec_calls: u64,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: BTreeMap::new(),
+            compile_secs: 0.0,
+            exec_secs: 0.0,
+            exec_calls: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by manifest name.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.compile_secs += t.secs();
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs must match the manifest signature order;
+    /// outputs come back in manifest order (the lowered module returns a
+    /// tuple — `return_tuple=True` — which is decomposed here).
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(name, &refs)
+    }
+
+    /// Borrowing variant of [`run`]: callers with long-lived tensors (the
+    /// trainer's parameter list) avoid a full host copy per step —
+    /// EXPERIMENTS.md §Perf L3-1.
+    pub fn run_refs(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (ht, ts) in inputs.iter().zip(&spec.inputs) {
+            if ht.shape() != ts.shape.as_slice() {
+                bail!(
+                    "{name}: input {:?} shape mismatch: manifest {:?}, got {:?}",
+                    ts.name,
+                    ts.shape,
+                    ht.shape()
+                );
+            }
+        }
+        let t = Timer::start();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|ht| ht.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.exes.get(name).expect("prepared above");
+        let bufs = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out_lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("converting {name} outputs"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest declares {} outputs, module returned {}",
+                spec.outputs.len(),
+                outs.len()
+            );
+        }
+        self.exec_secs += t.secs();
+        self.exec_calls += 1;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.elems(), 6);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn i32_tensor() {
+        let t = HostTensor::i32(vec![4], vec![1, -2, 3, -4]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(&[3, 5]);
+        assert_eq!(t.elems(), 15);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,306 @@
+//! Typed view of `artifacts/manifest.json` produced by `python/compile/aot.py`.
+//!
+//! The manifest pins everything the coordinator must agree on with the AOT
+//! side: parameter ordering and shapes, optimizer state layouts, per-param
+//! routing (candidate optimizer vs Adam — the paper's App. F.2 protocol),
+//! and the input/output signature of every HLO artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.str_of("name")?.to_string(),
+            dtype: v.str_of("dtype")?.to_string(),
+            shape: v.usize_vec_of("shape")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct StateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Which parameter this state tensor belongs to.
+    pub param: String,
+    /// Key within the optimizer's state dict ("m", "v", "u", ...).
+    pub key: String,
+    /// Optimizer that owns it ("adam" for Adam-routed params).
+    pub route: String,
+    /// Init rule: "zeros" | "eye" | "eye_scale:<c>".
+    pub init: String,
+}
+
+impl StateSpec {
+    /// Materialize the initial state tensor per the init rule.
+    pub fn init_data(&self) -> Result<Vec<f32>> {
+        let elems: usize = self.shape.iter().product::<usize>().max(1);
+        match self.init.as_str() {
+            "zeros" => Ok(vec![0.0; elems]),
+            "eye" => {
+                let (m, n) = (self.shape[0], self.shape[1]);
+                let mut v = vec![0.0; m * n];
+                for i in 0..m.min(n) {
+                    v[i * n + i] = 1.0;
+                }
+                Ok(v)
+            }
+            s if s.starts_with("eye_scale:") => {
+                let c: f32 = s["eye_scale:".len()..]
+                    .parse()
+                    .map_err(|e| anyhow!("bad eye_scale: {e}"))?;
+                let (m, n) = (self.shape[0], self.shape[1]);
+                let mut v = vec![0.0; m * n];
+                for i in 0..m.min(n) {
+                    v[i * n + i] = c;
+                }
+                Ok(v)
+            }
+            other => Err(anyhow!("unknown state init rule {other:?}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OptimizerSpec {
+    pub states: Vec<StateSpec>,
+    pub routes: Vec<String>,
+    pub has_refresh: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub preset: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub inter: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub num_params: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub params: Vec<ParamSpec>,
+    pub optimizers: BTreeMap<String, OptimizerSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub hyperparams: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+
+        let m = v.req("model")?;
+        let model = ModelInfo {
+            preset: m.str_of("preset")?.to_string(),
+            vocab: m.usize_of("vocab")?,
+            dim: m.usize_of("dim")?,
+            inter: m.usize_of("inter")?,
+            heads: m.usize_of("heads")?,
+            layers: m.usize_of("layers")?,
+            seq: m.usize_of("seq")?,
+            batch: m.usize_of("batch")?,
+            num_params: m.usize_of("num_params")?,
+        };
+
+        let params = v
+            .arr_of("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.str_of("name")?.to_string(),
+                    shape: p.usize_vec_of("shape")?,
+                    init_std: p.f64_of("init_std")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut optimizers = BTreeMap::new();
+        if let Some(Json::Obj(objs)) = v.get("optimizers") {
+            for (name, spec) in objs {
+                let states = spec
+                    .arr_of("states")?
+                    .iter()
+                    .map(|s| {
+                        Ok(StateSpec {
+                            name: s.str_of("name")?.to_string(),
+                            shape: s.usize_vec_of("shape")?,
+                            param: s.str_of("param")?.to_string(),
+                            key: s.str_of("key")?.to_string(),
+                            route: s.str_of("route")?.to_string(),
+                            init: s
+                                .get("init")
+                                .and_then(Json::as_str)
+                                .unwrap_or("zeros")
+                                .to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let routes = spec
+                    .arr_of("routes")?
+                    .iter()
+                    .map(|r| {
+                        r.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow!("route not a string"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let has_refresh = spec
+                    .get("has_refresh")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                optimizers.insert(
+                    name.clone(),
+                    OptimizerSpec { states, routes, has_refresh },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in v.arr_of("artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.str_of("name")?.to_string(),
+                file: a.str_of("file")?.to_string(),
+                kind: a.str_of("kind")?.to_string(),
+                inputs: a
+                    .arr_of("inputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .arr_of("outputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        let mut hyperparams = BTreeMap::new();
+        if let Some(Json::Obj(h)) = v.get("hyperparams") {
+            for (k, val) in h {
+                if let Some(n) = val.as_f64() {
+                    hyperparams.insert(k.clone(), n);
+                } else if let Some(b) = val.as_bool() {
+                    hyperparams.insert(k.clone(), if b { 1.0 } else { 0.0 });
+                }
+            }
+        }
+
+        Ok(Manifest { dir, model, params, optimizers, artifacts, hyperparams })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn optimizer(&self, name: &str) -> Result<&OptimizerSpec> {
+        self.optimizers
+            .get(name)
+            .ok_or_else(|| anyhow!("optimizer {name:?} has no artifacts"))
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Total parameter element count (cross-check against model.num_params).
+    pub fn param_elems(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "model": {"preset":"nano","vocab":256,"dim":64,"inter":176,"heads":4,
+                "layers":2,"seq":64,"batch":8,"num_params":133440},
+      "params": [{"name":"embed","shape":[256,64],"init_std":0.02}],
+      "optimizers": {"adam": {"states":[{"name":"state.embed.m","shape":[256,64],
+          "param":"embed","key":"m","route":"adam"}],
+          "routes":["adam"],"has_refresh":false}},
+      "hyperparams": {"b1":0.9,"bias_correction":true},
+      "artifacts": [{"name":"grad_step","file":"grad_step.hlo.txt","kind":"grad",
+        "inputs":[{"name":"tokens","dtype":"i32","shape":[8,64]}],
+        "outputs":[{"name":"loss","dtype":"f32","shape":[]}]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.model.preset, "nano");
+        assert_eq!(m.params[0].shape, vec![256, 64]);
+        assert_eq!(m.param_elems(), 256 * 64);
+        assert!(m.optimizer("adam").unwrap().states[0].key == "m");
+        assert!((m.hyperparams["b1"] - 0.9).abs() < 1e-12);
+        assert_eq!(m.hyperparams["bias_correction"], 1.0);
+        let a = m.artifact("grad_step").unwrap();
+        assert_eq!(a.inputs[0].dtype, "i32");
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn param_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.param_index("embed"), Some(0));
+        assert_eq!(m.param_index("missing"), None);
+    }
+}

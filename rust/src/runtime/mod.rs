@@ -1,0 +1,12 @@
+//! PJRT runtime: manifest loading + HLO-text compilation + execution.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 protos carry 64-bit ids
+//! that XLA 0.5.1 rejects).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{ArtifactSpec, Manifest, ModelInfo, OptimizerSpec, ParamSpec, StateSpec, TensorSpec};

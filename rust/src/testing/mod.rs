@@ -1,0 +1,135 @@
+//! Minimal property-testing harness (no `proptest` in the offline
+//! registry — DESIGN.md §Substitutions).
+//!
+//! `Check::new(name).runs(N).check(gen, prop)` draws N random inputs from
+//! `gen`, asserts `prop` on each, and on failure reports the seed that
+//! reproduces it plus a crude shrink (retry with scaled-down inputs where
+//! the generator supports it via `Gen::size`).
+
+use crate::util::Pcg;
+
+/// Generation context handed to generators: RNG + a size hint that shrinks
+/// on failure replay.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Uniform usize in [lo, hi] scaled by the current size hint.
+    pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+}
+
+pub struct Check {
+    name: &'static str,
+    runs: usize,
+    base_seed: u64,
+}
+
+impl Check {
+    pub fn new(name: &'static str) -> Self {
+        Check { name, runs: 64, base_seed: 0xa11ce }
+    }
+
+    pub fn runs(mut self, n: usize) -> Self {
+        self.runs = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Draw inputs and check the property. `prop` returns Err(message) on
+    /// violation; panics with seed + shrink report.
+    pub fn check<T>(
+        &self,
+        gen: impl Fn(&mut Gen) -> T,
+        prop: impl Fn(&T) -> Result<(), String>,
+    ) {
+        for i in 0..self.runs {
+            let seed = self.base_seed.wrapping_add(i as u64);
+            let mut rng = Pcg::seeded(seed);
+            let mut g = Gen { rng: &mut rng, size: 64 };
+            let input = gen(&mut g);
+            if let Err(msg) = prop(&input) {
+                // shrink: replay the same seed at smaller sizes
+                let mut smallest: Option<(usize, String)> = None;
+                for size in [1usize, 2, 4, 8, 16, 32] {
+                    let mut rng = Pcg::seeded(seed);
+                    let mut g = Gen { rng: &mut rng, size };
+                    let small = gen(&mut g);
+                    if let Err(m) = prop(&small) {
+                        smallest = Some((size, m));
+                        break;
+                    }
+                }
+                match smallest {
+                    Some((size, m)) => panic!(
+                        "property {:?} failed (seed {seed}): {msg}\n  \
+                         shrunk to size {size}: {m}",
+                        self.name
+                    ),
+                    None => panic!(
+                        "property {:?} failed (seed {seed}, size 64): {msg}",
+                        self.name
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Check::new("abs-nonneg").runs(32).check(
+            |g| g.f32_in(-5.0, 5.0),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        Check::new("always-false").runs(4).check(
+            |g| g.dim(1, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn dims_respect_bounds() {
+        Check::new("dim-bounds").runs(100).check(
+            |g| (g.dim(3, 40), g.dim(1, 2)),
+            |&(a, b)| {
+                if (3..=40).contains(&a) && (1..=2).contains(&b) {
+                    Ok(())
+                } else {
+                    Err(format!("out of bounds: {a}, {b}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny leveled logger (no `tracing`/`env_logger` offline).
+//!
+//! Level comes from `ALICE_RACS_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`. Timestamps are seconds since process start so logs
+//! are diff-able across runs.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lv = match std::env::var("ALICE_RACS_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv
+}
+
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn log(lv: Level, args: std::fmt::Arguments<'_>) {
+    if lv <= level() {
+        let tag = match lv {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:9.3}s {tag}] {args}", start().elapsed().as_secs_f64());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info,
+                               format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn,
+                               format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug,
+                               format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_get() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,102 @@
+//! Scoped timers and a streaming duration recorder for the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates named durations — the coordinator's per-phase profile
+/// (grad exec / optimizer update / data gen / host copies), printed at the
+/// end of a run and consumed by EXPERIMENTS.md §Perf.
+#[derive(Debug, Default)]
+pub struct Profile {
+    acc: BTreeMap<&'static str, (f64, u64)>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &'static str, secs: f64) {
+        let e = self.acc.entry(name).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.secs());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.acc.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        let mut out = String::from("phase                          total_s   calls   mean_ms\n");
+        for (name, (total, calls)) in rows {
+            out.push_str(&format!(
+                "{name:<30} {total:>8.3} {calls:>7} {:>9.3}\n",
+                1e3 * total / *calls as f64
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = Profile::new();
+        p.add("a", 0.5);
+        p.add("a", 0.25);
+        p.add("b", 1.0);
+        assert!((p.total("a") - 0.75).abs() < 1e-12);
+        assert_eq!(p.count("a"), 2);
+        assert!(p.report().contains("a"));
+    }
+
+    #[test]
+    fn time_closure() {
+        let mut p = Profile::new();
+        let v = p.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("x"), 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! HLO ↔ native parity: the AOT `opt_update_<opt>_<m>x<n>` artifacts
+//! (L2 optimizers through L1 Pallas kernels, executed by PJRT) must agree
+//! with the native Rust optimizer implementations on identical gradient
+//! streams. This is the strongest correctness bond across all three
+//! layers: two fully independent implementations, one contract.
+
+use alice_racs::linalg::Mat;
+use alice_racs::opt::{build, Hyper, Slot};
+use alice_racs::runtime::{Engine, HostTensor};
+use alice_racs::util::Pcg;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+/// Drive both implementations over `steps` shared gradients; compare the
+/// applied deltas. HLO state tensors round-trip through the executable.
+fn check_parity(e: &mut Engine, opt_name: &str, rows: usize, cols: usize, steps: u64, tol: f32) {
+    let art = format!("opt_update_{opt_name}_{rows}x{cols}");
+    if !e.manifest.artifacts.contains_key(&art) {
+        eprintln!("skipping {art}: not in bundle");
+        return;
+    }
+    let spec = e.manifest.artifact(&art).unwrap().clone();
+    // hyperparams must match what aot.py baked in
+    let hp = manifest_hyper(e);
+    let opt = build(opt_name, &hp).unwrap();
+    let mut slot = Slot::new(opt, rows, cols);
+
+    let mut state: Vec<HostTensor> = spec.inputs[3..]
+        .iter()
+        .map(|ts| {
+            // state init mirrors the python init (identity-prefix for u)
+            let mut t = HostTensor::zeros(&ts.shape);
+            if ts.name.ends_with(".u") || ts.name == "state.u" {
+                let (m, r) = (ts.shape[0], ts.shape[1]);
+                let d = t.as_f32_mut().unwrap();
+                for i in 0..m.min(r) {
+                    d[i * r + i] = 1.0;
+                }
+            }
+            t
+        })
+        .collect();
+
+    let mut rng = Pcg::seeded(99);
+    let lr = 0.01f32;
+    for t in 1..=steps {
+        let gdata = rng.normal_vec(rows * cols, 0.5);
+        let g = Mat::from_vec(rows, cols, gdata.clone());
+
+        // HLO path
+        let mut inputs = vec![
+            HostTensor::f32(vec![rows, cols], gdata),
+            HostTensor::scalar_f32(lr),
+            HostTensor::scalar_f32(t as f32),
+        ];
+        inputs.extend(state.iter().cloned());
+        let outs = e.run(&art, &inputs).expect(&art);
+        let hlo_delta = outs[0].as_f32().unwrap().to_vec();
+        state = outs.into_iter().skip(1).collect();
+
+        // native path (returns unscaled direction)
+        let native = slot.step(&g, t);
+
+        let mut max_err = 0.0f32;
+        let mut max_mag = 0.0f32;
+        for (h, n) in hlo_delta.iter().zip(&native.data) {
+            max_err = max_err.max((h - lr * n).abs());
+            max_mag = max_mag.max(h.abs());
+        }
+        assert!(
+            max_err <= tol * max_mag.max(1e-3),
+            "{art} t={t}: parity err {max_err} vs magnitude {max_mag}"
+        );
+    }
+}
+
+fn manifest_hyper(e: &Engine) -> Hyper {
+    let h = &e.manifest.hyperparams;
+    let get = |k: &str, d: f64| *h.get(k).unwrap_or(&d);
+    Hyper {
+        b1: get("b1", 0.9) as f32,
+        b2: get("b2", 0.999) as f32,
+        b3: get("b3", 0.999) as f32,
+        eps: get("eps", 1e-8) as f32,
+        rank: get("rank", 32.0) as usize,
+        leading: get("leading", 10.0) as usize,
+        interval: get("interval", 200.0) as usize,
+        alpha: get("alpha", 1.0) as f32,
+        alpha_c: get("alpha_c", 0.4) as f32,
+        gamma: get("gamma", 1.01) as f32,
+        beta_racs: get("beta_racs", 0.9) as f32,
+        racs_iters: get("racs_iters", 5.0) as usize,
+        ns_iters: get("ns_iters", 6.0) as usize,
+        ..Hyper::default()
+    }
+}
+
+#[test]
+fn adam_parity_tall_and_wide() {
+    let Some(mut e) = engine() else { return };
+    check_parity(&mut e, "adam", 64, 176, 4, 2e-3);
+    check_parity(&mut e, "adam", 176, 64, 4, 2e-3);
+}
+
+#[test]
+fn racs_parity() {
+    let Some(mut e) = engine() else { return };
+    check_parity(&mut e, "racs", 64, 176, 4, 5e-3);
+    check_parity(&mut e, "racs", 256, 64, 3, 5e-3);
+}
+
+#[test]
+fn galore_parity_first_block() {
+    // before any refresh both sides hold the identity-prefix projection,
+    // so the GaLore update must agree exactly
+    let Some(mut e) = engine() else { return };
+    check_parity(&mut e, "galore", 64, 176, 3, 5e-3);
+}
+
+#[test]
+fn alice_parity_first_block() {
+    let Some(mut e) = engine() else { return };
+    check_parity(&mut e, "alice", 64, 176, 3, 2e-2);
+    check_parity(&mut e, "alice", 176, 64, 3, 2e-2);
+}
