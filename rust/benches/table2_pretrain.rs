@@ -7,7 +7,9 @@
 //!
 //! Scale with AR_BENCH_STEPS (default 120) and AR_BENCH_OPTS.
 
-use alice_racs::bench::{artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, TablePrinter};
+use alice_racs::bench::{
+    artifacts_available, bench_cfg, bench_opts, bench_steps, bench_threads, run_one, TablePrinter,
+};
 use alice_racs::coordinator::Summary;
 
 fn main() {
@@ -15,15 +17,20 @@ fn main() {
         return;
     }
     let steps = bench_steps(120);
+    let threads = bench_threads(0);
     let opts = bench_opts(&[
         "adam", "galore", "fira", "apollo_mini", "racs", "alice0", "alice",
     ]);
-    println!("== Table 2 analogue: {steps} steps per optimizer ==");
+    println!(
+        "== Table 2 analogue: {steps} steps per optimizer, {} pool threads ==",
+        if threads == 0 { alice_racs::util::pool::available() } else { threads }
+    );
 
     let mut results: Vec<Summary> = Vec::new();
     for opt in &opts {
-        // Ppl* protocol: full-rank candidates get an Adam-trained lm-head;
-        // low-rank candidates train it themselves (paper Sec. 7.1).
+        // Ppl/Ppl* lm-head protocol comes from the optimizer registry
+        // inside bench_cfg (paper Sec. 7.1): full-rank candidates get an
+        // Adam-trained lm-head, low-rank candidates train it themselves.
         let cfg = bench_cfg(opt, "table2", steps);
         match run_one(cfg) {
             Ok(s) => {

@@ -2,15 +2,18 @@
 //! (warmup + measured iterations, mean ± σ) plus the training-run drivers
 //! that regenerate the paper's tables and figures.
 //!
-//! Scaling: the benches honor two env vars so the same binaries serve both
-//! CI smoke runs and full reproductions:
-//! * `AR_BENCH_STEPS`  — optimizer steps per training run (default 120)
-//! * `AR_BENCH_OPTS`   — comma list overriding the optimizer sweep
+//! Scaling: the benches honor three env vars so the same binaries serve
+//! both CI smoke runs and full reproductions:
+//! * `AR_BENCH_STEPS`   — optimizer steps per training run (default 120)
+//! * `AR_BENCH_OPTS`    — comma list overriding the optimizer sweep
+//! * `AR_BENCH_THREADS` — pool width for the runs (0 = all cores, the
+//!   default; `fig3_throughput` additionally sweeps serial vs parallel)
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::coordinator::{self, Summary, Trainer};
+use crate::opt;
 use crate::util::{mean, std_dev, Timer};
 
 /// Measured wallclock stats for one micro-bench.
@@ -66,6 +69,14 @@ pub fn bench_opts(default: &[&str]) -> Vec<String> {
     }
 }
 
+/// Pool width for bench runs (env-overridable; 0 = all cores).
+pub fn bench_threads(default: usize) -> usize {
+    std::env::var("AR_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// A standard bench run config against the default artifact bundle.
 pub fn bench_cfg(opt: &str, tag: &str, steps: usize) -> RunConfig {
     let mut cfg = RunConfig::default().tuned_for(opt);
@@ -75,6 +86,11 @@ pub fn bench_cfg(opt: &str, tag: &str, steps: usize) -> RunConfig {
     cfg.eval_every = (steps / 8).max(1);
     cfg.eval_batches = 4;
     cfg.log_every = usize::MAX;
+    cfg.threads = bench_threads(0);
+    // Paper Sec. 7.1 lm-head protocol from the registry: full-rank
+    // candidates report Ppl* (Adam-trained head), low-rank candidates
+    // train it themselves (Ppl).
+    cfg.last_layer_adam = !opt::is_low_rank(opt, &cfg.hp).unwrap_or(false);
     // artifact bundle is lowered with rank 16 / interval 50 (Makefile
     // defaults); the native path follows the same geometry
     cfg.hp.rank = 16;
@@ -164,7 +180,18 @@ mod tests {
     #[test]
     fn env_scaling_defaults() {
         std::env::remove_var("AR_BENCH_STEPS");
+        std::env::remove_var("AR_BENCH_THREADS");
         assert_eq!(bench_steps(120), 120);
         assert_eq!(bench_opts(&["adam", "racs"]), vec!["adam", "racs"]);
+        assert_eq!(bench_threads(0), 0);
+    }
+
+    #[test]
+    fn bench_cfg_lm_head_protocol_from_registry() {
+        // Ppl* (Adam head) for full-rank candidates, Ppl for low-rank
+        assert!(bench_cfg("adam", "t", 10).last_layer_adam);
+        assert!(bench_cfg("racs", "t", 10).last_layer_adam);
+        assert!(!bench_cfg("galore", "t", 10).last_layer_adam);
+        assert!(!bench_cfg("alice", "t", 10).last_layer_adam);
     }
 }

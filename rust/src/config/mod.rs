@@ -33,6 +33,10 @@ pub struct RunConfig {
     pub grad_accum: usize,
     /// Simulated data-parallel workers (grads averaged = all-reduce).
     pub workers: usize,
+    /// Parallel execution backend width (`util::pool`): 0 = all available
+    /// cores (default), 1 = exact historical serial behavior, N = N
+    /// worker threads for the linalg kernels and the per-layer fan-out.
+    pub threads: usize,
     pub eval_every: usize,
     pub eval_batches: usize,
     /// Train the lm-head with full-rank Adam (the paper's "Ppl*" setup).
@@ -61,6 +65,7 @@ impl Default for RunConfig {
             seed: 42,
             grad_accum: 1,
             workers: 1,
+            threads: 0,
             eval_every: 50,
             eval_batches: 4,
             last_layer_adam: true,
@@ -123,6 +128,7 @@ impl RunConfig {
             seed: v.usize_or("train", "seed", d.seed as usize) as u64,
             grad_accum: v.usize_or("train", "grad_accum", d.grad_accum).max(1),
             workers: v.usize_or("train", "workers", d.workers).max(1),
+            threads: v.usize_or("train", "threads", d.threads),
             eval_every: v.usize_or("train", "eval_every", d.eval_every),
             eval_batches: v.usize_or("train", "eval_batches", d.eval_batches),
             last_layer_adam: v.bool_or("train", "last_layer_adam", d.last_layer_adam),
@@ -199,6 +205,7 @@ mod tests {
         assert_eq!(c.optimizer, "alice");
         assert_eq!(c.steps, 300);
         assert_eq!(c.path, ExecPath::Coordinator);
+        assert_eq!(c.threads, 0, "default = auto (all cores)");
     }
 
     #[test]
@@ -214,6 +221,7 @@ lr = 0.01
 path = "fused"
 last_layer_adam = false
 workers = 4
+threads = 3
 [optimizer]
 rank = 16
 switch = "gaussian_mix"
@@ -226,6 +234,7 @@ mix = 0.5
         assert_eq!(c.optimizer, "racs");
         assert_eq!(c.path, ExecPath::Fused);
         assert_eq!(c.workers, 4);
+        assert_eq!(c.threads, 3);
         assert_eq!(c.hp.rank, 16);
         assert_eq!(c.hp.switch, crate::opt::Switch::GaussianMix);
         assert_eq!(c.hp.compen, crate::opt::Compen::Fira);

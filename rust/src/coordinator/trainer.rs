@@ -26,7 +26,7 @@ use crate::linalg::Mat;
 use crate::opt::{build, Slot};
 use crate::runtime::{Engine, HostTensor};
 use crate::util::timer::Profile;
-use crate::util::{Pcg, Timer};
+use crate::util::{pool, Pcg, Timer};
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, Summary};
@@ -66,6 +66,12 @@ impl Trainer {
     }
 
     pub fn with_engine(engine: Engine, cfg: RunConfig) -> Result<Self> {
+        // Parallel execution backend width (0 = all cores, 1 = serial).
+        // The knob is process-global by design (README §Threading model):
+        // the last-constructed trainer wins. Callers needing isolation
+        // (tests, side-by-side benches) use pool::with_threads, which is
+        // thread-local and takes precedence.
+        pool::set_threads(cfg.threads);
         let model = engine.manifest.model.clone();
         let mut rng = Pcg::seeded(cfg.seed);
 
@@ -83,37 +89,43 @@ impl Trainer {
         }
 
         // -------- per-param routing + native slots
-        let mut slots = Vec::new();
-        let mut routes = Vec::new();
+        // Routing follows the paper's App. F.2 protocol: 1-D params →
+        // Adam; lm-head → Adam under `last_layer_adam` (the "Ppl*"/"Mem*"
+        // policy, matching `coordinator::memory::estimate`); every other
+        // matrix → the candidate. Whether the candidate is a low-rank
+        // method comes from the optimizer registry (`Optimizer::low_rank`),
+        // not a hard-coded name list — the benches use it to pick the
+        // Ppl vs Ppl* protocol per optimizer.
+        build(&cfg.optimizer, &cfg.hp)?; // fail fast on unknown names
+        let mut routes = Vec::with_capacity(engine.manifest.params.len());
+        let mut geoms = Vec::with_capacity(engine.manifest.params.len());
         for p in &engine.manifest.params {
             let is_matrix = p.shape.len() == 2;
-            let low_rank = matches!(
-                cfg.optimizer.as_str(),
-                "galore" | "fira" | "alice" | "alice0" | "apollo_mini"
-            );
-            let route = if !is_matrix {
+            let route = if !is_matrix || (p.name == "lm_head" && cfg.last_layer_adam) {
                 Route::Adam
-            } else if p.name == "lm_head" && cfg.last_layer_adam && !low_rank {
-                Route::Adam
-            } else if p.name == "lm_head" && cfg.last_layer_adam && low_rank {
-                Route::Adam
-            } else if is_matrix {
-                Route::Candidate
             } else {
-                Route::Adam
+                Route::Candidate
             };
-            let (rows, cols) = if p.shape.len() == 2 {
+            let (rows, cols) = if is_matrix {
                 (p.shape[0], p.shape[1])
             } else {
                 (1, p.shape[0])
             };
-            let opt = match route {
+            routes.push(route);
+            geoms.push((rows, cols));
+        }
+        // slot construction is independent per parameter (init draws no
+        // RNG), so it fans out across the pool
+        let slots = pool::map(routes.len(), |i| -> Result<Slot> {
+            let (rows, cols) = geoms[i];
+            let opt = match routes[i] {
                 Route::Adam => build("adam", &cfg.hp)?,
                 Route::Candidate => build(&cfg.optimizer, &cfg.hp)?,
             };
-            slots.push(Slot::new(opt, rows, cols));
-            routes.push(route);
-        }
+            Ok(Slot::new(opt, rows, cols))
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
 
         // -------- fused-path state init from the manifest
         let fused_state = if cfg.path == ExecPath::Fused {
@@ -202,26 +214,83 @@ impl Trainer {
             }
         }
 
-        // refresh schedule (paper Alg. 4 line 5: t == 1 or t mod K == 0)
+        // refresh schedule (paper Alg. 4 line 5: t == 1 or t mod K == 0).
+        // Seeds are drawn on the coordinator thread, in parameter order,
+        // for exactly the slots the serial loop refreshed — the RNG stream
+        // is identical for every pool width.
         let k = self.cfg.hp.interval.max(1) as u64;
         let do_refresh = self.step == 1 || self.step % k == 0;
+        let seeds: Vec<Option<u64>> = (0..self.params.len())
+            .map(|i| {
+                if do_refresh && self.routes[i] == Route::Candidate {
+                    Some(self.rng.next_u64() ^ (i as u64))
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        // Per-layer fan-out: each (slot, param, grad) unit is independent,
+        // so refresh → step → weight-apply runs across the pool. Workers
+        // pin nested linalg kernels to serial, so every layer's arithmetic
+        // matches the serial loop bit for bit regardless of pool width.
+        struct Unit<'a> {
+            slot: &'a mut Slot,
+            param: &'a mut HostTensor,
+            grad: &'a Mat,
+        }
+        struct LayerOut {
+            cos: Option<(String, Vec<f32>)>,
+            refresh_s: f64,
+            step_s: f64,
+            err: Option<String>,
+        }
         let t0 = Timer::start();
-        for i in 0..self.params.len() {
-            if do_refresh && self.routes[i] == Route::Candidate {
-                let seed = self.rng.next_u64() ^ (i as u64);
-                self.slots[i].refresh(&grads[i], seed);
-                if let Some(cos) = self.slots[i].state.vecs.get("diag_cos") {
-                    self.cos_log.push((
-                        self.step,
-                        self.engine.manifest.params[i].name.clone(),
-                        cos.clone(),
-                    ));
+        let step = self.step;
+        let names = &self.engine.manifest.params;
+        let mut units: Vec<Unit> = self
+            .slots
+            .iter_mut()
+            .zip(self.params.iter_mut().zip(grads.iter()))
+            .map(|(slot, (param, grad))| Unit { slot, param, grad })
+            .collect();
+        let outs: Vec<LayerOut> = pool::map_mut(&mut units, |i, u| {
+            let mut cos = None;
+            let mut refresh_s = 0.0;
+            if let Some(seed) = seeds[i] {
+                let tr = Timer::start();
+                u.slot.refresh(u.grad, seed);
+                refresh_s = tr.secs();
+                if let Some(c) = u.slot.state.vecs.get("diag_cos") {
+                    cos = Some((names[i].name.clone(), c.clone()));
                 }
             }
-            let delta = self.slots[i].step(&grads[i], self.step);
-            let w = self.params[i].as_f32_mut()?;
-            for (wi, &di) in w.iter_mut().zip(&delta.data) {
-                *wi -= lr * di;
+            let ts = Timer::start();
+            let delta = u.slot.step(u.grad, step);
+            let err = match u.param.as_f32_mut() {
+                Ok(w) => {
+                    for (wi, &di) in w.iter_mut().zip(&delta.data) {
+                        *wi -= lr * di;
+                    }
+                    None
+                }
+                Err(e) => Some(format!("{e:#}")),
+            };
+            LayerOut { cos, refresh_s, step_s: ts.secs(), err }
+        });
+        drop(units);
+        for (i, out) in outs.into_iter().enumerate() {
+            if let Some(e) = out.err {
+                bail!("updating param {:?}: {e}", names[i].name);
+            }
+            // per-layer timings (CPU seconds summed over workers) feed the
+            // profile next to the fan-out wall clock below
+            self.profile.add("opt_step_layer", out.step_s);
+            if out.refresh_s > 0.0 {
+                self.profile.add("opt_refresh_layer", out.refresh_s);
+            }
+            if let Some((name, cos)) = out.cos {
+                self.cos_log.push((self.step, name, cos));
             }
         }
         self.profile.add("opt_update", t0.secs());

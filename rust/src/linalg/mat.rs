@@ -1,8 +1,26 @@
 //! Dense row-major f32 matrix with the operations the optimizer suite
 //! needs. Hot paths (`matmul`, `matmul_tn`, `matmul_nt`) are blocked for
 //! cache locality — see EXPERIMENTS.md §Perf for measurements.
+//!
+//! # Threading
+//!
+//! The matmul family, `transpose`, and the elementwise/reduction family
+//! fan out over `util::pool` when the work is large enough
+//! ([`PAR_MIN_FLOPS`] / [`PAR_CHUNK`]). Determinism contract:
+//!
+//! * `matmul` / `matmul_tn` / `matmul_nt` / `transpose` and every
+//!   elementwise op partition the *output* by row block or fixed-size
+//!   chunk; each element's float-op order matches the serial loop, so
+//!   results are **bitwise identical for every thread count**.
+//! * Reductions (`fro_norm*`, `col_sq_norms`) combine fixed-size partial
+//!   sums in partition order when parallel — deterministic for any pool
+//!   width > 1, and exactly the historical single-pass order at width 1.
+//!   (`max_abs` and `row_sq_norms` are order-insensitive / per-row, so
+//!   they too are bitwise stable.)
 
 use std::fmt;
+
+use crate::util::pool;
 
 /// Row-major dense matrix.
 #[derive(Clone, PartialEq)]
@@ -19,7 +37,48 @@ impl fmt::Debug for Mat {
 }
 
 /// Cache block edge for the matmul kernels (f32: 64*64*4 = 16 KiB/tile).
+/// Doubles as the row-block grain of the parallel partitioning.
 const BLK: usize = 64;
+
+/// Below this many multiply-adds a matmul-family kernel stays on the
+/// calling thread: the scoped pool spawns workers per region (~100 µs for
+/// a few threads), so fanning out must buy at least that much work.
+const PAR_MIN_FLOPS: usize = 1 << 19;
+
+/// Below this many elements the elementwise/reduction family stays on the
+/// calling thread (same dispatch-cost argument as [`PAR_MIN_FLOPS`]).
+const PAR_MIN_ELEMS: usize = 1 << 18;
+
+/// Elementwise/reduction chunk grain (elements). Fixed, so partials
+/// combine identically for every pool width.
+const PAR_CHUNK: usize = 1 << 14;
+
+/// Chunk grain for elementwise ops: one chunk (= inline serial) below the
+/// dispatch threshold, fixed [`PAR_CHUNK`] pieces above it. Elementwise
+/// results are bitwise independent of the grain.
+fn elem_grain(len: usize) -> usize {
+    if len < PAR_MIN_ELEMS {
+        len.max(1)
+    } else {
+        PAR_CHUNK
+    }
+}
+
+/// Chunked sum of squares: serial single pass at width 1 (historical
+/// behavior) and below the dispatch threshold, fixed-chunk partials
+/// combined in order otherwise.
+fn sum_sq(data: &[f32]) -> f32 {
+    if pool::threads() <= 1 || data.len() < PAR_MIN_ELEMS {
+        return data.iter().map(|&x| x * x).sum();
+    }
+    let n = data.len().div_ceil(PAR_CHUNK);
+    let parts = pool::map(n, |i| {
+        let lo = i * PAR_CHUNK;
+        let hi = (lo + PAR_CHUNK).min(data.len());
+        data[lo..hi].iter().map(|&x| x * x).sum::<f32>()
+    });
+    parts.iter().sum()
+}
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
@@ -75,86 +134,127 @@ impl Mat {
     }
 
     pub fn transpose(&self) -> Mat {
-        let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t.data[j * self.rows + i] = self.data[i * self.cols + j];
-            }
+        let (m, n) = (self.rows, self.cols);
+        let mut t = Mat::zeros(n, m);
+        if m == 0 || n == 0 {
+            return t;
         }
+        // output rows (= input columns) partition; pure writes, so any
+        // pool width produces identical bytes
+        let rows_per = if m * n < PAR_MIN_ELEMS { n } else { BLK };
+        pool::for_each_chunk_mut(&mut t.data, rows_per * m, |bi, trows| {
+            let j0 = bi * rows_per;
+            for (rj, trow) in trows.chunks_mut(m).enumerate() {
+                let j = j0 + rj;
+                for (i, ti) in trow.iter_mut().enumerate() {
+                    *ti = self.data[i * n + j];
+                }
+            }
+        });
         t
     }
 
     // ---------------------------------------------------------- matmul ---
-    /// C = A @ B, blocked i-k-j loop (unit-stride inner loop).
-    pub fn matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.rows, "matmul {self:?} @ {b:?}");
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut c = Mat::zeros(m, n);
-        for i0 in (0..m).step_by(BLK) {
-            for k0 in (0..k).step_by(BLK) {
-                for j0 in (0..n).step_by(BLK) {
-                    let i1 = (i0 + BLK).min(m);
-                    let k1 = (k0 + BLK).min(k);
-                    let j1 = (j0 + BLK).min(n);
-                    for i in i0..i1 {
-                        let arow = &self.data[i * k..(i + 1) * k];
-                        let crow = &mut c.data[i * n..(i + 1) * n];
-                        for kk in k0..k1 {
-                            let a = arow[kk];
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let brow = &b.data[kk * n..(kk + 1) * n];
-                            for j in j0..j1 {
-                                crow[j] += a * brow[j];
-                            }
+    /// One output row-block of C = A @ B: rows [i0, i0 + nrows) with the
+    /// same blocked k0-major / j0-inner loop order as the historical
+    /// serial kernel, so per-element accumulation order never changes.
+    fn matmul_block(&self, b: &Mat, i0: usize, crows: &mut [f32]) {
+        let (k, n) = (self.cols, b.cols);
+        let i1 = i0 + crows.len() / n;
+        for k0 in (0..k).step_by(BLK) {
+            let k1 = (k0 + BLK).min(k);
+            for j0 in (0..n).step_by(BLK) {
+                let j1 = (j0 + BLK).min(n);
+                for i in i0..i1 {
+                    let arow = &self.data[i * k..(i + 1) * k];
+                    let crow = &mut crows[(i - i0) * n..(i - i0 + 1) * n];
+                    for kk in k0..k1 {
+                        let a = arow[kk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += a * brow[j];
                         }
                     }
                 }
             }
         }
+    }
+
+    /// C = A @ B, blocked i-k-j loop (unit-stride inner loop); row blocks
+    /// of C fan out over the pool.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul {self:?} @ {b:?}");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return c;
+        }
+        let rows_per = if m * k * n < PAR_MIN_FLOPS { m } else { BLK };
+        pool::for_each_chunk_mut(&mut c.data, rows_per * n, |bi, crows| {
+            self.matmul_block(b, bi * rows_per, crows);
+        });
         c
     }
 
-    /// C = Aᵀ @ B without materializing Aᵀ (A is self).
+    /// C = Aᵀ @ B without materializing Aᵀ (A is self). Row blocks of C
+    /// fan out; each element still accumulates in ascending-k order,
+    /// matching the historical kk-outer serial loop bit for bit.
     pub fn matmul_tn(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "matmul_tn {self:?} ᵀ@ {b:?}");
         let (k, m, n) = (self.rows, self.cols, b.cols);
         let mut c = Mat::zeros(m, n);
-        for kk in 0..k {
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
+        if m == 0 || n == 0 {
+            return c;
+        }
+        let rows_per = if k * m * n < PAR_MIN_FLOPS { m } else { BLK };
+        pool::for_each_chunk_mut(&mut c.data, rows_per * n, |bi, crows| {
+            let i0 = bi * rows_per;
+            let i1 = i0 + crows.len() / n;
+            for kk in 0..k {
+                let arow = &self.data[kk * m..(kk + 1) * m];
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for i in i0..i1 {
+                    let a = arow[i];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut crows[(i - i0) * n..(i - i0 + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
                 }
             }
-        }
+        });
         c
     }
 
-    /// C = A @ Bᵀ without materializing Bᵀ.
+    /// C = A @ Bᵀ without materializing Bᵀ. Independent dot products per
+    /// output element; row blocks fan out.
     pub fn matmul_nt(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "matmul_nt {self:?} @ᵀ {b:?}");
         let (m, k, n) = (self.rows, self.cols, b.rows);
         let mut c = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
-                }
-                crow[j] = acc;
-            }
+        if m == 0 || n == 0 {
+            return c;
         }
+        let rows_per = if m * k * n < PAR_MIN_FLOPS { m } else { BLK };
+        pool::for_each_chunk_mut(&mut c.data, rows_per * n, |bi, crows| {
+            let i0 = bi * rows_per;
+            for (ri, crow) in crows.chunks_mut(n).enumerate() {
+                let arow = &self.data[(i0 + ri) * k..(i0 + ri + 1) * k];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let brow = &b.data[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    *cj = acc;
+                }
+            }
+        });
         c
     }
 
@@ -170,26 +270,33 @@ impl Mat {
     }
 
     // ------------------------------------------------------ elementwise ---
-    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
-        Mat {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().map(|&x| f(x)).collect(),
-        }
+    pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let grain = elem_grain(out.data.len());
+        pool::for_each_chunk_mut(&mut out.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            for (o, &x) in chunk.iter_mut().zip(&self.data[lo..lo + chunk.len()]) {
+                *o = f(x);
+            }
+        });
+        out
     }
 
-    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32 + Sync) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        Mat {
-            rows: self.rows,
-            cols: self.cols,
-            data: self
-                .data
-                .iter()
-                .zip(&other.data)
-                .map(|(&a, &b)| f(a, b))
-                .collect(),
-        }
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let grain = elem_grain(out.data.len());
+        pool::for_each_chunk_mut(&mut out.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            for ((o, &a), &b) in chunk
+                .iter_mut()
+                .zip(&self.data[lo..lo + chunk.len()])
+                .zip(&other.data[lo..lo + chunk.len()])
+            {
+                *o = f(a, b);
+            }
+        });
+        out
     }
 
     pub fn scale(&self, s: f32) -> Mat {
@@ -207,31 +314,66 @@ impl Mat {
     /// self ← a*self + b*other (EMA update, in place, no allocation).
     pub fn ema_(&mut self, a: f32, other: &Mat, b: f32) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (x, &y) in self.data.iter_mut().zip(&other.data) {
-            *x = a * *x + b * y;
-        }
+        let rhs = &other.data;
+        let grain = elem_grain(rhs.len());
+        pool::for_each_chunk_mut(&mut self.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            for (x, &y) in chunk.iter_mut().zip(&rhs[lo..lo + chunk.len()]) {
+                *x = a * *x + b * y;
+            }
+        });
     }
 
     pub fn fro_norm(&self) -> f32 {
-        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+        sum_sq(&self.data).sqrt()
     }
 
     pub fn fro_norm_sq(&self) -> f32 {
-        self.data.iter().map(|&x| x * x).sum::<f32>()
+        sum_sq(&self.data)
     }
 
     pub fn max_abs(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        if pool::threads() <= 1 || self.data.len() < PAR_MIN_ELEMS {
+            return self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        }
+        let n = self.data.len().div_ceil(PAR_CHUNK);
+        let parts = pool::map(n, |i| {
+            let lo = i * PAR_CHUNK;
+            let hi = (lo + PAR_CHUNK).min(self.data.len());
+            self.data[lo..hi].iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        });
+        parts.iter().fold(0.0f32, |m, &x| m.max(x))
     }
 
     /// Squared column l2 norms (the `S` of the normalization operator,
     /// Sec. 3.3).
     pub fn col_sq_norms(&self) -> Vec<f32> {
+        if pool::threads() <= 1 || self.rows * self.cols < PAR_MIN_ELEMS {
+            let mut out = vec![0.0f32; self.cols];
+            for i in 0..self.rows {
+                let row = self.row(i);
+                for (o, &x) in out.iter_mut().zip(row) {
+                    *o += x * x;
+                }
+            }
+            return out;
+        }
+        let nb = self.rows.div_ceil(BLK);
+        let parts = pool::map(nb, |bi| {
+            let mut out = vec![0.0f32; self.cols];
+            for i in bi * BLK..((bi + 1) * BLK).min(self.rows) {
+                let row = self.row(i);
+                for (o, &x) in out.iter_mut().zip(row) {
+                    *o += x * x;
+                }
+            }
+            out
+        });
         let mut out = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (o, &x) in out.iter_mut().zip(row) {
-                *o += x * x;
+        for part in parts {
+            // block-ascending combine: deterministic for any pool width
+            for (o, v) in out.iter_mut().zip(part) {
+                *o += v;
             }
         }
         out
@@ -239,9 +381,18 @@ impl Mat {
 
     /// Squared row l2 norms.
     pub fn row_sq_norms(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|i| self.row(i).iter().map(|&x| x * x).sum())
-            .collect()
+        if pool::threads() <= 1 || self.rows * self.cols < PAR_MIN_ELEMS {
+            return (0..self.rows)
+                .map(|i| self.row(i).iter().map(|&x| x * x).sum())
+                .collect();
+        }
+        let nb = self.rows.div_ceil(BLK);
+        let parts = pool::map(nb, |bi| {
+            (bi * BLK..((bi + 1) * BLK).min(self.rows))
+                .map(|i| self.row(i).iter().map(|&x| x * x).sum())
+                .collect::<Vec<f32>>()
+        });
+        parts.concat()
     }
 
     pub fn diag(&self) -> Vec<f32> {
@@ -286,6 +437,7 @@ impl Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::pool;
 
     fn approx(a: &Mat, b: &Mat, tol: f32) -> bool {
         a.rows == b.rows
@@ -342,6 +494,28 @@ mod tests {
     }
 
     #[test]
+    fn matmul_family_bitwise_stable_across_widths() {
+        // the determinism contract: identical bytes at widths 1, 2, 4
+        let mut rng = crate::util::Pcg::seeded(77);
+        let a = Mat::from_vec(129, 65, rng.normal_vec(129 * 65, 1.0));
+        let b = Mat::from_vec(65, 131, rng.normal_vec(65 * 131, 1.0));
+        let tall = Mat::from_vec(129, 70, rng.normal_vec(129 * 70, 1.0));
+        let wide = Mat::from_vec(90, 65, rng.normal_vec(90 * 65, 1.0));
+        let base = pool::with_threads(1, || {
+            (a.matmul(&b), a.matmul_tn(&tall), a.matmul_nt(&wide), a.transpose())
+        });
+        for width in [2, 4] {
+            let got = pool::with_threads(width, || {
+                (a.matmul(&b), a.matmul_tn(&tall), a.matmul_nt(&wide), a.transpose())
+            });
+            assert_eq!(base.0.data, got.0.data, "matmul width {width}");
+            assert_eq!(base.1.data, got.1.data, "matmul_tn width {width}");
+            assert_eq!(base.2.data, got.2.data, "matmul_nt width {width}");
+            assert_eq!(base.3.data, got.3.data, "transpose width {width}");
+        }
+    }
+
+    #[test]
     fn norms_and_reductions() {
         let a = Mat::from_vec(2, 2, vec![3., 0., 0., 4.]);
         assert!((a.fro_norm() - 5.0).abs() < 1e-6);
@@ -351,11 +525,55 @@ mod tests {
     }
 
     #[test]
+    fn reductions_parallel_close_to_serial() {
+        // 600*450 = 270k elements: above PAR_MIN_ELEMS, so width 4 takes
+        // the chunked paths
+        let mut rng = crate::util::Pcg::seeded(21);
+        let a = Mat::from_vec(600, 450, rng.normal_vec(600 * 450, 1.0));
+        let serial = pool::with_threads(1, || {
+            (a.fro_norm_sq(), a.max_abs(), a.col_sq_norms(), a.row_sq_norms())
+        });
+        let par = pool::with_threads(4, || {
+            (a.fro_norm_sq(), a.max_abs(), a.col_sq_norms(), a.row_sq_norms())
+        });
+        let rel = (serial.0 - par.0).abs() / serial.0.max(1e-12);
+        assert!(rel < 1e-4, "fro_norm_sq rel err {rel}");
+        assert_eq!(serial.1, par.1, "max_abs is order-insensitive");
+        for (s, p) in serial.2.iter().zip(&par.2) {
+            assert!((s - p).abs() <= 1e-4 * (1.0 + s.abs()), "col {s} vs {p}");
+        }
+        assert_eq!(serial.3, par.3, "row_sq_norms is per-row");
+    }
+
+    #[test]
     fn ema_inplace() {
         let mut a = Mat::from_vec(1, 3, vec![1., 1., 1.]);
         let b = Mat::from_vec(1, 3, vec![2., 4., 6.]);
         a.ema_(0.5, &b, 0.5);
         assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn elementwise_bitwise_stable_across_widths() {
+        let mut rng = crate::util::Pcg::seeded(23);
+        // above PAR_MIN_ELEMS and a non-multiple of PAR_CHUNK: multiple
+        // chunks with a ragged tail
+        let n = super::PAR_MIN_ELEMS + 3 * super::PAR_CHUNK + 17;
+        let a = Mat::from_vec(1, n, rng.normal_vec(n, 1.0));
+        let b = Mat::from_vec(1, n, rng.normal_vec(n, 1.0));
+        let base = pool::with_threads(1, || {
+            let mut e = a.clone();
+            e.ema_(0.9, &b, 0.1);
+            (a.map(|x| x.tanh()), a.zip(&b, |x, y| x * y + 1.0), e)
+        });
+        let par = pool::with_threads(4, || {
+            let mut e = a.clone();
+            e.ema_(0.9, &b, 0.1);
+            (a.map(|x| x.tanh()), a.zip(&b, |x, y| x * y + 1.0), e)
+        });
+        assert_eq!(base.0.data, par.0.data);
+        assert_eq!(base.1.data, par.1.data);
+        assert_eq!(base.2.data, par.2.data);
     }
 
     #[test]
@@ -372,5 +590,15 @@ mod tests {
     fn transpose_involution() {
         let a = Mat::from_fn(3, 5, |i, j| (i + 2 * j) as f32);
         assert!(approx(&a.transpose().transpose(), &a, 0.0));
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let e = Mat::zeros(0, 5);
+        assert_eq!(e.transpose().rows, 5);
+        assert_eq!(e.matmul(&Mat::zeros(5, 3)).data.len(), 0);
+        let r = Mat::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        let c = Mat::from_vec(4, 1, vec![1., 1., 1., 1.]);
+        assert_eq!(r.matmul(&c).data, vec![10.0]);
     }
 }

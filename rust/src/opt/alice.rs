@@ -222,6 +222,10 @@ impl Optimizer for Alice {
         true
     }
 
+    fn low_rank(&self) -> bool {
+        true
+    }
+
     fn state_elems(&self, rows: usize, cols: usize) -> u64 {
         let r = eff_rank(&self.hp, rows, cols);
         let tracking = if self.hp.tracking { (r * r) as u64 } else { 0 };

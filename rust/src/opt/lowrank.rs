@@ -82,6 +82,10 @@ impl Optimizer for GaLore {
         true
     }
 
+    fn low_rank(&self) -> bool {
+        true
+    }
+
     fn state_elems(&self, rows: usize, cols: usize) -> u64 {
         let r = eff_rank(&self.hp, rows, cols);
         (rows * r + 2 * r * cols) as u64
@@ -136,6 +140,10 @@ impl Optimizer for Fira {
     }
 
     fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn low_rank(&self) -> bool {
         true
     }
 
@@ -194,6 +202,10 @@ impl Optimizer for ApolloMini {
     }
 
     fn transpose_wide(&self) -> bool {
+        true
+    }
+
+    fn low_rank(&self) -> bool {
         true
     }
 

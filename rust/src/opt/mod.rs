@@ -221,6 +221,14 @@ pub trait Optimizer: Send + Sync {
         false
     }
 
+    /// Whether this is a low-rank method (GaLore lineage / Alice). The
+    /// single source of truth for the paper's Ppl vs Ppl* lm-head
+    /// protocol — routing and the benches query the registry instead of
+    /// keeping name lists.
+    fn low_rank(&self) -> bool {
+        false
+    }
+
     /// Analytic state-size in elements for Table 1 / Table 3 (must agree
     /// with `State::elems()` of `init` — property-tested).
     fn state_elems(&self, rows: usize, cols: usize) -> u64;
@@ -301,6 +309,12 @@ pub const ALL: [&str; 16] = [
     "alice", "alice0",
 ];
 
+/// Registry query: is `name` a low-rank method? (See
+/// [`Optimizer::low_rank`].)
+pub fn is_low_rank(name: &str, hp: &Hyper) -> Result<bool> {
+    Ok(build(name, hp)?.low_rank())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +328,18 @@ mod tests {
             assert_eq!(opt.name(), name);
         }
         assert!(build("nope", &hp).is_err());
+    }
+
+    #[test]
+    fn low_rank_flag_matches_lineage() {
+        let hp = Hyper::default();
+        for name in ["galore", "fira", "apollo_mini", "alice", "alice0"] {
+            assert!(is_low_rank(name, &hp).unwrap(), "{name}");
+        }
+        for name in ["sgd", "adam", "muon", "racs", "shampoo", "soap", "eigen_adam"] {
+            assert!(!is_low_rank(name, &hp).unwrap(), "{name}");
+        }
+        assert!(is_low_rank("nope", &hp).is_err());
     }
 
     #[test]

@@ -9,6 +9,11 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// Without the `pjrt` feature the real `xla` crate is absent; every
+// `xla::` path below resolves to the stub instead (see Cargo.toml header).
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 use crate::util::Timer;
 
 use super::manifest::Manifest;

@@ -7,6 +7,11 @@
 
 pub mod engine;
 pub mod manifest;
+// Several stub types exist only to satisfy engine.rs's signatures and are
+// never constructed without a real backend — hence the dead_code allow.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+pub(crate) mod xla_stub;
 
 pub use engine::{Engine, HostTensor};
 pub use manifest::{ArtifactSpec, Manifest, ModelInfo, OptimizerSpec, ParamSpec, StateSpec, TensorSpec};

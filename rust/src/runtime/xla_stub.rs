@@ -1,0 +1,252 @@
+//! Drop-in stand-in for the `xla` crate, used when the crate is built
+//! without the `pjrt` feature (the offline registry does not carry the
+//! real dependency — see Cargo.toml header).
+//!
+//! The surface mirrors exactly what `engine.rs` touches. `Literal` is a
+//! real host-side container, so tensor <-> literal round trips (and the
+//! unit tests that exercise them) work without XLA. Anything that would
+//! need an actual PJRT client — `PjRtClient::cpu()` and everything
+//! downstream — returns a descriptive error instead, and the artifact-
+//! backed tests and benches self-skip long before reaching it.
+
+use std::fmt;
+
+/// Error type matching the real crate's role: `Display` for the
+/// `map_err(|e| anyhow!(..{e}))` call sites, `std::error::Error` for `?`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: built without the `pjrt` feature (the `xla` crate is not \
+         in the offline registry); rebuild with `--features pjrt` after \
+         adding the dependency — see rust/Cargo.toml"
+    ))
+}
+
+/// Element types the engine understands (plus the other common PJRT dtypes
+/// so downstream `match` arms keep a reachable wildcard, as with the real
+/// crate's larger enum).
+#[allow(dead_code)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+    Bf16,
+}
+
+/// Shape of a non-tuple literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Scalar element types `Literal` can hold — mirrors the real crate's
+/// sealed native-type trait.
+pub trait NativeType: Copy {
+    fn to_literal(data: &[Self]) -> Literal;
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn to_literal(data: &[Self]) -> Literal {
+        Literal::F32 { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_literal(data: &[Self]) -> Literal {
+        Literal::I32 { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host-side literal: a shaped f32/i32 buffer or a tuple of literals.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    I32 { dims: Vec<i64>, data: Vec<i32> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::to_literal(data)
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let have = match self {
+            Literal::F32 { data, .. } => data.len() as i64,
+            Literal::I32 { data, .. } => data.len() as i64,
+            Literal::Tuple(_) => return Err(Error("cannot reshape a tuple literal".into())),
+        };
+        if want != have {
+            return Err(Error(format!("reshape {dims:?} wants {want} elems, literal has {have}")));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 { dims: dims.to_vec(), data: data.clone() },
+            Literal::I32 { data, .. } => Literal::I32 { dims: dims.to_vec(), data: data.clone() },
+            Literal::Tuple(_) => unreachable!(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        match self {
+            Literal::F32 { dims, .. } => Ok(ArrayShape { dims: dims.clone(), ty: ElementType::F32 }),
+            Literal::I32 { dims, .. } => Ok(ArrayShape { dims: dims.clone(), ty: ElementType::S32 }),
+            Literal::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_literal(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module. Construction requires XLA's parser, so the stub only
+/// ever errors — but the type must exist for `engine.rs` to compile.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device-side buffer handle. Never constructed by the stub.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("fetching buffer"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executing"))
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compiling"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_reshape() {
+        let l = Literal::vec1(&[7i32]);
+        let s = l.reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn reshape_checks_elems() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_missing_feature() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn tuple_ops() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+}

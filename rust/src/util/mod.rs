@@ -1,4 +1,4 @@
-//! Shared substrates: JSON, RNG, logging, timing.
+//! Shared substrates: JSON, RNG, logging, timing, worker pool.
 //!
 //! These exist because the offline crate registry only carries the `xla`
 //! dependency tree (DESIGN.md §Substitutions) — no serde, rand, or
@@ -6,6 +6,7 @@
 
 pub mod json;
 pub mod log;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,295 @@
+//! Scoped worker pool — the parallel execution backend behind the `linalg`
+//! kernels and the trainer's per-layer fan-out (no `rayon` offline —
+//! DESIGN.md §Substitutions).
+//!
+//! # Thread-count resolution
+//!
+//! Effective width = thread-local override (set by [`with_threads`], and
+//! pinned to 1 inside pool workers so nested kernels never oversubscribe)
+//! → else the global knob (set by [`set_threads`], wired from
+//! `RunConfig.threads` / `--threads`) → else all available cores.
+//! `0` always means "no opinion at this level".
+//!
+//! # Determinism contract
+//!
+//! * Work partitioning is always a pure function of the *input sizes*,
+//!   never of the thread count; combination of partial results happens on
+//!   the calling thread in partition order. Results are therefore
+//!   deterministic for a given thread count — and for every kernel whose
+//!   per-partition float-op order matches the serial loop (the matmul
+//!   family, transpose, all elementwise ops) they are bitwise identical
+//!   across *all* thread counts.
+//! * Width 1 executes the caller's closures inline, in order, on the
+//!   calling thread: exactly the pre-pool serial behavior.
+//!
+//! Workers are spawned per parallel region via [`std::thread::scope`] —
+//! spawn cost (~tens of µs) is amortized by the work-size thresholds the
+//! kernels apply before fanning out.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Global width knob: 0 = auto (all available cores).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override: 0 = none. Pool workers run with 1 so nested
+    /// parallel regions degrade to serial instead of oversubscribing.
+    static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of hardware threads (1 if it cannot be determined). Cached —
+/// `threads()` sits on every kernel call path and
+/// `available_parallelism` is a syscall on Linux.
+pub fn available() -> usize {
+    static AVAILABLE: OnceLock<usize> = OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Set the global pool width. `0` restores the default (all cores).
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Effective pool width for the current thread (always ≥ 1).
+pub fn threads() -> usize {
+    let local = LOCAL_THREADS.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global != 0 {
+        global
+    } else {
+        available()
+    }
+}
+
+/// Run `f` with the pool width pinned to `n` on this thread (`0` clears
+/// the override). Scoped, re-entrant, and unwind-safe — the primary test
+/// hook.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LOCAL_THREADS.with(|c| {
+        let p = c.get();
+        c.set(n);
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Execute `f(0), f(1), …, f(n-1)` across the pool.
+///
+/// Tasks are claimed dynamically (atomic counter), so callers may hand in
+/// tasks of very different cost — the trainer's per-layer fan-out relies
+/// on this. `f` must only touch data disjoint per index (shared reads are
+/// fine). With an effective width of 1 the tasks run inline, in order.
+pub fn run(n: usize, f: impl Fn(usize) + Sync) {
+    let width = threads().min(n);
+    if width <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    std::thread::scope(|s| {
+        for _ in 0..width {
+            s.spawn(move || {
+                LOCAL_THREADS.with(|c| c.set(1));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`run`], collecting each task's result; the returned vector is in
+/// task order regardless of which worker ran what.
+pub fn map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let width = threads().min(n);
+    if width <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..width)
+            .map(|_| {
+                s.spawn(move || {
+                    LOCAL_THREADS.with(|c| c.set(1));
+                    let mut got = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            slots[i] = Some(v);
+        }
+    }
+    slots.into_iter().map(|o| o.expect("pool task not executed")).collect()
+}
+
+/// Mutate each item of `items` across the pool, collecting one result per
+/// item (in item order). Each task gets exclusive `&mut` access to its
+/// item; `f` sees the item index alongside.
+pub fn map_mut<T: Send, R: Send>(
+    items: &mut [T],
+    f: impl Fn(usize, &mut T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let width = threads().min(n);
+    if width <= 1 {
+        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let base = SendPtr(items.as_mut_ptr());
+    map(n, move |i| {
+        // SAFETY: `map` hands each index to exactly one task, so this is
+        // the only live reference to items[i]; i < n = items.len().
+        let item = unsafe { &mut *base.0.add(i) };
+        f(i, item)
+    })
+}
+
+/// Split `data` into contiguous chunks of `chunk_len` elements (the last
+/// may be short) and run `f(chunk_index, chunk)` across the pool. The
+/// chunk geometry depends only on `data.len()` and `chunk_len`, keeping
+/// results deterministic for any pool width.
+pub fn for_each_chunk_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let n = len.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    run(n, move |i| {
+        let lo = i * chunk_len;
+        let hi = (lo + chunk_len).min(len);
+        // SAFETY: [lo, hi) ranges are disjoint across chunk indices and
+        // within bounds; `run` gives each index to exactly one task.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(i, chunk);
+    });
+}
+
+/// Raw-pointer wrapper so disjoint-range writers can cross the closure
+/// `Sync` bound. Soundness is argued at each use site.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_covers_every_index_once() {
+        let hits: Vec<AtomicU32> = (0..100).map(|_| AtomicU32::new(0)).collect();
+        with_threads(4, || {
+            run(100, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        for width in [1, 2, 5] {
+            let out = with_threads(width, || map(37, |i| i * i));
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_mut_touches_each_item() {
+        let mut items: Vec<usize> = (0..50).collect();
+        let doubled = with_threads(3, || map_mut(&mut items, |i, it| {
+            *it += 1;
+            i * 2
+        }));
+        assert_eq!(items, (1..=50).collect::<Vec<_>>());
+        assert_eq!(doubled, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_are_exact_and_ragged_tail_works() {
+        let mut data = vec![0u32; 103];
+        with_threads(4, || {
+            for_each_chunk_mut(&mut data, 10, |ci, chunk| {
+                assert_eq!(chunk.len(), if ci == 10 { 3 } else { 10 });
+                for x in chunk.iter_mut() {
+                    *x = ci as u32;
+                }
+            });
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, (i / 10) as u32);
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_serial_in_workers() {
+        let serial_inside: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        with_threads(4, || {
+            run(8, |i| {
+                serial_inside[i].store(threads() as u32, Ordering::Relaxed);
+            });
+        });
+        assert!(serial_inside.iter().all(|t| t.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn with_threads_restores_previous_width() {
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            with_threads(1, || assert_eq!(threads(), 1));
+            assert_eq!(threads(), 3);
+        });
+    }
+
+    #[test]
+    fn zero_length_inputs_are_noops() {
+        with_threads(4, || {
+            run(0, |_| panic!("must not run"));
+            assert!(map(0, |i| i).is_empty());
+            let mut empty: [f32; 0] = [];
+            for_each_chunk_mut(&mut empty, 8, |_, _| panic!("must not run"));
+        });
+    }
+}

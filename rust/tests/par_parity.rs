@@ -1,0 +1,159 @@
+//! Serial ↔ parallel parity for the threaded execution backend: every
+//! optimizer in the registry must produce the same updates at pool width 1
+//! (the historical serial path) and width 4, over multiple steps including
+//! a refresh; the `linalg` kernels must agree on ragged
+//! (non-multiple-of-block) shapes. See `linalg::mat` for the determinism
+//! contract these tests pin down.
+
+use alice_racs::linalg::Mat;
+use alice_racs::opt::{build, Hyper, Slot, ALL};
+use alice_racs::testing::{Check, Gen};
+use alice_racs::util::{pool, Pcg};
+
+/// Drive one optimizer over `steps` shared gradients at the given pool
+/// width; refreshes at t == 1 and every 3rd step afterwards.
+fn drive(name: &str, hp: &Hyper, grads: &[Mat], width: usize) -> Vec<Mat> {
+    pool::with_threads(width, || {
+        let opt = build(name, hp).expect("registry");
+        let (r, c) = (grads[0].rows, grads[0].cols);
+        let mut slot = Slot::new(opt, r, c);
+        grads
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let t = i as u64 + 1;
+                if t == 1 || t % 3 == 0 {
+                    slot.refresh(g, 0xbeef ^ t);
+                }
+                slot.step(g, t)
+            })
+            .collect()
+    })
+}
+
+#[test]
+fn every_optimizer_is_width_invariant() {
+    let hp = Hyper { rank: 8, leading: 3, interval: 3, ..Hyper::default() };
+    Check::new("optimizer-width-parity").runs(4).check(
+        |g: &mut Gen| {
+            // ragged, both orientations (covers transpose_wide)
+            let r = g.dim(5, 70);
+            let c = g.dim(5, 70);
+            let steps = 5;
+            (0..steps)
+                .map(|_| Mat::from_vec(r, c, g.normal_vec(r * c, 0.1)))
+                .collect::<Vec<Mat>>()
+        },
+        |grads| {
+            for name in ALL {
+                let serial = drive(name, &hp, grads, 1);
+                let par = drive(name, &hp, grads, 4);
+                for (t, (s, p)) in serial.iter().zip(&par).enumerate() {
+                    let diff = s.sub(p).fro_norm();
+                    if diff > 1e-6 {
+                        return Err(format!(
+                            "{name} {}x{} step {}: frobenius diff {diff}",
+                            s.rows,
+                            s.cols,
+                            t + 1
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matmul_family_parity_on_ragged_shapes() {
+    // shapes straddling the 64-block edges: 1, block-1, block, block+1,
+    // and decidedly non-multiple sizes
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (7, 13, 5),
+        (63, 65, 64),
+        (65, 64, 63),
+        (70, 130, 90),
+        (129, 67, 3),
+        (1, 200, 257),
+        (200, 1, 129),
+    ];
+    for &(m, k, n) in shapes {
+        let mut rng = Pcg::seeded((m * 1000 + k * 10 + n) as u64);
+        let a = Mat::from_vec(m, k, rng.normal_vec(m * k, 1.0));
+        let b = Mat::from_vec(k, n, rng.normal_vec(k * n, 1.0));
+        let a_tn = Mat::from_vec(k, m, rng.normal_vec(k * m, 1.0)); // k x m: a_tnᵀ @ b
+        let b_nt = Mat::from_vec(n, k, rng.normal_vec(n * k, 1.0)); // a @ b_ntᵀ
+        let serial = pool::with_threads(1, || {
+            (a.matmul(&b), a_tn.matmul_tn(&b), a.matmul_nt(&b_nt), a.transpose())
+        });
+        for width in [2, 4, 7] {
+            let par = pool::with_threads(width, || {
+                (a.matmul(&b), a_tn.matmul_tn(&b), a.matmul_nt(&b_nt), a.transpose())
+            });
+            assert_eq!(serial.0.data, par.0.data, "matmul {m}x{k}x{n} width {width}");
+            assert_eq!(serial.1.data, par.1.data, "matmul_tn {m}x{k}x{n} width {width}");
+            assert_eq!(serial.2.data, par.2.data, "matmul_nt {m}x{k}x{n} width {width}");
+            assert_eq!(serial.3.data, par.3.data, "transpose {m}x{k} width {width}");
+        }
+    }
+}
+
+#[test]
+fn elementwise_and_reductions_parity_large() {
+    // large enough to cross the parallel dispatch threshold (2^18 elements)
+    let (m, n) = (531, 517);
+    let mut rng = Pcg::seeded(0xcafe);
+    let a = Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0));
+    let b = Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0));
+    let run_all = || {
+        let mut e = a.clone();
+        e.ema_(0.9, &b, 0.1);
+        (
+            a.scale(1.5),
+            a.add(&b),
+            a.sub(&b),
+            e,
+            a.fro_norm(),
+            a.max_abs(),
+            a.col_sq_norms(),
+            a.row_sq_norms(),
+        )
+    };
+    let serial = pool::with_threads(1, &run_all);
+    let par = pool::with_threads(4, &run_all);
+    // elementwise: bitwise
+    assert_eq!(serial.0.data, par.0.data, "scale");
+    assert_eq!(serial.1.data, par.1.data, "add");
+    assert_eq!(serial.2.data, par.2.data, "sub");
+    assert_eq!(serial.3.data, par.3.data, "ema_");
+    // reductions: chunked combine, so float-tolerance
+    assert!(
+        (serial.4 - par.4).abs() <= 1e-4 * (1.0 + serial.4),
+        "fro_norm {} vs {}",
+        serial.4,
+        par.4
+    );
+    assert_eq!(serial.5, par.5, "max_abs");
+    for (s, p) in serial.6.iter().zip(&par.6) {
+        assert!((s - p).abs() <= 1e-3 * (1.0 + s.abs()), "col_sq_norms {s} vs {p}");
+    }
+    assert_eq!(serial.7, par.7, "row_sq_norms");
+}
+
+#[test]
+fn parallel_is_deterministic_at_fixed_width() {
+    // same width twice → identical bytes, even while the pool fans out
+    let hp = Hyper { rank: 8, leading: 3, interval: 3, ..Hyper::default() };
+    let mut rng = Pcg::seeded(0xd00d);
+    let grads: Vec<Mat> =
+        (0..4).map(|_| Mat::from_vec(48, 66, rng.normal_vec(48 * 66, 0.1))).collect();
+    for name in ["alice", "muon", "shampoo", "soap"] {
+        let one = drive(name, &hp, &grads, 4);
+        let two = drive(name, &hp, &grads, 4);
+        for (a, b) in one.iter().zip(&two) {
+            assert_eq!(a.data, b.data, "{name} not deterministic at width 4");
+        }
+    }
+}
