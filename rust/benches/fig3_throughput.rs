@@ -2,11 +2,14 @@
 //! throughput (Adam-referenced, speed-up-adjusted) per optimizer, plus the
 //! serial-vs-parallel axis of the threaded execution backend.
 //!
-//! Two sections:
+//! Three sections:
 //! * **Native kernel speedup** (no artifacts needed): times one
 //!   `Slot::refresh` + `Slot::step` round per matmul-heavy optimizer at
 //!   pool width 1 vs all cores — the direct measurement behind the
 //!   "≥1.5x on ≥4 cores" acceptance line.
+//! * **Decomposition speedup** (no artifacts needed): `jacobi_eigh` and
+//!   `mgs_qr` at refresh-dominating sizes, width 1 (serial baseline,
+//!   bitwise identical output) vs all cores.
 //! * **Training throughput** (needs `make artifacts`): the Fig. 3 table,
 //!   each optimizer run serial and parallel with the speedup column.
 
@@ -14,7 +17,7 @@ use alice_racs::bench::{
     artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, time_fn, TablePrinter,
 };
 use alice_racs::coordinator::Summary;
-use alice_racs::linalg::Mat;
+use alice_racs::linalg::{jacobi_eigh, jacobi_eigh_serial, mgs_qr, Mat};
 use alice_racs::opt::{build, Hyper, Slot};
 use alice_racs::util::{pool, Pcg};
 
@@ -64,8 +67,61 @@ fn kernel_speedup_section() {
     println!();
 }
 
+/// Serial-vs-parallel axis for the decomposition kernels: the periodic
+/// subspace refreshes are eigendecomposition + QR, which dominate wall
+/// clock at lm-head scale, so this is the speedup that matters for the
+/// refresh phase. Width 1 is the serial baseline — same bytes out, by the
+/// width-invariance contract (`rust/tests/decomp_parity.rs`).
+fn decomp_speedup_section() {
+    let cores = pool::available();
+    let mut rng = Pcg::seeded(0xdec0);
+    let n = 192;
+    let b = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    let spd = b.matmul_nt(&b);
+    let (qm, qr) = (512, 96);
+    let tall = Mat::from_vec(qm, qr, rng.normal_vec(qm * qr, 1.0));
+    println!("== decomposition speedup: width 1 vs {cores} ==");
+    let mut table = TablePrinter::new(&[
+        "kernel", "serial ms", "historical serial", "parallel ms", "speedup",
+    ]);
+    let eigh = || {
+        std::hint::black_box(jacobi_eigh(&spd, 10));
+    };
+    let eigh_cyclic = || {
+        std::hint::black_box(jacobi_eigh_serial(&spd, 10));
+    };
+    let qr_f = || {
+        std::hint::black_box(mgs_qr(&tall));
+    };
+    // `historical serial` times the pre-pool kernel where one survives
+    // (the cyclic Jacobi sweep); for the others, width 1 of the current
+    // algorithm is the serial baseline (identical bytes out).
+    let cases: [(&str, &dyn Fn(), Option<&dyn Fn()>); 2] = [
+        ("jacobi_eigh 192x192 (10 sweeps)", &eigh, Some(&eigh_cyclic)),
+        ("mgs_qr 512x96 (MGS2)", &qr_f, None),
+    ];
+    for (name, f, cyclic) in cases {
+        let serial = pool::with_threads(1, || time_fn(name, 1, 3, || f()));
+        let parallel = pool::with_threads(cores, || time_fn(name, 1, 3, || f()));
+        let hist = cyclic
+            .map(|c| pool::with_threads(1, || time_fn(name, 1, 3, || c())))
+            .map(|t| format!("{:.1}", t.mean_ms))
+            .unwrap_or_else(|| "= serial".into());
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", serial.mean_ms),
+            hist,
+            format!("{:.1}", parallel.mean_ms),
+            format!("{:.2}x", serial.mean_ms / parallel.mean_ms.max(1e-9)),
+        ]);
+    }
+    table.print();
+    println!();
+}
+
 fn main() {
     kernel_speedup_section();
+    decomp_speedup_section();
     if !artifacts_available() {
         return;
     }

@@ -5,11 +5,80 @@
 //! small indices), which is precisely why switching is needed to keep
 //! exploring. Data comes from the Alice refresh instrumentation
 //! (`diag_cos`), aggregated here per index.
+//!
+//! A preamble section (no artifacts needed) pins the eigendecomposition
+//! itself: the parallel-ordered Jacobi path must agree with the serial
+//! cyclic baseline on the spectrum, reproduce the width-1 bytes exactly,
+//! and report its serial-vs-parallel speedup.
 
-use alice_racs::bench::{artifacts_available, bench_cfg, bench_steps, TablePrinter};
+use alice_racs::bench::{artifacts_available, bench_cfg, bench_steps, time_fn, TablePrinter};
 use alice_racs::coordinator::{run_with, Trainer};
+use alice_racs::linalg::{jacobi_eigh, jacobi_eigh_serial, Mat};
+use alice_racs::util::{pool, Pcg};
+
+/// Eigendecomposition stability + speedup axis: width 1 vs all cores
+/// (bitwise-identical spectra by the width-invariance contract) and
+/// parallel-ordered rounds vs the historical cyclic sweep (algorithmic
+/// agreement, tolerance-level).
+fn decomp_stability_section() {
+    let cores = pool::available();
+    let n = 160;
+    let mut rng = Pcg::seeded(0xf16_6);
+    let b = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    let a = b.matmul_nt(&b);
+    let (_, lam_w1) = pool::with_threads(1, || jacobi_eigh(&a, 30));
+    let (_, lam_wn) = pool::with_threads(cores, || jacobi_eigh(&a, 30));
+    let (_, lam_cyc) = jacobi_eigh_serial(&a, 30);
+    let max_dev_width = lam_w1
+        .iter()
+        .zip(&lam_wn)
+        .map(|(s, p)| (s - p).abs())
+        .fold(0.0f32, f32::max);
+    let scale = lam_cyc[0].abs().max(1.0);
+    let max_dev_algo = lam_w1
+        .iter()
+        .zip(&lam_cyc)
+        .map(|(s, c)| (s - c).abs() / scale)
+        .fold(0.0f32, f32::max);
+    let run = || {
+        std::hint::black_box(jacobi_eigh(&a, 30));
+    };
+    let run_cyclic = || {
+        std::hint::black_box(jacobi_eigh_serial(&a, 30));
+    };
+    let serial = pool::with_threads(1, || time_fn("eigh", 1, 3, run));
+    let parallel = pool::with_threads(cores, || time_fn("eigh", 1, 3, run));
+    let cyclic = pool::with_threads(1, || time_fn("eigh", 1, 3, run_cyclic));
+    println!("== eigendecomposition stability ({n}x{n}, width 1 vs {cores}) ==");
+    let mut table = TablePrinter::new(&["axis", "value"]);
+    table.row(vec![
+        "max |Δλ| width 1 vs parallel (must be 0)".into(),
+        format!("{max_dev_width:.1e}"),
+    ]);
+    table.row(vec![
+        "max rel |Δλ| rounds vs cyclic".into(),
+        format!("{max_dev_algo:.1e}"),
+    ]);
+    table.row(vec!["serial ms (rounds, width 1)".into(), format!("{:.1}", serial.mean_ms)]);
+    table.row(vec![
+        "historical cyclic ms".into(),
+        format!("{:.1}", cyclic.mean_ms),
+    ]);
+    table.row(vec!["parallel ms".into(), format!("{:.1}", parallel.mean_ms)]);
+    table.row(vec![
+        "decomposition speedup".into(),
+        format!("{:.2}x", serial.mean_ms / parallel.mean_ms.max(1e-9)),
+    ]);
+    table.row(vec![
+        "speedup vs historical cyclic".into(),
+        format!("{:.2}x", cyclic.mean_ms / parallel.mean_ms.max(1e-9)),
+    ]);
+    table.print();
+    println!();
+}
 
 fn main() {
+    decomp_stability_section();
     if !artifacts_available() {
         return;
     }

@@ -75,7 +75,9 @@ USAGE:
   alice-racs train   [--config FILE] [--opt NAME] [--steps N] [--lr F]
                      [--artifacts DIR] [--out DIR] [--path coordinator|fused]
                      [--rank N] [--interval N] [--seed N] [--tuned]
-                     [--threads N]   (0 = all cores, 1 = serial; default 0)
+                     [--threads N]   (1 = serial; 0 = AR_BENCH_THREADS if
+                                      set, else all cores; default 0)
+                     [--pool-warmup] (pre-spawn pool workers before step 1)
   alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
   alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
   alice-racs inspect [--artifacts DIR]
@@ -122,6 +124,9 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.lr = args.f64_or("lr", cfg.lr as f64)? as f32;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
     cfg.threads = args.usize_or("threads", cfg.threads)?;
+    if args.get("pool-warmup").is_some() {
+        cfg.pool_warmup = true;
+    }
     cfg.hp.rank = args.usize_or("rank", cfg.hp.rank)?;
     cfg.hp.interval = args.usize_or("interval", cfg.hp.interval)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
@@ -238,7 +243,7 @@ mod tests {
     fn config_overrides() {
         let a = Args::parse(&argv(&[
             "train", "--opt", "racs", "--tuned", "--steps", "7", "--path", "fused",
-            "--threads", "2",
+            "--threads", "2", "--pool-warmup",
         ]))
         .unwrap();
         let cfg = config_from_args(&a).unwrap();
@@ -246,6 +251,7 @@ mod tests {
         assert_eq!(cfg.steps, 7);
         assert_eq!(cfg.path, ExecPath::Fused);
         assert_eq!(cfg.threads, 2);
+        assert!(cfg.pool_warmup);
         assert!((cfg.hp.alpha - 0.2).abs() < 1e-6); // tuned racs alpha
     }
 

@@ -37,6 +37,10 @@ pub struct RunConfig {
     /// cores (default), 1 = exact historical serial behavior, N = N
     /// worker threads for the linalg kernels and the per-layer fan-out.
     pub threads: usize,
+    /// Pre-spawn the persistent pool workers at trainer construction
+    /// instead of lazily at the first parallel region (keeps the one-off
+    /// spawn cost out of step 1's timing; default false = lazy).
+    pub pool_warmup: bool,
     pub eval_every: usize,
     pub eval_batches: usize,
     /// Train the lm-head with full-rank Adam (the paper's "Ppl*" setup).
@@ -66,6 +70,7 @@ impl Default for RunConfig {
             grad_accum: 1,
             workers: 1,
             threads: 0,
+            pool_warmup: false,
             eval_every: 50,
             eval_batches: 4,
             last_layer_adam: true,
@@ -129,6 +134,7 @@ impl RunConfig {
             grad_accum: v.usize_or("train", "grad_accum", d.grad_accum).max(1),
             workers: v.usize_or("train", "workers", d.workers).max(1),
             threads: v.usize_or("train", "threads", d.threads),
+            pool_warmup: v.bool_or("train", "pool_warmup", d.pool_warmup),
             eval_every: v.usize_or("train", "eval_every", d.eval_every),
             eval_batches: v.usize_or("train", "eval_batches", d.eval_batches),
             last_layer_adam: v.bool_or("train", "last_layer_adam", d.last_layer_adam),
@@ -206,6 +212,7 @@ mod tests {
         assert_eq!(c.steps, 300);
         assert_eq!(c.path, ExecPath::Coordinator);
         assert_eq!(c.threads, 0, "default = auto (all cores)");
+        assert!(!c.pool_warmup, "default = lazy worker spawn");
     }
 
     #[test]
@@ -222,6 +229,7 @@ path = "fused"
 last_layer_adam = false
 workers = 4
 threads = 3
+pool_warmup = true
 [optimizer]
 rank = 16
 switch = "gaussian_mix"
@@ -235,6 +243,7 @@ mix = 0.5
         assert_eq!(c.path, ExecPath::Fused);
         assert_eq!(c.workers, 4);
         assert_eq!(c.threads, 3);
+        assert!(c.pool_warmup);
         assert_eq!(c.hp.rank, 16);
         assert_eq!(c.hp.switch, crate::opt::Switch::GaussianMix);
         assert_eq!(c.hp.compen, crate::opt::Compen::Fira);

@@ -3,13 +3,38 @@
 //! Format (little-endian): magic "ARCK" u32-version, then a count-prefixed
 //! list of named f32 blobs. Save/restore must round-trip exactly — the
 //! resume-equivalence integration test trains 2N steps vs N + resume + N
-//! and demands identical parameters.
+//! and demands identical parameters *and* identical losses (the trainer
+//! checkpoints its RNG/data-stream position as a `trainer.stream` blob,
+//! encoded through [`u64_to_chunks`]).
+//!
+//! Serialization is off the hot path but not free at lm-head scale, so
+//! [`Checkpoint::save`] encodes the per-tensor blobs across `util::pool`
+//! and writes them in name order — the file bytes are identical at every
+//! pool width (and to the historical serial writer).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+use crate::util::pool;
+
+/// Split a u64 into four 16-bit chunks stored as exact small f32 integers
+/// (low chunk first). Every chunk is ≤ 65535, well inside f32's exact
+/// integer range, so the round trip through the f32 tensor container is
+/// lossless on any platform — no NaN-payload games.
+pub fn u64_to_chunks(x: u64) -> [f32; 4] {
+    std::array::from_fn(|i| ((x >> (16 * i)) & 0xffff) as f32)
+}
+
+/// Inverse of [`u64_to_chunks`].
+pub fn chunks_to_u64(chunks: &[f32]) -> u64 {
+    chunks
+        .iter()
+        .enumerate()
+        .fold(0u64, |acc, (i, &c)| acc | (((c as u64) & 0xffff) << (16 * i)))
+}
 
 const MAGIC: &[u8; 4] = b"ARCK";
 const VERSION: u32 = 1;
@@ -35,19 +60,22 @@ impl Checkpoint {
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
         w.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
-        for (name, (shape, data)) in &self.tensors {
-            let nb = name.as_bytes();
-            w.write_all(&(nb.len() as u32).to_le_bytes())?;
-            w.write_all(nb)?;
-            w.write_all(&(shape.len() as u32).to_le_bytes())?;
-            for &d in shape {
-                w.write_all(&(d as u64).to_le_bytes())?;
-            }
-            w.write_all(&(data.len() as u64).to_le_bytes())?;
-            for &x in data {
-                w.write_all(&x.to_le_bytes())?;
+        // Encode tensor blobs across the pool in bounded batches, writing
+        // each batch in name order before encoding the next: byte-for-byte
+        // the file the serial writer produced, with peak extra memory
+        // capped at one batch of blobs instead of the whole checkpoint.
+        const SAVE_BATCH: usize = 16;
+        let entries: Vec<(&String, &(Vec<usize>, Vec<f32>))> = self.tensors.iter().collect();
+        for batch in entries.chunks(SAVE_BATCH) {
+            let blobs = pool::map(batch.len(), |i| {
+                let (name, (shape, data)) = batch[i];
+                encode_entry(name, shape, data)
+            });
+            for blob in &blobs {
+                w.write_all(blob)?;
             }
         }
+        w.flush()?;
         Ok(())
     }
 
@@ -90,6 +118,23 @@ impl Checkpoint {
     }
 }
 
+/// One named tensor record, exactly as the serial writer laid it out.
+fn encode_entry(name: &str, shape: &[usize], data: &[f32]) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(4 + name.len() + 4 + 8 * shape.len() + 8 + 4 * data.len());
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name.as_bytes());
+    buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+    for &d in shape {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    buf
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -116,6 +161,30 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn u64_chunk_codec_roundtrips() {
+        for x in [0u64, 1, 0xffff, 0x1_0000, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(chunks_to_u64(&u64_to_chunks(x)), x);
+        }
+    }
+
+    #[test]
+    fn save_bytes_identical_at_every_pool_width() {
+        let mut ck = Checkpoint { step: 7, ..Default::default() };
+        for i in 0..20 {
+            ck.insert(format!("t{i}"), vec![i + 1], (0..=i).map(|x| x as f32).collect());
+        }
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let p1 = dir.join(format!("arck_w1_{pid}.bin"));
+        let p4 = dir.join(format!("arck_w4_{pid}.bin"));
+        crate::util::pool::with_threads(1, || ck.save(&p1).unwrap());
+        crate::util::pool::with_threads(4, || ck.save(&p4).unwrap());
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p4).unwrap());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p4);
     }
 
     #[test]

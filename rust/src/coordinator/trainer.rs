@@ -70,8 +70,13 @@ impl Trainer {
         // The knob is process-global by design (README §Threading model):
         // the last-constructed trainer wins. Callers needing isolation
         // (tests, side-by-side benches) use pool::with_threads, which is
-        // thread-local and takes precedence.
+        // thread-local and takes precedence. Workers are parked threads
+        // spawned lazily by the first parallel region; `pool_warmup`
+        // moves that spawn cost here, ahead of step 1.
         pool::set_threads(cfg.threads);
+        if cfg.pool_warmup {
+            pool::warmup();
+        }
         let model = engine.manifest.model.clone();
         let mut rng = Pcg::seeded(cfg.seed);
 
@@ -231,9 +236,13 @@ impl Trainer {
             .collect();
 
         // Per-layer fan-out: each (slot, param, grad) unit is independent,
-        // so refresh → step → weight-apply runs across the pool. Workers
-        // pin nested linalg kernels to serial, so every layer's arithmetic
-        // matches the serial loop bit for bit regardless of pool width.
+        // so refresh → step → weight-apply runs across the pool. Nested
+        // linalg regions inside a layer share the same pool (persistent
+        // workers adopt the caller's width), so a big decomposition no
+        // longer serializes under the fan-out; per-layer arithmetic stays
+        // bitwise width-invariant for the matmul/elementwise kernels and
+        // the decompositions, with only the chunked reductions regrouping
+        // additions between width 1 and widths > 1 (README §Threading).
         struct Unit<'a> {
             slot: &'a mut Slot,
             param: &'a mut HostTensor,
@@ -350,6 +359,11 @@ impl Trainer {
     // ------------------------------------------------------------- eval ---
     /// Mean loss over `batches` deterministic eval batches (fixed seed →
     /// the same held-out set every call).
+    ///
+    /// The batch stream is drawn serially (deterministic), then the
+    /// batches are *scored* across the pool — each task shares the
+    /// prepared engine read-only, and the losses combine in batch order,
+    /// so the mean is identical to the serial loop at every pool width.
     pub fn eval(&mut self, batches: usize) -> Result<f32> {
         let m = self.engine.manifest.model.clone();
         let corpus = CorpusConfig {
@@ -359,46 +373,82 @@ impl Trainer {
             ..Default::default()
         };
         let mut eval_batcher = SyncBatcher::new(corpus, m.batch, m.seq, self.eval_seed);
-        let mut acc = 0.0f32;
+        let nb = batches.max(1);
         let t0 = Timer::start();
-        for _ in 0..batches.max(1) {
-            let tokens = HostTensor::i32(vec![m.batch, m.seq], eval_batcher.next());
-            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
-            inputs.push(&tokens);
-            inputs.extend(self.params.iter());
-            let outs = self.engine.run_refs("eval_loss", &inputs)?;
-            acc += outs[0].scalar()?;
+        let token_batches: Vec<HostTensor> = (0..nb)
+            .map(|_| HostTensor::i32(vec![m.batch, m.seq], eval_batcher.next()))
+            .collect();
+        self.engine.prepare("eval_loss")?;
+        let engine = &self.engine;
+        let params = &self.params;
+        let losses: Vec<Result<f32>> = pool::map(nb, |i| {
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + params.len());
+            inputs.push(&token_batches[i]);
+            inputs.extend(params.iter());
+            let outs = engine.run_prepared("eval_loss", &inputs)?;
+            outs[0].scalar()
+        });
+        let mut acc = 0.0f32;
+        for loss in losses {
+            acc += loss?;
         }
         self.profile.add("eval", t0.secs());
-        Ok(acc / batches.max(1) as f32)
+        Ok(acc / nb as f32)
     }
 
     // ------------------------------------------------------ checkpoints ---
+    /// Snapshot params + optimizer state + step, **plus the RNG/data
+    /// stream position** (`trainer.stream`): restoring it makes a resumed
+    /// run consume the exact batches and refresh seeds the uninterrupted
+    /// run would have, so the loss trajectories match bitwise
+    /// (`rust/tests/trainer_e2e.rs`). Per-slot state gathering fans out
+    /// over the pool; insertion happens in parameter order.
     pub fn checkpoint(&self) -> Checkpoint {
+        use super::checkpoint::u64_to_chunks;
+
         let mut ck = Checkpoint { step: self.step, ..Default::default() };
-        for (p, spec) in self.params.iter().zip(&self.engine.manifest.params) {
-            ck.insert(
-                format!("param.{}", spec.name),
-                p.shape().to_vec(),
-                p.as_f32().unwrap().to_vec(),
-            );
+        let param_blobs: Vec<Vec<f32>> =
+            pool::map(self.params.len(), |i| self.params[i].as_f32().unwrap().to_vec());
+        for ((p, spec), blob) in self
+            .params
+            .iter()
+            .zip(&self.engine.manifest.params)
+            .zip(param_blobs)
+        {
+            ck.insert(format!("param.{}", spec.name), p.shape().to_vec(), blob);
         }
-        for (i, slot) in self.slots.iter().enumerate() {
+        type Entry = (String, Vec<usize>, Vec<f32>);
+        let slot_blobs: Vec<Vec<Entry>> = pool::map(self.slots.len(), |i| {
+            let slot = &self.slots[i];
             let pname = &self.engine.manifest.params[i].name;
+            let mut entries: Vec<Entry> = Vec::new();
             for (k, m) in &slot.state.mats {
-                ck.insert(
+                entries.push((
                     format!("state.{pname}.{k}"),
                     vec![m.rows, m.cols],
                     m.data.clone(),
-                );
+                ));
             }
             for (k, v) in &slot.state.vecs {
-                ck.insert(format!("state.{pname}.{k}"), vec![v.len()], v.clone());
+                entries.push((format!("state.{pname}.{k}"), vec![v.len()], v.clone()));
             }
             for (k, &s) in &slot.state.scalars {
-                ck.insert(format!("state.{pname}.{k}"), vec![], vec![s]);
+                entries.push((format!("state.{pname}.{k}"), vec![], vec![s]));
+            }
+            entries
+        });
+        for entries in slot_blobs {
+            for (name, shape, data) in entries {
+                ck.insert(name, shape, data);
             }
         }
+        let (rs, ri) = self.rng.state_words();
+        let (bs, bi) = self.batcher.rng_words();
+        let mut stream = Vec::with_capacity(16);
+        for w in [rs, ri, bs, bi] {
+            stream.extend_from_slice(&u64_to_chunks(w));
+        }
+        ck.insert("trainer.stream", vec![stream.len()], stream);
         ck
     }
 
@@ -431,6 +481,22 @@ impl Trainer {
                 if let Some((_, data)) = ck.tensors.get(&format!("state.{pname}.{k}")) {
                     slot.state.scalars.insert(k, data[0]);
                 }
+            }
+        }
+        // RNG/data-stream position (absent in pre-stream checkpoints:
+        // those resume with fresh streams — params/state still restore
+        // exactly, only batch order differs from the uninterrupted run)
+        if let Some((_, data)) = ck.tensors.get("trainer.stream") {
+            use super::checkpoint::chunks_to_u64;
+            if data.len() == 16 {
+                self.rng =
+                    Pcg::from_words(chunks_to_u64(&data[0..4]), chunks_to_u64(&data[4..8]));
+                self.batcher.set_rng_words((
+                    chunks_to_u64(&data[8..12]),
+                    chunks_to_u64(&data[12..16]),
+                ));
+            } else {
+                bail!("trainer.stream blob has {} words, expected 16", data.len());
             }
         }
         Ok(())
@@ -511,10 +577,13 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
         }
         std::fs::write(format!("{}/eigen_cos.csv", cfg.out_dir), csv)?;
     }
+    let (exec_secs, exec_calls) = trainer.engine.exec_stats();
     info!(
-        "done: {:.1}s, {:.0} tok/s; profile:\n{}",
+        "done: {:.1}s, {:.0} tok/s; engine: {exec_calls} executions, \
+         {exec_secs:.1}s exec+transfer, {:.1}s compile; profile:\n{}",
         metrics.elapsed(),
         metrics.tokens_per_sec(),
+        trainer.engine.compile_secs,
         trainer.profile.report()
     );
     metrics.finish(&cfg.optimizer, vec![])

@@ -61,6 +61,18 @@ impl SyncBatcher {
         self.corpus.fill_batch(self.batch, self.seq, &mut self.rng, &mut buf);
         buf
     }
+
+    /// Raw RNG words — the stream *is* the batcher's only mutable state
+    /// (`Corpus` is immutable), so capturing them checkpoints the exact
+    /// position in the batch sequence.
+    pub fn rng_words(&self) -> (u64, u64) {
+        self.rng.state_words()
+    }
+
+    /// Restore a stream position captured by [`rng_words`].
+    pub fn set_rng_words(&mut self, words: (u64, u64)) {
+        self.rng = Pcg::from_words(words.0, words.1);
+    }
 }
 
 #[cfg(test)]
@@ -88,6 +100,18 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(a.next(), b.next());
         }
+    }
+
+    #[test]
+    fn rng_words_roundtrip_resumes_the_stream() {
+        let cfg = CorpusConfig::default();
+        let mut a = SyncBatcher::new(cfg.clone(), 2, 16, 11);
+        let _ = a.next();
+        let words = a.rng_words();
+        let expect = a.next();
+        let mut b = SyncBatcher::new(cfg, 2, 16, 11);
+        b.set_rng_words(words);
+        assert_eq!(b.next(), expect, "restored stream must continue exactly");
     }
 
     #[test]

@@ -1,77 +1,144 @@
-//! Decompositions: Householder-style MGS QR, Jacobi eigendecomposition,
-//! subspace iteration (paper Algorithm 10), Newton-Schulz roots (App. B.8).
+//! Decompositions: MGS QR, Jacobi eigendecomposition, subspace iteration
+//! (paper Algorithm 10), Newton-Schulz roots (App. B.8).
 //!
 //! These are the substrate for the native optimizer suite (Eigen-Adam /
 //! SOAP / Shampoo / GaLore / Alice refreshes) and for the `fisher` library.
 //! Validated against known decompositions and reconstruction identities in
 //! the unit tests below plus property tests in `testing`.
+//!
+//! # Threading
+//!
+//! The periodic subspace refreshes dominate wall clock at lm-head scale
+//! (ROADMAP "Parallel decompositions"), so both workhorses fan out over
+//! `util::pool`:
+//!
+//! * [`mgs_qr`] is right-looking: each step normalizes one column and
+//!   projects it out of every trailing column — the projections are
+//!   independent per column and fan out once the trailing work crosses
+//!   [`QR_PAR_MIN_WORK`]. A full second pass re-orthogonalizes (MGS2).
+//! * [`jacobi_eigh`] switches at [`JACOBI_PAR_MIN_N`] from the serial
+//!   cyclic sweep ([`jacobi_eigh_serial`]) to parallel-ordered (Brent-Luk)
+//!   sweeps: a round-robin schedule partitions each sweep into rounds of
+//!   disjoint pivot pairs; per round, all rotation angles come from the
+//!   round-start matrix and the column/row update phases fan out over
+//!   row blocks / pairs.
+//!
+//! Determinism: every fan-out writes disjoint data with a fixed per-element
+//! float-op order, algorithm selection and partitioning are pure functions
+//! of the input shape, and the remaining reductions (norms, dot products)
+//! run single-pass on the calling thread — so both decompositions are
+//! **bitwise identical at every pool width**, width 1 (the serial
+//! baseline) included. `rust/tests/decomp_parity.rs` pins this down.
 
+use crate::util::pool::{self, SendPtr};
 use crate::util::Pcg;
 
 use super::mat::Mat;
 
 const EPS: f32 = 1e-8;
 
-/// Modified Gram-Schmidt with re-orthogonalization. Returns Q (m x r) with
-/// orthonormal columns; degenerate input columns fall back to canonical
-/// directions projected off the accepted prefix (so Q is always full rank).
+/// Below this many trailing-projection elements (rows x trailing columns)
+/// an MGS step stays on the calling thread.
+const QR_PAR_MIN_WORK: usize = 1 << 14;
+
+/// Dimension at which `jacobi_eigh` switches from the serial cyclic sweep
+/// to parallel-ordered rounds. Below it the rotation count is too small to
+/// amortize even the persistent pool's ~µs dispatch.
+const JACOBI_PAR_MIN_N: usize = 96;
+
+/// Row-block grain (rows per task) for the Jacobi column-update phases.
+const JACOBI_ROW_BLK: usize = 32;
+
+/// Modified Gram-Schmidt with a full re-orthogonalization pass (MGS2).
+/// Returns Q (m x r) with orthonormal columns; degenerate input columns
+/// fall back to canonical directions projected off the accepted prefix
+/// (so Q is always full rank).
 pub fn mgs_qr(a: &Mat) -> Mat {
     let (m, r) = (a.rows, a.cols);
     assert!(r <= m, "mgs_qr needs tall input, got {m}x{r}");
+    // column-major working set: the right-looking updates own whole
+    // columns, so each fan-out task gets a contiguous &mut buffer
+    let mut cols: Vec<Vec<f32>> = (0..r).map(|j| a.col_vec(j)).collect();
+    mgs_pass(&mut cols, m);
+    mgs_pass(&mut cols, m); // second pass restores orthonormality ("twice is enough")
     let mut q = Mat::zeros(m, r);
-    for j in 0..r {
-        let mut v = a.col_vec(j);
-        for pass in 0..2 {
-            let _ = pass;
-            for jj in 0..j {
-                let qc = q.col_vec(jj);
-                let dot: f32 = qc.iter().zip(&v).map(|(a, b)| a * b).sum();
-                for (vi, qi) in v.iter_mut().zip(&qc) {
-                    *vi -= dot * qi;
-                }
-            }
-        }
-        let nrm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
-        if nrm > 1e-6 {
-            for vi in &mut v {
-                *vi /= nrm;
-            }
-        } else {
-            // canonical fallback
-            let mut fb = vec![0.0f32; m];
-            fb[j % m] = 1.0;
-            for jj in 0..j {
-                let qc = q.col_vec(jj);
-                let dot: f32 = qc.iter().zip(&fb).map(|(a, b)| a * b).sum();
-                for (fi, qi) in fb.iter_mut().zip(&qc) {
-                    *fi -= dot * qi;
-                }
-            }
-            let fn_ = fb.iter().map(|x| x * x).sum::<f32>().sqrt() + EPS;
-            v = fb.into_iter().map(|x| x / fn_).collect();
-        }
-        q.set_col(j, &v);
+    for (j, c) in cols.iter().enumerate() {
+        q.set_col(j, c);
     }
     q
 }
 
-/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
-/// Returns (V, λ) with columns of V sorted by descending eigenvalue:
-/// A = V diag(λ) Vᵀ.
+/// One right-looking MGS sweep over `cols`. Step j normalizes column j
+/// (serial — identical on every pool width), then projects it out of all
+/// trailing columns; the projections touch disjoint columns with a fixed
+/// per-column float-op order, so the fan-out is bitwise width-invariant.
+fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
+    let r = cols.len();
+    for j in 0..r {
+        let nrm = cols[j].iter().map(|x| x * x).sum::<f32>().sqrt();
+        if nrm > 1e-6 {
+            for x in &mut cols[j] {
+                *x /= nrm;
+            }
+        } else {
+            // canonical fallback projected off the accepted prefix
+            let mut fb = vec![0.0f32; m];
+            fb[j % m] = 1.0;
+            for jj in 0..j {
+                let dot: f32 = cols[jj].iter().zip(&fb).map(|(a, b)| a * b).sum();
+                for (fi, qi) in fb.iter_mut().zip(&cols[jj]) {
+                    *fi -= dot * qi;
+                }
+            }
+            let fn_ = fb.iter().map(|x| x * x).sum::<f32>().sqrt() + EPS;
+            for x in &mut fb {
+                *x /= fn_;
+            }
+            cols[j] = fb;
+        }
+        let (head, tail) = cols.split_at_mut(j + 1);
+        if tail.is_empty() {
+            continue;
+        }
+        let qj = &head[j];
+        let project = |c: &mut Vec<f32>| {
+            let dot: f32 = qj.iter().zip(c.iter()).map(|(a, b)| a * b).sum();
+            for (ci, qi) in c.iter_mut().zip(qj) {
+                *ci -= dot * qi;
+            }
+        };
+        if m * tail.len() >= QR_PAR_MIN_WORK {
+            pool::map_mut(tail, |_, c| project(c));
+        } else {
+            for c in tail.iter_mut() {
+                project(c);
+            }
+        }
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix: (V, λ) with columns of V
+/// sorted by descending eigenvalue, A = V diag(λ) Vᵀ. Dispatches on size:
+/// serial cyclic Jacobi below [`JACOBI_PAR_MIN_N`], parallel-ordered
+/// Jacobi rounds at and above it.
 pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+    if a.rows < JACOBI_PAR_MIN_N {
+        jacobi_eigh_serial(a, sweeps)
+    } else {
+        jacobi_eigh_rounds(a, sweeps)
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition — the historical serial kernel, kept
+/// as the baseline for the large-n parallel path (benches compare both).
+pub fn jacobi_eigh_serial(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
     let n = a.rows;
     assert_eq!(n, a.cols);
     let mut w = a.clone();
     w.symmetrize_();
     let mut v = Mat::eye(n);
     for _ in 0..sweeps {
-        let mut off = 0.0f32;
-        for p in 0..n {
-            for q in (p + 1)..n {
-                off += w.at(p, q) * w.at(p, q);
-            }
-        }
-        if off.sqrt() < 1e-9 * (1.0 + w.fro_norm()) {
+        if off_diag_small(&w) {
             break;
         }
         for p in 0..n {
@@ -80,12 +147,7 @@ pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
                 if apq.abs() < 1e-12 {
                     continue;
                 }
-                let app = w.at(p, p);
-                let aqq = w.at(q, q);
-                let theta = 0.5 * (aqq - app) / apq;
-                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
-                let c = 1.0 / (t * t + 1.0).sqrt();
-                let s = t * c;
+                let (c, s) = rotation(w.at(p, p), w.at(q, q), apq);
                 // rotate rows/cols p, q of w
                 for k in 0..n {
                     let wkp = w.at(k, p);
@@ -108,11 +170,151 @@ pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
             }
         }
     }
-    let mut lam: Vec<f32> = (0..n).map(|i| w.at(i, i)).collect();
+    sort_eigh(w, v)
+}
+
+/// Jacobi rotation (c, s) annihilating the (p, q) element, given the
+/// diagonal pair and the off-diagonal value.
+#[inline]
+fn rotation(app: f32, aqq: f32, apq: f32) -> (f32, f32) {
+    let theta = 0.5 * (aqq - app) / apq;
+    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+    let c = 1.0 / (t * t + 1.0).sqrt();
+    (c, t * c)
+}
+
+/// Convergence check shared by both Jacobi variants. Single-pass serial
+/// sums (never the pooled reductions): the early exit must be bitwise
+/// width-invariant, and the pooled `fro_norm` regroups additions when the
+/// matrix is large and the width is > 1.
+fn off_diag_small(w: &Mat) -> bool {
+    let n = w.rows;
+    let mut off = 0.0f32;
+    for p in 0..n {
+        for q in (p + 1)..n {
+            off += w.at(p, q) * w.at(p, q);
+        }
+    }
+    let mut fro = 0.0f32;
+    for &x in &w.data {
+        fro += x * x;
+    }
+    off.sqrt() < 1e-9 * (1.0 + fro.sqrt())
+}
+
+/// Round-robin (circle method) pivot schedule: `n_rounds` rounds of
+/// mutually disjoint (p, q) pairs covering every unordered pair exactly
+/// once. A pure function of `n` — the schedule, and with it the float-op
+/// order of a parallel sweep, never depends on the pool width.
+fn jacobi_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    let m = n + (n & 1); // pad odd n with a bye slot that pairs skip
+    let mut circ: Vec<usize> = (0..m).collect();
+    let mut rounds = Vec::with_capacity(m - 1);
+    for _ in 0..m - 1 {
+        let mut pairs = Vec::with_capacity(m / 2);
+        for i in 0..m / 2 {
+            let (a, b) = (circ[i], circ[m - 1 - i]);
+            if a < n && b < n {
+                pairs.push((a.min(b), a.max(b)));
+            }
+        }
+        pairs.sort_unstable();
+        rounds.push(pairs);
+        circ[1..].rotate_right(1);
+    }
+    rounds
+}
+
+/// Parallel-ordered (Brent-Luk) Jacobi: each sweep walks the round-robin
+/// schedule; per round all rotation angles come from the round-start
+/// matrix and the update W ← Jᵀ (W J) (J = direct sum of the round's
+/// rotations) is applied in two phases — columns, then rows — each fanned
+/// out over disjoint data.
+fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+    let n = a.rows;
+    assert_eq!(n, a.cols);
+    let mut w = a.clone();
+    w.symmetrize_();
+    let mut v = Mat::eye(n);
+    let rounds = jacobi_rounds(n);
+    for _ in 0..sweeps {
+        if off_diag_small(&w) {
+            break;
+        }
+        for pairs in &rounds {
+            // angles from the round-start matrix; serial — O(n) per round
+            let rot: Vec<Option<(f32, f32)>> = pairs
+                .iter()
+                .map(|&(p, q)| {
+                    let apq = w.at(p, q);
+                    if apq.abs() < 1e-12 {
+                        return None;
+                    }
+                    Some(rotation(w.at(p, p), w.at(q, q), apq))
+                })
+                .collect();
+            if rot.iter().all(|r| r.is_none()) {
+                continue;
+            }
+            // column phase: W ← W J. Each row is owned by exactly one
+            // task and applies the rotations in pair order — disjoint
+            // writes, fixed order, bitwise width-invariant.
+            apply_col_rotations(&mut w.data, n, pairs, &rot);
+            // row phase: W ← Jᵀ W. Pairs own disjoint row pairs.
+            let base = SendPtr(w.data.as_mut_ptr());
+            pool::run(pairs.len(), |t| {
+                if let Some((c, s)) = rot[t] {
+                    let (p, q) = pairs[t];
+                    // SAFETY: rounds hold each index in at most one pair,
+                    // so rows p and q are touched by this task alone.
+                    let rp = unsafe { std::slice::from_raw_parts_mut(base.0.add(p * n), n) };
+                    let rq = unsafe { std::slice::from_raw_parts_mut(base.0.add(q * n), n) };
+                    for k in 0..n {
+                        let wpk = rp[k];
+                        let wqk = rq[k];
+                        rp[k] = c * wpk - s * wqk;
+                        rq[k] = s * wpk + c * wqk;
+                    }
+                }
+            });
+            // eigenvector phase: V ← V J, columns only.
+            apply_col_rotations(&mut v.data, n, pairs, &rot);
+        }
+    }
+    sort_eigh(w, v)
+}
+
+/// Apply one round's column rotations to a row-major n-column buffer,
+/// fanning row blocks out over the pool.
+fn apply_col_rotations(
+    data: &mut [f32],
+    n: usize,
+    pairs: &[(usize, usize)],
+    rot: &[Option<(f32, f32)>],
+) {
+    pool::for_each_chunk_mut(data, JACOBI_ROW_BLK * n, |_, rows| {
+        for row in rows.chunks_mut(n) {
+            for (t, r) in rot.iter().enumerate() {
+                if let Some((c, s)) = *r {
+                    let (p, q) = pairs[t];
+                    let xp = row[p];
+                    let xq = row[q];
+                    row[p] = c * xp - s * xq;
+                    row[q] = s * xp + c * xq;
+                }
+            }
+        }
+    });
+}
+
+/// Shared epilogue: read eigenvalues off the diagonal and sort descending.
+fn sort_eigh(w: Mat, v: Mat) -> (Mat, Vec<f32>) {
+    let n = w.rows;
+    let lam: Vec<f32> = (0..n).map(|i| w.at(i, i)).collect();
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
     let vs = Mat::from_fn(n, n, |i, j| v.at(i, order[j]));
-    lam = order.iter().map(|&i| lam[i]).collect();
+    let lam = order.iter().map(|&i| lam[i]).collect();
     (vs, lam)
 }
 
@@ -140,7 +342,6 @@ pub fn complete_basis(u: &Mat) -> Mat {
     // Project ALL canonical vectors off U, pick the (m - r) with the largest
     // residuals, then MGS them (fallback covers degeneracies).
     let mut resid = Mat::eye(m); // columns e_k
-    let ut_e = u.transpose(); // (r x m): column k of resid needs U (Uᵀ e_k)
     for k in 0..m {
         // e_k - U (Uᵀ e_k); Uᵀ e_k is column k of Uᵀ = row k of U
         let coeff: Vec<f32> = (0..r).map(|j| u.at(k, j)).collect();
@@ -152,7 +353,6 @@ pub fn complete_basis(u: &Mat) -> Mat {
             *resid.at_mut(i, k) -= corr[i];
         }
     }
-    let _ = ut_e;
     let mut norms: Vec<(usize, f32)> = (0..m)
         .map(|k| {
             let n: f32 = (0..m).map(|i| resid.at(i, k).powi(2)).sum();
@@ -248,8 +448,6 @@ mod tests {
         // two identical columns: second must fall back, Q stays orthonormal
         let mut rng = Pcg::seeded(6);
         let c = rng.normal_vec(20, 1.0);
-        let mut data = c.clone();
-        data.extend_from_slice(&c);
         let a = Mat::from_vec(20, 2, {
             // interleave into row-major (20 x 2)
             let mut v = vec![0.0; 40];
@@ -259,9 +457,18 @@ mod tests {
             }
             v
         });
-        let _ = data;
         let q = mgs_qr(&a);
         assert!(ortho_err(&q) < 1e-3);
+    }
+
+    #[test]
+    fn qr_spans_the_input() {
+        // Q Qᵀ a == a for full-rank tall input (same column span)
+        let mut rng = Pcg::seeded(15);
+        let a = Mat::from_vec(25, 6, rng.normal_vec(150, 1.0));
+        let q = mgs_qr(&a);
+        let rec = q.matmul(&q.matmul_tn(&a));
+        assert!(rec.sub(&a).max_abs() < 1e-3 * (1.0 + a.max_abs()));
     }
 
     #[test]
@@ -281,6 +488,51 @@ mod tests {
         // sorted descending
         for w in lam.windows(2) {
             assert!(w[0] >= w[1] - 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_ordered_jacobi_matches_cyclic() {
+        // above the dispatch threshold the rounds path takes over; its
+        // eigenvalues must agree with the serial cyclic baseline
+        let n = JACOBI_PAR_MIN_N + 4;
+        let a = spd(n, 13);
+        let (v, lam) = jacobi_eigh(&a, 30);
+        let (_, lam_serial) = jacobi_eigh_serial(&a, 30);
+        assert!(ortho_err(&v) < 1e-3);
+        let scale = lam_serial[0].abs().max(1.0);
+        for (got, want) in lam.iter().zip(&lam_serial) {
+            assert!((got - want).abs() < 1e-2 * scale, "{got} vs {want}");
+        }
+        // reconstruction on the parallel path
+        let mut vd = v.clone();
+        for i in 0..v.rows {
+            for j in 0..v.cols {
+                *vd.at_mut(i, j) *= lam[j];
+            }
+        }
+        let rec = vd.matmul_nt(&v);
+        assert!(rec.sub(&a).max_abs() < 1e-3 * a.max_abs());
+    }
+
+    #[test]
+    fn round_schedule_covers_every_pair_once() {
+        for n in [2usize, 5, 8, 13, 96] {
+            let rounds = jacobi_rounds(n);
+            let mut seen = vec![false; n * n];
+            for pairs in &rounds {
+                let mut used = vec![false; n];
+                for &(p, q) in pairs {
+                    assert!(p < q && q < n);
+                    assert!(!used[p] && !used[q], "pair indices clash in a round");
+                    used[p] = true;
+                    used[q] = true;
+                    assert!(!seen[p * n + q], "pair ({p},{q}) scheduled twice");
+                    seen[p * n + q] = true;
+                }
+            }
+            let covered = seen.iter().filter(|&&b| b).count();
+            assert_eq!(covered, n * (n - 1) / 2, "n = {n}");
         }
     }
 

@@ -41,13 +41,14 @@ impl fmt::Debug for Mat {
 const BLK: usize = 64;
 
 /// Below this many multiply-adds a matmul-family kernel stays on the
-/// calling thread: the scoped pool spawns workers per region (~100 µs for
-/// a few threads), so fanning out must buy at least that much work.
-const PAR_MIN_FLOPS: usize = 1 << 19;
+/// calling thread. The persistent pool dispatches in ~µs (queue push +
+/// wake of parked workers), so the bar is 4x lower than under the old
+/// per-region `thread::scope` spawning — medium matrices now fan out.
+const PAR_MIN_FLOPS: usize = 1 << 17;
 
 /// Below this many elements the elementwise/reduction family stays on the
 /// calling thread (same dispatch-cost argument as [`PAR_MIN_FLOPS`]).
-const PAR_MIN_ELEMS: usize = 1 << 18;
+const PAR_MIN_ELEMS: usize = 1 << 16;
 
 /// Elementwise/reduction chunk grain (elements). Fixed, so partials
 /// combine identically for every pool width.
@@ -66,7 +67,9 @@ fn elem_grain(len: usize) -> usize {
 
 /// Chunked sum of squares: serial single pass at width 1 (historical
 /// behavior) and below the dispatch threshold, fixed-chunk partials
-/// combined in order otherwise.
+/// combined in order otherwise. (Callers that need bitwise width
+/// invariance — the decomposition convergence checks — keep their own
+/// serial sums instead; see `linalg::decomp`.)
 fn sum_sq(data: &[f32]) -> f32 {
     if pool::threads() <= 1 || data.len() < PAR_MIN_ELEMS {
         return data.iter().map(|&x| x * x).sum();

@@ -8,8 +8,8 @@ pub mod kron;
 pub mod mat;
 
 pub use decomp::{
-    complete_basis, inv_fourth_root, jacobi_eigh, mgs_qr, newton_schulz,
-    ns_step, random_orthonormal, subspace_iter, whiten,
+    complete_basis, inv_fourth_root, jacobi_eigh, jacobi_eigh_serial, mgs_qr,
+    newton_schulz, ns_step, random_orthonormal, subspace_iter, whiten,
 };
 pub use kron::{block_diag, diag_m, diag_v, kron, mat_cols, vec_cols};
 pub use mat::Mat;

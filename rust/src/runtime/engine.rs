@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -130,15 +131,21 @@ impl HostTensor {
 }
 
 /// Compiled-executable cache keyed by artifact name.
+///
+/// Execution is splittable across threads: [`Engine::run_prepared`] takes
+/// `&self` (the PJRT CPU client executes concurrently; the stub types are
+/// plain data), which is what lets `Trainer::eval` fan batches out over
+/// `util::pool`. Compilation ([`Engine::prepare`]) stays `&mut self`.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
     /// Cumulative seconds spent compiling (reported once per run).
     pub compile_secs: f64,
-    /// Cumulative seconds spent in execute + host transfers.
-    pub exec_secs: f64,
-    pub exec_calls: u64,
+    /// Cumulative seconds spent in execute + host transfers (f64 bits —
+    /// atomic so shared-reference execution can account too).
+    exec_secs_bits: AtomicU64,
+    exec_calls: AtomicU64,
 }
 
 impl Engine {
@@ -151,9 +158,34 @@ impl Engine {
             manifest,
             exes: BTreeMap::new(),
             compile_secs: 0.0,
-            exec_secs: 0.0,
-            exec_calls: 0,
+            exec_secs_bits: AtomicU64::new(0.0f64.to_bits()),
+            exec_calls: AtomicU64::new(0),
         })
+    }
+
+    /// Cumulative (execute + host-transfer seconds, execute calls).
+    pub fn exec_stats(&self) -> (f64, u64) {
+        (
+            f64::from_bits(self.exec_secs_bits.load(Ordering::Relaxed)),
+            self.exec_calls.load(Ordering::Relaxed),
+        )
+    }
+
+    fn add_exec(&self, secs: f64) {
+        self.exec_calls.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.exec_secs_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + secs).to_bits();
+            match self.exec_secs_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     pub fn platform(&self) -> String {
@@ -194,6 +226,15 @@ impl Engine {
     /// EXPERIMENTS.md §Perf L3-1.
     pub fn run_refs(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
+        self.run_prepared(name, inputs)
+    }
+
+    /// Shared-reference execution of an already-[`prepare`]d artifact —
+    /// the entry point for pool fan-outs that score batches concurrently
+    /// (`Trainer::eval`). Errors if the artifact was never compiled.
+    ///
+    /// [`prepare`]: Engine::prepare
+    pub fn run_prepared(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = self.manifest.artifact(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
@@ -217,7 +258,9 @@ impl Engine {
             .iter()
             .map(|ht| ht.to_literal())
             .collect::<Result<_>>()?;
-        let exe = self.exes.get(name).expect("prepared above");
+        let exe = self.exes.get(name).ok_or_else(|| {
+            anyhow!("artifact {name:?} not prepared — call Engine::prepare first")
+        })?;
         let bufs = exe
             .execute::<xla::Literal>(&lits)
             .map_err(|e| anyhow!("executing {name}: {e}"))?;
@@ -239,8 +282,7 @@ impl Engine {
                 outs.len()
             );
         }
-        self.exec_secs += t.secs();
-        self.exec_calls += 1;
+        self.add_exec(t.secs());
         Ok(outs)
     }
 }

@@ -1,14 +1,57 @@
-//! Scoped worker pool — the parallel execution backend behind the `linalg`
-//! kernels and the trainer's per-layer fan-out (no `rayon` offline —
-//! DESIGN.md §Substitutions).
+//! Persistent worker pool — the parallel execution backend behind the
+//! `linalg` kernels, the decompositions, and the trainer's per-layer /
+//! eval / checkpoint fan-outs (no `rayon` offline — DESIGN.md
+//! §Substitutions).
+//!
+//! # Lifecycle
+//!
+//! Workers are **long-lived parked threads**, spawned lazily the first
+//! time a parallel region needs them (or eagerly via [`warmup`], wired to
+//! the `[train] pool_warmup` / `--pool-warmup` knob) and sized by the
+//! effective width at that moment. The pool only ever grows — up to the
+//! largest `width - 1` any region has requested — and is shut down by
+//! process exit: parked workers hold no resources beyond their stacks, so
+//! there is deliberately no explicit teardown. Region submission is a
+//! queue push + wake (~µs), replacing the per-region `std::thread::scope`
+//! spawn (~100 µs) of the previous backend; the work-size thresholds in
+//! `linalg` are tuned to that cheaper dispatch.
 //!
 //! # Thread-count resolution
 //!
 //! Effective width = thread-local override (set by [`with_threads`], and
-//! pinned to 1 inside pool workers so nested kernels never oversubscribe)
-//! → else the global knob (set by [`set_threads`], wired from
-//! `RunConfig.threads` / `--threads`) → else all available cores.
-//! `0` always means "no opinion at this level".
+//! propagated into workers per region so nested code sees the caller's
+//! width) → else the global knob (set by [`set_threads`], wired from
+//! `RunConfig.threads` / `--threads`) → else the `AR_BENCH_THREADS` env
+//! var (read once; the CI matrix runs the test suite at widths 1 and 4
+//! through it) → else all available cores. `0` always means "no opinion
+//! at this level".
+//!
+//! # Nested regions
+//!
+//! A task may itself open a parallel region: the sub-region's helper jobs
+//! go through the same global queue and are picked up by parked workers
+//! (or reclaimed by the submitting task, which always participates in its
+//! own region). This replaces the old "workers pin themselves to width 1"
+//! fallback — decomposition sweeps inside the trainer's per-layer fan-out
+//! now actually fan out. There is no deadlock: a region's caller runs its
+//! own tasks inline, and unclaimed helper jobs are removed from the queue
+//! (not waited on) when the caller finds the region drained.
+//!
+//! Concurrency bound: each region is served by at most `width - 1`
+//! helpers plus its caller, and total active threads never exceed the
+//! pool size — which equals the largest `width - 1` any region has
+//! requested this process (like a fixed-size rayon pool). If the knob is
+//! *lowered* after a larger width ran, concurrent nested sibling regions
+//! may together occupy more parked workers than the new width; a
+//! computation-wide thread budget is a noted follow-on (ROADMAP).
+//!
+//! # Panic propagation
+//!
+//! A panic in any task aborts the region early (remaining indices are
+//! skipped), is carried back to the submitting thread, and re-raised
+//! there with the original payload once every in-flight helper has
+//! stopped touching the region. Workers survive task panics and return to
+//! the queue.
 //!
 //! # Determinism contract
 //!
@@ -17,26 +60,34 @@
 //!   the calling thread in partition order. Results are therefore
 //!   deterministic for a given thread count — and for every kernel whose
 //!   per-partition float-op order matches the serial loop (the matmul
-//!   family, transpose, all elementwise ops) they are bitwise identical
-//!   across *all* thread counts.
+//!   family, transpose, all elementwise ops, the parallel decompositions
+//!   in `linalg::decomp`) they are bitwise identical across *all* thread
+//!   counts.
 //! * Width 1 executes the caller's closures inline, in order, on the
 //!   calling thread: exactly the pre-pool serial behavior.
-//!
-//! Workers are spawned per parallel region via [`std::thread::scope`] —
-//! spawn cost (~tens of µs) is amortized by the work-size thresholds the
-//! kernels apply before fanning out.
 
+use std::any::Any;
 use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
-/// Global width knob: 0 = auto (all available cores).
+/// Global width knob: 0 = auto (env var, then all available cores).
 static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
-    /// Per-thread override: 0 = none. Pool workers run with 1 so nested
-    /// parallel regions degrade to serial instead of oversubscribing.
+    /// Per-thread override: 0 = none. Workers run each region's tasks
+    /// with this set to the submitting thread's effective width, so
+    /// nested regions resolve the same width on any thread.
     static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Lock a mutex, ignoring poisoning: every critical section below is a
+/// few plain loads/stores (no user code runs under a lock), so a poisoned
+/// mutex still guards consistent data.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Number of hardware threads (1 if it cannot be determined). Cached —
@@ -49,7 +100,21 @@ pub fn available() -> usize {
     })
 }
 
-/// Set the global pool width. `0` restores the default (all cores).
+/// `AR_BENCH_THREADS` fallback width (0 = unset/invalid). Read once: the
+/// CI width matrix sets it for a whole process, and re-reading per call
+/// would put `env::var` on the kernel dispatch path.
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("AR_BENCH_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Set the global pool width. `0` restores the default
+/// (`AR_BENCH_THREADS`, else all cores).
 pub fn set_threads(n: usize) {
     GLOBAL_THREADS.store(n, Ordering::Relaxed);
 }
@@ -62,7 +127,11 @@ pub fn threads() -> usize {
     }
     let global = GLOBAL_THREADS.load(Ordering::Relaxed);
     if global != 0 {
-        global
+        return global;
+    }
+    let env = env_threads();
+    if env != 0 {
+        env
     } else {
         available()
     }
@@ -70,7 +139,9 @@ pub fn threads() -> usize {
 
 /// Run `f` with the pool width pinned to `n` on this thread (`0` clears
 /// the override). Scoped, re-entrant, and unwind-safe — the primary test
-/// hook.
+/// hook. The override follows the work into pool workers: regions opened
+/// inside `f` tag their jobs with the effective width, so nested regions
+/// resolve it on any thread.
 pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     struct Restore(usize);
     impl Drop for Restore {
@@ -87,6 +158,145 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+// ------------------------------------------------------------ the pool ---
+
+/// One queued helper job: a type-erased pointer pair into the submitting
+/// thread's stack frame. Validity is guaranteed by the region protocol —
+/// the submitting call does not return until every pushed job has either
+/// run to completion or been removed from the queue unclaimed.
+#[derive(Clone, Copy)]
+struct Job {
+    header: *const RegionHeader,
+    task: *const (),
+    entry: unsafe fn(*const RegionHeader, *const ()),
+}
+
+// SAFETY: the raw pointers are only dereferenced while the owning region
+// is alive (see Job doc comment); the pointees are Sync.
+unsafe impl Send for Job {}
+
+struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    /// Wakes parked workers when jobs are pushed.
+    work_cv: Condvar,
+    /// Workers spawned so far (monotonic — the pool never shrinks).
+    spawned: Mutex<usize>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        work_cv: Condvar::new(),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Shared per-region state, allocated on the submitting thread's stack.
+struct RegionHeader {
+    /// Next unclaimed task index (dynamic work stealing).
+    next: AtomicUsize,
+    n: usize,
+    /// The submitting thread's effective width — workers adopt it while
+    /// running this region's tasks so nested regions resolve identically.
+    nested_width: usize,
+    /// Helper jobs pushed and not yet finished or reclaimed.
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload raised by any task in this region.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Claim-and-run loop shared by the submitting thread and the workers.
+/// Panics are captured into the header and abort the region early.
+fn claim_loop<F: Fn(usize) + Sync>(h: &RegionHeader, f: &F) {
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        let i = h.next.fetch_add(1, Ordering::Relaxed);
+        if i >= h.n {
+            break;
+        }
+        f(i);
+    }));
+    if let Err(payload) = result {
+        // abort: park the claim counter at the end so other claimers stop
+        h.next.store(h.n, Ordering::Relaxed);
+        let mut slot = lock(&h.panic);
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+}
+
+/// Monomorphized worker-side entry for a helper job.
+///
+/// SAFETY (caller): `header` and `task` must point at a live
+/// `RegionHeader` and the matching `F` of the same region.
+unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *const ()) {
+    let h = unsafe { &*header };
+    let f = unsafe { &*(task as *const F) };
+    let prev = LOCAL_THREADS.with(|c| {
+        let p = c.get();
+        c.set(h.nested_width);
+        p
+    });
+    claim_loop(h, f);
+    LOCAL_THREADS.with(|c| c.set(prev));
+    // Completion handshake: decrement-and-notify under the lock, then
+    // never touch `h` again — the submitting thread may free the region
+    // the moment it observes pending == 0.
+    let mut pending = lock(&h.pending);
+    *pending -= 1;
+    if *pending == 0 {
+        h.done_cv.notify_all();
+    }
+}
+
+fn worker_loop() {
+    let p = pool();
+    loop {
+        let job = {
+            let mut q = lock(&p.queue);
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = p.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: queued jobs are valid until their region retires them —
+        // see the Job invariant.
+        unsafe { (job.entry)(job.header, job.task) };
+    }
+}
+
+/// Grow the pool to at least `target` parked workers.
+fn ensure_workers(target: usize) {
+    let p = pool();
+    let mut count = lock(&p.spawned);
+    while *count < target {
+        *count += 1;
+        std::thread::Builder::new()
+            .name(format!("ar-pool-{count}"))
+            .spawn(worker_loop)
+            .expect("spawning pool worker");
+    }
+}
+
+/// Pre-spawn the workers for the current effective width. Purely an
+/// optimization — the first parallel region spawns lazily otherwise.
+pub fn warmup() {
+    let w = threads();
+    if w > 1 {
+        ensure_workers(w - 1);
+    }
+}
+
+/// Number of persistent workers spawned so far. Monotonic (the pool
+/// never shrinks) — the lifecycle tests use it to pin down reuse.
+pub fn worker_count() -> usize {
+    *lock(&pool().spawned)
+}
+
 /// Execute `f(0), f(1), …, f(n-1)` across the pool.
 ///
 /// Tasks are claimed dynamically (atomic counter), so callers may hand in
@@ -94,6 +304,10 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
 /// on this. `f` must only touch data disjoint per index (shared reads are
 /// fine). With an effective width of 1 the tasks run inline, in order.
 pub fn run(n: usize, f: impl Fn(usize) + Sync) {
+    run_ref(n, &f)
+}
+
+fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
     let width = threads().min(n);
     if width <= 1 {
         for i in 0..n {
@@ -101,23 +315,52 @@ pub fn run(n: usize, f: impl Fn(usize) + Sync) {
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    let f = &f;
-    let next = &next;
-    std::thread::scope(|s| {
-        for _ in 0..width {
-            s.spawn(move || {
-                LOCAL_THREADS.with(|c| c.set(1));
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                }
+    let helpers = width - 1;
+    let header = RegionHeader {
+        next: AtomicUsize::new(0),
+        n,
+        nested_width: threads(),
+        pending: Mutex::new(helpers),
+        done_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    ensure_workers(helpers);
+    let p = pool();
+    {
+        let mut q = lock(&p.queue);
+        for _ in 0..helpers {
+            q.push_back(Job {
+                header: &header,
+                task: f as *const F as *const (),
+                entry: helper_entry::<F>,
             });
         }
-    });
+    }
+    p.work_cv.notify_all();
+    // the submitting thread is always worker 0 of its own region
+    claim_loop(&header, f);
+    // Retire the region: reclaim helper jobs nobody picked up, then wait
+    // out the in-flight ones. After this block no pointer to `header` or
+    // `f` exists outside this frame.
+    {
+        let mut q = lock(&p.queue);
+        let before = q.len();
+        let me: *const RegionHeader = &header;
+        q.retain(|j| !std::ptr::eq(j.header, me));
+        let removed = before - q.len();
+        drop(q);
+        if removed > 0 {
+            *lock(&header.pending) -= removed;
+        }
+    }
+    let mut pending = lock(&header.pending);
+    while *pending > 0 {
+        pending = header.done_cv.wait(pending).unwrap_or_else(|e| e.into_inner());
+    }
+    drop(pending);
+    if let Some(payload) = lock(&header.panic).take() {
+        resume_unwind(payload);
+    }
 }
 
 /// Like [`run`], collecting each task's result; the returned vector is in
@@ -127,34 +370,14 @@ pub fn map<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     if width <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let f = &f;
-    let next = &next;
-    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..width)
-            .map(|_| {
-                s.spawn(move || {
-                    LOCAL_THREADS.with(|c| c.set(1));
-                    let mut got = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        got.push((i, f(i)));
-                    }
-                    got
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
-    });
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for part in parts {
-        for (i, v) in part {
-            slots[i] = Some(v);
-        }
-    }
+    let base = SendPtr(slots.as_mut_ptr());
+    let task = move |i: usize| {
+        // SAFETY: `run_ref` hands each index to exactly one task, so this
+        // is the only writer of slots[i]; i < n = slots.len().
+        unsafe { *base.0.add(i) = Some(f(i)) };
+    };
+    run_ref(n, &task);
     slots.into_iter().map(|o| o.expect("pool task not executed")).collect()
 }
 
@@ -207,9 +430,10 @@ pub fn for_each_chunk_mut<T: Send>(
 
 /// Raw-pointer wrapper so disjoint-range writers can cross the closure
 /// `Sync` bound. Soundness is argued at each use site.
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 unsafe impl<T> Send for SendPtr<T> {}
+
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]
@@ -264,14 +488,59 @@ mod tests {
     }
 
     #[test]
-    fn nested_regions_run_serial_in_workers() {
-        let serial_inside: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+    fn nested_regions_share_the_callers_width() {
+        // workers adopt the submitting thread's effective width, so a
+        // nested region fans out instead of degrading to serial
+        let widths: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        let inner: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(0)).collect();
         with_threads(4, || {
             run(8, |i| {
-                serial_inside[i].store(threads() as u32, Ordering::Relaxed);
+                widths[i].store(threads() as u32, Ordering::Relaxed);
+                run(8, |j| {
+                    inner[i * 8 + j].fetch_add(1, Ordering::Relaxed);
+                });
             });
         });
-        assert!(serial_inside.iter().all(|t| t.load(Ordering::Relaxed) == 1));
+        assert!(widths.iter().all(|t| t.load(Ordering::Relaxed) == 4));
+        assert!(inner.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn workers_persist_across_regions() {
+        // grow past anything the sibling unit tests ask for, then verify
+        // that further regions reuse the parked workers instead of
+        // spawning new ones
+        let w = available().max(8);
+        with_threads(w, || run(4 * w, |_| {}));
+        let settled = worker_count();
+        assert!(settled >= w - 1);
+        for _ in 0..32 {
+            with_threads(4, || run(64, |_| {}));
+        }
+        assert_eq!(worker_count(), settled, "regions must reuse parked workers");
+    }
+
+    #[test]
+    fn panics_propagate_to_the_submitter() {
+        let caught = catch_unwind(|| {
+            with_threads(4, || {
+                run(64, |i| {
+                    if i == 17 {
+                        panic!("boom at 17");
+                    }
+                });
+            });
+        });
+        let payload = caught.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("boom at 17"), "payload preserved, got {msg:?}");
+        // the pool survives and keeps serving regions
+        let out = with_threads(4, || map(32, |i| i + 1));
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
     }
 
     #[test]
@@ -291,5 +560,11 @@ mod tests {
             let mut empty: [f32; 0] = [];
             for_each_chunk_mut(&mut empty, 8, |_, _| panic!("must not run"));
         });
+    }
+
+    #[test]
+    fn warmup_prespawns_for_the_effective_width() {
+        with_threads(5, warmup);
+        assert!(worker_count() >= 4);
     }
 }

@@ -26,6 +26,18 @@ impl Pcg {
         Self::new(seed, 0xda3e39cb94b95bdb)
     }
 
+    /// Raw (state, inc) words — the checkpointing hook that makes
+    /// resumed runs replay the exact stream an uninterrupted run draws.
+    pub fn state_words(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild from words captured by [`state_words`] (no warm-up draws:
+    /// the words already encode a mid-stream position).
+    pub fn from_words(state: u64, inc: u64) -> Self {
+        Pcg { state, inc }
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;

@@ -1,0 +1,127 @@
+//! Width-parity harness for the parallel decompositions: `jacobi_eigh`
+//! and `mgs_qr` must produce **bitwise identical** output at pool widths
+//! 1 (the serial baseline — width 1 runs every region inline on the
+//! calling thread) and 4, while satisfying the usual reconstruction /
+//! orthonormality / triangularity invariants on ragged shapes straddling
+//! the serial↔parallel dispatch thresholds. See `linalg::decomp` for the
+//! ordering argument that makes the fan-outs width-invariant.
+
+use alice_racs::linalg::{jacobi_eigh, mgs_qr, Mat};
+use alice_racs::util::{pool, Pcg};
+
+fn spd(n: usize, seed: u64) -> Mat {
+    let mut rng = Pcg::seeded(seed);
+    let b = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    let mut a = b.matmul_nt(&b);
+    for i in 0..n {
+        *a.at_mut(i, i) += 0.5;
+    }
+    a
+}
+
+fn ortho_err(q: &Mat) -> f32 {
+    q.matmul_tn(q).sub(&Mat::eye(q.cols)).max_abs()
+}
+
+/// Dimensions straddling `JACOBI_PAR_MIN_N` (96): below → serial cyclic
+/// sweeps, at/above → parallel-ordered rounds, including an odd size that
+/// exercises the bye slot in the round-robin schedule.
+const EIGH_DIMS: &[usize] = &[12, 80, 96, 121];
+
+/// (rows, cols) straddling `QR_PAR_MIN_WORK` (16384 trailing elements):
+/// the small shapes never fan out, the large ones fan out for the early
+/// steps and fall back inline as the trailing block shrinks.
+const QR_SHAPES: &[(usize, usize)] = &[(30, 8), (97, 33), (200, 90), (257, 64)];
+
+#[test]
+fn eigh_bitwise_identical_across_widths() {
+    for (i, &n) in EIGH_DIMS.iter().enumerate() {
+        let a = spd(n, 100 + i as u64);
+        let (v1, l1) = pool::with_threads(1, || jacobi_eigh(&a, 30));
+        let (v4, l4) = pool::with_threads(4, || jacobi_eigh(&a, 30));
+        assert_eq!(v1.data, v4.data, "eigenvectors diverge at n = {n}");
+        assert_eq!(l1, l4, "eigenvalues diverge at n = {n}");
+    }
+}
+
+#[test]
+fn eigh_invariants_on_ragged_shapes() {
+    for (i, &n) in EIGH_DIMS.iter().enumerate() {
+        let a = spd(n, 100 + i as u64);
+        let (v, lam) = pool::with_threads(4, || jacobi_eigh(&a, 30));
+        // eigenvector orthonormality
+        assert!(ortho_err(&v) < 1e-3, "ortho err at n = {n}: {}", ortho_err(&v));
+        // descending eigenvalue order
+        for w in lam.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4 * w[0].abs().max(1.0), "unsorted at n = {n}");
+        }
+        // reconstruction: V diag(λ) Vᵀ ≈ A
+        let mut vd = v.clone();
+        for r in 0..v.rows {
+            for c in 0..v.cols {
+                *vd.at_mut(r, c) *= lam[c];
+            }
+        }
+        let rec = vd.matmul_nt(&v);
+        let err = rec.sub(&a).max_abs();
+        assert!(err < 2e-3 * a.max_abs(), "reconstruction err at n = {n}: {err}");
+    }
+}
+
+#[test]
+fn qr_bitwise_identical_across_widths() {
+    for (i, &(m, r)) in QR_SHAPES.iter().enumerate() {
+        let mut rng = Pcg::seeded(200 + i as u64);
+        let a = Mat::from_vec(m, r, rng.normal_vec(m * r, 1.0));
+        let q1 = pool::with_threads(1, || mgs_qr(&a));
+        let q4 = pool::with_threads(4, || mgs_qr(&a));
+        assert_eq!(q1.data, q4.data, "Q diverges at {m}x{r}");
+    }
+}
+
+#[test]
+fn qr_invariants_on_ragged_shapes() {
+    for (i, &(m, r)) in QR_SHAPES.iter().enumerate() {
+        let mut rng = Pcg::seeded(200 + i as u64);
+        let a = Mat::from_vec(m, r, rng.normal_vec(m * r, 1.0));
+        let q = pool::with_threads(4, || mgs_qr(&a));
+        // orthonormality
+        let oerr = ortho_err(&q);
+        assert!(oerr < 1e-3, "ortho err at {m}x{r}: {oerr}");
+        // triangularity: R = Qᵀ A must be upper triangular (column spans
+        // are progressive for full-rank random input)
+        let rm = q.matmul_tn(&a);
+        let scale = 1.0 + rm.max_abs();
+        for row in 1..rm.rows {
+            for col in 0..row {
+                let x = rm.at(row, col).abs();
+                assert!(
+                    x < 1e-3 * scale,
+                    "R[{row}][{col}] = {x} not triangular at {m}x{r}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn width_parity_holds_under_nested_fanout() {
+    // the trainer runs decompositions *inside* per-layer pool tasks; the
+    // bitwise contract must survive that nesting
+    let a = spd(121, 7);
+    let mut rng = Pcg::seeded(9);
+    let g = Mat::from_vec(200, 90, rng.normal_vec(200 * 90, 1.0));
+    let baseline = pool::with_threads(1, || (jacobi_eigh(&a, 20), mgs_qr(&g)));
+    let nested = pool::with_threads(4, || {
+        let mut out: Vec<Option<((Mat, Vec<f32>), Mat)>> = vec![None, None];
+        pool::map_mut(&mut out, |_, slot| {
+            *slot = Some((jacobi_eigh(&a, 20), mgs_qr(&g)));
+        });
+        out
+    });
+    for got in nested.into_iter().flatten() {
+        assert_eq!(baseline.0 .0.data, got.0 .0.data, "nested eigh V diverges");
+        assert_eq!(baseline.0 .1, got.0 .1, "nested eigh λ diverges");
+        assert_eq!(baseline.1.data, got.1.data, "nested QR diverges");
+    }
+}

@@ -1,0 +1,115 @@
+//! Lifecycle contract of the persistent worker pool: workers are spawned
+//! lazily, parked between regions, and reused — never respawned per
+//! region; nested regions submit through the same pool; a panicking task
+//! aborts its region and re-raises on the submitting thread; and the
+//! thread-local width override keeps working (including the width-1
+//! inline guarantee the determinism contract builds on).
+
+use std::panic::catch_unwind;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use alice_racs::util::pool;
+
+/// Widths used anywhere in this file — the reuse test grows the pool past
+/// all of them first so concurrent sibling tests can't change the count.
+const MAX_WIDTH: usize = 8;
+
+fn grow_to_max() -> usize {
+    let w = pool::available().max(MAX_WIDTH);
+    pool::with_threads(w, || pool::run(4 * w, |_| {}));
+    pool::worker_count()
+}
+
+#[test]
+fn workers_are_reused_across_regions() {
+    let settled = grow_to_max();
+    assert!(settled >= MAX_WIDTH - 1, "lazy spawn must size to the width");
+    for _ in 0..50 {
+        pool::with_threads(4, || {
+            pool::run(64, |_| {});
+            let _ = pool::map(16, |i| i * 3);
+        });
+    }
+    assert_eq!(
+        pool::worker_count(),
+        settled,
+        "regions must be served by parked workers, not fresh spawns"
+    );
+}
+
+#[test]
+fn warmup_prespawns_without_running_work() {
+    pool::with_threads(MAX_WIDTH, pool::warmup);
+    assert!(pool::worker_count() >= MAX_WIDTH - 1);
+}
+
+#[test]
+fn nested_regions_submit_through_the_shared_pool() {
+    grow_to_max();
+    let before = pool::worker_count();
+    // 6 outer tasks each opening an inner region of 8 tasks: all 48 inner
+    // units must run exactly once, and the workers must see the caller's
+    // effective width (no serial-degradation pinning, no oversubscription)
+    let inner_hits: Vec<AtomicU32> = (0..48).map(|_| AtomicU32::new(0)).collect();
+    let widths_seen: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+    pool::with_threads(4, || {
+        pool::run(6, |i| {
+            widths_seen[i].store(pool::threads(), Ordering::Relaxed);
+            pool::run(8, |j| {
+                inner_hits[i * 8 + j].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+    });
+    assert!(inner_hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    assert!(
+        widths_seen.iter().all(|w| w.load(Ordering::Relaxed) == 4),
+        "workers must adopt the submitting thread's width"
+    );
+    assert_eq!(pool::worker_count(), before, "nesting must not grow the pool");
+}
+
+#[test]
+fn panics_propagate_out_of_workers() {
+    grow_to_max();
+    let caught = catch_unwind(|| {
+        pool::with_threads(4, || {
+            pool::run(64, |i| {
+                if i == 31 {
+                    panic!("lifecycle-test panic");
+                }
+            });
+        });
+    });
+    let payload = caught.expect_err("task panic must reach the submitter");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("");
+    assert!(msg.contains("lifecycle-test panic"), "payload lost: {msg:?}");
+    // the pool survives the panic and keeps serving regions afterwards
+    let out = pool::with_threads(4, || pool::map(40, |i| i + 1));
+    assert_eq!(out, (1..=40).collect::<Vec<_>>());
+}
+
+#[test]
+fn tls_width_override_is_honored() {
+    grow_to_max();
+    assert_eq!(pool::with_threads(3, pool::threads), 3);
+    pool::with_threads(3, || {
+        pool::with_threads(1, || assert_eq!(pool::threads(), 1));
+        assert_eq!(pool::threads(), 3, "inner override must restore");
+    });
+    // width 1 runs every task inline, in order, on the calling thread —
+    // the serial baseline the determinism contract is anchored to
+    let caller = std::thread::current().id();
+    let order = Mutex::new(Vec::new());
+    pool::with_threads(1, || {
+        pool::run(16, |i| {
+            assert_eq!(std::thread::current().id(), caller);
+            order.lock().unwrap().push(i);
+        });
+    });
+    assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+}
