@@ -1,0 +1,121 @@
+//! Figure 7 (repo extension) — grad-phase scaling of the simulated
+//! data-parallel cluster: wall-clock speedup of the round coordinator's
+//! worker fan-out vs. `dp_workers`, with the bitwise-parity check that
+//! makes the comparison meaningful (every worker count reduces to the
+//! *same* gradient, so speedup is free of numerical drift).
+//!
+//! Two sections:
+//! * **Synthetic rounds** (no artifacts needed): the dist pipeline over a
+//!   `SyntheticGradSource` whose per-microbatch cost is a fixed dense
+//!   matmul — a clean stand-in for `grad_step`. Reports per-round time,
+//!   speedup, and imbalance at dp ∈ {1, 2, 4} (plus `AR_DP_WORKERS`).
+//! * **Trainer rounds** (needs `make artifacts`): full coordinator-path
+//!   training with `[dist] sim = true`, reporting the `dp_grad_exec`
+//!   profile phase and tokens/s per worker count.
+//!
+//! Protocol notes live in EXPERIMENTS.md §fig7.
+
+use alice_racs::bench::{artifacts_available, bench_cfg, bench_steps, dp_sweep, TablePrinter};
+use alice_racs::coordinator::{run_with, Trainer};
+use alice_racs::dist::{run_round, DistConfig, SyntheticGradSource};
+use alice_racs::runtime::HostTensor;
+use alice_racs::util::{mean, pool, Pcg, Timer};
+
+fn synthetic_section() {
+    let cores = pool::available();
+    let micro = 8;
+    let rounds = 6;
+    // model-ish gradient geometry + a busywork matmul that dominates cost
+    let shapes = vec![(256, 128), (128, 256), (1, 256), (64, 512)];
+    let work = 160;
+    println!(
+        "== synthetic DP rounds: {micro} microbatches/round, {rounds} rounds, \
+         work n={work}, pool width {cores} =="
+    );
+    let mut rng = Pcg::seeded(0xf177);
+    let tokens: Vec<HostTensor> = (0..micro)
+        .map(|_| HostTensor::i32(vec![32], (0..32).map(|_| rng.below(997) as i32).collect()))
+        .collect();
+    let src = SyntheticGradSource { shapes, work };
+
+    let mut table =
+        TablePrinter::new(&["dp_workers", "round ms", "speedup", "imbalance", "loss bits"]);
+    let mut base_ms = 0.0f64;
+    let mut base_bits: Option<u32> = None;
+    for dp in dp_sweep() {
+        let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
+        let mut coord = dist.coordinator();
+        let mut times = Vec::new();
+        let mut loss_bits = 0u32;
+        for r in 0..rounds {
+            let t = Timer::start();
+            let out = run_round(&mut coord, &src, &tokens).expect("synthetic round");
+            if r > 0 {
+                times.push(t.millis()); // round 0 is warmup
+            }
+            loss_bits = out.loss.to_bits();
+        }
+        let ms = mean(&times);
+        if dp == 1 {
+            base_ms = ms;
+            base_bits = Some(loss_bits);
+        }
+        assert_eq!(
+            Some(loss_bits),
+            base_bits,
+            "tree all-reduce must be bitwise invariant across dp_workers"
+        );
+        let imb = coord.log.last().map(|l| l.imbalance).unwrap_or(1.0);
+        table.row(vec![
+            dp.to_string(),
+            format!("{ms:.2}"),
+            format!("{:.2}x", base_ms / ms.max(1e-9)),
+            format!("{imb:.2}"),
+            format!("{loss_bits:08x}"),
+        ]);
+    }
+    table.print();
+    println!("(loss bits equal on every row: same reduced gradient, only faster)");
+}
+
+fn trainer_section() {
+    if !artifacts_available() {
+        return;
+    }
+    let steps = bench_steps(40);
+    println!("\n== trainer rounds (coordinator path, [dist] sim): {steps} steps ==");
+    let mut table = TablePrinter::new(&[
+        "dp_workers",
+        "grad phase s",
+        "speedup",
+        "tokens/s",
+        "final loss",
+    ]);
+    let mut base_grad = 0.0f64;
+    for dp in dp_sweep() {
+        let mut cfg = bench_cfg("adam", "fig7", steps);
+        cfg.out_dir = format!("runs/bench/fig7/dp{dp}");
+        cfg.grad_accum = 4;
+        cfg.dist.dp_workers = dp;
+        cfg.dist.sim = true;
+        let mut trainer = Trainer::new(cfg).expect("trainer");
+        let summary = run_with(&mut trainer).expect("run");
+        let grad_secs = trainer.profile.total("dp_grad_exec");
+        if dp == 1 {
+            base_grad = grad_secs;
+        }
+        table.row(vec![
+            dp.to_string(),
+            format!("{grad_secs:.2}"),
+            format!("{:.2}x", base_grad / grad_secs.max(1e-9)),
+            format!("{:.0}", summary.tokens_per_sec),
+            format!("{:.4}", summary.last_train_loss),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    synthetic_section();
+    trainer_section();
+}

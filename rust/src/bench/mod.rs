@@ -77,6 +77,27 @@ pub fn bench_threads(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Simulated DP worker count for the dist benches/tests (the CI matrix
+/// sets `AR_DP_WORKERS=4` on the dist job; 0/unset = use the default).
+pub fn bench_dp_workers(default: usize) -> usize {
+    match std::env::var("AR_DP_WORKERS").ok().and_then(|v| v.parse().ok()) {
+        Some(0) | None => default,
+        Some(n) => n,
+    }
+}
+
+/// The dist dp-worker sweep shared by `fig7_dp_scaling` and
+/// `tests/dist_parity.rs`: {1, 2, 4} ∪ {`AR_DP_WORKERS`} — one place, so
+/// what CI tests and what the bench reports cannot diverge.
+pub fn dp_sweep() -> Vec<usize> {
+    let mut dps = vec![1, 2, 4];
+    let extra = bench_dp_workers(4);
+    if !dps.contains(&extra) {
+        dps.push(extra);
+    }
+    dps
+}
+
 /// A standard bench run config against the default artifact bundle.
 pub fn bench_cfg(opt: &str, tag: &str, steps: usize) -> RunConfig {
     let mut cfg = RunConfig::default().tuned_for(opt);
@@ -181,9 +202,20 @@ mod tests {
     fn env_scaling_defaults() {
         std::env::remove_var("AR_BENCH_STEPS");
         std::env::remove_var("AR_BENCH_THREADS");
+        std::env::remove_var("AR_DP_WORKERS");
         assert_eq!(bench_steps(120), 120);
         assert_eq!(bench_opts(&["adam", "racs"]), vec!["adam", "racs"]);
         assert_eq!(bench_threads(0), 0);
+        assert_eq!(bench_dp_workers(4), 4, "unset env falls back to the default");
+    }
+
+    #[test]
+    fn dp_sweep_covers_the_base_grid() {
+        let dps = dp_sweep();
+        for base in [1usize, 2, 4] {
+            assert!(dps.contains(&base), "sweep {dps:?} must include {base}");
+        }
+        assert!(dps.len() <= 4, "at most one env-extra entry: {dps:?}");
     }
 
     #[test]

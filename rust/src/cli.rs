@@ -78,6 +78,12 @@ USAGE:
                      [--threads N]   (1 = serial; 0 = AR_BENCH_THREADS if
                                       set, else all cores; default 0)
                      [--pool-warmup] (pre-spawn pool workers before step 1)
+                     [--dp-workers N] (simulated data-parallel workers; > 1
+                                      shards microbatches over the round
+                                      coordinator with a tree all-reduce)
+                     [--dist-sim]    (round-coordinator path even at
+                                      dp-workers 1 — bitwise comparable to
+                                      any dp-workers count)
   alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
   alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
   alice-racs inspect [--artifacts DIR]
@@ -126,6 +132,10 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.threads = args.usize_or("threads", cfg.threads)?;
     if args.get("pool-warmup").is_some() {
         cfg.pool_warmup = true;
+    }
+    cfg.dist.dp_workers = args.usize_or("dp-workers", cfg.dist.dp_workers)?.max(1);
+    if args.get("dist-sim").is_some() {
+        cfg.dist.sim = true;
     }
     cfg.hp.rank = args.usize_or("rank", cfg.hp.rank)?;
     cfg.hp.interval = args.usize_or("interval", cfg.hp.interval)?;
@@ -243,7 +253,7 @@ mod tests {
     fn config_overrides() {
         let a = Args::parse(&argv(&[
             "train", "--opt", "racs", "--tuned", "--steps", "7", "--path", "fused",
-            "--threads", "2", "--pool-warmup",
+            "--threads", "2", "--pool-warmup", "--dp-workers", "4", "--dist-sim",
         ]))
         .unwrap();
         let cfg = config_from_args(&a).unwrap();
@@ -252,7 +262,17 @@ mod tests {
         assert_eq!(cfg.path, ExecPath::Fused);
         assert_eq!(cfg.threads, 2);
         assert!(cfg.pool_warmup);
+        assert_eq!(cfg.dist.dp_workers, 4);
+        assert!(cfg.dist.sim);
+        assert!(cfg.dist.enabled());
         assert!((cfg.hp.alpha - 0.2).abs() < 1e-6); // tuned racs alpha
+    }
+
+    #[test]
+    fn dist_defaults_stay_disabled() {
+        let a = Args::parse(&argv(&["train", "--opt", "adam"])).unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert!(!cfg.dist.enabled());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::dist::DistConfig;
 use crate::opt::{Compen, Hyper, Switch};
 use toml::View;
 
@@ -54,6 +55,10 @@ pub struct RunConfig {
     pub log_every: usize,
     /// Checkpoint every N steps (0 = only at end).
     pub ckpt_every: usize,
+    /// Simulated data-parallel cluster (`[dist]` section): when enabled
+    /// the trainer routes each step through the round coordinator and
+    /// shards the microbatch stream over `dp_workers` logical workers.
+    pub dist: DistConfig,
 }
 
 impl Default for RunConfig {
@@ -80,6 +85,7 @@ impl Default for RunConfig {
             corpus_seed: 0x5eed,
             log_every: 10,
             ckpt_every: 0,
+            dist: DistConfig::default(),
         }
     }
 }
@@ -122,6 +128,18 @@ impl RunConfig {
             "fused" => ExecPath::Fused,
             _ => ExecPath::Coordinator,
         };
+        let dist_d = DistConfig::default();
+        let dist = DistConfig {
+            dp_workers: v.usize_or("dist", "dp_workers", dist_d.dp_workers).max(1),
+            sim: v.bool_or("dist", "sim", dist_d.sim),
+            min_workers: v.usize_or("dist", "min_workers", dist_d.min_workers),
+            warmup_ticks: v.usize_or("dist", "warmup_ticks", dist_d.warmup_ticks as usize)
+                as u32,
+            cooldown_ticks: v
+                .usize_or("dist", "cooldown_ticks", dist_d.cooldown_ticks as usize)
+                as u32,
+            straggler_factor: v.f64_or("dist", "straggler_factor", dist_d.straggler_factor),
+        };
         Ok(RunConfig {
             artifacts: v.str_or("", "artifacts", &d.artifacts),
             out_dir: v.str_or("", "out_dir", &d.out_dir),
@@ -144,6 +162,7 @@ impl RunConfig {
             corpus_seed: v.usize_or("data", "seed", d.corpus_seed as usize) as u64,
             log_every: v.usize_or("train", "log_every", d.log_every),
             ckpt_every: v.usize_or("train", "ckpt_every", d.ckpt_every),
+            dist,
         })
     }
 
@@ -213,6 +232,25 @@ mod tests {
         assert_eq!(c.path, ExecPath::Coordinator);
         assert_eq!(c.threads, 0, "default = auto (all cores)");
         assert!(!c.pool_warmup, "default = lazy worker spawn");
+        assert!(!c.dist.enabled(), "dist simulation is opt-in");
+        assert_eq!(c.dist.dp_workers, 1);
+    }
+
+    #[test]
+    fn parses_dist_section() {
+        let c = RunConfig::from_toml(
+            "[dist]\ndp_workers = 4\nmin_workers = 2\nwarmup_ticks = 3\nsim = true\n",
+        )
+        .unwrap();
+        assert!(c.dist.enabled());
+        assert_eq!(c.dist.dp_workers, 4);
+        assert_eq!(c.dist.min_workers, 2);
+        assert_eq!(c.dist.warmup_ticks, 3);
+        assert!(c.dist.sim);
+        // dp_workers = 0 is clamped to 1, and sim alone enables the path
+        let z = RunConfig::from_toml("[dist]\ndp_workers = 0\nsim = true\n").unwrap();
+        assert_eq!(z.dist.dp_workers, 1);
+        assert!(z.dist.enabled());
     }
 
     #[test]

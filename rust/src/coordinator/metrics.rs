@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::dist::RoundRecord;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Timer;
 
@@ -87,6 +88,7 @@ impl MetricsLogger {
             elapsed_s: self.timer.secs(),
             tokens_per_sec: self.tokens_per_sec(),
             eval_history: self.eval_history.clone(),
+            rounds: Vec::new(),
         };
         let mut pairs = vec![
             ("optimizer", s(optimizer)),
@@ -124,6 +126,9 @@ pub struct Summary {
     pub elapsed_s: f64,
     pub tokens_per_sec: f64,
     pub eval_history: Vec<(usize, f32)>,
+    /// Per-round log of the simulated DP cluster (empty for serial runs);
+    /// attached by `trainer::run_with` after the CSVs are finalized.
+    pub rounds: Vec<RoundRecord>,
 }
 
 impl Summary {
@@ -190,6 +195,7 @@ mod tests {
             elapsed_s: 10.0,
             tokens_per_sec: 100.0,
             eval_history: vec![(10, 5.0), (20, 4.0), (30, 3.0)],
+            rounds: Vec::new(),
         };
         assert_eq!(s.steps_to_reach(4.0), Some(20));
         assert_eq!(s.steps_to_reach(2.0), None);
@@ -205,6 +211,7 @@ mod tests {
             elapsed_s: 100.0,
             tokens_per_sec: 100.0,
             eval_history: vec![(50, 4.5), (100, 4.0)],
+            rounds: Vec::new(),
         };
         let fast = Summary {
             optimizer: "alice".into(),
@@ -214,6 +221,7 @@ mod tests {
             elapsed_s: 100.0,
             tokens_per_sec: 100.0,
             eval_history: vec![(50, 4.0), (100, 3.5)],
+            rounds: Vec::new(),
         };
         // fast reaches 4.0 at half its run → effective TP = 10000/50 = 200
         let etp = fast.effective_tokens_per_sec(&slow);

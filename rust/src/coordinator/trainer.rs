@@ -15,16 +15,23 @@
 //! Gradient accumulation doubles as the simulated data-parallel all-reduce:
 //! `workers × grad_accum` microbatches are averaged before the update,
 //! reproducing the semantics of synchronous DP without multi-process PJRT
-//! (unavailable on this CPU testbed — DESIGN.md §Substitutions).
+//! (unavailable on this CPU testbed — DESIGN.md §Substitutions). With the
+//! `[dist]` section enabled (`dp_workers > 1` or `--dist-sim`) that stream
+//! is sharded over N logical workers executing concurrently through the
+//! round coordinator, and averaged by the order-deterministic tree
+//! all-reduce (`crate::dist`) — same semantics, bitwise invariant across
+//! worker counts and pool widths, and measured by `benches/fig7_dp_scaling`.
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExecPath, RunConfig};
 use crate::data::{CorpusConfig, SyncBatcher};
+use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord};
 use crate::info;
 use crate::linalg::Mat;
 use crate::opt::{build, Slot};
 use crate::runtime::{Engine, HostTensor};
+use crate::util::json::{num, Json};
 use crate::util::timer::Profile;
 use crate::util::{pool, Pcg, Timer};
 
@@ -56,6 +63,9 @@ pub struct Trainer {
     rng: Pcg,
     /// Fig. 6 instrumentation: (step, param, per-index cos) per refresh.
     pub cos_log: Vec<(u64, String, Vec<f32>)>,
+    /// Round coordinator of the simulated DP cluster (None = serial
+    /// microbatch loop; `RunConfig.dist` decides).
+    dist: Option<RoundCoordinator>,
 }
 
 impl Trainer {
@@ -151,6 +161,29 @@ impl Trainer {
         };
         let batcher = SyncBatcher::new(corpus, model.batch, model.seq, cfg.seed ^ 0x7ea1);
 
+        let dist = if cfg.dist.enabled() {
+            if cfg.path == ExecPath::Fused {
+                // the fused train_step_<opt> executable carries the whole
+                // step; there is no per-microbatch gradient stream to
+                // shard, so silently ignoring [dist] would lie to the user
+                bail!(
+                    "[dist] is only supported on the coordinator path \
+                     (got path = \"fused\" with dp_workers = {} / sim = {})",
+                    cfg.dist.dp_workers,
+                    cfg.dist.sim
+                );
+            }
+            info!(
+                "dist: simulated data-parallel cluster — {} worker(s), min {}, \
+                 deterministic tree all-reduce",
+                cfg.dist.dp_workers.max(1),
+                cfg.dist.round_cfg().min_workers
+            );
+            Some(cfg.dist.coordinator())
+        } else {
+            None
+        };
+
         Ok(Trainer {
             engine,
             eval_seed: cfg.corpus_seed ^ 0xeeee,
@@ -164,7 +197,13 @@ impl Trainer {
             profile: Profile::new(),
             rng,
             cos_log: Vec::new(),
+            dist,
         })
+    }
+
+    /// Round log of the simulated DP cluster (empty when disabled).
+    pub fn round_log(&self) -> &[RoundRecord] {
+        self.dist.as_ref().map(|c| c.log.as_slice()).unwrap_or(&[])
     }
 
     fn model_batch_tokens(&self) -> u64 {
@@ -190,6 +229,21 @@ impl Trainer {
     // ------------------------------------------------- coordinator path ---
     fn step_coordinator(&mut self, lr: f32) -> Result<f32> {
         let micro = self.cfg.grad_accum * self.cfg.workers;
+        let (loss, grads) = if self.dist.is_some() {
+            self.accumulate_dist(micro)?
+        } else {
+            self.accumulate_serial(micro)?
+        };
+        self.optimizer_update(&grads, lr)?;
+        Ok(loss)
+    }
+
+    /// Serial microbatch loop: the historical accumulation (left fold in
+    /// microbatch order), kept as the non-dist baseline.
+    fn accumulate_serial(&mut self, micro: usize) -> Result<(f32, Vec<Mat>)> {
+        // compile once up front; the loop then uses the shared-reference
+        // entry point, keeping exec-stat accounting in `run_prepared` only
+        self.engine.prepare("grad_step")?;
         let mut loss_acc = 0.0f32;
         let mut grads: Vec<Mat> = Vec::new();
         for _ in 0..micro {
@@ -200,7 +254,7 @@ impl Trainer {
             inputs.push(&tokens);
             inputs.extend(self.params.iter());
             let t0 = Timer::start();
-            let outs = self.engine.run_refs("grad_step", &inputs)?;
+            let outs = self.engine.run_prepared("grad_step", &inputs)?;
             self.profile.add("grad_exec", t0.secs());
             loss_acc += outs[0].scalar()?;
             // all-reduce: average microbatch grads
@@ -218,7 +272,34 @@ impl Trainer {
                 *g = g.scale(1.0 / micro as f32);
             }
         }
+        Ok((loss_acc / micro as f32, grads))
+    }
 
+    /// Data-parallel round: shard the same microbatch stream over the
+    /// logical DP workers, execute concurrently, tree-reduce. The token
+    /// stream is drawn serially up front — identical batcher state to the
+    /// serial path — and the reduced bits are invariant across
+    /// `dp_workers` and pool widths (`rust/tests/dist_parity.rs`).
+    fn accumulate_dist(&mut self, micro: usize) -> Result<(f32, Vec<Mat>)> {
+        let t_data = Timer::start();
+        let token_batches: Vec<HostTensor> = (0..micro).map(|_| self.tokens_input()).collect();
+        self.profile.add("data", t_data.secs());
+        self.engine.prepare("grad_step")?;
+        let mut coord = self.dist.take().expect("dist coordinator present");
+        let out = {
+            let src = EngineGradSource { engine: &self.engine, params: &self.params };
+            dist::run_round(&mut coord, &src, &token_batches)
+        };
+        self.dist = Some(coord);
+        let out = out?;
+        self.profile.add("dp_grad_exec", out.grad_secs);
+        self.profile.add("dp_reduce", out.reduce_secs);
+        Ok((out.loss, out.grads))
+    }
+
+    /// Refresh + per-layer optimizer update on already-reduced gradients
+    /// (shared by the serial and dist paths).
+    fn optimizer_update(&mut self, grads: &[Mat], lr: f32) -> Result<()> {
         // refresh schedule (paper Alg. 4 line 5: t == 1 or t mod K == 0).
         // Seeds are drawn on the coordinator thread, in parameter order,
         // for exactly the slots the serial loop refreshed — the RNG stream
@@ -303,7 +384,7 @@ impl Trainer {
             }
         }
         self.profile.add("opt_update", t0.secs());
-        Ok(loss_acc / micro as f32)
+        Ok(())
     }
 
     // ------------------------------------------------------- fused path ---
@@ -449,6 +530,12 @@ impl Trainer {
             stream.extend_from_slice(&u64_to_chunks(w));
         }
         ck.insert("trainer.stream", vec![stream.len()], stream);
+        // round state rides next to the stream position, so a resumed DP
+        // run continues the same round counter / membership ledger
+        if let Some(coord) = &self.dist {
+            let snap = coord.snapshot();
+            ck.insert("trainer.dist", vec![snap.len()], snap);
+        }
         ck
     }
 
@@ -499,6 +586,27 @@ impl Trainer {
                 bail!("trainer.stream blob has {} words, expected 16", data.len());
             }
         }
+        // round state (present only for DP checkpoints). A non-dist
+        // trainer ignores it; a dist trainer missing the blob keeps its
+        // fresh coordinator (pre-dist checkpoints stay loadable).
+        if let Some((_, data)) = ck.tensors.get("trainer.dist") {
+            if self.cfg.dist.enabled() {
+                let coord = RoundCoordinator::restore(self.cfg.dist.round_cfg(), data)?;
+                // the snapshot's membership would silently override the
+                // configured cluster size — same silently-ignored-config
+                // class as [dist]+fused, so reject the mismatch instead
+                let want = self.cfg.dist.dp_workers.max(1);
+                if coord.alive() != want {
+                    bail!(
+                        "checkpoint restores a {}-worker DP cluster but the \
+                         config asks for dp_workers = {want}; resume with the \
+                         checkpoint's worker count",
+                        coord.alive()
+                    );
+                }
+                self.dist = Some(coord);
+            }
+        }
         Ok(())
     }
 
@@ -506,6 +614,31 @@ impl Trainer {
     /// footprint, coordinator path).
     pub fn state_elems(&self) -> u64 {
         self.slots.iter().map(|s| s.state_elems()).sum()
+    }
+}
+
+/// The PJRT-backed [`GradSource`]: one `grad_step` execution per
+/// microbatch through the shared-reference engine entry point (the same
+/// pattern as the eval fan-out). Pure in `(index, tokens)`: the executable
+/// and parameters are fixed for the whole round.
+struct EngineGradSource<'a> {
+    engine: &'a Engine,
+    params: &'a [HostTensor],
+}
+
+impl GradSource for EngineGradSource<'_> {
+    fn micro_grad(&self, _index: usize, tokens: &HostTensor) -> Result<(f32, Vec<Mat>)> {
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(tokens);
+        inputs.extend(self.params.iter());
+        let outs = self.engine.run_prepared("grad_step", &inputs)?;
+        let mut it = outs.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("grad_step returned no outputs"))?
+            .scalar()?;
+        let grads = it.map(host_to_mat).collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
     }
 }
 
@@ -586,5 +719,34 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
         trainer.engine.compile_secs,
         trainer.profile.report()
     );
-    metrics.finish(&cfg.optimizer, vec![])
+    // DP round telemetry → summary.json + the Summary round log
+    let rounds = trainer.round_log();
+    let mut extra: Vec<(&str, Json)> = Vec::new();
+    if !rounds.is_empty() {
+        extra.push(("dp_rounds", num(rounds.len() as f64)));
+        extra.push((
+            "dp_requeues",
+            num(rounds.iter().map(|r| r.requeues).sum::<u64>() as f64),
+        ));
+        extra.push((
+            "dp_stragglers",
+            num(rounds.iter().map(|r| r.stragglers).sum::<u64>() as f64),
+        ));
+        // per-shard time, not the fan-out wall clock: RoundRecord.grad_secs
+        // is the round's slowest *shard*; the wall-clock grad phase is the
+        // `dp_grad_exec` profile total (the quantity EXPERIMENTS §fig7 uses)
+        extra.push((
+            "dp_shard_secs_max",
+            num(rounds.iter().map(|r| r.grad_secs).sum::<f64>()),
+        ));
+        info!(
+            "dist: {} round(s), {} requeue(s), {} straggler event(s)",
+            rounds.len(),
+            rounds.iter().map(|r| r.requeues).sum::<u64>(),
+            rounds.iter().map(|r| r.stragglers).sum::<u64>()
+        );
+    }
+    let mut summary = metrics.finish(&cfg.optimizer, extra)?;
+    summary.rounds = trainer.round_log().to_vec();
+    Ok(summary)
 }

@@ -1,0 +1,195 @@
+//! Simulated data-parallel training cluster — the subsystem that replaces
+//! the serial `grad_accum × workers` microbatch loop with N logical DP
+//! workers, a fixed-topology tree all-reduce, and a Psyche-style round
+//! state machine (SNIPPETS §1).
+//!
+//! * [`worker`] — logical workers over disjoint microbatch shards,
+//!   executed concurrently on the persistent `util::pool`; gradient
+//!   production is pluggable ([`worker::GradSource`]) so the subsystem
+//!   runs against the PJRT engine *and* artifact-free synthetic sources.
+//! * [`reduce`] — the order-deterministic binary-tree all-reduce:
+//!   accumulation is bitwise identical for every worker count and pool
+//!   width (the blocker ROADMAP named for fanning out the grad path).
+//! * [`round`] — tick-driven round lifecycle (`WaitingForMembers →
+//!   Warmup → RoundTrain → Reduce → Cooldown`) with membership, straggler
+//!   accounting, mid-round requeue, and a checkpointable snapshot.
+//!
+//! The trainer enables it via the `[dist]` config section /
+//! `--dp-workers` / `--dist-sim`; `rust/tests/dist_parity.rs` pins the
+//! bitwise contract and `benches/fig7_dp_scaling.rs` measures the
+//! grad-phase speedup.
+
+pub mod reduce;
+pub mod round;
+pub mod worker;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+use crate::util::Timer;
+
+pub use round::{Phase, RoundCfg, RoundCoordinator, RoundRecord, WorkerHealth};
+pub use worker::{GradSource, SyntheticGradSource};
+
+/// `[dist]` config section: the simulated data-parallel cluster.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Logical DP workers sharding each round's microbatch stream.
+    pub dp_workers: usize,
+    /// Force the round-coordinator path even at `dp_workers = 1` (the
+    /// `--dist-sim` flag) — that makes dp=1 runs bitwise comparable to
+    /// dp>1 runs, which use the same tree reduce.
+    pub sim: bool,
+    /// Members required before training starts (≤ dp_workers).
+    pub min_workers: usize,
+    pub warmup_ticks: u32,
+    pub cooldown_ticks: u32,
+    /// Straggler threshold: shard time > factor × round median.
+    pub straggler_factor: f64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            dp_workers: 1,
+            sim: false,
+            min_workers: 1,
+            warmup_ticks: 1,
+            cooldown_ticks: 1,
+            straggler_factor: 3.0,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Whether the trainer routes steps through the round coordinator.
+    pub fn enabled(&self) -> bool {
+        self.sim || self.dp_workers > 1
+    }
+
+    pub fn round_cfg(&self) -> RoundCfg {
+        RoundCfg {
+            min_workers: self.min_workers.clamp(1, self.dp_workers.max(1)),
+            warmup_ticks: self.warmup_ticks,
+            cooldown_ticks: self.cooldown_ticks,
+            straggler_factor: self.straggler_factor,
+        }
+    }
+
+    /// A fresh coordinator with workers `0..dp_workers` joined (still in
+    /// `WaitingForMembers`; the first round ticks through Warmup).
+    pub fn coordinator(&self) -> RoundCoordinator {
+        let mut c = RoundCoordinator::new(self.round_cfg());
+        for w in 0..self.dp_workers.max(1) {
+            c.join(w);
+        }
+        c
+    }
+}
+
+/// One finished round's reduced result + timing.
+#[derive(Debug)]
+pub struct RoundOutput {
+    /// Mean microbatch loss.
+    pub loss: f32,
+    /// Mean gradients, one per parameter.
+    pub grads: Vec<Mat>,
+    /// Gradient-phase wall clock (the worker fan-out).
+    pub grad_secs: f64,
+    pub reduce_secs: f64,
+}
+
+/// Drive one full data-parallel round: advance the state machine to
+/// `RoundTrain`, shard `tokens` over the alive members, fan the shard
+/// executions out across the pool, tree-reduce the results, and walk the
+/// machine through `Reduce → Cooldown`.
+///
+/// This is the one round implementation — the trainer, the parity tests,
+/// and the fig7 bench all call it (with different [`GradSource`]s), so
+/// the determinism contract is pinned on exactly the code that trains.
+pub fn run_round<S: GradSource>(
+    coord: &mut RoundCoordinator,
+    src: &S,
+    tokens: &[HostTensor],
+) -> Result<RoundOutput> {
+    if coord.mid_round() {
+        // restored from a mid-round checkpoint: assignments (with any
+        // requeue adjustments) survived; gradients did not, so re-arm and
+        // re-execute the same round
+        coord.resume_round(tokens.len())?;
+    } else {
+        coord.advance_to_train()?;
+        coord.begin_round(tokens.len())?;
+    }
+    let assignments = coord.assignments().to_vec();
+
+    let t0 = Timer::start();
+    let outs = worker::run_workers(src, &assignments, tokens);
+    let grad_secs = t0.secs();
+
+    let mut nodes = Vec::new();
+    for (w, out) in outs.into_iter().enumerate() {
+        let out = out.with_context(|| format!("dp worker {w}"))?;
+        coord.complete(w, out.secs);
+        nodes.extend(out.nodes);
+    }
+    coord.tick(); // RoundTrain → Reduce
+
+    let t1 = Timer::start();
+    let root = reduce::combine(nodes)
+        .ok_or_else(|| anyhow!("round produced no gradient nodes"))?;
+    let reduce_secs = t1.secs();
+    coord.finish_reduce(reduce_secs);
+    coord.tick(); // Reduce → Cooldown
+
+    let scale = 1.0 / tokens.len() as f32;
+    Ok(RoundOutput {
+        loss: root.loss * scale,
+        grads: root.grads.into_iter().map(|g| g.scale(scale)).collect(),
+        grad_secs,
+        reduce_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_enable_logic() {
+        let mut c = DistConfig::default();
+        assert!(!c.enabled(), "defaults must leave the serial path alone");
+        c.dp_workers = 4;
+        assert!(c.enabled());
+        c.dp_workers = 1;
+        c.sim = true;
+        assert!(c.enabled(), "--dist-sim forces the coordinator path");
+    }
+
+    #[test]
+    fn round_cfg_clamps_min_workers() {
+        let c = DistConfig { dp_workers: 2, min_workers: 9, ..DistConfig::default() };
+        assert_eq!(c.round_cfg().min_workers, 2);
+        let c = DistConfig { dp_workers: 4, min_workers: 0, ..DistConfig::default() };
+        assert_eq!(c.round_cfg().min_workers, 1);
+    }
+
+    #[test]
+    fn run_round_cycles_the_machine_and_logs() {
+        let cfg = DistConfig { dp_workers: 3, ..DistConfig::default() };
+        let mut coord = cfg.coordinator();
+        let src = SyntheticGradSource { shapes: vec![(4, 4)], work: 0 };
+        let tokens: Vec<HostTensor> =
+            (0..6).map(|i| HostTensor::i32(vec![2], vec![i, i + 1])).collect();
+        let out1 = run_round(&mut coord, &src, &tokens).unwrap();
+        let out2 = run_round(&mut coord, &src, &tokens).unwrap();
+        assert_eq!(coord.round, 2);
+        assert_eq!(coord.log.len(), 2);
+        assert_eq!(coord.log[0].micro, 6);
+        assert_eq!(coord.log[0].workers, 3);
+        // same tokens → same reduced bits, round after round
+        assert_eq!(out1.loss.to_bits(), out2.loss.to_bits());
+        assert_eq!(out1.grads[0].data, out2.grads[0].data);
+    }
+}

@@ -1,0 +1,303 @@
+//! Order-deterministic tree all-reduce for gradients and losses.
+//!
+//! # The problem
+//!
+//! Floating-point addition is commutative but not associative: summing the
+//! same microbatch gradients in a different *grouping* produces different
+//! bits. The serial accumulation loop fixes one grouping (left fold in
+//! microbatch order); a data-parallel fan-out that let each worker fold
+//! its own shard and then folded the shard sums would fix a *different*
+//! grouping per worker count — exactly the blocker ROADMAP named for
+//! fanning out the gradient path.
+//!
+//! # The fix: one canonical tree, independent of the sharding
+//!
+//! Reduction is defined over **global microbatch indices**, not workers.
+//! The canonical tree is the segment-tree bracketing of `[0, M)`: a node
+//! covers an aligned span `[lo, lo + 2^k)` with `lo % 2^k == 0`, and its
+//! value is (left half) ⊕ (right half). Every worker builds the maximal
+//! aligned subtrees that fit inside the indices it executed
+//! ([`TreeAccum`], an incremental binary-counter merge), and the
+//! coordinator completes the upper levels ([`combine`]): closure under
+//! aligned-sibling merges, then a right-to-left fold of the remaining
+//! maximal blocks (the binary decomposition of `M`).
+//!
+//! Because alignment is a pure function of the global index, **any**
+//! contiguous-or-not partition of `[0, M)` across any number of workers
+//! produces the identical node set, hence the identical additions in the
+//! identical grouping, hence a bitwise-identical root — including under
+//! mid-round straggler requeues (`rust/tests/dist_parity.rs`). Per-element
+//! merges go through `Mat::ema_(1.0, ·, 1.0)` (one addition per element,
+//! width-invariant per the `linalg` determinism contract), so the result
+//! is also bitwise identical at every pool width.
+//!
+//! Memory: a worker holds at most `log2(shard) + 1` in-flight nodes — each
+//! a full gradient set — instead of one node per microbatch.
+
+use crate::linalg::Mat;
+
+/// Payload that can be summed pairwise into tree nodes.
+pub trait Merge {
+    /// `self ← self ⊕ other` (left operand stays `self`).
+    fn merge(&mut self, other: Self);
+}
+
+impl Merge for f32 {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+/// One microbatch's contribution: scalar loss + per-parameter gradients.
+#[derive(Debug, Clone)]
+pub struct GradNode {
+    pub loss: f32,
+    pub grads: Vec<Mat>,
+}
+
+impl Merge for GradNode {
+    fn merge(&mut self, other: Self) {
+        assert_eq!(
+            self.grads.len(),
+            other.grads.len(),
+            "gradient sets must have the same arity"
+        );
+        self.loss += other.loss;
+        for (g, o) in self.grads.iter_mut().zip(&other.grads) {
+            // 1.0*x + 1.0*y is exactly x + y in IEEE-754; elementwise, so
+            // bitwise width-invariant (README §Determinism contract)
+            g.ema_(1.0, o, 1.0);
+        }
+    }
+}
+
+/// A reduced subtree: the sum of leaves `[lo, lo + len)`.
+#[derive(Debug, Clone)]
+pub struct Node<T> {
+    pub lo: usize,
+    pub len: usize,
+    pub value: T,
+}
+
+impl<T> Node<T> {
+    /// Whether `self` and `right` are the two children of an aligned
+    /// parent node (same size, adjacent, parent-aligned start).
+    fn sibling_of(&self, right: &Node<T>) -> bool {
+        self.len == right.len
+            && self.lo + self.len == right.lo
+            && self.lo % (2 * self.len) == 0
+    }
+}
+
+/// Incremental aligned-subtree builder: push leaves in increasing global
+/// index order; adjacent aligned siblings merge eagerly, so the stack
+/// never holds more than `log2(pushed) + 1` nodes.
+#[derive(Debug)]
+pub struct TreeAccum<T> {
+    nodes: Vec<Node<T>>,
+}
+
+impl<T: Merge> Default for TreeAccum<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Merge> TreeAccum<T> {
+    pub fn new() -> Self {
+        TreeAccum { nodes: Vec::new() }
+    }
+
+    /// Add leaf `idx`. Indices must be strictly increasing per accumulator
+    /// (a worker sorts its shard before executing — `worker::run_shard`).
+    pub fn push(&mut self, idx: usize, value: T) {
+        if let Some(last) = self.nodes.last() {
+            assert!(
+                last.lo + last.len <= idx,
+                "tree leaves must arrive in increasing index order"
+            );
+        }
+        self.push_node(Node { lo: idx, len: 1, value });
+    }
+
+    /// Add an already-reduced aligned subtree (the coordinator feeds the
+    /// workers' nodes through this in [`combine`]).
+    fn push_node(&mut self, node: Node<T>) {
+        self.nodes.push(node);
+        while self.nodes.len() >= 2 {
+            let k = self.nodes.len();
+            if !self.nodes[k - 2].sibling_of(&self.nodes[k - 1]) {
+                break;
+            }
+            let right = self.nodes.pop().expect("len >= 2");
+            let left = self.nodes.last_mut().expect("len >= 1");
+            left.value.merge(right.value);
+            left.len *= 2;
+        }
+    }
+
+    /// The maximal aligned subtree roots built so far, in index order.
+    pub fn into_nodes(self) -> Vec<Node<T>> {
+        self.nodes
+    }
+}
+
+/// Coordinator side: complete the canonical tree from every worker's
+/// subtree roots and return the root value.
+///
+/// The parts may arrive in any order and any grouping (they are sorted
+/// here); the stack merge reaches the unique closure — the binary
+/// decomposition of `[0, M)` — and the final right-to-left fold over those
+/// maximal blocks is fixed by `M` alone. Returns `None` for an empty
+/// round.
+pub fn combine<T: Merge>(mut parts: Vec<Node<T>>) -> Option<T> {
+    parts.sort_by_key(|n| n.lo);
+    let mut acc = TreeAccum::new();
+    for part in parts {
+        if let Some(last) = acc.nodes.last() {
+            assert!(
+                last.lo + last.len <= part.lo,
+                "worker subtrees must cover disjoint index spans"
+            );
+        }
+        acc.push_node(part);
+    }
+    // right-to-left fold of the leftover maximal blocks:
+    // b0 ⊕ (b1 ⊕ (b2 ⊕ …)) — one fixed grouping for the ragged tail
+    let mut blocks = acc.nodes;
+    while blocks.len() >= 2 {
+        let right = blocks.pop().expect("len >= 2");
+        blocks.last_mut().expect("len >= 1").value.merge(right.value);
+    }
+    blocks.pop().map(|n| n.value)
+}
+
+/// Canonical tree sum of a dense slice — the serial reference the
+/// distributed path must match bitwise (also used by the unit tests).
+pub fn tree_sum_f32(xs: &[f32]) -> Option<f32> {
+    let mut acc = TreeAccum::new();
+    for (i, &x) in xs.iter().enumerate() {
+        acc.push(i, x);
+    }
+    combine(acc.into_nodes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    /// Split [0, m) into `w` contiguous shards (the worker assignment
+    /// geometry) and reduce through the two-level worker/coordinator path.
+    fn sharded_sum(xs: &[f32], w: usize) -> f32 {
+        let m = xs.len();
+        let mut parts = Vec::new();
+        for s in 0..w {
+            let (lo, hi) = (s * m / w, (s + 1) * m / w);
+            let mut acc = TreeAccum::new();
+            for i in lo..hi {
+                acc.push(i, xs[i]);
+            }
+            parts.extend(acc.into_nodes());
+        }
+        combine(parts).expect("non-empty")
+    }
+
+    #[test]
+    fn bitwise_invariant_across_worker_counts() {
+        // values at wildly different magnitudes expose any grouping change
+        let mut rng = Pcg::seeded(0xd157_0001);
+        for m in [1usize, 2, 3, 5, 7, 8, 12, 16, 23, 64, 100] {
+            let xs: Vec<f32> = (0..m)
+                .map(|i| rng.normal() * 10f32.powi((i % 9) as i32 - 4))
+                .collect();
+            let reference = tree_sum_f32(&xs).unwrap();
+            for w in 1..=m.min(9) {
+                let got = sharded_sum(&xs, w);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "m={m} w={w}: {got} vs {reference}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invariant_under_non_contiguous_requeue() {
+        // worker 0 drops after 2 leaves; its remainder is requeued to the
+        // others — node set (and root bits) must not change
+        let xs: Vec<f32> = (0..11).map(|i| (i as f32 + 0.5) * 1e3).collect();
+        let reference = tree_sum_f32(&xs).unwrap();
+        let shards: Vec<Vec<usize>> = vec![
+            vec![0, 1],          // worker 0 before dropping
+            vec![4, 5, 6, 2],    // worker 1 + requeued index 2
+            vec![7, 8, 9, 10, 3], // worker 2 + requeued index 3
+        ];
+        let mut parts = Vec::new();
+        for shard in &shards {
+            let mut order = shard.clone();
+            order.sort_unstable();
+            let mut acc = TreeAccum::new();
+            for &i in &order {
+                acc.push(i, xs[i]);
+            }
+            parts.extend(acc.into_nodes());
+        }
+        let got = combine(parts).unwrap();
+        assert_eq!(got.to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn accumulator_stack_stays_logarithmic() {
+        let mut acc = TreeAccum::new();
+        for i in 0..1024 {
+            acc.push(i, 1.0f32);
+            assert!(acc.nodes.len() <= 11, "stack grew to {}", acc.nodes.len());
+        }
+        let nodes = acc.into_nodes();
+        assert_eq!(nodes.len(), 1, "power-of-two input must fully collapse");
+        assert_eq!(nodes[0].len, 1024);
+    }
+
+    #[test]
+    fn ragged_tail_decomposes_into_binary_blocks() {
+        let mut acc = TreeAccum::new();
+        for i in 0..13 {
+            acc.push(i, 0.0f32);
+        }
+        let spans: Vec<(usize, usize)> =
+            acc.into_nodes().iter().map(|n| (n.lo, n.len)).collect();
+        assert_eq!(spans, vec![(0, 8), (8, 4), (12, 1)], "13 = 8 + 4 + 1");
+    }
+
+    #[test]
+    fn grad_nodes_merge_losses_and_mats() {
+        let a = GradNode {
+            loss: 1.5,
+            grads: vec![Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0])],
+        };
+        let b = GradNode {
+            loss: 0.5,
+            grads: vec![Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0])],
+        };
+        let mut m = a;
+        m.merge(b);
+        assert_eq!(m.loss, 2.0);
+        assert_eq!(m.grads[0].data, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn empty_round_is_none() {
+        assert_eq!(tree_sum_f32(&[]), None);
+        assert!(combine::<f32>(Vec::new()).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "increasing index order")]
+    fn out_of_order_leaves_are_rejected() {
+        let mut acc = TreeAccum::new();
+        acc.push(3, 1.0f32);
+        acc.push(1, 1.0f32);
+    }
+}

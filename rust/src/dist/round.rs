@@ -1,0 +1,817 @@
+//! Psyche-style round state machine for the simulated data-parallel
+//! cluster (SNIPPETS §1): explicit membership, a tick-driven phase cycle,
+//! and per-round worker health / straggler accounting.
+//!
+//! ```text
+//!              join ≥ min_workers            warmup_ticks elapse
+//! WaitingForMembers ────────────▶ Warmup ────────────────▶ RoundTrain
+//!        ▲                          │ members < min            │ all
+//!        │                          ▼                          │ shards
+//!        │◀───────────────── WaitingForMembers                 │ done
+//!        │                                                     ▼
+//!        │   members < min   Cooldown ◀──────────────────── Reduce
+//!        └───────────────────── │        reduce finished
+//!                               │ cooldown_ticks elapse
+//!                               ▼
+//!                          RoundTrain (next round)
+//! ```
+//!
+//! Ticks are *logical* (the trainer ticks between phases of one optimizer
+//! step; a real deployment would tick on a timer), so the machine is fully
+//! deterministic and unit-testable. Departing mid-round requeues the
+//! worker's unfinished microbatch indices to the survivors — the tree
+//! reduce in [`super::reduce`] is global-index aligned, so a requeue never
+//! changes the reduced bits.
+//!
+//! The whole machine serializes to a flat f32 blob ([`snapshot`] /
+//! [`restore`]) so checkpoints can carry round state next to the RNG /
+//! data-stream position, including mid-round (assignments + completion
+//! flags survive).
+//!
+//! [`snapshot`]: RoundCoordinator::snapshot
+//! [`restore`]: RoundCoordinator::restore
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::{chunks_to_u64, u64_to_chunks};
+use crate::util::median;
+
+/// Phase of the current round (the Psyche lifecycle, minus the witness
+/// machinery that needs a real network).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    WaitingForMembers,
+    Warmup,
+    RoundTrain,
+    Reduce,
+    Cooldown,
+}
+
+impl Phase {
+    fn index(self) -> u32 {
+        match self {
+            Phase::WaitingForMembers => 0,
+            Phase::Warmup => 1,
+            Phase::RoundTrain => 2,
+            Phase::Reduce => 3,
+            Phase::Cooldown => 4,
+        }
+    }
+
+    fn from_index(i: u32) -> Result<Self> {
+        Ok(match i {
+            0 => Phase::WaitingForMembers,
+            1 => Phase::Warmup,
+            2 => Phase::RoundTrain,
+            3 => Phase::Reduce,
+            4 => Phase::Cooldown,
+            _ => bail!("invalid phase index {i}"),
+        })
+    }
+}
+
+/// Tunables for the round machine (from `[dist]` via `DistConfig`).
+#[derive(Debug, Clone)]
+pub struct RoundCfg {
+    /// Members required to enter / stay in the training cycle.
+    pub min_workers: usize,
+    /// Logical ticks spent in Warmup before the first round.
+    pub warmup_ticks: u32,
+    /// Logical ticks spent in Cooldown between rounds.
+    pub cooldown_ticks: u32,
+    /// A worker is logged as a straggler when its shard wall-clock exceeds
+    /// this multiple of the round's median shard time.
+    pub straggler_factor: f64,
+}
+
+impl Default for RoundCfg {
+    fn default() -> Self {
+        RoundCfg {
+            min_workers: 1,
+            warmup_ticks: 1,
+            cooldown_ticks: 1,
+            straggler_factor: 3.0,
+        }
+    }
+}
+
+/// Per-member health ledger, kept across rounds.
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    pub id: usize,
+    pub alive: bool,
+    /// Round counter at join time (0 = founding member).
+    pub joined_round: u64,
+    pub rounds_done: u64,
+    pub micro_done: u64,
+    /// Microbatches this worker picked up from departed members.
+    pub requeued: u64,
+    /// Rounds where this worker exceeded the straggler threshold.
+    pub straggles: u64,
+}
+
+/// One finished round, surfaced in `Summary.rounds`.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Members that executed a non-empty shard.
+    pub workers: usize,
+    pub micro: usize,
+    /// Microbatches moved to survivors by mid-round departures.
+    pub requeues: u64,
+    pub stragglers: u64,
+    /// Gradient-phase wall clock (slowest shard).
+    pub grad_secs: f64,
+    pub reduce_secs: f64,
+    /// Slowest ÷ mean shard time over non-empty shards (1.0 = balanced).
+    pub imbalance: f64,
+}
+
+#[derive(Debug)]
+pub struct RoundCoordinator {
+    pub cfg: RoundCfg,
+    pub phase: Phase,
+    /// 1-based once training starts; 0 while waiting/warming up.
+    pub round: u64,
+    ticks_in_phase: u32,
+    pub members: Vec<WorkerHealth>,
+    /// Per-member global microbatch indices for the active round (empty
+    /// between rounds and for dead / late-joining members).
+    assignment: Vec<Vec<usize>>,
+    shard_done: Vec<bool>,
+    shard_secs: Vec<f64>,
+    round_micro: usize,
+    requeues_this_round: u64,
+    reduce_done: bool,
+    reduce_secs: f64,
+    pub log: Vec<RoundRecord>,
+}
+
+impl RoundCoordinator {
+    pub fn new(cfg: RoundCfg) -> Self {
+        RoundCoordinator {
+            cfg,
+            phase: Phase::WaitingForMembers,
+            round: 0,
+            ticks_in_phase: 0,
+            members: Vec::new(),
+            assignment: Vec::new(),
+            shard_done: Vec::new(),
+            shard_secs: Vec::new(),
+            round_micro: 0,
+            requeues_this_round: 0,
+            reduce_done: false,
+            reduce_secs: 0.0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Register a worker. Joining mid-round is allowed but the member only
+    /// receives a shard from the next `begin_round` on.
+    pub fn join(&mut self, id: usize) {
+        if self.members.iter().any(|m| m.id == id && m.alive) {
+            return;
+        }
+        self.members.push(WorkerHealth {
+            id,
+            alive: true,
+            joined_round: self.round,
+            rounds_done: 0,
+            micro_done: 0,
+            requeued: 0,
+            straggles: 0,
+        });
+        self.assignment.push(Vec::new());
+        self.shard_done.push(true);
+        self.shard_secs.push(0.0);
+    }
+
+    /// Remove a worker. If it departs mid-`RoundTrain` with an unfinished
+    /// shard, its indices are requeued round-robin (member order, index
+    /// order) to the surviving members — deterministically, and without
+    /// changing the reduced bits (tree reduce is index-aligned).
+    pub fn leave(&mut self, id: usize) {
+        let Some(idx) = self.members.iter().position(|m| m.id == id && m.alive) else {
+            return;
+        };
+        self.members[idx].alive = false;
+        if self.phase == Phase::RoundTrain && !self.shard_done[idx] {
+            if !self.members.iter().any(|m| m.alive) {
+                // No survivor to take the shard: keep it assigned and not
+                // done, so the round visibly stalls (all_done stays false)
+                // instead of reducing a silent subset of the microbatches.
+                return;
+            }
+            let orphaned = std::mem::take(&mut self.assignment[idx]);
+            self.shard_done[idx] = true;
+            let survivors: Vec<usize> = self
+                .members
+                .iter()
+                .enumerate()
+                .filter(|(i, m)| m.alive && !self.shard_done[*i])
+                .map(|(i, _)| i)
+                .collect();
+            if survivors.is_empty() {
+                // everyone else already finished: hand the orphans to the
+                // first alive member (it re-runs a second, merged shard —
+                // reverse its earlier credit so complete() counts the
+                // round and its own microbatches exactly once)
+                if let Some(w) = self.members.iter().position(|m| m.alive) {
+                    if self.shard_done[w] && !self.assignment[w].is_empty() {
+                        self.members[w].rounds_done -= 1;
+                        self.members[w].micro_done -= self.assignment[w].len() as u64;
+                    }
+                    self.requeues_this_round += orphaned.len() as u64;
+                    self.members[w].requeued += orphaned.len() as u64;
+                    self.assignment[w].extend(&orphaned);
+                    self.shard_done[w] = false;
+                }
+            } else {
+                for (k, &mi) in orphaned.iter().enumerate() {
+                    let w = survivors[k % survivors.len()];
+                    self.requeues_this_round += 1;
+                    self.members[w].requeued += 1;
+                    self.assignment[w].push(mi);
+                }
+            }
+        }
+    }
+
+    pub fn alive(&self) -> usize {
+        self.members.iter().filter(|m| m.alive).count()
+    }
+
+    /// Advance the state machine one logical tick. Phase-exit conditions
+    /// are re-checked every tick; the new (possibly unchanged) phase is
+    /// returned.
+    pub fn tick(&mut self) -> Phase {
+        self.ticks_in_phase += 1;
+        match self.phase {
+            Phase::WaitingForMembers => {
+                if self.alive() >= self.cfg.min_workers {
+                    self.enter(Phase::Warmup);
+                }
+            }
+            Phase::Warmup => {
+                if self.alive() < self.cfg.min_workers {
+                    self.enter(Phase::WaitingForMembers);
+                } else if self.ticks_in_phase >= self.cfg.warmup_ticks {
+                    self.round += 1;
+                    self.enter(Phase::RoundTrain);
+                }
+            }
+            Phase::RoundTrain => {
+                if self.round_micro > 0 && self.shard_done.iter().all(|&d| d) {
+                    self.enter(Phase::Reduce);
+                }
+            }
+            Phase::Reduce => {
+                if self.reduce_done {
+                    self.record_round();
+                    self.enter(Phase::Cooldown);
+                }
+            }
+            Phase::Cooldown => {
+                if self.ticks_in_phase >= self.cfg.cooldown_ticks {
+                    if self.alive() < self.cfg.min_workers {
+                        self.enter(Phase::WaitingForMembers);
+                    } else {
+                        self.round += 1;
+                        self.enter(Phase::RoundTrain);
+                    }
+                }
+            }
+        }
+        self.phase
+    }
+
+    fn enter(&mut self, phase: Phase) {
+        self.phase = phase;
+        self.ticks_in_phase = 0;
+    }
+
+    /// Tick until the machine sits in `RoundTrain` with no active
+    /// assignment (ready for `begin_round`). Errors when membership can't
+    /// satisfy `min_workers` (the machine would spin in waiting forever).
+    pub fn advance_to_train(&mut self) -> Result<()> {
+        for _ in 0..(self.cfg.warmup_ticks + self.cfg.cooldown_ticks + 4) {
+            if self.phase == Phase::RoundTrain && self.round_micro == 0 {
+                return Ok(());
+            }
+            if self.phase == Phase::WaitingForMembers
+                && self.alive() < self.cfg.min_workers
+            {
+                bail!(
+                    "round {}: {} alive worker(s) < min_workers {}",
+                    self.round,
+                    self.alive(),
+                    self.cfg.min_workers
+                );
+            }
+            self.tick();
+        }
+        bail!("round machine failed to reach RoundTrain (phase {:?})", self.phase)
+    }
+
+    /// Partition `micro` global microbatch indices contiguously over the
+    /// alive members (member order) and arm the round.
+    pub fn begin_round(&mut self, micro: usize) -> Result<()> {
+        if self.phase != Phase::RoundTrain {
+            bail!("begin_round in phase {:?}", self.phase);
+        }
+        if self.round_micro != 0 {
+            bail!("round {} already armed", self.round);
+        }
+        if micro == 0 {
+            bail!("a round needs at least one microbatch");
+        }
+        let alive: Vec<usize> = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.alive)
+            .map(|(i, _)| i)
+            .collect();
+        if alive.is_empty() {
+            bail!("no alive members");
+        }
+        let w = alive.len();
+        for (k, &mi) in alive.iter().enumerate() {
+            let (lo, hi) = (k * micro / w, (k + 1) * micro / w);
+            self.assignment[mi] = (lo..hi).collect();
+            self.shard_done[mi] = lo == hi;
+            self.shard_secs[mi] = 0.0;
+        }
+        for (i, m) in self.members.iter().enumerate() {
+            if !m.alive {
+                self.assignment[i].clear();
+                self.shard_done[i] = true;
+                self.shard_secs[i] = 0.0;
+            }
+        }
+        self.round_micro = micro;
+        self.requeues_this_round = 0;
+        self.reduce_done = false;
+        self.reduce_secs = 0.0;
+        Ok(())
+    }
+
+    /// Whether the machine holds an armed, unfinished round (the state a
+    /// mid-round checkpoint restores into).
+    pub fn mid_round(&self) -> bool {
+        self.phase == Phase::RoundTrain && self.round_micro != 0
+    }
+
+    /// Re-arm a restored mid-round coordinator for re-execution
+    /// (`run_round` calls this instead of `begin_round` when
+    /// [`mid_round`](Self::mid_round) is true). Shard *assignments* —
+    /// including any requeue adjustments — survive a checkpoint, but the
+    /// executed gradients do not, so every shard re-runs: members already
+    /// credited for this round have that credit reversed (they will be
+    /// credited again on completion), and shards stranded on dead members
+    /// are requeued to the first alive member.
+    pub fn resume_round(&mut self, micro: usize) -> Result<()> {
+        if !self.mid_round() {
+            bail!("resume_round outside an armed round (phase {:?})", self.phase);
+        }
+        if micro != self.round_micro {
+            bail!(
+                "resume_round with {micro} microbatches, round {} was armed with {}",
+                self.round,
+                self.round_micro
+            );
+        }
+        let mut orphaned: Vec<usize> = Vec::new();
+        for i in 0..self.members.len() {
+            if self.assignment[i].is_empty() {
+                continue;
+            }
+            if self.members[i].alive {
+                if self.shard_done[i] {
+                    self.members[i].rounds_done -= 1;
+                    self.members[i].micro_done -= self.assignment[i].len() as u64;
+                }
+                self.shard_done[i] = false;
+                self.shard_secs[i] = 0.0;
+            } else {
+                // completed-then-departed before the snapshot: its leaves
+                // must be recomputed by a survivor (its ledger keeps the
+                // pre-snapshot execution — that did happen)
+                orphaned.extend(std::mem::take(&mut self.assignment[i]));
+                self.shard_done[i] = true;
+            }
+        }
+        if !orphaned.is_empty() {
+            let Some(w) = self
+                .members
+                .iter()
+                .position(|m| m.alive)
+            else {
+                bail!("round {}: no alive member to resume onto", self.round);
+            };
+            self.requeues_this_round += orphaned.len() as u64;
+            self.members[w].requeued += orphaned.len() as u64;
+            self.assignment[w].extend(&orphaned);
+            self.shard_done[w] = false;
+        }
+        self.reduce_done = false;
+        Ok(())
+    }
+
+    /// Active-round shard per member (parallel to `members`).
+    pub fn assignments(&self) -> &[Vec<usize>] {
+        &self.assignment
+    }
+
+    /// Mark member `idx`'s shard executed (updates the health ledger).
+    pub fn complete(&mut self, idx: usize, secs: f64) {
+        if self.shard_done[idx] && self.assignment[idx].is_empty() {
+            return; // idle member this round
+        }
+        self.shard_done[idx] = true;
+        self.shard_secs[idx] = secs;
+        self.members[idx].rounds_done += 1;
+        self.members[idx].micro_done += self.assignment[idx].len() as u64;
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.shard_done.iter().all(|&d| d)
+    }
+
+    /// Mark the tree reduce finished (ticking then leaves `Reduce`).
+    pub fn finish_reduce(&mut self, secs: f64) {
+        self.reduce_done = true;
+        self.reduce_secs = secs;
+    }
+
+    /// Close the books on the finished round: straggler detection against
+    /// the median shard time, imbalance, and the log entry.
+    fn record_round(&mut self) {
+        let times: Vec<f64> = (0..self.members.len())
+            .filter(|&i| !self.assignment[i].is_empty())
+            .map(|i| self.shard_secs[i])
+            .collect();
+        let med = median(&times);
+        let mut stragglers = 0u64;
+        for i in 0..self.members.len() {
+            if !self.assignment[i].is_empty()
+                && med > 0.0
+                && self.shard_secs[i] > self.cfg.straggler_factor * med
+            {
+                self.members[i].straggles += 1;
+                stragglers += 1;
+            }
+        }
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        let mean = if times.is_empty() {
+            0.0
+        } else {
+            times.iter().sum::<f64>() / times.len() as f64
+        };
+        self.log.push(RoundRecord {
+            round: self.round,
+            workers: times.len(),
+            micro: self.round_micro,
+            requeues: self.requeues_this_round,
+            stragglers,
+            grad_secs: max,
+            reduce_secs: self.reduce_secs,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        });
+        for a in self.assignment.iter_mut() {
+            a.clear();
+        }
+        for d in self.shard_done.iter_mut() {
+            *d = true;
+        }
+        self.round_micro = 0;
+    }
+
+    // ------------------------------------------------ checkpoint codec ---
+
+    const SNAP_VERSION: f32 = 1.0;
+
+    /// Flatten the machine (phase, round counter, membership ledger, and —
+    /// mid-round — assignments + completion flags) into small exact-f32
+    /// integers, the same container the `trainer.stream` blob uses. The
+    /// round log is *not* carried: it is run telemetry, surfaced through
+    /// `Summary`, and a resumed run starts a fresh log.
+    pub fn snapshot(&self) -> Vec<f32> {
+        let mut out = vec![
+            Self::SNAP_VERSION,
+            self.phase.index() as f32,
+            self.ticks_in_phase as f32,
+            if self.reduce_done { 1.0 } else { 0.0 },
+            self.round_micro as f32,
+            self.requeues_this_round as f32,
+            self.members.len() as f32,
+        ];
+        out.extend_from_slice(&u64_to_chunks(self.round));
+        for (i, m) in self.members.iter().enumerate() {
+            out.push(m.id as f32);
+            out.push(if m.alive { 1.0 } else { 0.0 });
+            for w in [m.joined_round, m.rounds_done, m.micro_done, m.requeued, m.straggles] {
+                out.extend_from_slice(&u64_to_chunks(w));
+            }
+            out.push(self.assignment[i].len() as f32);
+            out.extend(self.assignment[i].iter().map(|&x| x as f32));
+            out.push(if self.shard_done[i] { 1.0 } else { 0.0 });
+            // telemetry only — f32 precision is fine here
+            out.push(self.shard_secs[i] as f32);
+        }
+        out
+    }
+
+    /// Rebuild from a [`snapshot`](Self::snapshot) blob.
+    pub fn restore(cfg: RoundCfg, data: &[f32]) -> Result<Self> {
+        let mut cur = Cursor { data, pos: 0 };
+        let ver = cur.f()?;
+        if ver != Self::SNAP_VERSION {
+            bail!("unsupported dist snapshot version {ver}");
+        }
+        let phase = Phase::from_index(cur.f()? as u32)?;
+        let ticks_in_phase = cur.f()? as u32;
+        let reduce_done = cur.f()? != 0.0;
+        let round_micro = cur.f()? as usize;
+        let requeues_this_round = cur.f()? as u64;
+        let nmembers = cur.f()? as usize;
+        let round = cur.u()?;
+        let mut coord = RoundCoordinator::new(cfg);
+        coord.phase = phase;
+        coord.round = round;
+        coord.ticks_in_phase = ticks_in_phase;
+        coord.reduce_done = reduce_done;
+        coord.round_micro = round_micro;
+        coord.requeues_this_round = requeues_this_round;
+        for _ in 0..nmembers {
+            let id = cur.f()? as usize;
+            let alive = cur.f()? != 0.0;
+            coord.members.push(WorkerHealth {
+                id,
+                alive,
+                joined_round: cur.u()?,
+                rounds_done: cur.u()?,
+                micro_done: cur.u()?,
+                requeued: cur.u()?,
+                straggles: cur.u()?,
+            });
+            let alen = cur.f()? as usize;
+            // each index consumes ≥ 1 word — bound the allocation by the
+            // remaining blob so a corrupted length errors instead of
+            // attempting a huge Vec::with_capacity
+            if alen > cur.data.len() - cur.pos {
+                bail!(
+                    "dist snapshot assignment length {alen} exceeds remaining {} words",
+                    cur.data.len() - cur.pos
+                );
+            }
+            let mut assign = Vec::with_capacity(alen);
+            for _ in 0..alen {
+                assign.push(cur.f()? as usize);
+            }
+            coord.assignment.push(assign);
+            coord.shard_done.push(cur.f()? != 0.0);
+            coord.shard_secs.push(cur.f()? as f64);
+        }
+        Ok(coord)
+    }
+}
+
+/// Forward reader over a snapshot blob.
+struct Cursor<'a> {
+    data: &'a [f32],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn f(&mut self) -> Result<f32> {
+        let Some(&x) = self.data.get(self.pos) else {
+            bail!("truncated dist snapshot at word {}", self.pos);
+        };
+        self.pos += 1;
+        Ok(x)
+    }
+
+    fn u(&mut self) -> Result<u64> {
+        let c = [self.f()?, self.f()?, self.f()?, self.f()?];
+        Ok(chunks_to_u64(&c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn training_coord(workers: usize) -> RoundCoordinator {
+        let mut c = RoundCoordinator::new(RoundCfg {
+            min_workers: workers.min(2),
+            warmup_ticks: 2,
+            cooldown_ticks: 1,
+            straggler_factor: 3.0,
+        });
+        for w in 0..workers {
+            c.join(w);
+        }
+        c
+    }
+
+    #[test]
+    fn lifecycle_reaches_train_and_cycles() {
+        let mut c = training_coord(3);
+        assert_eq!(c.phase, Phase::WaitingForMembers);
+        c.advance_to_train().unwrap();
+        assert_eq!(c.phase, Phase::RoundTrain);
+        assert_eq!(c.round, 1);
+
+        c.begin_round(8).unwrap();
+        let total: usize = c.assignments().iter().map(|a| a.len()).sum();
+        assert_eq!(total, 8);
+        // contiguous cover of [0, 8)
+        let mut all: Vec<usize> = c.assignments().iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+
+        for i in 0..3 {
+            c.complete(i, 0.01);
+        }
+        assert_eq!(c.tick(), Phase::Reduce);
+        c.finish_reduce(0.001);
+        assert_eq!(c.tick(), Phase::Cooldown);
+        assert_eq!(c.log.len(), 1);
+        assert_eq!(c.log[0].round, 1);
+        assert_eq!(c.log[0].micro, 8);
+        assert_eq!(c.log[0].workers, 3);
+
+        // next round
+        c.advance_to_train().unwrap();
+        assert_eq!(c.round, 2);
+        c.begin_round(4).unwrap();
+        assert!(!c.all_done());
+    }
+
+    #[test]
+    fn membership_below_min_gates_training() {
+        let mut c = RoundCoordinator::new(RoundCfg {
+            min_workers: 2,
+            ..RoundCfg::default()
+        });
+        c.join(0);
+        assert!(c.advance_to_train().is_err(), "1 < min_workers must error");
+        c.join(1);
+        c.advance_to_train().unwrap();
+        // losing a member during warmup of the *next* epoch falls back
+        let mut c2 = training_coord(2);
+        c2.tick(); // -> Warmup
+        assert_eq!(c2.phase, Phase::Warmup);
+        c2.leave(1);
+        assert_eq!(c2.tick(), Phase::WaitingForMembers);
+    }
+
+    #[test]
+    fn departure_mid_round_requeues_deterministically() {
+        let mut c = training_coord(3);
+        c.advance_to_train().unwrap();
+        c.begin_round(9).unwrap();
+        let before: Vec<Vec<usize>> = c.assignments().to_vec();
+        assert_eq!(before, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]]);
+        // worker 0 finishes, worker 1 dies: its shard round-robins to the
+        // only still-running member (worker 2)
+        c.complete(0, 0.01);
+        c.leave(1);
+        assert_eq!(c.assignments()[1], Vec::<usize>::new());
+        assert_eq!(c.assignments()[2], vec![6, 7, 8, 3, 4, 5]);
+        assert_eq!(c.members[2].requeued, 3);
+        c.complete(2, 0.05);
+        assert!(c.all_done());
+        assert_eq!(c.tick(), Phase::Reduce);
+        c.finish_reduce(0.0);
+        c.tick();
+        assert_eq!(c.log[0].requeues, 3);
+    }
+
+    #[test]
+    fn straggler_accounting_uses_median_threshold() {
+        let mut c = training_coord(4);
+        c.advance_to_train().unwrap();
+        c.begin_round(8).unwrap();
+        for (i, secs) in [(0, 0.010), (1, 0.011), (2, 0.009), (3, 0.200)] {
+            c.complete(i, secs);
+        }
+        c.tick();
+        c.finish_reduce(0.0);
+        c.tick();
+        assert_eq!(c.log[0].stragglers, 1);
+        assert_eq!(c.members[3].straggles, 1);
+        assert!(c.log[0].imbalance > 2.0, "imbalance {}", c.log[0].imbalance);
+        assert_eq!(c.members[0].straggles, 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_mid_round() {
+        let mut c = training_coord(3);
+        c.advance_to_train().unwrap();
+        c.begin_round(7).unwrap();
+        c.complete(0, 0.02);
+        c.leave(2); // requeue into the running member 1
+        let snap = c.snapshot();
+
+        let mut r = RoundCoordinator::restore(c.cfg.clone(), &snap).unwrap();
+        assert_eq!(r.phase, Phase::RoundTrain);
+        assert_eq!(r.round, c.round);
+        assert_eq!(r.assignments(), c.assignments());
+        assert_eq!(r.alive(), 2);
+        assert_eq!(r.members[1].requeued, c.members[1].requeued);
+
+        // both twins finish the round identically
+        let finish = |m: &mut RoundCoordinator| {
+            m.complete(1, 0.04);
+            m.tick();
+            m.finish_reduce(0.0);
+            m.tick();
+            (m.phase, m.round, m.log.last().map(|l| (l.micro, l.requeues)))
+        };
+        // the restored twin starts a fresh log, so compare the new entry
+        let a = finish(&mut c);
+        let b = finish(&mut r);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn leave_with_no_survivor_stalls_instead_of_dropping_work() {
+        let mut c = RoundCoordinator::new(RoundCfg::default());
+        c.join(0);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        c.leave(0);
+        // the shard must NOT be silently discarded: the round stalls
+        // visibly rather than reducing a subset of the microbatches
+        assert_eq!(c.assignments()[0], vec![0, 1, 2, 3]);
+        assert!(!c.all_done());
+        assert_eq!(c.tick(), Phase::RoundTrain);
+    }
+
+    #[test]
+    fn requeue_onto_completed_member_credits_the_ledger_once() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(6).unwrap();
+        c.complete(0, 0.01);
+        assert_eq!((c.members[0].rounds_done, c.members[0].micro_done), (1, 3));
+        // the only other member dies: its shard merges onto the already-
+        // completed member 0, whose earlier credit is reversed so the
+        // re-completion counts exactly once
+        c.leave(1);
+        assert_eq!((c.members[0].rounds_done, c.members[0].micro_done), (0, 0));
+        assert_eq!(c.assignments()[0], vec![0, 1, 2, 3, 4, 5]);
+        c.complete(0, 0.03);
+        assert_eq!((c.members[0].rounds_done, c.members[0].micro_done), (1, 6));
+        assert_eq!(c.tick(), Phase::Reduce);
+    }
+
+    #[test]
+    fn resume_round_rearms_and_reverses_credit() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(6).unwrap();
+        c.complete(0, 0.01);
+        let snap = c.snapshot();
+        let mut r = RoundCoordinator::restore(c.cfg.clone(), &snap).unwrap();
+        assert!(r.mid_round());
+        // wrong microbatch count is rejected
+        assert!(r.resume_round(5).is_err());
+        r.resume_round(6).unwrap();
+        // every shard re-runs; member 0's pre-snapshot credit is reversed
+        assert_eq!((r.members[0].rounds_done, r.members[0].micro_done), (0, 0));
+        assert!(!r.all_done());
+        r.complete(0, 0.01);
+        r.complete(1, 0.01);
+        assert_eq!((r.members[0].rounds_done, r.members[0].micro_done), (1, 3));
+        assert_eq!(r.tick(), Phase::Reduce);
+        // resume outside an armed round is rejected
+        assert!(r.resume_round(6).is_err());
+    }
+
+    #[test]
+    fn snapshot_rejects_garbage() {
+        assert!(RoundCoordinator::restore(RoundCfg::default(), &[9.0, 1.0]).is_err());
+        assert!(RoundCoordinator::restore(RoundCfg::default(), &[1.0]).is_err());
+    }
+
+    #[test]
+    fn late_joiner_waits_for_next_round() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        c.join(7);
+        assert_eq!(c.assignments()[2], Vec::<usize>::new(), "no shard mid-round");
+        c.complete(0, 0.01);
+        c.complete(1, 0.01);
+        c.tick();
+        c.finish_reduce(0.0);
+        c.tick();
+        c.advance_to_train().unwrap();
+        c.begin_round(6).unwrap();
+        assert_eq!(c.assignments()[2].len(), 2, "joiner shares the next round");
+        assert_eq!(c.members[2].joined_round, 1);
+    }
+}

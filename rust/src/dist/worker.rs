@@ -1,0 +1,180 @@
+//! Logical data-parallel workers: each owns a disjoint shard of the
+//! round's global microbatch stream, executes its gradients serially (in
+//! global index order), and hands back maximal aligned reduction subtrees
+//! instead of raw per-microbatch gradients (bounded memory — see
+//! [`super::reduce`]).
+//!
+//! Workers are *logical*: [`run_workers`] fans them out as tasks on the
+//! persistent `util::pool`, so a pool width ≥ `dp_workers` runs the
+//! shards concurrently while width 1 replays them serially with identical
+//! bits. What a microbatch gradient *is* comes from a [`GradSource`]:
+//! the trainer plugs in the PJRT `grad_step` executable
+//! (`Engine::run_prepared` is `&self`, exactly like the eval fan-out),
+//! while the parity tests and the fig7 bench plug in
+//! [`SyntheticGradSource`] and need no artifacts at all.
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+use crate::util::{pool, Pcg, Timer};
+
+use super::reduce::{GradNode, Node, TreeAccum};
+
+/// Produces one microbatch's (loss, per-parameter gradients).
+///
+/// Implementations must be pure in `(index, tokens)` — the determinism
+/// contract of the whole subsystem rests on a microbatch gradient being
+/// independent of which worker executes it, and when.
+pub trait GradSource: Sync {
+    fn micro_grad(&self, index: usize, tokens: &HostTensor) -> Result<(f32, Vec<Mat>)>;
+}
+
+/// One worker's round output: its maximal aligned subtree roots plus
+/// execution accounting for the round coordinator's health ledger.
+#[derive(Debug)]
+pub struct ShardOut {
+    pub nodes: Vec<Node<GradNode>>,
+    pub micro_done: usize,
+    pub secs: f64,
+}
+
+/// Execute one worker's shard. `indices` are global microbatch indices
+/// into `tokens`; they are sorted first so requeued (out-of-order) work
+/// still feeds the tree accumulator in increasing index order.
+pub fn run_shard<S: GradSource>(
+    src: &S,
+    indices: &[usize],
+    tokens: &[HostTensor],
+) -> Result<ShardOut> {
+    let t = Timer::start();
+    let mut order: Vec<usize> = indices.to_vec();
+    order.sort_unstable();
+    let mut acc = TreeAccum::new();
+    for &i in &order {
+        let (loss, grads) = src.micro_grad(i, &tokens[i])?;
+        acc.push(i, GradNode { loss, grads });
+    }
+    Ok(ShardOut { nodes: acc.into_nodes(), micro_done: order.len(), secs: t.secs() })
+}
+
+/// Fan every worker's shard out across the pool (one task per worker; an
+/// empty assignment is a cheap no-op task). Results come back in worker
+/// order; each entry is that worker's own `Result`, so a single failing
+/// worker is attributable.
+pub fn run_workers<S: GradSource>(
+    src: &S,
+    assignments: &[Vec<usize>],
+    tokens: &[HostTensor],
+) -> Vec<Result<ShardOut>> {
+    pool::map(assignments.len(), |w| run_shard(src, &assignments[w], tokens))
+}
+
+/// Deterministic stand-in for the `grad_step` executable: pseudo-random
+/// gradients seeded from the token content and the global microbatch
+/// index, plus an optional fixed slab of dense compute (an `n × n`
+/// matmul) emulating the per-microbatch cost of a real backward pass.
+///
+/// Pure in `(index, tokens)` by construction, so it satisfies the
+/// [`GradSource`] contract at every worker count and pool width.
+pub struct SyntheticGradSource {
+    /// Gradient geometry, one `(rows, cols)` per simulated parameter.
+    pub shapes: Vec<(usize, usize)>,
+    /// Side length of the per-microbatch busywork matmul (0 = none).
+    pub work: usize,
+}
+
+impl GradSource for SyntheticGradSource {
+    fn micro_grad(&self, index: usize, tokens: &HostTensor) -> Result<(f32, Vec<Mat>)> {
+        // FNV-1a over the token block: the gradient depends on the data,
+        // not just the index, like a real backward pass would
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &t in tokens.as_i32()? {
+            h = (h ^ t as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        let mut rng = Pcg::new(h ^ (index as u64).wrapping_mul(0x9e37_79b9), 0xd157);
+        let mut cost = 0.0f32;
+        if self.work > 0 {
+            let n = self.work;
+            // serial inner matmul: the busywork stays inside this worker's
+            // task, so per-shard cost is a clean function of shard size
+            let a = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+            let prod = pool::with_threads(1, || a.matmul(&a));
+            cost = std::hint::black_box(prod.data[0]) * 1e-30;
+        }
+        let loss = 2.0 + rng.f32() + cost;
+        let grads = self
+            .shapes
+            .iter()
+            .map(|&(r, c)| Mat::from_vec(r, c, rng.normal_vec(r * c, 0.1)))
+            .collect();
+        Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::reduce;
+
+    fn tokens(n: usize) -> Vec<HostTensor> {
+        (0..n)
+            .map(|i| HostTensor::i32(vec![4], vec![i as i32, 7, 3, i as i32 * 2]))
+            .collect()
+    }
+
+    fn src() -> SyntheticGradSource {
+        SyntheticGradSource { shapes: vec![(3, 5), (4, 1)], work: 0 }
+    }
+
+    #[test]
+    fn synthetic_source_is_pure() {
+        let s = src();
+        let toks = tokens(3);
+        let (l1, g1) = s.micro_grad(2, &toks[2]).unwrap();
+        let (l2, g2) = s.micro_grad(2, &toks[2]).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1[0].data, g2[0].data);
+        // different index or tokens → different draw
+        let (l3, _) = s.micro_grad(1, &toks[2]).unwrap();
+        assert_ne!(l1.to_bits(), l3.to_bits());
+    }
+
+    #[test]
+    fn shard_execution_sorts_requeued_indices() {
+        let s = src();
+        let toks = tokens(8);
+        // a worker that picked up requeued index 1 after its own [4..8)
+        let out = run_shard(&s, &[4, 5, 6, 7, 1], &toks).unwrap();
+        assert_eq!(out.micro_done, 5);
+        let spans: Vec<(usize, usize)> =
+            out.nodes.iter().map(|n| (n.lo, n.len)).collect();
+        assert_eq!(spans, vec![(1, 1), (4, 4)]);
+    }
+
+    #[test]
+    fn worker_fanout_matches_single_worker_bitwise() {
+        let s = src();
+        let toks = tokens(6);
+        let single = {
+            let outs = run_workers(&s, &[(0..6).collect()], &toks);
+            let nodes: Vec<_> =
+                outs.into_iter().flat_map(|o| o.unwrap().nodes).collect();
+            reduce::combine(nodes).unwrap()
+        };
+        for assignments in [
+            vec![vec![0, 1, 2], vec![3, 4, 5]],
+            vec![vec![0], vec![1, 2], vec![3], vec![4, 5]],
+            vec![vec![0, 1, 2, 3, 4], vec![], vec![5]],
+        ] {
+            let outs = run_workers(&s, &assignments, &toks);
+            let nodes: Vec<_> =
+                outs.into_iter().flat_map(|o| o.unwrap().nodes).collect();
+            let got = reduce::combine(nodes).unwrap();
+            assert_eq!(got.loss.to_bits(), single.loss.to_bits());
+            for (a, b) in got.grads.iter().zip(&single.grads) {
+                assert_eq!(a.data, b.data);
+            }
+        }
+    }
+}

@@ -23,6 +23,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod fisher;
 pub mod linalg;
 pub mod opt;

@@ -37,13 +37,22 @@
 //! own tasks inline, and unclaimed helper jobs are removed from the queue
 //! (not waited on) when the caller finds the region drained.
 //!
-//! Concurrency bound: each region is served by at most `width - 1`
-//! helpers plus its caller, and total active threads never exceed the
-//! pool size — which equals the largest `width - 1` any region has
-//! requested this process (like a fixed-size rayon pool). If the knob is
-//! *lowered* after a larger width ran, concurrent nested sibling regions
-//! may together occupy more parked workers than the new width; a
-//! computation-wide thread budget is a noted follow-on (ROADMAP).
+//! # Root-region thread budget
+//!
+//! Every *root* region (one opened by a thread not already inside a pool
+//! region) creates a helper-permit budget of `width - 1`, threaded through
+//! TLS to every task it transitively spawns. Any region — root or nested —
+//! only pushes as many helper jobs as it can acquire permits for, and runs
+//! the rest of its tasks inline on its caller; permits return when the
+//! region retires. The knob is therefore a **hard cap**: a computation
+//! rooted at width N never occupies more than N threads, even when the
+//! pool holds more parked workers from an earlier, wider run (previously,
+//! concurrent nested sibling regions could together exceed a lowered
+//! knob — the ROADMAP thread-budget bug; pinned by
+//! `tests/pool_lifecycle.rs::lowered_knob_is_a_hard_cap_for_nested_regions`).
+//! Budget exhaustion only affects *scheduling* (how many helpers serve a
+//! region), never partitioning — so it cannot change results (see the
+//! determinism contract below).
 //!
 //! # Panic propagation
 //!
@@ -81,6 +90,49 @@ thread_local! {
     /// with this set to the submitting thread's effective width, so
     /// nested regions resolve the same width on any thread.
     static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+
+    /// Helper-permit budget of the enclosing *root* region (null when the
+    /// current thread is not inside a region). Propagated into workers per
+    /// region, like the width, so nested regions draw from their root's
+    /// budget instead of conjuring fresh threads.
+    static LOCAL_BUDGET: Cell<*const Budget> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Root-region helper-permit counter. Lives on the root region's stack
+/// frame; validity for nested regions follows from region nesting being
+/// strictly within the root's dynamic extent (a nested region retires —
+/// and releases its permits — before the root task that opened it
+/// returns).
+struct Budget {
+    permits: AtomicUsize,
+}
+
+impl Budget {
+    /// Take up to `want` permits; returns how many were granted (0 when
+    /// the root's thread budget is exhausted — the region then runs
+    /// inline on its caller).
+    fn try_acquire(&self, want: usize) -> usize {
+        let mut cur = self.permits.load(Ordering::Relaxed);
+        loop {
+            let take = want.min(cur);
+            if take == 0 {
+                return 0;
+            }
+            match self.permits.compare_exchange_weak(
+                cur,
+                cur - take,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return take,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn release(&self, n: usize) {
+        self.permits.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 /// Lock a mutex, ignoring poisoning: every critical section below is a
@@ -200,6 +252,9 @@ struct RegionHeader {
     /// The submitting thread's effective width — workers adopt it while
     /// running this region's tasks so nested regions resolve identically.
     nested_width: usize,
+    /// The enclosing root region's helper budget — workers adopt it too,
+    /// so regions they open draw from the same cap.
+    budget: *const Budget,
     /// Helper jobs pushed and not yet finished or reclaimed.
     pending: Mutex<usize>,
     done_cv: Condvar,
@@ -239,7 +294,13 @@ unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *
         c.set(h.nested_width);
         p
     });
+    let prev_budget = LOCAL_BUDGET.with(|c| {
+        let p = c.get();
+        c.set(h.budget);
+        p
+    });
     claim_loop(h, f);
+    LOCAL_BUDGET.with(|c| c.set(prev_budget));
     LOCAL_THREADS.with(|c| c.set(prev));
     // Completion handshake: decrement-and-notify under the lock, then
     // never touch `h` again — the submitting thread may free the region
@@ -315,11 +376,35 @@ fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
         }
         return;
     }
-    let helpers = width - 1;
+    // Resolve the root budget: inherit the enclosing region's (nested
+    // case) or open one sized by this thread's effective width (root
+    // case). `root_storage` keeps the root budget alive on this frame for
+    // the whole region, including every nested region inside it.
+    let inherited = LOCAL_BUDGET.with(|c| c.get());
+    let root_storage;
+    let budget: &Budget = if inherited.is_null() {
+        root_storage = Budget { permits: AtomicUsize::new(threads() - 1) };
+        &root_storage
+    } else {
+        // SAFETY: a non-null TLS budget points at the root region's stack
+        // frame, which outlives every region nested inside it (see Budget).
+        unsafe { &*inherited }
+    };
+    let helpers = budget.try_acquire(width - 1);
+    if helpers == 0 {
+        // root thread budget exhausted: the region still runs — inline,
+        // on its caller, in order (partitioning is unchanged; only the
+        // helper count is)
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
     let header = RegionHeader {
         next: AtomicUsize::new(0),
         n,
         nested_width: threads(),
+        budget: budget as *const Budget,
         pending: Mutex::new(helpers),
         done_cv: Condvar::new(),
         panic: Mutex::new(None),
@@ -337,8 +422,16 @@ fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
         }
     }
     p.work_cv.notify_all();
-    // the submitting thread is always worker 0 of its own region
+    // The submitting thread is always worker 0 of its own region; it
+    // carries the root budget in TLS so regions opened by *its* tasks
+    // share the cap (workers get it via the header).
+    let prev_budget = LOCAL_BUDGET.with(|c| {
+        let p = c.get();
+        c.set(budget as *const Budget);
+        p
+    });
     claim_loop(&header, f);
+    LOCAL_BUDGET.with(|c| c.set(prev_budget));
     // Retire the region: reclaim helper jobs nobody picked up, then wait
     // out the in-flight ones. After this block no pointer to `header` or
     // `f` exists outside this frame.
@@ -358,6 +451,9 @@ fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
         pending = header.done_cv.wait(pending).unwrap_or_else(|e| e.into_inner());
     }
     drop(pending);
+    // Every helper has stopped touching the region — give its permits
+    // back to the root budget before re-raising any captured panic.
+    budget.release(helpers);
     if let Some(payload) = lock(&header.panic).take() {
         resume_unwind(payload);
     }
@@ -566,5 +662,36 @@ mod tests {
     fn warmup_prespawns_for_the_effective_width() {
         with_threads(5, warmup);
         assert!(worker_count() >= 4);
+    }
+
+    #[test]
+    fn nested_regions_share_the_root_budget() {
+        // grow the pool well past width 2 first, as a wider earlier run
+        // would have
+        with_threads(6, || run(32, |_| {}));
+        assert!(worker_count() >= 5);
+        // width 2 root: at most 2 threads may ever run tasks at once,
+        // even though the pool has ≥ 5 parked workers and the nested
+        // regions would previously have recruited them
+        let active = AtomicUsize::new(0);
+        let high = AtomicUsize::new(0);
+        let enter = || {
+            let a = active.fetch_add(1, Ordering::SeqCst) + 1;
+            high.fetch_max(a, Ordering::SeqCst);
+        };
+        let exit = || {
+            active.fetch_sub(1, Ordering::SeqCst);
+        };
+        with_threads(2, || {
+            run(4, |_| {
+                run(6, |_| {
+                    enter();
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    exit();
+                });
+            });
+        });
+        let peak = high.load(Ordering::SeqCst);
+        assert!(peak <= 2, "width-2 root must cap the computation at 2 threads, saw {peak}");
     }
 }

@@ -1,0 +1,267 @@
+//! Bitwise contract of the distributed subsystem: the round coordinator +
+//! tree all-reduce must produce identical losses and identical post-step
+//! weights for every `dp_workers` count and every pool width — including
+//! ragged microbatch counts and mid-round straggler requeues. The
+//! synthetic gradient source keeps these tests artifact-free (the PJRT
+//! engine is exercised by the self-skipping trainer test at the end).
+
+use alice_racs::bench::dp_sweep;
+use alice_racs::dist::{
+    reduce, run_round, worker, DistConfig, Phase, RoundCoordinator, SyntheticGradSource,
+};
+use alice_racs::linalg::Mat;
+use alice_racs::opt::{build, Hyper, Slot};
+use alice_racs::runtime::HostTensor;
+use alice_racs::util::pool;
+
+fn tokens(micro: usize, seed: i32) -> Vec<HostTensor> {
+    (0..micro)
+        .map(|i| {
+            let base = seed + i as i32 * 31;
+            HostTensor::i32(vec![8], (0..8).map(|k| (base + k * 7) % 997).collect())
+        })
+        .collect()
+}
+
+fn src() -> SyntheticGradSource {
+    SyntheticGradSource { shapes: vec![(6, 10), (8, 4), (1, 12)], work: 0 }
+}
+
+/// Run `steps` optimizer steps of a miniature training loop — synthetic
+/// microbatch gradients through the full round pipeline, reduced grads
+/// applied through real optimizer slots — and return (per-step losses,
+/// final weights).
+fn drive(dp: usize, width: usize, micro: usize, steps: u64) -> (Vec<u32>, Vec<Vec<f32>>) {
+    pool::with_threads(width, || {
+        let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
+        let mut coord = dist.coordinator();
+        let s = src();
+        let hp = Hyper::default();
+        let mut slots: Vec<Slot> = s
+            .shapes
+            .iter()
+            .map(|&(r, c)| Slot::new(build("adam", &hp).expect("registry"), r, c))
+            .collect();
+        let mut weights: Vec<Mat> = s.shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+        let mut losses = Vec::new();
+        for t in 1..=steps {
+            let toks = tokens(micro, 1000 * t as i32);
+            let out = run_round(&mut coord, &s, &toks).expect("round");
+            losses.push(out.loss.to_bits());
+            for ((slot, w), g) in slots.iter_mut().zip(&mut weights).zip(&out.grads) {
+                if t == 1 {
+                    slot.refresh(g, 0xd157 ^ t);
+                }
+                let delta = slot.step(g, t);
+                w.ema_(1.0, &delta, -0.01);
+            }
+        }
+        (losses, weights.into_iter().map(|w| w.data).collect())
+    })
+}
+
+#[test]
+fn losses_and_weights_bitwise_equal_across_dp_and_width() {
+    let steps = 4;
+    for micro in [8usize, 5] {
+        let reference = drive(1, 1, micro, steps);
+        for dp in dp_sweep() {
+            for width in [1usize, 4] {
+                let got = drive(dp, width, micro, steps);
+                assert_eq!(
+                    got.0, reference.0,
+                    "loss bits diverged: micro={micro} dp={dp} width={width}"
+                );
+                assert_eq!(
+                    got.1, reference.1,
+                    "weights diverged: micro={micro} dp={dp} width={width}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn non_dividing_worker_counts_are_bitwise_equal_too() {
+    let reference = drive(1, 1, 7, 3);
+    for dp in [3usize, 5, 7] {
+        let got = drive(dp, 4, 7, 3);
+        assert_eq!(got.0, reference.0, "loss bits diverged at dp={dp}");
+        assert_eq!(got.1, reference.1, "weights diverged at dp={dp}");
+    }
+}
+
+#[test]
+fn straggler_requeue_mid_round_keeps_the_reduced_bits() {
+    // reference: a clean 3-worker round
+    let s = src();
+    let toks = tokens(9, 7);
+    let dist = DistConfig { dp_workers: 3, ..DistConfig::default() };
+    let mut clean = dist.coordinator();
+    let reference = run_round(&mut clean, &s, &toks).expect("clean round");
+
+    // faulty twin: worker 1 executes nothing and leaves mid-round; its
+    // shard is requeued onto worker 2, which is still running
+    let mut coord = dist.coordinator();
+    coord.advance_to_train().unwrap();
+    coord.begin_round(9).unwrap();
+    assert_eq!(
+        coord.assignments(),
+        &[vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]]
+    );
+    let shard0 = worker::run_shard(&s, &coord.assignments()[0], &toks).unwrap();
+    coord.complete(0, shard0.secs);
+    coord.leave(1);
+    let merged = coord.assignments()[2].clone();
+    assert_eq!(merged, vec![6, 7, 8, 3, 4, 5], "requeue appends in index order");
+    let shard2 = worker::run_shard(&s, &merged, &toks).unwrap();
+    coord.complete(2, shard2.secs);
+    assert_eq!(coord.tick(), Phase::Reduce);
+    let mut nodes = shard0.nodes;
+    nodes.extend(shard2.nodes);
+    let root = reduce::combine(nodes).expect("non-empty");
+    coord.finish_reduce(0.0);
+    coord.tick();
+
+    let scale = 1.0 / 9.0f32;
+    assert_eq!(
+        (root.loss * scale).to_bits(),
+        reference.loss.to_bits(),
+        "requeued round must reduce to the same loss bits"
+    );
+    for (g, r) in root.grads.iter().zip(&reference.grads) {
+        assert_eq!(g.scale(scale).data, r.data, "requeued grads must match bitwise");
+    }
+    assert_eq!(coord.log[0].requeues, 3);
+}
+
+#[test]
+fn resume_mid_round_from_snapshot_finishes_identically() {
+    let s = src();
+    let toks = tokens(6, 42);
+    let dist = DistConfig { dp_workers: 2, ..DistConfig::default() };
+
+    // uninterrupted round
+    let mut a = dist.coordinator();
+    let reference = run_round(&mut a, &s, &toks).expect("round");
+
+    // interrupted twin: worker 0 finishes, then the coordinator is
+    // snapshotted (checkpoint) and rebuilt before worker 1 runs
+    let mut b = dist.coordinator();
+    b.advance_to_train().unwrap();
+    b.begin_round(6).unwrap();
+    let shard0 = worker::run_shard(&s, &b.assignments()[0], &toks).unwrap();
+    b.complete(0, shard0.secs);
+    let snap = b.snapshot();
+    drop(b);
+
+    let mut c = RoundCoordinator::restore(dist.round_cfg(), &snap).unwrap();
+    assert_eq!(c.phase, Phase::RoundTrain);
+    assert_eq!(c.round, 1);
+    // worker 0's in-flight nodes are recomputed from its (restored)
+    // assignment — execution is pure, so the bits cannot change
+    let redone0 = worker::run_shard(&s, &c.assignments()[0], &toks).unwrap();
+    let shard1 = worker::run_shard(&s, &c.assignments()[1], &toks).unwrap();
+    c.complete(1, shard1.secs);
+    assert_eq!(c.tick(), Phase::Reduce);
+    let mut nodes = redone0.nodes;
+    nodes.extend(shard1.nodes);
+    let root = reduce::combine(nodes).expect("non-empty");
+    c.finish_reduce(0.0);
+    c.tick();
+    assert_eq!(c.round, 1);
+
+    let scale = 1.0 / 6.0f32;
+    assert_eq!((root.loss * scale).to_bits(), reference.loss.to_bits());
+    for (g, r) in root.grads.iter().zip(&reference.grads) {
+        assert_eq!(g.scale(scale).data, r.data);
+    }
+}
+
+#[test]
+fn run_round_drives_a_restored_mid_round_coordinator_to_the_same_bits() {
+    // the trainer-realistic resume path: run_round itself consumes the
+    // mid-round snapshot (re-arming via resume_round) — no hand-driving
+    let s = src();
+    let toks = tokens(6, 42);
+    let dist = DistConfig { dp_workers: 2, ..DistConfig::default() };
+
+    let mut a = dist.coordinator();
+    let reference = run_round(&mut a, &s, &toks).expect("round");
+
+    let mut b = dist.coordinator();
+    b.advance_to_train().unwrap();
+    b.begin_round(6).unwrap();
+    let shard0 = worker::run_shard(&s, &b.assignments()[0], &toks).unwrap();
+    b.complete(0, shard0.secs);
+    let snap = b.snapshot();
+    drop(b);
+
+    let mut c = RoundCoordinator::restore(dist.round_cfg(), &snap).unwrap();
+    let resumed = run_round(&mut c, &s, &toks).expect("resumed round");
+    assert_eq!(resumed.loss.to_bits(), reference.loss.to_bits());
+    for (g, r) in resumed.grads.iter().zip(&reference.grads) {
+        assert_eq!(g.data, r.data);
+    }
+    assert_eq!(c.round, 1);
+    assert_eq!(c.log.len(), 1);
+    // the re-executed round credits member 0 exactly once
+    assert_eq!(c.members[0].rounds_done, 1);
+    assert_eq!(c.members[0].micro_done, 3);
+}
+
+// ------------------------------------------------- trainer-level parity ---
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping trainer-level dist parity: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn trainer_dist_path_is_bitwise_invariant_across_dp_and_width() {
+    use alice_racs::config::RunConfig;
+    use alice_racs::coordinator::Trainer;
+
+    if !have_artifacts() {
+        return;
+    }
+    let run = |dp: usize, width: usize| {
+        pool::with_threads(width, || {
+            let mut cfg = RunConfig::default().tuned_for("alice");
+            cfg.artifacts = "artifacts".into();
+            cfg.out_dir = format!(
+                "{}/alice_racs_dist_dp{dp}_w{width}_{}",
+                std::env::temp_dir().display(),
+                std::process::id()
+            );
+            cfg.steps = 6;
+            cfg.eval_every = 0;
+            cfg.log_every = 1000;
+            cfg.grad_accum = 4;
+            cfg.hp.interval = 3;
+            cfg.hp.rank = 16;
+            cfg.hp.leading = 6;
+            cfg.dist.dp_workers = dp;
+            cfg.dist.sim = true; // dp=1 goes through the same tree reduce
+            let mut tr = Trainer::new(cfg).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..6 {
+                losses.push(tr.train_step(0.01).unwrap().to_bits());
+            }
+            let weights: Vec<Vec<f32>> =
+                tr.params.iter().map(|p| p.as_f32().unwrap().to_vec()).collect();
+            (losses, weights)
+        })
+    };
+    let reference = run(1, 1);
+    for dp in [2usize, 4] {
+        for width in [1usize, 4] {
+            let got = run(dp, width);
+            assert_eq!(got.0, reference.0, "loss bits diverged: dp={dp} width={width}");
+            assert_eq!(got.1, reference.1, "weights diverged: dp={dp} width={width}");
+        }
+    }
+}

@@ -94,6 +94,33 @@ fn panics_propagate_out_of_workers() {
 }
 
 #[test]
+fn lowered_knob_is_a_hard_cap_for_nested_regions() {
+    // the ROADMAP thread-budget bug: after a wide run leaves ≥ MAX_WIDTH
+    // parked workers behind, a *lowered* knob must still be a hard
+    // process-wide cap for the whole computation — concurrent nested
+    // sibling regions used to recruit the spare parked workers and
+    // overshoot it. The root-region budget threads the cap through TLS.
+    grow_to_max();
+    let active = AtomicUsize::new(0);
+    let high = AtomicUsize::new(0);
+    pool::with_threads(2, || {
+        pool::run(6, |_| {
+            pool::run(8, |_| {
+                let a = active.fetch_add(1, Ordering::SeqCst) + 1;
+                high.fetch_max(a, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        });
+    });
+    let peak = high.load(Ordering::SeqCst);
+    assert!(
+        peak <= 2,
+        "a width-2 computation must never occupy more than 2 threads, saw {peak}"
+    );
+}
+
+#[test]
 fn tls_width_override_is_honored() {
     grow_to_max();
     assert_eq!(pool::with_threads(3, pool::threads), 3);
