@@ -2,7 +2,14 @@
 //! throughput (Adam-referenced, speed-up-adjusted) per optimizer, plus the
 //! serial-vs-parallel axis of the threaded execution backend.
 //!
-//! Three sections:
+//! Four sections:
+//! * **SIMD kernel speedup** (no artifacts needed): the matmul /
+//!   elementwise / reduction families at pool width 1, scalar dispatch
+//!   (`simd::with_scalar`) vs the feature's lane kernels — the direct
+//!   measurement behind the "matmul-family ≥ 2x with `--features simd`"
+//!   acceptance line. Every timed pair cross-checks its outputs
+//!   (ulp-bounded), so a reported speedup can never come from diverging
+//!   numerics; CI's bench-smoke job gates on exactly these asserts.
 //! * **Native kernel speedup** (no artifacts needed): times one
 //!   `Slot::refresh` + `Slot::step` round per matmul-heavy optimizer at
 //!   pool width 1 vs all cores — the direct measurement behind the
@@ -12,25 +19,126 @@
 //!   bitwise identical output) vs all cores.
 //! * **Training throughput** (needs `make artifacts`): the Fig. 3 table,
 //!   each optimizer run serial and parallel with the speedup column.
+//!
+//! `AR_BENCH_SMOKE=1` shrinks the no-artifact sections for CI; a
+//! machine-readable summary lands in
+//! `runs/bench/fig3_throughput_summary.json` either way.
 
 use alice_racs::bench::{
-    artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, time_fn, TablePrinter,
+    artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, smoke, time_fn,
+    write_summary, TablePrinter,
 };
 use alice_racs::coordinator::Summary;
-use alice_racs::linalg::{jacobi_eigh, jacobi_eigh_serial, mgs_qr, Mat};
+use alice_racs::linalg::{jacobi_eigh, jacobi_eigh_serial, mgs_qr, simd, Mat};
 use alice_racs::opt::{build, Hyper, Slot};
-use alice_racs::util::{pool, Pcg};
+use alice_racs::util::json::{num, obj, s};
+use alice_racs::util::{pool, Json, Pcg};
 
 fn bar(frac: f64, width: usize) -> String {
     let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
     "█".repeat(n)
 }
 
+/// Scalar-vs-SIMD dispatch speedup of the linalg kernel families at pool
+/// width 1 (isolating the lane axis from the thread axis). Asserts
+/// ulp-bounded agreement between the two dispatch paths for every timed
+/// kernel; returns the section's JSON summary.
+fn simd_kernel_section() -> Json {
+    let (m, k, n, iters) = if smoke() { (96, 128, 80, 2) } else { (256, 512, 256, 5) };
+    println!(
+        "== simd kernel speedup: width 1, {}x{}x{}, feature {}, avx2 {} ==",
+        m,
+        k,
+        n,
+        if simd::compiled() { "on" } else { "off (speedups ~1x by construction)" },
+        simd::avx2_available(),
+    );
+    let mut rng = Pcg::seeded(0x51fd);
+    let a = Mat::from_vec(m, k, rng.normal_vec(m * k, 1.0));
+    let b = Mat::from_vec(k, n, rng.normal_vec(k * n, 1.0));
+    let at = Mat::from_vec(k, m, rng.normal_vec(k * m, 1.0)); // atᵀ @ b
+    let bt = Mat::from_vec(n, k, rng.normal_vec(n * k, 1.0)); // a @ btᵀ
+    let x = rng.normal_vec(k, 1.0);
+
+    let mut table = TablePrinter::new(&["kernel", "scalar ms", "simd ms", "speedup"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut family_min = f64::INFINITY;
+    let mut case = |name: &str, matmul_family: bool, tol: f32, f: &dyn Fn() -> Vec<f32>| {
+        let warm = 1;
+        let (scalar_t, scalar_out) = pool::with_threads(1, || {
+            simd::with_scalar(|| {
+                let t = time_fn(name, warm, iters, || {
+                    std::hint::black_box(f());
+                });
+                (t, f())
+            })
+        });
+        let (fast_t, fast_out) = pool::with_threads(1, || {
+            let t = time_fn(name, warm, iters, || {
+                std::hint::black_box(f());
+            });
+            (t, f())
+        });
+        // the parity gate: a speedup from diverging numerics is a bug
+        assert_eq!(scalar_out.len(), fast_out.len(), "{name}: shape drift");
+        for (sv, fv) in scalar_out.iter().zip(&fast_out) {
+            assert!(
+                (sv - fv).abs() <= tol * (1.0 + sv.abs().max(fv.abs())),
+                "{name}: scalar {sv} vs simd {fv} outside ulp bound"
+            );
+        }
+        let speedup = scalar_t.mean_ms / fast_t.mean_ms.max(1e-9);
+        if matmul_family {
+            family_min = family_min.min(speedup);
+        }
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", scalar_t.mean_ms),
+            format!("{:.2}", fast_t.mean_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("kernel", s(name)),
+            ("scalar_ms", num(scalar_t.mean_ms)),
+            ("simd_ms", num(fast_t.mean_ms)),
+            ("speedup", num(speedup)),
+        ]));
+    };
+    case("matmul", true, 1e-4, &|| a.matmul(&b).data);
+    case("matmul_tn", true, 1e-4, &|| at.matmul_tn(&b).data);
+    case("matmul_nt", true, 1e-4, &|| a.matmul_nt(&bt).data);
+    case("matvec", true, 1e-4, &|| a.matvec(&x));
+    case("ema_", false, 0.0, &|| {
+        // vertical kernel: zero drift allowed
+        let mut e = a.clone();
+        e.ema_(0.9, &a, 0.1);
+        e.data
+    });
+    case("add+scale", false, 0.0, &|| a.add(&a).scale(0.5).data);
+    case("fro_norm_sq", false, 1e-4, &|| vec![a.fro_norm_sq()]);
+    case("col_sq_norms", false, 0.0, &|| a.col_sq_norms());
+    // iterative trajectory — ulp drift amplifies through the passes
+    case("mgs_qr", false, 1e-3, &|| mgs_qr(&at).data);
+    table.print();
+    println!(
+        "matmul-family min speedup: {family_min:.2}x \
+         (acceptance: ≥ 2x with --features simd on AVX2 hosts)\n"
+    );
+    obj(vec![
+        ("feature", Json::Bool(simd::compiled())),
+        ("avx2", Json::Bool(simd::avx2_available())),
+        ("shape", s(&format!("{m}x{k}x{n}"))),
+        ("matmul_family_min_speedup", num(family_min)),
+        ("kernels", Json::Arr(rows)),
+    ])
+}
+
 /// Serial-vs-parallel micro-bench on the native optimizer kernels: one
 /// refresh + `steps` update steps on a synthetic (rows x cols) gradient.
 fn kernel_speedup_section() {
     let cores = pool::available();
-    let (rows, cols, steps) = (256, 512, 4);
+    let (rows, cols, steps) = if smoke() { (96, 128, 2) } else { (256, 512, 4) };
+    let iters = if smoke() { 1 } else { 3 };
     let hp = Hyper { rank: 32, leading: 10, ..Hyper::default() };
     println!("== native kernel speedup: {rows}x{cols} grads, width 1 vs {cores} ==");
     let mut table =
@@ -42,7 +150,7 @@ fn kernel_speedup_section() {
             .collect();
         let measure = |width: usize| {
             pool::with_threads(width, || {
-                time_fn(name, 1, 3, || {
+                time_fn(name, 1, iters, || {
                     let opt = build(name, &hp).expect("registry");
                     let mut slot = Slot::new(opt, rows, cols);
                     for (t, g) in grads.iter().enumerate() {
@@ -75,10 +183,11 @@ fn kernel_speedup_section() {
 fn decomp_speedup_section() {
     let cores = pool::available();
     let mut rng = Pcg::seeded(0xdec0);
-    let n = 192;
+    let n = if smoke() { 96 } else { 192 };
+    let iters = if smoke() { 1 } else { 3 };
     let b = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
     let spd = b.matmul_nt(&b);
-    let (qm, qr) = (512, 96);
+    let (qm, qr) = if smoke() { (192, 48) } else { (512, 96) };
     let tall = Mat::from_vec(qm, qr, rng.normal_vec(qm * qr, 1.0));
     println!("== decomposition speedup: width 1 vs {cores} ==");
     let mut table = TablePrinter::new(&[
@@ -96,15 +205,17 @@ fn decomp_speedup_section() {
     // `historical serial` times the pre-pool kernel where one survives
     // (the cyclic Jacobi sweep); for the others, width 1 of the current
     // algorithm is the serial baseline (identical bytes out).
+    let eigh_name = format!("jacobi_eigh {n}x{n} (10 sweeps)");
+    let qr_name = format!("mgs_qr {qm}x{qr} (MGS2)");
     let cases: [(&str, &dyn Fn(), Option<&dyn Fn()>); 2] = [
-        ("jacobi_eigh 192x192 (10 sweeps)", &eigh, Some(&eigh_cyclic)),
-        ("mgs_qr 512x96 (MGS2)", &qr_f, None),
+        (&eigh_name, &eigh, Some(&eigh_cyclic)),
+        (&qr_name, &qr_f, None),
     ];
     for (name, f, cyclic) in cases {
-        let serial = pool::with_threads(1, || time_fn(name, 1, 3, || f()));
-        let parallel = pool::with_threads(cores, || time_fn(name, 1, 3, || f()));
+        let serial = pool::with_threads(1, || time_fn(name, 1, iters, || f()));
+        let parallel = pool::with_threads(cores, || time_fn(name, 1, iters, || f()));
         let hist = cyclic
-            .map(|c| pool::with_threads(1, || time_fn(name, 1, 3, || c())))
+            .map(|c| pool::with_threads(1, || time_fn(name, 1, iters, || c())))
             .map(|t| format!("{:.1}", t.mean_ms))
             .unwrap_or_else(|| "= serial".into());
         table.row(vec![
@@ -120,8 +231,14 @@ fn decomp_speedup_section() {
 }
 
 fn main() {
+    let simd_json = simd_kernel_section();
     kernel_speedup_section();
     decomp_speedup_section();
+    let summary = obj(vec![("smoke", Json::Bool(smoke())), ("simd", simd_json)]);
+    match write_summary("fig3_throughput", &summary) {
+        Ok(path) => println!("summary → {path}"),
+        Err(e) => eprintln!("could not write fig3 summary: {e:#}"),
+    }
     if !artifacts_available() {
         return;
     }

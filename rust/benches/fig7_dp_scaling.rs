@@ -13,21 +13,31 @@
 //!   training with `[dist] sim = true`, reporting the `dp_grad_exec`
 //!   profile phase and tokens/s per worker count.
 //!
-//! Protocol notes live in EXPERIMENTS.md §fig7.
+//! Protocol notes live in EXPERIMENTS.md §fig7. `AR_BENCH_SMOKE=1`
+//! shrinks the synthetic section for CI's bench-smoke job (the bitwise
+//! parity assert stays live) and the summary lands in
+//! `runs/bench/fig7_dp_scaling_summary.json`.
 
-use alice_racs::bench::{artifacts_available, bench_cfg, bench_steps, dp_sweep, TablePrinter};
+use alice_racs::bench::{
+    artifacts_available, bench_cfg, bench_steps, dp_sweep, smoke, write_summary, TablePrinter,
+};
 use alice_racs::coordinator::{run_with, Trainer};
 use alice_racs::dist::{run_round, DistConfig, SyntheticGradSource};
 use alice_racs::runtime::HostTensor;
-use alice_racs::util::{mean, pool, Pcg, Timer};
+use alice_racs::util::json::{num, obj, s};
+use alice_racs::util::{mean, pool, Json, Pcg, Timer};
 
-fn synthetic_section() {
+fn synthetic_section() -> Json {
     let cores = pool::available();
     let micro = 8;
-    let rounds = 6;
+    let rounds = if smoke() { 3 } else { 6 };
     // model-ish gradient geometry + a busywork matmul that dominates cost
-    let shapes = vec![(256, 128), (128, 256), (1, 256), (64, 512)];
-    let work = 160;
+    let shapes = if smoke() {
+        vec![(128, 64), (64, 128), (1, 128)]
+    } else {
+        vec![(256, 128), (128, 256), (1, 256), (64, 512)]
+    };
+    let work = if smoke() { 64 } else { 160 };
     println!(
         "== synthetic DP rounds: {micro} microbatches/round, {rounds} rounds, \
          work n={work}, pool width {cores} =="
@@ -42,6 +52,7 @@ fn synthetic_section() {
         TablePrinter::new(&["dp_workers", "round ms", "speedup", "imbalance", "loss bits"]);
     let mut base_ms = 0.0f64;
     let mut base_bits: Option<u32> = None;
+    let mut json_rows: Vec<Json> = Vec::new();
     for dp in dp_sweep() {
         let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
         let mut coord = dist.coordinator();
@@ -73,9 +84,22 @@ fn synthetic_section() {
             format!("{imb:.2}"),
             format!("{loss_bits:08x}"),
         ]);
+        json_rows.push(obj(vec![
+            ("dp_workers", num(dp as f64)),
+            ("round_ms", num(ms)),
+            ("speedup", num(base_ms / ms.max(1e-9))),
+            ("imbalance", num(imb)),
+            ("loss_bits", s(&format!("{loss_bits:08x}"))),
+        ]));
     }
     table.print();
     println!("(loss bits equal on every row: same reduced gradient, only faster)");
+    obj(vec![
+        ("smoke", Json::Bool(smoke())),
+        ("pool_width", num(cores as f64)),
+        ("parity", s("bitwise loss equality asserted across dp_workers")),
+        ("rounds", Json::Arr(json_rows)),
+    ])
 }
 
 fn trainer_section() {
@@ -116,6 +140,10 @@ fn trainer_section() {
 }
 
 fn main() {
-    synthetic_section();
+    let summary = synthetic_section();
+    match write_summary("fig7_dp_scaling", &summary) {
+        Ok(path) => println!("summary → {path}"),
+        Err(e) => eprintln!("could not write fig7 summary: {e:#}"),
+    }
     trainer_section();
 }

@@ -8,13 +8,16 @@
 //! * `AR_BENCH_OPTS`    — comma list overriding the optimizer sweep
 //! * `AR_BENCH_THREADS` — pool width for the runs (0 = all cores, the
 //!   default; `fig3_throughput` additionally sweeps serial vs parallel)
+//! * `AR_BENCH_SMOKE`   — `1` shrinks the no-artifact sections to a CI
+//!   smoke run (parity asserts stay live; summaries land in
+//!   `runs/bench/*_summary.json` via [`write_summary`])
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::coordinator::{self, Summary, Trainer};
 use crate::opt;
-use crate::util::{mean, std_dev, Timer};
+use crate::util::{mean, std_dev, Json, Timer};
 
 /// Measured wallclock stats for one micro-bench.
 #[derive(Debug, Clone)]
@@ -77,8 +80,30 @@ pub fn bench_threads(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Smoke mode for CI's bench-smoke job (`AR_BENCH_SMOKE=1`): the figure
+/// benches shrink their no-artifact sections from minutes to seconds
+/// while keeping every internal parity assert live — the job gates on
+/// the asserts, the uploaded summaries record the (smoke-sized) numbers.
+pub fn smoke() -> bool {
+    std::env::var("AR_BENCH_SMOKE").map(|v| v.trim() == "1").unwrap_or(false)
+}
+
+/// Write a bench's machine-readable summary to
+/// `runs/bench/<name>_summary.json`. CI's bench-smoke job uploads these
+/// as workflow artifacts — the first rung of a perf-trajectory gate
+/// (compare summaries across commits before an in-CI threshold exists).
+/// Returns the path written.
+pub fn write_summary(name: &str, summary: &Json) -> Result<String> {
+    let dir = "runs/bench";
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{name}_summary.json");
+    std::fs::write(&path, summary.to_string())?;
+    Ok(path)
+}
+
 /// Simulated DP worker count for the dist benches/tests (the CI matrix
-/// sets `AR_DP_WORKERS=4` on the dist job; 0/unset = use the default).
+/// sets `AR_DP_WORKERS=8` on the dist cell — 8 workers oversubscribing a
+/// width-4 pool, past the {1, 2, 4} base sweep; 0/unset = the default).
 pub fn bench_dp_workers(default: usize) -> usize {
     match std::env::var("AR_DP_WORKERS").ok().and_then(|v| v.parse().ok()) {
         Some(0) | None => default,
@@ -203,10 +228,22 @@ mod tests {
         std::env::remove_var("AR_BENCH_STEPS");
         std::env::remove_var("AR_BENCH_THREADS");
         std::env::remove_var("AR_DP_WORKERS");
+        std::env::remove_var("AR_BENCH_SMOKE");
         assert_eq!(bench_steps(120), 120);
         assert_eq!(bench_opts(&["adam", "racs"]), vec!["adam", "racs"]);
         assert_eq!(bench_threads(0), 0);
         assert_eq!(bench_dp_workers(4), 4, "unset env falls back to the default");
+        assert!(!smoke(), "smoke mode requires AR_BENCH_SMOKE=1");
+    }
+
+    #[test]
+    fn write_summary_emits_valid_json() {
+        let j = crate::util::json::obj(vec![("x", crate::util::json::num(1.5))]);
+        let path = write_summary("selftest", &j).expect("write");
+        let txt = std::fs::read_to_string(&path).expect("read back");
+        let parsed = Json::parse(&txt).expect("parse");
+        assert!((parsed.f64_of("x").unwrap() - 1.5).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

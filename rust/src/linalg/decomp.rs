@@ -26,20 +26,29 @@
 //! Determinism: every fan-out writes disjoint data with a fixed per-element
 //! float-op order, algorithm selection and partitioning are pure functions
 //! of the input shape, and the remaining reductions (norms, dot products)
-//! run single-pass on the calling thread — so both decompositions are
-//! **bitwise identical at every pool width**, width 1 (the serial
-//! baseline) included. `rust/tests/decomp_parity.rs` pins this down.
+//! run whole-slice on whichever thread owns the step — so both
+//! decompositions are **bitwise identical at every pool width**, width 1
+//! (the serial baseline) included. `rust/tests/decomp_parity.rs` pins this
+//! down. The inner loops (column norms/dots/projections, both rotation
+//! phases) route through `linalg::simd`; the reductions there use a fixed
+//! lane tree that depends only on the slice length, so the width contract
+//! holds per feature setting, with scalar↔simd drift ulp-bounded
+//! (`tests/simd_parity.rs`). The convergence check stays a plain serial
+//! sum under every setting — the early exit is part of the contract.
 
 use crate::util::pool::{self, SendPtr};
 use crate::util::Pcg;
 
 use super::mat::Mat;
+use super::simd;
 
 const EPS: f32 = 1e-8;
 
 /// Below this many trailing-projection elements (rows x trailing columns)
-/// an MGS step stays on the calling thread.
-const QR_PAR_MIN_WORK: usize = 1 << 14;
+/// an MGS step stays on the calling thread. 4x higher with the `simd`
+/// feature — the projections get ~4-8x cheaper per element, so the
+/// break-even trailing block is larger.
+const QR_PAR_MIN_WORK: usize = if cfg!(feature = "simd") { 1 << 16 } else { 1 << 14 };
 
 /// Dimension at which `jacobi_eigh` switches from the serial cyclic sweep
 /// to parallel-ordered rounds. Below it the rotation count is too small to
@@ -75,7 +84,7 @@ pub fn mgs_qr(a: &Mat) -> Mat {
 fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
     let r = cols.len();
     for j in 0..r {
-        let nrm = cols[j].iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nrm = simd::sum_sq(&cols[j]).sqrt();
         if nrm > 1e-6 {
             for x in &mut cols[j] {
                 *x /= nrm;
@@ -85,12 +94,10 @@ fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
             let mut fb = vec![0.0f32; m];
             fb[j % m] = 1.0;
             for jj in 0..j {
-                let dot: f32 = cols[jj].iter().zip(&fb).map(|(a, b)| a * b).sum();
-                for (fi, qi) in fb.iter_mut().zip(&cols[jj]) {
-                    *fi -= dot * qi;
-                }
+                let dot = simd::dot(&cols[jj], &fb);
+                simd::axpy(&mut fb, -dot, &cols[jj]);
             }
-            let fn_ = fb.iter().map(|x| x * x).sum::<f32>().sqrt() + EPS;
+            let fn_ = simd::sum_sq(&fb).sqrt() + EPS;
             for x in &mut fb {
                 *x /= fn_;
             }
@@ -102,10 +109,8 @@ fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
         }
         let qj = &head[j];
         let project = |c: &mut Vec<f32>| {
-            let dot: f32 = qj.iter().zip(c.iter()).map(|(a, b)| a * b).sum();
-            for (ci, qi) in c.iter_mut().zip(qj) {
-                *ci -= dot * qi;
-            }
+            let dot = simd::dot(qj, c);
+            simd::axpy(c, -dot, qj);
         };
         if m * tail.len() >= QR_PAR_MIN_WORK {
             pool::map_mut(tail, |_, c| project(c));
@@ -269,12 +274,7 @@ fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
                     // so rows p and q are touched by this task alone.
                     let rp = unsafe { std::slice::from_raw_parts_mut(base.0.add(p * n), n) };
                     let rq = unsafe { std::slice::from_raw_parts_mut(base.0.add(q * n), n) };
-                    for k in 0..n {
-                        let wpk = rp[k];
-                        let wqk = rq[k];
-                        rp[k] = c * wpk - s * wqk;
-                        rq[k] = s * wpk + c * wqk;
-                    }
+                    simd::rot2(rp, rq, c, s);
                 }
             });
             // eigenvector phase: V ← V J, columns only.
@@ -285,7 +285,9 @@ fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
 }
 
 /// Apply one round's column rotations to a row-major n-column buffer,
-/// fanning row blocks out over the pool.
+/// fanning row blocks out over the pool. Within a block the kernel layer
+/// picks the loop order (row-outer scalar, 8-row-strip SIMD) — the
+/// round's pairs are disjoint, so every order writes the same bits.
 fn apply_col_rotations(
     data: &mut [f32],
     n: usize,
@@ -293,17 +295,7 @@ fn apply_col_rotations(
     rot: &[Option<(f32, f32)>],
 ) {
     pool::for_each_chunk_mut(data, JACOBI_ROW_BLK * n, |_, rows| {
-        for row in rows.chunks_mut(n) {
-            for (t, r) in rot.iter().enumerate() {
-                if let Some((c, s)) = *r {
-                    let (p, q) = pairs[t];
-                    let xp = row[p];
-                    let xq = row[q];
-                    row[p] = c * xp - s * xq;
-                    row[q] = s * xp + c * xq;
-                }
-            }
-        }
+        simd::rot_cols_block(rows, n, pairs, rot);
     });
 }
 

@@ -6,6 +6,7 @@
 //! (there the identities are applied implicitly, which is the whole point).
 
 use super::mat::Mat;
+use super::simd;
 
 /// Dense Kronecker product A ⊗ B. O((ma·mb)·(na·nb)) memory — test use only.
 pub fn kron(a: &Mat, b: &Mat) -> Mat {
@@ -17,20 +18,29 @@ pub fn kron(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// Column-stacking vectorization Vec(C) (paper Sec. 2.1: stack columns).
+/// One strided gather per column — the same helper the QR working-set
+/// loads use.
 pub fn vec_cols(c: &Mat) -> Vec<f32> {
-    let mut out = Vec::with_capacity(c.rows * c.cols);
-    for j in 0..c.cols {
-        for i in 0..c.rows {
-            out.push(c.at(i, j));
+    let mut out = vec![0.0; c.rows * c.cols];
+    if c.rows > 0 {
+        for (j, dst) in out.chunks_mut(c.rows).enumerate() {
+            simd::gather_stride(dst, &c.data[j..], c.cols);
         }
     }
     out
 }
 
-/// Inverse of `vec_cols`: Mat(v) with given rows/cols.
+/// Inverse of `vec_cols`: Mat(v) with given rows/cols (strided scatter
+/// per column).
 pub fn mat_cols(v: &[f32], rows: usize, cols: usize) -> Mat {
     assert_eq!(v.len(), rows * cols);
-    Mat::from_fn(rows, cols, |i, j| v[j * rows + i])
+    let mut m = Mat::zeros(rows, cols);
+    if rows > 0 {
+        for (j, src) in v.chunks(rows).enumerate() {
+            simd::scatter_stride(&mut m.data[j..], cols, src);
+        }
+    }
+    m
 }
 
 /// Block-diagonal assembly Diag_B(M₁, …, Mₙ).

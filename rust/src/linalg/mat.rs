@@ -17,10 +17,26 @@
 //!   width > 1, and exactly the historical single-pass order at width 1.
 //!   (`max_abs` and `row_sq_norms` are order-insensitive / per-row, so
 //!   they too are bitwise stable.)
+//!
+//! # SIMD
+//!
+//! The inner loops route through `linalg::simd`: scalar (the historical
+//! loops) without the `simd` cargo feature, 8-lane tiled kernels with it.
+//! `matmul` additionally swaps its whole block kernel for a packed
+//! register-blocked microkernel ([`simd::matmul_block_packed`]). Per
+//! feature setting every guarantee above is unchanged — the width
+//! contract is about partitioning and per-element op order, and neither
+//! depends on the lane count. Scalar↔simd drift is ulp-bounded and pinned
+//! by `tests/simd_parity.rs`; the vertical (elementwise) kernels don't
+//! drift at all. (`map`/`zip` take arbitrary closures, which no lane
+//! kernel can see through — they keep the chunked pool fan-out only,
+//! while `scale`/`add`/`sub`/`ema_` route through dedicated kernels.)
 
 use std::fmt;
 
 use crate::util::pool;
+
+use super::simd;
 
 /// Row-major dense matrix.
 #[derive(Clone, PartialEq)]
@@ -44,11 +60,14 @@ const BLK: usize = 64;
 /// calling thread. The persistent pool dispatches in ~µs (queue push +
 /// wake of parked workers), so the bar is 4x lower than under the old
 /// per-region `thread::scope` spawning — medium matrices now fan out.
-const PAR_MIN_FLOPS: usize = 1 << 17;
+/// With the `simd` feature the per-element cost drops ~4-8x, so the
+/// break-even work size rises 4x (thresholds are per-feature constants —
+/// never runtime state — keeping partitioning a pure function of shape).
+const PAR_MIN_FLOPS: usize = if cfg!(feature = "simd") { 1 << 19 } else { 1 << 17 };
 
 /// Below this many elements the elementwise/reduction family stays on the
 /// calling thread (same dispatch-cost argument as [`PAR_MIN_FLOPS`]).
-const PAR_MIN_ELEMS: usize = 1 << 16;
+const PAR_MIN_ELEMS: usize = if cfg!(feature = "simd") { 1 << 18 } else { 1 << 16 };
 
 /// Elementwise/reduction chunk grain (elements). Fixed, so partials
 /// combine identically for every pool width.
@@ -72,13 +91,13 @@ fn elem_grain(len: usize) -> usize {
 /// serial sums instead; see `linalg::decomp`.)
 fn sum_sq(data: &[f32]) -> f32 {
     if pool::threads() <= 1 || data.len() < PAR_MIN_ELEMS {
-        return data.iter().map(|&x| x * x).sum();
+        return simd::sum_sq(data);
     }
     let n = data.len().div_ceil(PAR_CHUNK);
     let parts = pool::map(n, |i| {
         let lo = i * PAR_CHUNK;
         let hi = (lo + PAR_CHUNK).min(data.len());
-        data[lo..hi].iter().map(|&x| x * x).sum::<f32>()
+        simd::sum_sq(&data[lo..hi])
     });
     parts.iter().sum()
 }
@@ -125,14 +144,22 @@ impl Mat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Column j as a contiguous vector (strided gather — the QR working
+    /// set and `kron::vec_cols` share the same helper).
     pub fn col_vec(&self, j: usize) -> Vec<f32> {
-        (0..self.rows).map(|i| self.at(i, j)).collect()
+        let mut out = vec![0.0; self.rows];
+        if self.rows > 0 {
+            simd::gather_stride(&mut out, &self.data[j..], self.cols);
+        }
+        out
     }
 
+    /// Write `v` into column j (strided scatter).
     pub fn set_col(&mut self, j: usize, v: &[f32]) {
         assert_eq!(v.len(), self.rows);
-        for i in 0..self.rows {
-            *self.at_mut(i, j) = v[i];
+        if self.rows > 0 {
+            let cols = self.cols;
+            simd::scatter_stride(&mut self.data[j..], cols, v);
         }
     }
 
@@ -187,7 +214,10 @@ impl Mat {
     }
 
     /// C = A @ B, blocked i-k-j loop (unit-stride inner loop); row blocks
-    /// of C fan out over the pool.
+    /// of C fan out over the pool. On the SIMD path each row-block task
+    /// runs the packed 8-wide microkernel instead (selected once per
+    /// call, on the submitting thread, so a whole product is always one
+    /// kernel family).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul {self:?} @ {b:?}");
         let (m, k, n) = (self.rows, self.cols, b.cols);
@@ -195,9 +225,16 @@ impl Mat {
         if m == 0 || n == 0 {
             return c;
         }
+        let packed = simd::active();
         let rows_per = if m * k * n < PAR_MIN_FLOPS { m } else { BLK };
         pool::for_each_chunk_mut(&mut c.data, rows_per * n, |bi, crows| {
-            self.matmul_block(b, bi * rows_per, crows);
+            let i0 = bi * rows_per;
+            if packed {
+                let i1 = i0 + crows.len() / n;
+                simd::matmul_block_packed(crows, &self.data[i0 * k..i1 * k], &b.data, k, n);
+            } else {
+                self.matmul_block(b, i0, crows);
+            }
         });
         c
     }
@@ -225,9 +262,7 @@ impl Mat {
                         continue;
                     }
                     let crow = &mut crows[(i - i0) * n..(i - i0 + 1) * n];
-                    for j in 0..n {
-                        crow[j] += a * brow[j];
-                    }
+                    simd::axpy(crow, a, brow);
                 }
             }
         });
@@ -249,12 +284,7 @@ impl Mat {
             for (ri, crow) in crows.chunks_mut(n).enumerate() {
                 let arow = &self.data[(i0 + ri) * k..(i0 + ri + 1) * k];
                 for (j, cj) in crow.iter_mut().enumerate() {
-                    let brow = &b.data[j * k..(j + 1) * k];
-                    let mut acc = 0.0f32;
-                    for kk in 0..k {
-                        acc += arow[kk] * brow[kk];
-                    }
-                    *cj = acc;
+                    *cj = simd::dot(arow, &b.data[j * k..(j + 1) * k]);
                 }
             }
         });
@@ -264,12 +294,7 @@ impl Mat {
     /// y = A @ x.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                let row = self.row(i);
-                row.iter().zip(x).map(|(a, b)| a * b).sum()
-            })
-            .collect()
+        (0..self.rows).map(|i| simd::dot(self.row(i), x)).collect()
     }
 
     // ------------------------------------------------------ elementwise ---
@@ -303,15 +328,37 @@ impl Mat {
     }
 
     pub fn scale(&self, s: f32) -> Mat {
-        self.map(|x| x * s)
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let grain = elem_grain(out.data.len());
+        pool::for_each_chunk_mut(&mut out.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            simd::scale_into(chunk, &self.data[lo..lo + chunk.len()], s);
+        });
+        out
     }
 
     pub fn add(&self, other: &Mat) -> Mat {
-        self.zip(other, |a, b| a + b)
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let grain = elem_grain(out.data.len());
+        pool::for_each_chunk_mut(&mut out.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            let hi = lo + chunk.len();
+            simd::add_into(chunk, &self.data[lo..hi], &other.data[lo..hi]);
+        });
+        out
     }
 
     pub fn sub(&self, other: &Mat) -> Mat {
-        self.zip(other, |a, b| a - b)
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let grain = elem_grain(out.data.len());
+        pool::for_each_chunk_mut(&mut out.data, grain, |ci, chunk| {
+            let lo = ci * grain;
+            let hi = lo + chunk.len();
+            simd::sub_into(chunk, &self.data[lo..hi], &other.data[lo..hi]);
+        });
+        out
     }
 
     /// self ← a*self + b*other (EMA update, in place, no allocation).
@@ -321,9 +368,7 @@ impl Mat {
         let grain = elem_grain(rhs.len());
         pool::for_each_chunk_mut(&mut self.data, grain, |ci, chunk| {
             let lo = ci * grain;
-            for (x, &y) in chunk.iter_mut().zip(&rhs[lo..lo + chunk.len()]) {
-                *x = a * *x + b * y;
-            }
+            simd::ema(chunk, a, &rhs[lo..lo + chunk.len()], b);
         });
     }
 
@@ -337,13 +382,13 @@ impl Mat {
 
     pub fn max_abs(&self) -> f32 {
         if pool::threads() <= 1 || self.data.len() < PAR_MIN_ELEMS {
-            return self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            return simd::max_abs(&self.data);
         }
         let n = self.data.len().div_ceil(PAR_CHUNK);
         let parts = pool::map(n, |i| {
             let lo = i * PAR_CHUNK;
             let hi = (lo + PAR_CHUNK).min(self.data.len());
-            self.data[lo..hi].iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+            simd::max_abs(&self.data[lo..hi])
         });
         parts.iter().fold(0.0f32, |m, &x| m.max(x))
     }
@@ -354,10 +399,7 @@ impl Mat {
         if pool::threads() <= 1 || self.rows * self.cols < PAR_MIN_ELEMS {
             let mut out = vec![0.0f32; self.cols];
             for i in 0..self.rows {
-                let row = self.row(i);
-                for (o, &x) in out.iter_mut().zip(row) {
-                    *o += x * x;
-                }
+                simd::sq_accum(&mut out, self.row(i));
             }
             return out;
         }
@@ -365,10 +407,7 @@ impl Mat {
         let parts = pool::map(nb, |bi| {
             let mut out = vec![0.0f32; self.cols];
             for i in bi * BLK..((bi + 1) * BLK).min(self.rows) {
-                let row = self.row(i);
-                for (o, &x) in out.iter_mut().zip(row) {
-                    *o += x * x;
-                }
+                simd::sq_accum(&mut out, self.row(i));
             }
             out
         });
@@ -385,14 +424,12 @@ impl Mat {
     /// Squared row l2 norms.
     pub fn row_sq_norms(&self) -> Vec<f32> {
         if pool::threads() <= 1 || self.rows * self.cols < PAR_MIN_ELEMS {
-            return (0..self.rows)
-                .map(|i| self.row(i).iter().map(|&x| x * x).sum())
-                .collect();
+            return (0..self.rows).map(|i| simd::sum_sq(self.row(i))).collect();
         }
         let nb = self.rows.div_ceil(BLK);
         let parts = pool::map(nb, |bi| {
             (bi * BLK..((bi + 1) * BLK).min(self.rows))
-                .map(|i| self.row(i).iter().map(|&x| x * x).sum())
+                .map(|i| simd::sum_sq(self.row(i)))
                 .collect::<Vec<f32>>()
         });
         parts.concat()
@@ -577,6 +614,33 @@ mod tests {
         assert_eq!(base.0.data, par.0.data);
         assert_eq!(base.1.data, par.1.data);
         assert_eq!(base.2.data, par.2.data);
+    }
+
+    #[test]
+    fn dedicated_elementwise_matches_map_zip() {
+        // scale/add/sub moved off the generic map/zip closures onto the
+        // simd kernels; same bytes out under every feature setting
+        let mut rng = crate::util::Pcg::seeded(31);
+        let a = Mat::from_vec(9, 13, rng.normal_vec(117, 1.0));
+        let b = Mat::from_vec(9, 13, rng.normal_vec(117, 1.0));
+        assert_eq!(a.scale(2.5).data, a.map(|x| x * 2.5).data);
+        assert_eq!(a.add(&b).data, a.zip(&b, |x, y| x + y).data);
+        assert_eq!(a.sub(&b).data, a.zip(&b, |x, y| x - y).data);
+    }
+
+    #[test]
+    fn col_vec_set_col_roundtrip() {
+        let mut m = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f32);
+        let c2 = m.col_vec(2);
+        assert_eq!(c2, vec![2.0, 6.0, 10.0, 14.0, 18.0]);
+        m.set_col(1, &c2);
+        for (i, &v) in c2.iter().enumerate() {
+            assert_eq!(m.at(i, 1), v);
+        }
+        // degenerate: zero-row matrices must not slice out of bounds
+        let mut e = Mat::zeros(0, 3);
+        assert!(e.col_vec(2).is_empty());
+        e.set_col(2, &[]);
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Dense linear-algebra substrate (no BLAS/LAPACK offline): `Mat` plus the
 //! decompositions the paper's optimizers need — MGS QR, Jacobi EVD,
 //! subspace iteration (Alg. 10), Newton-Schulz roots (App. B.8) — and
-//! Kronecker utilities for the `fisher` verification suite.
+//! Kronecker utilities for the `fisher` verification suite. Inner loops
+//! live in [`simd`]: scalar by default, 8-lane microkernels (with runtime
+//! AVX2 on x86_64) under the `simd` cargo feature.
 
 pub mod decomp;
 pub mod kron;
 pub mod mat;
+pub mod simd;
 
 pub use decomp::{
     complete_basis, inv_fourth_root, jacobi_eigh, jacobi_eigh_serial, mgs_qr,

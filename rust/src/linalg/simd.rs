@@ -1,0 +1,1165 @@
+//! 8-lane f32 microkernels for the `linalg` hot paths.
+//!
+//! The inner loops of the matmul family, the elementwise family, the
+//! reduction family, the MGS trailing-column projection, and the Jacobi
+//! rotation phases all funnel through this module. Three instantiations
+//! of every kernel exist:
+//!
+//! * **scalar** ([`scalar`]) — the historical loops, always compiled,
+//!   bit-for-bit the pre-SIMD behavior. The default dispatch target when
+//!   the `simd` cargo feature is off.
+//! * **portable lanes** — the same kernel tiled over a `[f32; 8]` lane
+//!   struct ([`F32x8`]); plain Rust, compiles on every target.
+//! * **AVX2** — `#[target_feature(enable = "avx2")]` instantiations of
+//!   the *identical* lane code on `x86_64`, picked at runtime via CPU
+//!   detection. Only vertical 256-bit ops are generated (no FMA
+//!   contraction), so the AVX2 and portable instantiations are **bitwise
+//!   identical** — the feature setting alone determines the numbers, the
+//!   host CPU only the speed.
+//!
+//! # Dispatch
+//!
+//! With the `simd` feature off every public kernel compiles straight to
+//! its scalar body (the `cfg!` test is a compile-time constant — zero
+//! dispatch cost). With the feature on, kernels take the lane path unless
+//! the computation runs under [`with_scalar`], the baseline hook used by
+//! the fig3 speedup bench and `tests/simd_parity.rs`. The force-scalar
+//! flag lives in `pool::context()` bit 0, so it follows fanned-out work
+//! into pool workers exactly like the width override — a forced-scalar
+//! measurement can never silently mix SIMD tiles on helper threads.
+//!
+//! # Determinism contract
+//!
+//! * **Vertical kernels** (axpy, scale/add/sub/ema, normalize, sq_accum,
+//!   both rotation kernels, and the packed matmul tiles) perform the same
+//!   float ops per element in the same order as the scalar loops — they
+//!   are bitwise identical to scalar at every pool width.
+//! * **Horizontal reductions** (dot, sum, sum_sq, sse_about) regroup the
+//!   accumulation into a fixed shape: two 8-lane accumulators over
+//!   16-element stripes, combined as `(acc0 + acc1)` through the fixed
+//!   lane tree `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`, plus an in-order
+//!   scalar tail. The shape depends only on the input length — never the
+//!   pool width or the host CPU — so the SIMD path is bitwise
+//!   reproducible at a given feature setting, while scalar↔simd drift is
+//!   ulp-bounded (pinned by `tests/simd_parity.rs`). `max_abs` regroups
+//!   too, but max is order-insensitive, so its result never changes.
+//! * Dispatch is per-computation, not per-element: a single kernel call
+//!   never mixes scalar and lane arithmetic.
+
+use crate::util::pool;
+
+/// `pool::context()` bit claimed by [`with_scalar`].
+const FORCE_SCALAR: u32 = 1 << 0;
+
+/// k-block edge of the packed matmul microkernel (mirrors the cache
+/// blocking of the scalar kernel in `linalg::mat`).
+const KC: usize = 64;
+
+/// Whether the `simd` feature is compiled in at all (bench reporting).
+pub fn compiled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Whether kernels currently dispatch to the lane path: requires the
+/// `simd` feature and no enclosing [`with_scalar`].
+pub fn active() -> bool {
+    cfg!(feature = "simd") && (pool::context() & FORCE_SCALAR) == 0
+}
+
+/// Run `f` with every kernel pinned to the scalar path — the baseline
+/// hook for speedup measurements and parity tests. Scoped and re-entrant;
+/// the flag follows `f`'s parallel regions into pool workers.
+pub fn with_scalar<R>(f: impl FnOnce() -> R) -> R {
+    pool::with_context(pool::context() | FORCE_SCALAR, f)
+}
+
+/// Whether the runtime AVX2 instantiations are in play (bench reporting —
+/// the portable lane path is used when this is false).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx2()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+// --------------------------------------------------------------- lanes ---
+
+/// Portable 8-lane f32 vector. All ops are per-lane and `inline(always)`,
+/// so the AVX2 instantiations compile them to single 256-bit instructions
+/// while every other target gets the autovectorizer's best.
+#[derive(Clone, Copy)]
+struct F32x8([f32; 8]);
+
+impl F32x8 {
+    const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x8([v; 8])
+    }
+
+    /// Load the first 8 elements of `s` (caller guarantees `s.len() >= 8`).
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self {
+        let mut l = [0.0; 8];
+        l.copy_from_slice(&s[..8]);
+        F32x8(l)
+    }
+
+    /// Load up to 8 elements, zero-filling the missing lanes.
+    #[inline(always)]
+    fn load_partial(s: &[f32]) -> Self {
+        let mut l = [0.0; 8];
+        l[..s.len()].copy_from_slice(s);
+        F32x8(l)
+    }
+
+    #[inline(always)]
+    fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Store only the first `d.len()` lanes.
+    #[inline(always)]
+    fn store_partial(self, d: &mut [f32]) {
+        let w = d.len();
+        d.copy_from_slice(&self.0[..w]);
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(o.0) {
+            *a += b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(o.0) {
+            *a -= b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(o.0) {
+            *a *= b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(o.0) {
+            *a /= b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> Self {
+        let mut r = self.0;
+        for a in r.iter_mut() {
+            *a = a.abs();
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(o.0) {
+            *a = a.max(b);
+        }
+        F32x8(r)
+    }
+
+    /// Horizontal sum through the fixed lane tree
+    /// `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))` — part of the determinism
+    /// contract: the reduction shape never depends on anything but this
+    /// constant.
+    #[inline(always)]
+    fn hsum(self) -> f32 {
+        let a = self.0;
+        let s04 = a[0] + a[4];
+        let s15 = a[1] + a[5];
+        let s26 = a[2] + a[6];
+        let s37 = a[3] + a[7];
+        (s04 + s15) + (s26 + s37)
+    }
+
+    /// Horizontal max of non-negative lanes.
+    #[inline(always)]
+    fn hmax(self) -> f32 {
+        self.0.iter().fold(0.0f32, |m, &v| m.max(v))
+    }
+}
+
+// ------------------------------------------------------ scalar kernels ---
+
+/// The historical scalar kernels — always compiled, bit-for-bit the
+/// pre-SIMD loops. Public so the fig3 bench and `tests/simd_parity.rs`
+/// can pin the lane path against them inside one binary; runtime forcing
+/// of whole computations goes through [`with_scalar`] instead.
+pub mod scalar {
+    pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+        x.iter().zip(y).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn sum(x: &[f32]) -> f32 {
+        x.iter().sum()
+    }
+
+    pub fn sum_sq(x: &[f32]) -> f32 {
+        x.iter().map(|&v| v * v).sum()
+    }
+
+    /// Sum of squared deviations about `mean`.
+    pub fn sse_about(x: &[f32], mean: f32) -> f32 {
+        x.iter().map(|&v| (v - mean) * (v - mean)).sum()
+    }
+
+    pub fn max_abs(x: &[f32]) -> f32 {
+        x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// dst += a * src.
+    pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += a * s;
+        }
+    }
+
+    /// out = src * s.
+    pub fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
+        for (o, x) in out.iter_mut().zip(src) {
+            *o = x * s;
+        }
+    }
+
+    /// out = a + b.
+    pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = x + y;
+        }
+    }
+
+    /// out = a - b.
+    pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = x - y;
+        }
+    }
+
+    /// dst = a * dst + b * src.
+    pub fn ema(dst: &mut [f32], a: f32, src: &[f32], b: f32) {
+        for (x, y) in dst.iter_mut().zip(src) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    /// dst = (dst - mean) / std.
+    pub fn normalize(dst: &mut [f32], mean: f32, std: f32) {
+        for x in dst.iter_mut() {
+            *x = (*x - mean) / std;
+        }
+    }
+
+    /// acc += row * row, elementwise.
+    pub fn sq_accum(acc: &mut [f32], row: &[f32]) {
+        for (o, &x) in acc.iter_mut().zip(row) {
+            *o += x * x;
+        }
+    }
+
+    /// Rotate the slice pair: rp' = c*rp - s*rq, rq' = s*rp + c*rq.
+    pub fn rot2(rp: &mut [f32], rq: &mut [f32], c: f32, s: f32) {
+        for (p, q) in rp.iter_mut().zip(rq.iter_mut()) {
+            let (wp, wq) = (*p, *q);
+            *p = c * wp - s * wq;
+            *q = s * wp + c * wq;
+        }
+    }
+
+    /// Apply one Jacobi round's column rotations to a row-major block
+    /// (`rows.len() / n` rows): the historical row-outer / pair-inner
+    /// order. Pairs are disjoint within a round, so every loop order
+    /// writes the same bits.
+    pub fn rot_cols_block(
+        rows: &mut [f32],
+        n: usize,
+        pairs: &[(usize, usize)],
+        rot: &[Option<(f32, f32)>],
+    ) {
+        for row in rows.chunks_mut(n) {
+            for (t, r) in rot.iter().enumerate() {
+                if let Some((c, s)) = *r {
+                    let (p, q) = pairs[t];
+                    let xp = row[p];
+                    let xq = row[q];
+                    row[p] = c * xp - s * xq;
+                    row[q] = s * xp + c * xq;
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- lane kernels ---
+
+#[inline(always)]
+fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc0 = F32x8::ZERO;
+    let mut acc1 = F32x8::ZERO;
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = acc0.add(F32x8::load(&x[i..]).mul(F32x8::load(&y[i..])));
+        acc1 = acc1.add(F32x8::load(&x[i + 8..]).mul(F32x8::load(&y[i + 8..])));
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = acc0.add(F32x8::load(&x[i..]).mul(F32x8::load(&y[i..])));
+        i += 8;
+    }
+    let mut tail = 0.0f32;
+    for (a, b) in x[i..].iter().zip(&y[i..]) {
+        tail += a * b;
+    }
+    acc0.add(acc1).hsum() + tail
+}
+
+#[inline(always)]
+fn sum_lanes(x: &[f32]) -> f32 {
+    let mut acc0 = F32x8::ZERO;
+    let mut acc1 = F32x8::ZERO;
+    let mut it = x.chunks_exact(16);
+    for pair in it.by_ref() {
+        acc0 = acc0.add(F32x8::load(&pair[..8]));
+        acc1 = acc1.add(F32x8::load(&pair[8..]));
+    }
+    let mut rest = it.remainder();
+    if rest.len() >= 8 {
+        acc0 = acc0.add(F32x8::load(rest));
+        rest = &rest[8..];
+    }
+    let mut tail = 0.0f32;
+    for &v in rest {
+        tail += v;
+    }
+    acc0.add(acc1).hsum() + tail
+}
+
+#[inline(always)]
+fn sum_sq_lanes(x: &[f32]) -> f32 {
+    let mut acc0 = F32x8::ZERO;
+    let mut acc1 = F32x8::ZERO;
+    let mut it = x.chunks_exact(16);
+    for pair in it.by_ref() {
+        let a = F32x8::load(&pair[..8]);
+        let b = F32x8::load(&pair[8..]);
+        acc0 = acc0.add(a.mul(a));
+        acc1 = acc1.add(b.mul(b));
+    }
+    let mut rest = it.remainder();
+    if rest.len() >= 8 {
+        let a = F32x8::load(rest);
+        acc0 = acc0.add(a.mul(a));
+        rest = &rest[8..];
+    }
+    let mut tail = 0.0f32;
+    for &v in rest {
+        tail += v * v;
+    }
+    acc0.add(acc1).hsum() + tail
+}
+
+#[inline(always)]
+fn sse_about_lanes(x: &[f32], mean: f32) -> f32 {
+    let mv = F32x8::splat(mean);
+    let mut acc0 = F32x8::ZERO;
+    let mut acc1 = F32x8::ZERO;
+    let mut it = x.chunks_exact(16);
+    for pair in it.by_ref() {
+        let a = F32x8::load(&pair[..8]).sub(mv);
+        let b = F32x8::load(&pair[8..]).sub(mv);
+        acc0 = acc0.add(a.mul(a));
+        acc1 = acc1.add(b.mul(b));
+    }
+    let mut rest = it.remainder();
+    if rest.len() >= 8 {
+        let a = F32x8::load(rest).sub(mv);
+        acc0 = acc0.add(a.mul(a));
+        rest = &rest[8..];
+    }
+    let mut tail = 0.0f32;
+    for &v in rest {
+        tail += (v - mean) * (v - mean);
+    }
+    acc0.add(acc1).hsum() + tail
+}
+
+#[inline(always)]
+fn max_abs_lanes(x: &[f32]) -> f32 {
+    let mut m = F32x8::ZERO;
+    let mut it = x.chunks_exact(8);
+    for c in it.by_ref() {
+        m = m.max(F32x8::load(c).abs());
+    }
+    let mut r = m.hmax();
+    for &v in it.remainder() {
+        r = r.max(v.abs());
+    }
+    r
+}
+
+#[inline(always)]
+fn axpy_lanes(dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let av = F32x8::splat(a);
+    let n8 = dst.len() - dst.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        let d = F32x8::load(&dst[i..]).add(av.mul(F32x8::load(&src[i..])));
+        d.store(&mut dst[i..]);
+        i += 8;
+    }
+    for (d, s) in dst[n8..].iter_mut().zip(&src[n8..]) {
+        *d += a * s;
+    }
+}
+
+#[inline(always)]
+fn scale_into_lanes(out: &mut [f32], src: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), src.len());
+    let sv = F32x8::splat(s);
+    let n8 = out.len() - out.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        F32x8::load(&src[i..]).mul(sv).store(&mut out[i..]);
+        i += 8;
+    }
+    for (o, x) in out[n8..].iter_mut().zip(&src[n8..]) {
+        *o = x * s;
+    }
+}
+
+#[inline(always)]
+fn add_into_lanes(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let n8 = out.len() - out.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        F32x8::load(&a[i..]).add(F32x8::load(&b[i..])).store(&mut out[i..]);
+        i += 8;
+    }
+    for ((o, x), y) in out[n8..].iter_mut().zip(&a[n8..]).zip(&b[n8..]) {
+        *o = x + y;
+    }
+}
+
+#[inline(always)]
+fn sub_into_lanes(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let n8 = out.len() - out.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        F32x8::load(&a[i..]).sub(F32x8::load(&b[i..])).store(&mut out[i..]);
+        i += 8;
+    }
+    for ((o, x), y) in out[n8..].iter_mut().zip(&a[n8..]).zip(&b[n8..]) {
+        *o = x - y;
+    }
+}
+
+#[inline(always)]
+fn ema_lanes(dst: &mut [f32], a: f32, src: &[f32], b: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let av = F32x8::splat(a);
+    let bv = F32x8::splat(b);
+    let n8 = dst.len() - dst.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        let d = av.mul(F32x8::load(&dst[i..])).add(bv.mul(F32x8::load(&src[i..])));
+        d.store(&mut dst[i..]);
+        i += 8;
+    }
+    for (x, y) in dst[n8..].iter_mut().zip(&src[n8..]) {
+        *x = a * *x + b * y;
+    }
+}
+
+#[inline(always)]
+fn normalize_lanes(dst: &mut [f32], mean: f32, std: f32) {
+    let mv = F32x8::splat(mean);
+    let sv = F32x8::splat(std);
+    let n8 = dst.len() - dst.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        F32x8::load(&dst[i..]).sub(mv).div(sv).store(&mut dst[i..]);
+        i += 8;
+    }
+    for x in dst[n8..].iter_mut() {
+        *x = (*x - mean) / std;
+    }
+}
+
+#[inline(always)]
+fn sq_accum_lanes(acc: &mut [f32], row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let n8 = acc.len() - acc.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        let r = F32x8::load(&row[i..]);
+        F32x8::load(&acc[i..]).add(r.mul(r)).store(&mut acc[i..]);
+        i += 8;
+    }
+    for (o, &x) in acc[n8..].iter_mut().zip(&row[n8..]) {
+        *o += x * x;
+    }
+}
+
+#[inline(always)]
+fn rot2_lanes(rp: &mut [f32], rq: &mut [f32], c: f32, s: f32) {
+    debug_assert_eq!(rp.len(), rq.len());
+    let cv = F32x8::splat(c);
+    let sv = F32x8::splat(s);
+    let n8 = rp.len() - rp.len() % 8;
+    let mut i = 0;
+    while i < n8 {
+        let p = F32x8::load(&rp[i..]);
+        let q = F32x8::load(&rq[i..]);
+        cv.mul(p).sub(sv.mul(q)).store(&mut rp[i..]);
+        sv.mul(p).add(cv.mul(q)).store(&mut rq[i..]);
+        i += 8;
+    }
+    for (p, q) in rp[n8..].iter_mut().zip(rq[n8..].iter_mut()) {
+        let (wp, wq) = (*p, *q);
+        *p = c * wp - s * wq;
+        *q = s * wp + c * wq;
+    }
+}
+
+/// Lane variant of the column-rotation phase: 8-row strips per pair, with
+/// strided gathers into lanes. Pairs are disjoint within a round, so the
+/// strip-outer / pair-inner order writes the same bits as the scalar
+/// row-outer order; the per-element arithmetic is identical.
+#[inline(always)]
+fn rot_cols_block_lanes(
+    rows: &mut [f32],
+    n: usize,
+    pairs: &[(usize, usize)],
+    rot: &[Option<(f32, f32)>],
+) {
+    for strip in rows.chunks_mut(8 * n) {
+        for (t, r) in rot.iter().enumerate() {
+            if let Some((c, s)) = *r {
+                let (p, q) = pairs[t];
+                let mut lp = [0.0f32; 8];
+                let mut lq = [0.0f32; 8];
+                for (l, row) in strip.chunks(n).enumerate() {
+                    lp[l] = row[p];
+                    lq[l] = row[q];
+                }
+                let (pv, qv) = (F32x8(lp), F32x8(lq));
+                let (cv, sv) = (F32x8::splat(c), F32x8::splat(s));
+                let np = cv.mul(pv).sub(sv.mul(qv));
+                let nq = sv.mul(pv).add(cv.mul(qv));
+                for (l, row) in strip.chunks_mut(n).enumerate() {
+                    row[p] = np.0[l];
+                    row[q] = nq.0[l];
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- packed matmul ---
+
+/// Pack the k-block rows [k0, k0 + kc) of row-major `b` (n columns) into
+/// j-tile-major panels: panel tile `jt` holds `kc` consecutive 8-wide
+/// stripes of columns [8*jt, 8*jt + 8), zero-padded past column n. The
+/// microkernel then streams each tile with unit stride.
+#[inline(always)]
+fn pack_b_panel(panel: &mut [f32], b: &[f32], n: usize, k0: usize, kc: usize) {
+    for (jt, tile) in panel.chunks_mut(kc * 8).enumerate() {
+        let j0 = jt * 8;
+        let w = 8.min(n - j0);
+        for (kk, dst) in tile.chunks_mut(8).enumerate() {
+            let at = (k0 + kk) * n + j0;
+            dst[..w].copy_from_slice(&b[at..at + w]);
+            dst[w..].fill(0.0);
+        }
+    }
+}
+
+/// crow += arow-block @ panel for one row of C, register-blocked two
+/// j-tiles at a time (two independent accumulator chains hide the f32 add
+/// latency without touching the per-element order: each C element still
+/// accumulates in ascending-k order, and zero A elements are skipped
+/// exactly like the scalar kernel).
+#[inline(always)]
+fn row_kernel(crow: &mut [f32], ak: &[f32], panel: &[f32], n: usize) {
+    let kc = ak.len();
+    let nt = n.div_ceil(8);
+    let mut jt = 0;
+    while jt + 2 <= nt {
+        let t0 = &panel[jt * kc * 8..(jt + 1) * kc * 8];
+        let t1 = &panel[(jt + 1) * kc * 8..(jt + 2) * kc * 8];
+        let j0 = jt * 8;
+        let w1 = 8.min(n - j0 - 8);
+        let mut acc0 = F32x8::load(&crow[j0..]);
+        let mut acc1 = F32x8::load_partial(&crow[j0 + 8..j0 + 8 + w1]);
+        for (kk, &a) in ak.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let av = F32x8::splat(a);
+            acc0 = acc0.add(av.mul(F32x8::load(&t0[kk * 8..])));
+            acc1 = acc1.add(av.mul(F32x8::load(&t1[kk * 8..])));
+        }
+        acc0.store(&mut crow[j0..]);
+        acc1.store_partial(&mut crow[j0 + 8..j0 + 8 + w1]);
+        jt += 2;
+    }
+    if jt < nt {
+        let j0 = jt * 8;
+        let w = 8.min(n - j0);
+        let tile = &panel[jt * kc * 8..(jt * kc + kc) * 8];
+        let mut acc = F32x8::load_partial(&crow[j0..j0 + w]);
+        for (bv, &a) in tile.chunks_exact(8).zip(ak) {
+            if a == 0.0 {
+                continue;
+            }
+            acc = acc.add(F32x8::splat(a).mul(F32x8::load(bv)));
+        }
+        acc.store_partial(&mut crow[j0..j0 + w]);
+    }
+}
+
+#[inline(always)]
+fn matmul_block_impl(crows: &mut [f32], arows: &[f32], b: &[f32], k: usize, n: usize) {
+    let nt = n.div_ceil(8);
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        pool::with_scratch(nt * kc * 8, |panel| {
+            pack_b_panel(panel, b, n, k0, kc);
+            for (crow, arow) in crows.chunks_mut(n).zip(arows.chunks(k)) {
+                row_kernel(crow, &arow[k0..k0 + kc], panel, n);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------- AVX2 instantiation ---
+
+/// Instantiate `_lanes` kernels under `#[target_feature(enable = "avx2")]`:
+/// the inlined portable lane code compiles down to 256-bit vertical ops.
+/// Same arithmetic in the same order — bitwise identical to the portable
+/// instantiation, just faster.
+#[cfg(target_arch = "x86_64")]
+macro_rules! avx2_variants {
+    ($(fn $avx2:ident => $lanes:ident ( $($p:ident : $t:ty),* ) $(-> $r:ty)?;)*) => {
+        $(
+            #[target_feature(enable = "avx2")]
+            unsafe fn $avx2($($p: $t),*) $(-> $r)? {
+                $lanes($($p),*)
+            }
+        )*
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+avx2_variants! {
+    fn dot_avx2 => dot_lanes(x: &[f32], y: &[f32]) -> f32;
+    fn sum_avx2 => sum_lanes(x: &[f32]) -> f32;
+    fn sum_sq_avx2 => sum_sq_lanes(x: &[f32]) -> f32;
+    fn sse_about_avx2 => sse_about_lanes(x: &[f32], mean: f32) -> f32;
+    fn max_abs_avx2 => max_abs_lanes(x: &[f32]) -> f32;
+    fn axpy_avx2 => axpy_lanes(dst: &mut [f32], a: f32, src: &[f32]);
+    fn scale_into_avx2 => scale_into_lanes(out: &mut [f32], src: &[f32], s: f32);
+    fn add_into_avx2 => add_into_lanes(out: &mut [f32], a: &[f32], b: &[f32]);
+    fn sub_into_avx2 => sub_into_lanes(out: &mut [f32], a: &[f32], b: &[f32]);
+    fn ema_avx2 => ema_lanes(dst: &mut [f32], a: f32, src: &[f32], b: f32);
+    fn normalize_avx2 => normalize_lanes(dst: &mut [f32], mean: f32, std: f32);
+    fn sq_accum_avx2 => sq_accum_lanes(acc: &mut [f32], row: &[f32]);
+    fn rot2_avx2 => rot2_lanes(rp: &mut [f32], rq: &mut [f32], c: f32, s: f32);
+    fn rot_cols_block_avx2 => rot_cols_block_lanes(
+        rows: &mut [f32], n: usize, pairs: &[(usize, usize)], rot: &[Option<(f32, f32)>]);
+    fn matmul_block_avx2 => matmul_block_impl(
+        crows: &mut [f32], arows: &[f32], b: &[f32], k: usize, n: usize);
+}
+
+// ---------------------------------------------------------- dispatchers ---
+// Pattern: scalar when the feature is off or `with_scalar` is in force;
+// otherwise the AVX2 instantiation when the CPU has it, else portable
+// lanes. The `active()` test is a compile-time constant `false` without
+// the feature, so default builds pay nothing.
+
+/// Dot product. Reduction — fixed lane tree, ulp-bounded vs scalar.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    if !active() {
+        return scalar::dot(x, y);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { dot_avx2(x, y) };
+        }
+    }
+    dot_lanes(x, y)
+}
+
+/// Plain sum. Reduction — fixed lane tree, ulp-bounded vs scalar.
+pub fn sum(x: &[f32]) -> f32 {
+    if !active() {
+        return scalar::sum(x);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { sum_avx2(x) };
+        }
+    }
+    sum_lanes(x)
+}
+
+/// Sum of squares. Reduction — fixed lane tree, ulp-bounded vs scalar.
+pub fn sum_sq(x: &[f32]) -> f32 {
+    if !active() {
+        return scalar::sum_sq(x);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { sum_sq_avx2(x) };
+        }
+    }
+    sum_sq_lanes(x)
+}
+
+/// Sum of squared deviations about `mean`. Reduction — ulp-bounded.
+pub fn sse_about(x: &[f32], mean: f32) -> f32 {
+    if !active() {
+        return scalar::sse_about(x, mean);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { sse_about_avx2(x, mean) };
+        }
+    }
+    sse_about_lanes(x, mean)
+}
+
+/// Max |x|. Regrouped, but max is order-insensitive: same result always.
+pub fn max_abs(x: &[f32]) -> f32 {
+    if !active() {
+        return scalar::max_abs(x);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { max_abs_avx2(x) };
+        }
+    }
+    max_abs_lanes(x)
+}
+
+/// dst += a * src. Vertical — bitwise identical to scalar.
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    if !active() {
+        return scalar::axpy(dst, a, src);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { axpy_avx2(dst, a, src) };
+        }
+    }
+    axpy_lanes(dst, a, src)
+}
+
+/// out = src * s. Vertical — bitwise identical to scalar.
+pub fn scale_into(out: &mut [f32], src: &[f32], s: f32) {
+    if !active() {
+        return scalar::scale_into(out, src, s);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { scale_into_avx2(out, src, s) };
+        }
+    }
+    scale_into_lanes(out, src, s)
+}
+
+/// out = a + b. Vertical — bitwise identical to scalar.
+pub fn add_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    if !active() {
+        return scalar::add_into(out, a, b);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { add_into_avx2(out, a, b) };
+        }
+    }
+    add_into_lanes(out, a, b)
+}
+
+/// out = a - b. Vertical — bitwise identical to scalar.
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    if !active() {
+        return scalar::sub_into(out, a, b);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { sub_into_avx2(out, a, b) };
+        }
+    }
+    sub_into_lanes(out, a, b)
+}
+
+/// dst = a * dst + b * src. Vertical — bitwise identical to scalar.
+pub fn ema(dst: &mut [f32], a: f32, src: &[f32], b: f32) {
+    if !active() {
+        return scalar::ema(dst, a, src, b);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { ema_avx2(dst, a, src, b) };
+        }
+    }
+    ema_lanes(dst, a, src, b)
+}
+
+/// dst = (dst - mean) / std. Vertical — bitwise identical to scalar.
+pub fn normalize(dst: &mut [f32], mean: f32, std: f32) {
+    if !active() {
+        return scalar::normalize(dst, mean, std);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { normalize_avx2(dst, mean, std) };
+        }
+    }
+    normalize_lanes(dst, mean, std)
+}
+
+/// acc += row². Vertical — bitwise identical to scalar.
+pub fn sq_accum(acc: &mut [f32], row: &[f32]) {
+    if !active() {
+        return scalar::sq_accum(acc, row);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { sq_accum_avx2(acc, row) };
+        }
+    }
+    sq_accum_lanes(acc, row)
+}
+
+/// Jacobi row-pair rotation. Vertical — bitwise identical to scalar.
+pub fn rot2(rp: &mut [f32], rq: &mut [f32], c: f32, s: f32) {
+    if !active() {
+        return scalar::rot2(rp, rq, c, s);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { rot2_avx2(rp, rq, c, s) };
+        }
+    }
+    rot2_lanes(rp, rq, c, s)
+}
+
+/// Jacobi column-rotation phase over a row-major block. Disjoint pairs —
+/// bitwise identical to scalar in any loop order.
+pub fn rot_cols_block(
+    rows: &mut [f32],
+    n: usize,
+    pairs: &[(usize, usize)],
+    rot: &[Option<(f32, f32)>],
+) {
+    if !active() {
+        return scalar::rot_cols_block(rows, n, pairs, rot);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { rot_cols_block_avx2(rows, n, pairs, rot) };
+        }
+    }
+    rot_cols_block_lanes(rows, n, pairs, rot)
+}
+
+/// One row-block of C += A-block @ B through the packed 8-wide
+/// microkernel: `crows` are contiguous rows of C (n columns), `arows` the
+/// matching rows of A (row-major, stride k), `b` the full row-major k x n
+/// right factor. B panels are packed once per (row-block task, k-block)
+/// into the pool's per-thread scratch, so the tiles compose with the
+/// `util::pool` row-block fan-out instead of fighting it. Per-element
+/// accumulation stays in ascending-k order with the scalar kernel's
+/// zero-skip, independent of pool width and row-block partition.
+///
+/// Unlike the slice kernels above this does **not** consult [`active`] —
+/// `Mat::matmul` selects between this and its scalar block kernel once
+/// per call.
+pub fn matmul_block_packed(crows: &mut [f32], arows: &[f32], b: &[f32], k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: AVX2 support verified at runtime just above.
+            return unsafe { matmul_block_avx2(crows, arows, b, k, n) };
+        }
+    }
+    matmul_block_impl(crows, arows, b, k, n)
+}
+
+// ------------------------------------------------------ strided copies ---
+
+/// dst[i] = src[i * stride] — the strided column gather shared by
+/// `Mat::col_vec`, `kron::vec_cols`, and the QR working-set loads.
+pub fn gather_stride(dst: &mut [f32], src: &[f32], stride: usize) {
+    for (d, s) in dst.iter_mut().zip(src.iter().step_by(stride)) {
+        *d = *s;
+    }
+}
+
+/// dst[i * stride] = src[i] — the matching scatter (`Mat::set_col`,
+/// `kron::mat_cols`).
+pub fn scatter_stride(dst: &mut [f32], stride: usize, src: &[f32]) {
+    for (d, s) in dst.iter_mut().step_by(stride).zip(src) {
+        *d = *s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Ragged lengths straddling the 8- and 16-lane stripe edges.
+    const LENS: &[usize] = &[0, 1, 7, 8, 9, 15, 16, 17, 40, 129];
+
+    #[test]
+    fn reductions_lane_vs_scalar_ulp_bounded() {
+        let mut rng = Pcg::seeded(1);
+        for &n in LENS {
+            let x = rng.normal_vec(n, 1.0);
+            let y = rng.normal_vec(n, 1.0);
+            assert!(close(dot_lanes(&x, &y), scalar::dot(&x, &y), 1e-5), "dot n={n}");
+            assert!(close(sum_lanes(&x), scalar::sum(&x), 1e-5), "sum n={n}");
+            assert!(close(sum_sq_lanes(&x), scalar::sum_sq(&x), 1e-5), "sum_sq n={n}");
+            assert!(
+                close(sse_about_lanes(&x, 0.25), scalar::sse_about(&x, 0.25), 1e-5),
+                "sse n={n}"
+            );
+            assert_eq!(
+                max_abs_lanes(&x).to_bits(),
+                scalar::max_abs(&x).to_bits(),
+                "max_abs is order-insensitive, n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn vertical_kernels_bitwise_equal_scalar() {
+        let mut rng = Pcg::seeded(2);
+        for &n in LENS {
+            let src = rng.normal_vec(n, 1.0);
+            let other = rng.normal_vec(n, 1.0);
+            let base = rng.normal_vec(n, 1.0);
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            axpy_lanes(&mut a, 0.37, &src);
+            scalar::axpy(&mut b, 0.37, &src);
+            assert_eq!(a, b, "axpy n={n}");
+
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            scale_into_lanes(&mut a, &src, -1.25);
+            scalar::scale_into(&mut b, &src, -1.25);
+            assert_eq!(a, b, "scale n={n}");
+
+            add_into_lanes(&mut a, &src, &other);
+            scalar::add_into(&mut b, &src, &other);
+            assert_eq!(a, b, "add n={n}");
+
+            sub_into_lanes(&mut a, &src, &other);
+            scalar::sub_into(&mut b, &src, &other);
+            assert_eq!(a, b, "sub n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            ema_lanes(&mut a, 0.9, &src, 0.1);
+            scalar::ema(&mut b, 0.9, &src, 0.1);
+            assert_eq!(a, b, "ema n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            normalize_lanes(&mut a, 0.1, 1.7);
+            scalar::normalize(&mut b, 0.1, 1.7);
+            assert_eq!(a, b, "normalize n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            sq_accum_lanes(&mut a, &src);
+            scalar::sq_accum(&mut b, &src);
+            assert_eq!(a, b, "sq_accum n={n}");
+
+            let mut ap = base.clone();
+            let mut aq = src.clone();
+            let mut bp = base.clone();
+            let mut bq = src.clone();
+            rot2_lanes(&mut ap, &mut aq, 0.8, 0.6);
+            scalar::rot2(&mut bp, &mut bq, 0.8, 0.6);
+            assert_eq!(ap, bp, "rot2 p n={n}");
+            assert_eq!(aq, bq, "rot2 q n={n}");
+        }
+    }
+
+    #[test]
+    fn rot_cols_block_lane_vs_scalar_bitwise() {
+        let mut rng = Pcg::seeded(3);
+        // 13 rows x 11 cols: ragged strip (8 + 5 rows)
+        let (rows, n) = (13usize, 11usize);
+        let data = rng.normal_vec(rows * n, 1.0);
+        let pairs = [(0usize, 4usize), (1, 9), (2, 7), (3, 10)];
+        let rot = [
+            Some((0.8f32, 0.6f32)),
+            None,
+            Some((0.6, -0.8)),
+            Some((1.0, 0.0)),
+        ];
+        let mut a = data.clone();
+        let mut b = data.clone();
+        rot_cols_block_lanes(&mut a, n, &pairs, &rot);
+        scalar::rot_cols_block(&mut b, n, &pairs, &rot);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packed_matmul_matches_naive() {
+        let mut rng = Pcg::seeded(4);
+        // shapes straddling KC and the 8-wide tile edges, with a zero
+        // sprinkled in to exercise the skip path
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 9), (5, 64, 16), (4, 130, 23)] {
+            let mut a = rng.normal_vec(m * k, 1.0);
+            if !a.is_empty() {
+                a[0] = 0.0;
+            }
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            matmul_block_impl(&mut c, &a, &b, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += a[i * k + kk] * b[kk * n + j];
+                    }
+                    assert!(
+                        close(c[i * n + j], acc, 1e-4),
+                        "({m},{k},{n}) at ({i},{j}): {} vs {acc}",
+                        c[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_copies_roundtrip() {
+        let src: Vec<f32> = (0..35).map(|i| i as f32).collect();
+        // gather column 2 of a 5x7 row-major matrix
+        let mut col = vec![0.0f32; 5];
+        gather_stride(&mut col, &src[2..], 7);
+        assert_eq!(col, vec![2.0, 9.0, 16.0, 23.0, 30.0]);
+        // scatter it back into a zeroed buffer and check placement
+        let mut dst = vec![0.0f32; 35];
+        scatter_stride(&mut dst[2..], 7, &col);
+        for (i, &v) in dst.iter().enumerate() {
+            let expect = if i % 7 == 2 { i as f32 } else { 0.0 };
+            assert_eq!(v, expect, "index {i}");
+        }
+    }
+
+    #[test]
+    fn with_scalar_forces_the_scalar_path() {
+        assert_eq!(active(), cfg!(feature = "simd"));
+        with_scalar(|| {
+            assert!(!active());
+            with_scalar(|| assert!(!active()));
+            assert!(!active());
+        });
+        assert_eq!(active(), cfg!(feature = "simd"));
+        // dispatchers must agree with the scalar kernels under forcing
+        let mut rng = Pcg::seeded(5);
+        let x = rng.normal_vec(40, 1.0);
+        let y = rng.normal_vec(40, 1.0);
+        let (d, s) = with_scalar(|| (dot(&x, &y), sum_sq(&x)));
+        assert_eq!(d.to_bits(), scalar::dot(&x, &y).to_bits());
+        assert_eq!(s.to_bits(), scalar::sum_sq(&x).to_bits());
+    }
+
+    #[test]
+    fn hsum_uses_the_documented_lane_tree() {
+        // lane values chosen so any other grouping changes the bits
+        let v = F32x8([1.0e8, 1.0, -1.0e8, 1.0, 0.5, 0.25, 0.125, 0.0625]);
+        let a = v.0;
+        let want = ((a[0] + a[4]) + (a[1] + a[5])) + ((a[2] + a[6]) + (a[3] + a[7]));
+        assert_eq!(v.hsum().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn load_partial_zero_fills() {
+        let v = F32x8::load_partial(&[1.0, 2.0, 3.0]);
+        assert_eq!(v.0, [1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut out = [9.0f32; 3];
+        v.store_partial(&mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+    }
+}

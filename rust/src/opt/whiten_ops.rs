@@ -4,7 +4,7 @@
 //! block-diagonal structures: whitening ↔ H = {Iₙ ⊗ M}, normalization ↔
 //! H = {S ⊗ Iₘ} (Proposition 2), with 1-sample estimates of E[·].
 
-use crate::linalg::{whiten, Mat};
+use crate::linalg::{simd, whiten, Mat};
 
 use super::{Hyper, Optimizer, State};
 
@@ -62,17 +62,16 @@ impl Optimizer for Swan {
     fn step(&self, g: &Mat, _state: &mut State, _t: u64) -> Mat {
         let hp = &self.hp;
         let n = g.cols as f32;
-        // GradNorm: per-row mean/std across columns
+        // GradNorm: per-row mean/std across columns (row sums and the
+        // normalization run on the simd kernels; scalar dispatch is the
+        // historical loop bit for bit)
         let gn = {
             let mut out = g.clone();
-            for i in 0..g.rows {
-                let row = g.row(i);
-                let mean = row.iter().sum::<f32>() / n;
-                let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+            for row in out.data.chunks_mut(g.cols.max(1)) {
+                let mean = simd::sum(row) / n;
+                let var = simd::sse_about(row, mean) / n;
                 let std = var.sqrt() + super::EPS;
-                for x in &mut out.data[i * g.cols..(i + 1) * g.cols] {
-                    *x = (*x - mean) / std;
-                }
+                simd::normalize(row, mean, std);
             }
             out
         };

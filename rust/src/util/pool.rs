@@ -54,6 +54,17 @@
 //! region), never partitioning — so it cannot change results (see the
 //! determinism contract below).
 //!
+//! # Context bits and scratch
+//!
+//! [`with_context`] pins an opaque u32 of per-computation bits that
+//! follows work into workers per region, exactly like the width override
+//! — `linalg::simd` uses bit 0 to force scalar kernel dispatch for
+//! baseline measurements, and the guarantee that workers see the
+//! submitting computation's bits is what keeps a forced-scalar
+//! measurement from silently mixing SIMD tiles on helper threads.
+//! [`with_scratch`] hands out a reusable per-thread f32 workspace so
+//! per-task buffers (packed matmul panels) skip the allocator.
+//!
 //! # Panic propagation
 //!
 //! A panic in any task aborts the region early (remaining indices are
@@ -76,7 +87,7 @@
 //!   calling thread: exactly the pre-pool serial behavior.
 
 use std::any::Any;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -96,6 +107,12 @@ thread_local! {
     /// region, like the width, so nested regions draw from their root's
     /// budget instead of conjuring fresh threads.
     static LOCAL_BUDGET: Cell<*const Budget> = const { Cell::new(std::ptr::null()) };
+
+    /// Opaque per-computation context bits (see [`with_context`]).
+    static LOCAL_CTX: Cell<u32> = const { Cell::new(0) };
+
+    /// Per-thread f32 scratch buffer (see [`with_scratch`]).
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Root-region helper-permit counter. Lives on the root region's stack
@@ -210,6 +227,54 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Per-computation context bits for the current thread. Like the width
+/// override, the context follows work into pool workers per region, so a
+/// kernel running on a helper thread sees the bits of the computation that
+/// submitted it — never a stale value from an unrelated earlier region.
+/// `linalg::simd` claims bit 0 (force-scalar dispatch for baseline
+/// measurements); further layers may claim further bits.
+pub fn context() -> u32 {
+    LOCAL_CTX.with(|c| c.get())
+}
+
+/// Run `f` with the context word pinned to `bits` on this thread. Scoped,
+/// re-entrant, and unwind-safe, mirroring [`with_threads`]; regions opened
+/// inside `f` propagate the bits to every worker that serves them.
+pub fn with_context<R>(bits: u32, f: impl FnOnce() -> R) -> R {
+    struct Restore(u32);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_CTX.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LOCAL_CTX.with(|c| {
+        let p = c.get();
+        c.set(bits);
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Borrow a thread-local f32 scratch buffer of at least `len` elements.
+/// Contents are **unspecified** on entry (stale bytes from earlier
+/// borrows) — callers must overwrite everything they read. One allocation
+/// per thread is reused across tasks, so per-task workspaces (the packed
+/// matmul panels in `linalg::simd`) stay off the allocator's hot path; a
+/// re-entrant borrow (a task needing scratch while its caller holds it)
+/// falls back to a fresh temporary buffer.
+pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut buf) => {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+            f(&mut buf[..len])
+        }
+        Err(_) => f(&mut vec![0.0; len]),
+    })
+}
+
 // ------------------------------------------------------------ the pool ---
 
 /// One queued helper job: a type-erased pointer pair into the submitting
@@ -252,6 +317,8 @@ struct RegionHeader {
     /// The submitting thread's effective width — workers adopt it while
     /// running this region's tasks so nested regions resolve identically.
     nested_width: usize,
+    /// The submitting thread's context bits — adopted alongside the width.
+    nested_ctx: u32,
     /// The enclosing root region's helper budget — workers adopt it too,
     /// so regions they open draw from the same cap.
     budget: *const Budget,
@@ -294,6 +361,11 @@ unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *
         c.set(h.nested_width);
         p
     });
+    let prev_ctx = LOCAL_CTX.with(|c| {
+        let p = c.get();
+        c.set(h.nested_ctx);
+        p
+    });
     let prev_budget = LOCAL_BUDGET.with(|c| {
         let p = c.get();
         c.set(h.budget);
@@ -301,6 +373,7 @@ unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *
     });
     claim_loop(h, f);
     LOCAL_BUDGET.with(|c| c.set(prev_budget));
+    LOCAL_CTX.with(|c| c.set(prev_ctx));
     LOCAL_THREADS.with(|c| c.set(prev));
     // Completion handshake: decrement-and-notify under the lock, then
     // never touch `h` again — the submitting thread may free the region
@@ -404,6 +477,7 @@ fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
         next: AtomicUsize::new(0),
         n,
         nested_width: threads(),
+        nested_ctx: context(),
         budget: budget as *const Budget,
         pending: Mutex::new(helpers),
         done_cv: Condvar::new(),
@@ -662,6 +736,57 @@ mod tests {
     fn warmup_prespawns_for_the_effective_width() {
         with_threads(5, warmup);
         assert!(worker_count() >= 4);
+    }
+
+    #[test]
+    fn context_bits_follow_work_into_workers() {
+        with_context(0b101, || {
+            assert_eq!(context(), 0b101);
+            with_threads(4, || {
+                let seen = map(16, |_| context());
+                assert!(seen.iter().all(|&c| c == 0b101), "workers saw {seen:?}");
+                // nested regions too
+                run(4, |_| {
+                    assert_eq!(context(), 0b101);
+                    run(4, |_| assert_eq!(context(), 0b101));
+                });
+            });
+            // re-entrant override and restore
+            with_context(0b10, || assert_eq!(context(), 0b10));
+            assert_eq!(context(), 0b101);
+        });
+        assert_eq!(context(), 0);
+    }
+
+    #[test]
+    fn scratch_is_reused_and_reentrant() {
+        let cap = with_scratch(100, |buf| {
+            assert_eq!(buf.len(), 100);
+            for x in buf.iter_mut() {
+                *x = 7.0;
+            }
+            buf.as_ptr() as usize
+        });
+        // second borrow on the same thread reuses the allocation (same
+        // base pointer for a fit-sized request) and exposes stale bytes
+        with_scratch(50, |buf| {
+            assert_eq!(buf.as_ptr() as usize, cap);
+            assert_eq!(buf[49], 7.0, "scratch contents are unspecified, not zeroed");
+            // re-entrant borrow must not alias the outer one
+            with_scratch(10, |inner| {
+                inner[0] = 1.0;
+                assert_ne!(inner.as_ptr() as usize, cap);
+            });
+        });
+        // works inside pool tasks: each worker has its own buffer
+        with_threads(4, || {
+            run(16, |i| {
+                with_scratch(64, |buf| {
+                    buf[i] = i as f32;
+                    assert_eq!(buf[i], i as f32);
+                });
+            });
+        });
     }
 
     #[test]

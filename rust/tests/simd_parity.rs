@@ -1,0 +1,201 @@
+//! Scalar ↔ SIMD parity harness for the `linalg::simd` microkernel layer,
+//! mirroring `decomp_parity.rs`. Three contracts are pinned, all of them
+//! meaningful under BOTH feature settings (without `--features simd` the
+//! dispatch path *is* the scalar path and every check holds trivially —
+//! which is itself the regression guard for the feature gating):
+//!
+//! * **ulp-bounded drift**: the dispatch path vs `simd::with_scalar` on
+//!   ragged shapes for the matmul family and the horizontal reductions
+//!   (the lane kernels regroup sums into a fixed lane tree).
+//! * **bitwise equality** for the vertical kernels (elementwise family,
+//!   per-row/col norms, rotations): same per-element ops in the same
+//!   order, so the lane path may not drift at all.
+//! * **bitwise width-invariance of the SIMD path** at pool widths {1, 4}:
+//!   partitioning and lane geometry are pure functions of shape, never of
+//!   the worker count.
+
+use alice_racs::linalg::{jacobi_eigh, mat_cols, mgs_qr, simd, vec_cols, Mat};
+use alice_racs::util::{pool, Pcg};
+
+/// Relative closeness bound for kernels that regroup float sums.
+const ULP_TOL: f32 = 1e-4;
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length drift");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= ULP_TOL * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: scalar {x} vs simd {y}"
+        );
+    }
+}
+
+/// (m, k, n) straddling the 64-wide cache blocks, the 8-wide lane tiles,
+/// and the 16-wide reduction stripes, plus degenerate edges.
+const MM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (7, 13, 5),
+    (8, 16, 8),
+    (9, 17, 15),
+    (63, 65, 64),
+    (65, 64, 63),
+    (70, 130, 90),
+    (129, 67, 3),
+    (1, 200, 257),
+    (200, 1, 129),
+];
+
+#[test]
+fn matmul_family_scalar_vs_dispatch_ulp_bounded() {
+    for &(m, k, n) in MM_SHAPES {
+        let mut rng = Pcg::seeded((m * 1000 + k * 10 + n) as u64);
+        let a = Mat::from_vec(m, k, rng.normal_vec(m * k, 1.0));
+        let b = Mat::from_vec(k, n, rng.normal_vec(k * n, 1.0));
+        let a_tn = Mat::from_vec(k, m, rng.normal_vec(k * m, 1.0));
+        let b_nt = Mat::from_vec(n, k, rng.normal_vec(n * k, 1.0));
+        let x = rng.normal_vec(k, 1.0);
+        let scalar = simd::with_scalar(|| {
+            (a.matmul(&b), a_tn.matmul_tn(&b), a.matmul_nt(&b_nt), a.matvec(&x))
+        });
+        let fast = (a.matmul(&b), a_tn.matmul_tn(&b), a.matmul_nt(&b_nt), a.matvec(&x));
+        let tag = format!("{m}x{k}x{n}");
+        assert_close(&scalar.0.data, &fast.0.data, &format!("matmul {tag}"));
+        assert_close(&scalar.1.data, &fast.1.data, &format!("matmul_tn {tag}"));
+        assert_close(&scalar.2.data, &fast.2.data, &format!("matmul_nt {tag}"));
+        assert_close(&scalar.3, &fast.3, &format!("matvec {tag}"));
+    }
+}
+
+#[test]
+fn elementwise_family_bitwise_equals_scalar() {
+    // vertical kernels: the lane path must not drift by a single bit
+    for &n in &[1usize, 7, 8, 9, 40, 129, 1000] {
+        let mut rng = Pcg::seeded(7 + n as u64);
+        let a = Mat::from_vec(1, n, rng.normal_vec(n, 1.0));
+        let b = Mat::from_vec(1, n, rng.normal_vec(n, 1.0));
+        let run = || {
+            let mut e = a.clone();
+            e.ema_(0.9, &b, 0.1);
+            (a.scale(1.5), a.add(&b), a.sub(&b), e)
+        };
+        let scalar = simd::with_scalar(run);
+        let fast = run();
+        assert_eq!(scalar.0.data, fast.0.data, "scale n={n}");
+        assert_eq!(scalar.1.data, fast.1.data, "add n={n}");
+        assert_eq!(scalar.2.data, fast.2.data, "sub n={n}");
+        assert_eq!(scalar.3.data, fast.3.data, "ema_ n={n}");
+    }
+}
+
+#[test]
+fn reduction_family_scalar_vs_dispatch() {
+    for &(m, n) in &[(1usize, 1usize), (5, 9), (33, 65), (130, 70)] {
+        let mut rng = Pcg::seeded(11 + (m * n) as u64);
+        let a = Mat::from_vec(m, n, rng.normal_vec(m * n, 1.0));
+        let run = || (a.fro_norm_sq(), a.max_abs(), a.col_sq_norms(), a.row_sq_norms());
+        let scalar = simd::with_scalar(run);
+        let fast = run();
+        let tag = format!("{m}x{n}");
+        assert_close(&[scalar.0], &[fast.0], &format!("fro_norm_sq {tag}"));
+        // max is order-insensitive: regrouping cannot change it
+        assert_eq!(scalar.1.to_bits(), fast.1.to_bits(), "max_abs {tag}");
+        // col_sq_norms accumulates vertically — bitwise; row_sq_norms is
+        // a per-row horizontal sum — ulp-bounded
+        assert_eq!(scalar.2, fast.2, "col_sq_norms {tag}");
+        assert_close(&scalar.3, &fast.3, &format!("row_sq_norms {tag}"));
+    }
+}
+
+#[test]
+fn simd_path_bitwise_width_invariant() {
+    // the determinism contract of the dispatch path itself: identical
+    // bytes at widths 1 and 4, whatever the feature setting selected
+    let mut rng = Pcg::seeded(0x51fd);
+    let a = Mat::from_vec(129, 65, rng.normal_vec(129 * 65, 1.0));
+    let b = Mat::from_vec(65, 131, rng.normal_vec(65 * 131, 1.0));
+    let tall = Mat::from_vec(129, 70, rng.normal_vec(129 * 70, 1.0));
+    let wide = Mat::from_vec(90, 65, rng.normal_vec(90 * 65, 1.0));
+    let big = Mat::from_vec(600, 450, rng.normal_vec(600 * 450, 1.0));
+    let run = || {
+        let mut e = big.clone();
+        e.ema_(0.9, &big, 0.1);
+        (
+            a.matmul(&b),
+            a.matmul_tn(&tall),
+            a.matmul_nt(&wide),
+            e,
+            big.row_sq_norms(),
+            big.max_abs(),
+        )
+    };
+    let base = pool::with_threads(1, run);
+    let par = pool::with_threads(4, run);
+    assert_eq!(base.0.data, par.0.data, "matmul");
+    assert_eq!(base.1.data, par.1.data, "matmul_tn");
+    assert_eq!(base.2.data, par.2.data, "matmul_nt");
+    assert_eq!(base.3.data, par.3.data, "ema_");
+    assert_eq!(base.4, par.4, "row_sq_norms");
+    assert_eq!(base.5.to_bits(), par.5.to_bits(), "max_abs");
+}
+
+#[test]
+fn decompositions_agree_across_dispatch_paths() {
+    // QR and Jacobi are iterative — scalar vs simd trajectories may drift
+    // beyond elementwise ulp bounds, so pin the *invariants* on both
+    // paths plus bitwise width-invariance per path (the contract
+    // `decomp_parity.rs` pins for whichever path the build selects).
+    let mut rng = Pcg::seeded(0xdec);
+    let g = Mat::from_vec(200, 90, rng.normal_vec(200 * 90, 1.0));
+    let bsrc = Mat::from_vec(121, 121, rng.normal_vec(121 * 121, 1.0));
+    let mut spd = bsrc.matmul_nt(&bsrc);
+    for i in 0..121 {
+        *spd.at_mut(i, i) += 0.5;
+    }
+    let ortho_err = |q: &Mat| q.matmul_tn(q).sub(&Mat::eye(q.cols)).max_abs();
+    for forced_scalar in [false, true] {
+        let run = || {
+            if forced_scalar {
+                simd::with_scalar(|| (mgs_qr(&g), jacobi_eigh(&spd, 30)))
+            } else {
+                (mgs_qr(&g), jacobi_eigh(&spd, 30))
+            }
+        };
+        let (q, (v, lam)) = run();
+        assert!(ortho_err(&q) < 1e-3, "Q ortho err (forced={forced_scalar})");
+        assert!(ortho_err(&v) < 1e-3, "V ortho err (forced={forced_scalar})");
+        // reconstruction: V diag(λ) Vᵀ ≈ A
+        let mut vd = v.clone();
+        for r in 0..v.rows {
+            for c in 0..v.cols {
+                *vd.at_mut(r, c) *= lam[c];
+            }
+        }
+        let err = vd.matmul_nt(&v).sub(&spd).max_abs();
+        assert!(err < 2e-3 * spd.max_abs(), "reconstruction (forced={forced_scalar}): {err}");
+        // width invariance holds on each dispatch path independently
+        let w1 = pool::with_threads(1, run);
+        let w4 = pool::with_threads(4, run);
+        assert_eq!(w1.0.data, w4.0.data, "QR width (forced={forced_scalar})");
+        assert_eq!(w1.1 .0.data, w4.1 .0.data, "eigh V width (forced={forced_scalar})");
+        assert_eq!(w1.1 .1, w4.1 .1, "eigh λ width (forced={forced_scalar})");
+    }
+}
+
+#[test]
+fn strided_helpers_round_trip_through_mat_and_kron() {
+    let mut rng = Pcg::seeded(42);
+    let m = Mat::from_vec(13, 9, rng.normal_vec(13 * 9, 1.0));
+    // col_vec/set_col route through the shared gather/scatter helpers
+    let mut copy = Mat::zeros(13, 9);
+    for j in 0..9 {
+        copy.set_col(j, &m.col_vec(j));
+    }
+    assert_eq!(copy.data, m.data);
+    // kron's column-stacking uses the same helpers
+    let v = vec_cols(&m);
+    for (j, chunk) in v.chunks(13).enumerate() {
+        assert_eq!(chunk, &m.col_vec(j)[..], "column {j}");
+    }
+    let back = mat_cols(&v, 13, 9);
+    assert_eq!(back.data, m.data);
+}
