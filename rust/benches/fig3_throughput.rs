@@ -17,6 +17,9 @@
 //! * **Decomposition speedup** (no artifacts needed): `jacobi_eigh` and
 //!   `mgs_qr` at refresh-dominating sizes, width 1 (serial baseline,
 //!   bitwise identical output) vs all cores.
+//! * **Blocked vs rounds** (no artifacts needed): the blocked two-sided
+//!   Jacobi against the flat Brent-Luk path at n ∈ {1024, 2048} — the
+//!   huge-n refresh axis, gated on spectral agreement between the paths.
 //! * **Training throughput** (needs `make artifacts`): the Fig. 3 table,
 //!   each optimizer run serial and parallel with the speedup column.
 //!
@@ -25,11 +28,14 @@
 //! `runs/bench/fig3_throughput_summary.json` either way.
 
 use alice_racs::bench::{
-    artifacts_available, bench_cfg, bench_opts, bench_steps, run_one, smoke, time_fn,
-    write_summary, TablePrinter,
+    artifacts_available, bench_cfg, bench_opts, bench_steps, blocked_vs_rounds_table, run_one,
+    smoke, time_fn, write_summary, TablePrinter,
 };
 use alice_racs::coordinator::Summary;
-use alice_racs::linalg::{jacobi_eigh, jacobi_eigh_serial, mgs_qr, simd, Mat};
+use alice_racs::linalg::{
+    jacobi_eigh, jacobi_eigh_blocked, jacobi_eigh_rounds, jacobi_eigh_serial, mgs_qr, simd,
+    Mat,
+};
 use alice_racs::opt::{build, Hyper, Slot};
 use alice_racs::util::json::{num, obj, s};
 use alice_racs::util::{pool, Json, Pcg};
@@ -230,11 +236,43 @@ fn decomp_speedup_section() {
     println!();
 }
 
+/// Blocked-vs-rounds axis for the huge-n refreshes (ISSUE 5 tentpole):
+/// `jacobi_eigh_blocked` against the flat Brent-Luk `jacobi_eigh_rounds`
+/// at n ∈ {1024, 2048} (smoke sizes via `bench::blocked_vs_rounds_table`,
+/// shared with fig6). Spectral agreement between the two paths is
+/// asserted at a convergence-sized n before any timing row is reported —
+/// a speedup from a diverging decomposition is a bug, same policy as the
+/// SIMD section.
+fn blocked_vs_rounds_section() -> Json {
+    // agreement gate: converged spectra must match across the two paths
+    let mut rng = Pcg::seeded(0xb10c);
+    let gate_n = 160;
+    let b = Mat::from_vec(gate_n, gate_n, rng.normal_vec(gate_n * gate_n, 1.0));
+    let gate = b.matmul_nt(&b);
+    let (_, lam_r) = jacobi_eigh_rounds(&gate, 30);
+    let (_, lam_b) = jacobi_eigh_blocked(&gate, 30);
+    let scale = lam_r[0].abs().max(1.0);
+    for (r, bl) in lam_r.iter().zip(&lam_b) {
+        assert!(
+            (r - bl).abs() < 1e-2 * scale,
+            "blocked vs rounds spectra diverge: {r} vs {bl}"
+        );
+    }
+    // timing table: the bench:: helper shared with fig6 (one sizing
+    // policy, so the two summary artifacts cannot drift)
+    blocked_vs_rounds_table()
+}
+
 fn main() {
     let simd_json = simd_kernel_section();
     kernel_speedup_section();
     decomp_speedup_section();
-    let summary = obj(vec![("smoke", Json::Bool(smoke())), ("simd", simd_json)]);
+    let blocked_json = blocked_vs_rounds_section();
+    let summary = obj(vec![
+        ("smoke", Json::Bool(smoke())),
+        ("simd", simd_json),
+        ("blocked_eigh", blocked_json),
+    ]);
     match write_summary("fig3_throughput", &summary) {
         Ok(path) => println!("summary → {path}"),
         Err(e) => eprintln!("could not write fig3 summary: {e:#}"),

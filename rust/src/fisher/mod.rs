@@ -107,7 +107,11 @@ pub fn solve(structure: Structure, grads: &[Mat]) -> Solution {
             Solution::KronSqrt { r, l }
         }
         Structure::BlockDiagSharedEig => {
-            // Thm 3.2: U = EVD(E[GGᵀ]); D̃ = Diag_M(E[(UᵀG)⊙²])
+            // Thm 3.2: U = EVD(E[GGᵀ]); D̃ = Diag_M(E[(UᵀG)⊙²]). The EVD
+            // goes through the size-dispatched `jacobi_eigh` (serial /
+            // Brent-Luk rounds / blocked two-sided at m ≥ 1024), with the
+            // solver's non-finite guard and relative pivot thresholds —
+            // the same robustness contract the optimizer refreshes get.
             let mut q = Mat::zeros(m, m);
             for g in grads {
                 q.ema_(1.0, &g.matmul_nt(g), 1.0 / k);

@@ -16,25 +16,54 @@
 //!   projects it out of every trailing column — the projections are
 //!   independent per column and fan out once the trailing work crosses
 //!   [`QR_PAR_MIN_WORK`]. A full second pass re-orthogonalizes (MGS2).
-//! * [`jacobi_eigh`] switches at [`JACOBI_PAR_MIN_N`] from the serial
-//!   cyclic sweep ([`jacobi_eigh_serial`]) to parallel-ordered (Brent-Luk)
-//!   sweeps: a round-robin schedule partitions each sweep into rounds of
-//!   disjoint pivot pairs; per round, all rotation angles come from the
-//!   round-start matrix and the column/row update phases fan out over
-//!   row blocks / pairs.
+//! * [`jacobi_eigh`] dispatches on size: the serial cyclic sweep
+//!   ([`jacobi_eigh_serial`]) below [`JACOBI_PAR_MIN_N`], parallel-ordered
+//!   (Brent-Luk) sweeps ([`jacobi_eigh_rounds`]) up to
+//!   [`JACOBI_BLOCKED_MIN_N`] — a round-robin schedule partitions each
+//!   sweep into rounds of disjoint pivot pairs; per round, all rotation
+//!   angles come from the round-start matrix and the column/row update
+//!   phases fan out over row blocks / pairs — and the **blocked two-sided
+//!   variant** ([`jacobi_eigh_blocked`]) at and above it: the matrix is
+//!   partitioned into [`JACOBI_TILE`]-edge tiles, the same Brent-Luk
+//!   schedule runs over *tile pairs*, each 2b x 2b pivot subproblem is
+//!   solved hot in cache by the shared serial kernel, and the accumulated
+//!   block rotations are applied through the `linalg::simd` matmul
+//!   microkernel — O(n·b) memory traffic per tile rotation instead of the
+//!   flat path's O(n) per element rotation (of which a round holds n/2,
+//!   streaming the whole O(n²) working set per round), which is what
+//!   makes n ≥ 2k refreshes tractable.
 //!
 //! Determinism: every fan-out writes disjoint data with a fixed per-element
-//! float-op order, algorithm selection and partitioning are pure functions
-//! of the input shape, and the remaining reductions (norms, dot products)
-//! run whole-slice on whichever thread owns the step — so both
-//! decompositions are **bitwise identical at every pool width**, width 1
-//! (the serial baseline) included. `rust/tests/decomp_parity.rs` pins this
-//! down. The inner loops (column norms/dots/projections, both rotation
-//! phases) route through `linalg::simd`; the reductions there use a fixed
-//! lane tree that depends only on the slice length, so the width contract
-//! holds per feature setting, with scalar↔simd drift ulp-bounded
+//! float-op order, algorithm selection and partitioning (including the
+//! tile schedule) are pure functions of the input shape, and the remaining
+//! reductions (norms, dot products) run whole-slice on whichever thread
+//! owns the step — so all decompositions are **bitwise identical at every
+//! pool width**, width 1 (the serial baseline) included.
+//! `rust/tests/decomp_parity.rs` pins this down. The inner loops (column
+//! norms/dots/projections, both rotation phases, the tile-rotation
+//! products) route through `linalg::simd`; the reductions there use a
+//! fixed lane tree that depends only on the slice length, so the width
+//! contract holds per feature setting, with scalar↔simd drift ulp-bounded
 //! (`tests/simd_parity.rs`). The convergence check stays a plain serial
-//! sum under every setting — the early exit is part of the contract.
+//! sum under every setting — the early exit is part of the contract — and
+//! accumulates in f64 so it cannot silently defer at n ≥ 2k.
+//!
+//! # Numerical robustness
+//!
+//! The eigen path feeds on GGᵀ, whose scale tracks the *squared* gradient
+//! scale and can carry non-finite entries after a blowup, so (ISSUE 5):
+//!
+//! * every `jacobi_eigh*` entry point sanitizes its working copy — any
+//!   NaN/inf entry is zeroed ([`symmetric_finite`]) so a decomposition
+//!   never panics mid-run and always returns an orthonormal basis with
+//!   finite eigenvalues (degraded is recoverable at the next refresh;
+//!   a panicked trainer is not);
+//! * ordering uses `f32::total_cmp` (never `partial_cmp().unwrap()`);
+//! * the pivot-skip test is **relative** to the input's magnitude
+//!   ([`PIVOT_REL_TOL`] x `max_abs`), so tiny-scale late-training GGᵀ
+//!   rotates exactly like its unit-scale rescaling instead of no-opping
+//!   a whole refresh against an absolute cutoff; the degenerate-column
+//!   test in [`mgs_qr`] is scale-relative for the same reason.
 
 use crate::util::pool::{self, SendPtr};
 use crate::util::Pcg;
@@ -54,6 +83,35 @@ const QR_PAR_MIN_WORK: usize = if cfg!(feature = "simd") { 1 << 16 } else { 1 <<
 /// to parallel-ordered rounds. Below it the rotation count is too small to
 /// amortize even the persistent pool's ~µs dispatch.
 const JACOBI_PAR_MIN_N: usize = 96;
+
+/// Dimension at which `jacobi_eigh` switches from the flat Brent-Luk
+/// rounds to the blocked two-sided variant. At n = 1024 the f32 working
+/// set is 4 MiB — past L2 on the deployment targets — and the flat
+/// rounds stream the whole matrix once per *element* rotation round; the
+/// blocked path streams O(n·b) per *tile* rotation instead.
+const JACOBI_BLOCKED_MIN_N: usize = 1024;
+
+/// Tile edge b of the blocked two-sided Jacobi: a 2b x 2b pivot
+/// subproblem is 128² f32 = 64 KiB — hot in L1/L2 while the serial
+/// kernel iterates it — and the (rows x 2b) @ (2b x 2b) rotation
+/// products map straight onto the packed matmul microkernel's geometry.
+const JACOBI_TILE: usize = 64;
+
+/// Cap on serial cyclic sweeps spent on one 2b x 2b pivot subproblem
+/// (with early exit once every pivot sits below threshold). The
+/// subproblem does not need full convergence — each outer sweep revisits
+/// every tile pair — so a small fixed cap keeps the schedule, and with it
+/// the float-op order, a pure function of the data.
+const TILE_PAIR_SWEEPS: usize = 8;
+
+/// Pivot-skip threshold, **relative** to the input's largest magnitude.
+/// Rotations with |a_pq| below `PIVOT_REL_TOL * max_abs(A)` contribute
+/// nothing at f32 precision but cost a full O(n) (or O(b)) update. The
+/// old absolute `1e-12` cutoff silently no-opped whole refreshes for
+/// tiny-scale GGᵀ (late-training gradients ~1e-4 square to entries
+/// ~1e-8 and below — ISSUE 5); a relative threshold rotates a scaled
+/// matrix exactly like its unit-scale version.
+const PIVOT_REL_TOL: f32 = 1e-12;
 
 /// Row-block grain (rows per task) for the Jacobi column-update phases.
 const JACOBI_ROW_BLK: usize = 32;
@@ -83,9 +141,16 @@ pub fn mgs_qr(a: &Mat) -> Mat {
 /// per-column float-op order, so the fan-out is bitwise width-invariant.
 fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
     let r = cols.len();
+    // Degenerate-column test, relative to the pass input's scale: a
+    // tiny-scale refresh input (GGᵀ U with late-training gradients) must
+    // orthogonalize like its unit-scale rescaling, not collapse every
+    // column onto the canonical fallback against an absolute cutoff.
+    // `max` is order-insensitive, so the threshold is width-invariant.
+    let scale = cols.iter().map(|c| simd::max_abs(c)).fold(0.0f32, f32::max);
+    let tol = 1e-6 * scale;
     for j in 0..r {
         let nrm = simd::sum_sq(&cols[j]).sqrt();
-        if nrm > 1e-6 {
+        if nrm > tol {
             for x in &mut cols[j] {
                 *x /= nrm;
             }
@@ -123,57 +188,112 @@ fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
 }
 
 /// Eigendecomposition of a symmetric matrix: (V, λ) with columns of V
-/// sorted by descending eigenvalue, A = V diag(λ) Vᵀ. Dispatches on size:
-/// serial cyclic Jacobi below [`JACOBI_PAR_MIN_N`], parallel-ordered
-/// Jacobi rounds at and above it.
+/// sorted by descending eigenvalue, A = V diag(λ) Vᵀ. Dispatches on size
+/// (a pure function of `n` — part of the determinism contract):
+///
+/// | n | path |
+/// | --- | --- |
+/// | n < [`JACOBI_PAR_MIN_N`] (96) | [`jacobi_eigh_serial`] — cyclic sweeps |
+/// | 96 ≤ n < [`JACOBI_BLOCKED_MIN_N`] (1024) | [`jacobi_eigh_rounds`] — flat Brent-Luk |
+/// | n ≥ 1024 | [`jacobi_eigh_blocked`] — Brent-Luk over b = 64 tiles |
+///
+/// Every entry point sanitizes non-finite input (see
+/// [`symmetric_finite`]) — a gradient blowup must not panic a refresh.
 pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
     if a.rows < JACOBI_PAR_MIN_N {
         jacobi_eigh_serial(a, sweeps)
-    } else {
+    } else if a.rows < JACOBI_BLOCKED_MIN_N {
         jacobi_eigh_rounds(a, sweeps)
+    } else {
+        jacobi_eigh_blocked(a, sweeps)
     }
 }
 
+/// Shared prologue of every `jacobi_eigh*` entry point: symmetrized
+/// working copy with any non-finite entry zeroed. GGᵀ carries NaN/inf
+/// after a gradient blowup, and decomposing it must not panic the
+/// trainer mid-run (ISSUE 5) — the solver operates on the sanitized
+/// matrix and still returns an orthonormal basis with finite
+/// eigenvalues. A degraded basis is recoverable at the next refresh; a
+/// poisoned sort comparison is a panic.
+fn symmetric_finite(a: &Mat) -> Mat {
+    let mut w = a.clone();
+    w.symmetrize_();
+    if !w.is_finite() {
+        for x in w.data.iter_mut() {
+            if !x.is_finite() {
+                *x = 0.0;
+            }
+        }
+    }
+    w
+}
+
+/// Relative pivot-skip threshold for one decomposition, computed once at
+/// entry (orthogonal similarity preserves the spectrum's scale, so a
+/// single evaluation covers every sweep). `max` is order-insensitive, so
+/// the pooled reduction keeps the threshold — and with it the rotation
+/// schedule — bitwise width-invariant.
+fn pivot_threshold(w: &Mat) -> f32 {
+    PIVOT_REL_TOL * w.max_abs()
+}
+
+/// One cyclic Jacobi sweep over a dense row-major m x m buffer `s`,
+/// accumulating the column rotations into `v` (m x m, V ← V J). This is
+/// the shared serial kernel: [`jacobi_eigh_serial`] runs it on the full
+/// matrix, the blocked path runs it on each gathered 2b x 2b pivot
+/// subproblem, hot in cache. Pivots at or below `tol` are skipped (`<=`,
+/// so a zero pivot is skipped even when `tol` is 0 — [`rotation`] is
+/// undefined at a_pq = 0). Returns whether any rotation fired.
+fn cyclic_sweep(s: &mut [f32], v: &mut [f32], m: usize, tol: f32) -> bool {
+    let mut rotated = false;
+    for p in 0..m {
+        for q in (p + 1)..m {
+            let apq = s[p * m + q];
+            if apq.abs() <= tol {
+                continue;
+            }
+            rotated = true;
+            let (c, sn) = rotation(s[p * m + p], s[q * m + q], apq);
+            // rotate cols, then rows, then the accumulated basis —
+            // exactly the historical serial kernel's float-op order
+            for k in 0..m {
+                let skp = s[k * m + p];
+                let skq = s[k * m + q];
+                s[k * m + p] = c * skp - sn * skq;
+                s[k * m + q] = sn * skp + c * skq;
+            }
+            for k in 0..m {
+                let spk = s[p * m + k];
+                let sqk = s[q * m + k];
+                s[p * m + k] = c * spk - sn * sqk;
+                s[q * m + k] = sn * spk + c * sqk;
+            }
+            for k in 0..m {
+                let vkp = v[k * m + p];
+                let vkq = v[k * m + q];
+                v[k * m + p] = c * vkp - sn * vkq;
+                v[k * m + q] = sn * vkp + c * vkq;
+            }
+        }
+    }
+    rotated
+}
+
 /// Cyclic Jacobi eigendecomposition — the historical serial kernel, kept
-/// as the baseline for the large-n parallel path (benches compare both).
+/// as the baseline for the large-n parallel paths (benches compare all
+/// three) and reused verbatim on the blocked path's pivot subproblems.
 pub fn jacobi_eigh_serial(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
     let n = a.rows;
     assert_eq!(n, a.cols);
-    let mut w = a.clone();
-    w.symmetrize_();
+    let mut w = symmetric_finite(a);
     let mut v = Mat::eye(n);
+    let tol = pivot_threshold(&w);
     for _ in 0..sweeps {
         if off_diag_small(&w) {
             break;
         }
-        for p in 0..n {
-            for q in (p + 1)..n {
-                let apq = w.at(p, q);
-                if apq.abs() < 1e-12 {
-                    continue;
-                }
-                let (c, s) = rotation(w.at(p, p), w.at(q, q), apq);
-                // rotate rows/cols p, q of w
-                for k in 0..n {
-                    let wkp = w.at(k, p);
-                    let wkq = w.at(k, q);
-                    *w.at_mut(k, p) = c * wkp - s * wkq;
-                    *w.at_mut(k, q) = s * wkp + c * wkq;
-                }
-                for k in 0..n {
-                    let wpk = w.at(p, k);
-                    let wqk = w.at(q, k);
-                    *w.at_mut(p, k) = c * wpk - s * wqk;
-                    *w.at_mut(q, k) = s * wpk + c * wqk;
-                }
-                for k in 0..n {
-                    let vkp = v.at(k, p);
-                    let vkq = v.at(k, q);
-                    *v.at_mut(k, p) = c * vkp - s * vkq;
-                    *v.at_mut(k, q) = s * vkp + c * vkq;
-                }
-            }
-        }
+        cyclic_sweep(&mut w.data, &mut v.data, n, tol);
     }
     sort_eigh(w, v)
 }
@@ -188,23 +308,35 @@ fn rotation(app: f32, aqq: f32, apq: f32) -> (f32, f32) {
     (c, t * c)
 }
 
-/// Convergence check shared by both Jacobi variants. Single-pass serial
-/// sums (never the pooled reductions): the early exit must be bitwise
-/// width-invariant, and the pooled `fro_norm` regroups additions when the
-/// matrix is large and the width is > 1.
-fn off_diag_small(w: &Mat) -> bool {
+/// Off-diagonal and full squared Frobenius norms, accumulated serially in
+/// **f64**: at n ≥ 2k the f32 left-fold over n²/2 squares loses enough
+/// low bits to defer (or falsely trigger) the early exit — ISSUE 5. The
+/// sums stay single-pass serial on every width (never the pooled
+/// reductions): the early exit must be bitwise width-invariant, and the
+/// pooled `fro_norm` regroups additions when the matrix is large.
+fn off_fro_sq(w: &Mat) -> (f64, f64) {
     let n = w.rows;
-    let mut off = 0.0f32;
+    let mut off = 0.0f64;
     for p in 0..n {
         for q in (p + 1)..n {
-            off += w.at(p, q) * w.at(p, q);
+            let x = w.at(p, q) as f64;
+            off += x * x;
         }
     }
-    let mut fro = 0.0f32;
+    let mut fro = 0.0f64;
     for &x in &w.data {
-        fro += x * x;
+        fro += x as f64 * x as f64;
     }
-    off.sqrt() < 1e-9 * (1.0 + fro.sqrt())
+    (off, fro)
+}
+
+/// Convergence check shared by all three Jacobi variants. Relative — a
+/// tiny-scale matrix converges by the same criterion as its unit-scale
+/// rescaling (the old `1 + fro` offset declared tiny inputs converged on
+/// arrival). A zero matrix is trivially converged (`0 <= 0`).
+fn off_diag_small(w: &Mat) -> bool {
+    let (off, fro) = off_fro_sq(w);
+    off.sqrt() <= 1e-9 * fro.sqrt()
 }
 
 /// Round-robin (circle method) pivot schedule: `n_rounds` rounds of
@@ -234,13 +366,14 @@ fn jacobi_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
 /// schedule; per round all rotation angles come from the round-start
 /// matrix and the update W ← Jᵀ (W J) (J = direct sum of the round's
 /// rotations) is applied in two phases — columns, then rows — each fanned
-/// out over disjoint data.
-fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+/// out over disjoint data. Public as the mid-size baseline the blocked
+/// path is benchmarked against (fig3/fig6 blocked-vs-rounds sections).
+pub fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
     let n = a.rows;
     assert_eq!(n, a.cols);
-    let mut w = a.clone();
-    w.symmetrize_();
+    let mut w = symmetric_finite(a);
     let mut v = Mat::eye(n);
+    let tol = pivot_threshold(&w);
     let rounds = jacobi_rounds(n);
     for _ in 0..sweeps {
         if off_diag_small(&w) {
@@ -252,7 +385,7 @@ fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
                 .iter()
                 .map(|&(p, q)| {
                     let apq = w.at(p, q);
-                    if apq.abs() < 1e-12 {
+                    if apq.abs() <= tol {
                         return None;
                     }
                     Some(rotation(w.at(p, p), w.at(q, q), apq))
@@ -299,12 +432,208 @@ fn apply_col_rotations(
     });
 }
 
-/// Shared epilogue: read eigenvalues off the diagonal and sort descending.
+// ------------------------------------------------- blocked two-sided ---
+
+/// Tile partition of [0, n): `(start, len)` per tile, every tile
+/// [`JACOBI_TILE`] wide except a ragged tail. A pure function of `n` —
+/// the tile schedule never depends on the pool width.
+fn tile_ranges(n: usize) -> Vec<(usize, usize)> {
+    (0..n.div_ceil(JACOBI_TILE))
+        .map(|t| {
+            let lo = t * JACOBI_TILE;
+            (lo, JACOBI_TILE.min(n - lo))
+        })
+        .collect()
+}
+
+/// Accumulated orthogonal rotation of one tile-pair pivot subproblem:
+/// the dense m x m factor Q (m = bᵢ + bⱼ ≤ 2·[`JACOBI_TILE`]), plus its
+/// transpose materialized once so the row phase streams contiguous rows.
+struct TileRot {
+    m: usize,
+    q: Vec<f32>,
+    qt: Vec<f32>,
+}
+
+/// Solve the 2b x 2b pivot subproblem of tile pair (I, J) from the
+/// round-start matrix: gather S = W[I∪J, I∪J] into a contiguous buffer
+/// (two row/column bands), run the shared serial kernel on it hot in
+/// cache, and return the accumulated rotation. `None` when every pivot
+/// already sits below threshold (the rotation would be the identity).
+fn solve_tile_pair(
+    w: &Mat,
+    ti: (usize, usize),
+    tj: (usize, usize),
+    tol: f32,
+) -> Option<TileRot> {
+    let (i0, bi) = ti;
+    let (j0, bj) = tj;
+    let m = bi + bj;
+    let n = w.cols;
+    let mut q = vec![0.0f32; m * m];
+    for l in 0..m {
+        q[l * m + l] = 1.0;
+    }
+    let rotated = pool::with_scratch(m * m, |s| {
+        for l in 0..m {
+            let gr = if l < bi { i0 + l } else { j0 + (l - bi) };
+            let srow = &w.data[gr * n..(gr + 1) * n];
+            let drow = &mut s[l * m..(l + 1) * m];
+            drow[..bi].copy_from_slice(&srow[i0..i0 + bi]);
+            drow[bi..].copy_from_slice(&srow[j0..j0 + bj]);
+        }
+        let mut rotated = false;
+        for _ in 0..TILE_PAIR_SWEEPS {
+            if !cyclic_sweep(s, &mut q, m, tol) {
+                break;
+            }
+            rotated = true;
+        }
+        rotated
+    });
+    if !rotated {
+        return None;
+    }
+    let mut qt = vec![0.0f32; m * m];
+    for r in 0..m {
+        for c in 0..m {
+            qt[c * m + r] = q[r * m + c];
+        }
+    }
+    Some(TileRot { m, q, qt })
+}
+
+/// W ← W · diag(Q₁ … Q_k): one round's tile-pair **column** rotations on
+/// a row-major n-column buffer. Row blocks fan out over the pool; per
+/// block and pair, the [I|J] column stripe is gathered into scratch and
+/// multiplied by Q through the `linalg::simd` matmul microkernel —
+/// O(rows · b) traffic per pair instead of streaming all n columns. The
+/// round's pairs own disjoint columns and each element accumulates in
+/// ascending-k order inside the kernel, so the result is bitwise
+/// identical at every pool width.
+fn apply_tile_col_rotations(
+    data: &mut [f32],
+    n: usize,
+    tiles: &[(usize, usize)],
+    pairs: &[(usize, usize)],
+    rot: &[Option<TileRot>],
+) {
+    pool::for_each_chunk_mut(data, JACOBI_ROW_BLK * n, |_, rows| {
+        let nrows = rows.len() / n;
+        for (t, r) in rot.iter().enumerate() {
+            let Some(tr) = r else { continue };
+            let (i0, bi) = tiles[pairs[t].0];
+            let (j0, bj) = tiles[pairs[t].1];
+            let m = tr.m;
+            pool::with_scratch(2 * nrows * m, |buf| {
+                let (x, y) = buf.split_at_mut(nrows * m);
+                for (ri, row) in rows.chunks(n).enumerate() {
+                    x[ri * m..ri * m + bi].copy_from_slice(&row[i0..i0 + bi]);
+                    x[ri * m + bi..(ri + 1) * m].copy_from_slice(&row[j0..j0 + bj]);
+                }
+                simd::matmul_into(&mut y[..nrows * m], x, &tr.q, m, m);
+                for (ri, row) in rows.chunks_mut(n).enumerate() {
+                    row[i0..i0 + bi].copy_from_slice(&y[ri * m..ri * m + bi]);
+                    row[j0..j0 + bj].copy_from_slice(&y[ri * m + bi..(ri + 1) * m]);
+                }
+            });
+        }
+    });
+}
+
+/// W ← diag(Q)ᵀ · W: one round's tile-pair **row** rotations. Each pair
+/// owns its two disjoint row bands, so the pairs themselves fan out; the
+/// band update is one (2b x 2b) @ (2b x n) product through the packed
+/// microkernel, touching O(n·b) memory per pair.
+fn apply_tile_row_rotations(
+    data: &mut [f32],
+    n: usize,
+    tiles: &[(usize, usize)],
+    pairs: &[(usize, usize)],
+    rot: &[Option<TileRot>],
+) {
+    let base = SendPtr(data.as_mut_ptr());
+    pool::run(pairs.len(), |t| {
+        let Some(tr) = &rot[t] else { return };
+        let (i0, bi) = tiles[pairs[t].0];
+        let (j0, bj) = tiles[pairs[t].1];
+        let m = tr.m;
+        // SAFETY: rounds hold each tile in at most one pair, so the two
+        // row bands are touched by this task alone.
+        let band_i = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), bi * n) };
+        let band_j = unsafe { std::slice::from_raw_parts_mut(base.0.add(j0 * n), bj * n) };
+        pool::with_scratch(m * n, |src| {
+            src[..bi * n].copy_from_slice(band_i);
+            src[bi * n..].copy_from_slice(band_j);
+            simd::matmul_into(band_i, &tr.qt[..bi * m], src, m, n);
+            simd::matmul_into(band_j, &tr.qt[bi * m..], src, m, n);
+        });
+    });
+}
+
+/// Blocked two-sided Jacobi for huge n (dispatched at n ≥
+/// [`JACOBI_BLOCKED_MIN_N`]; public so the parity tests and the
+/// blocked-vs-rounds benches can pin the kernel at any size). The matrix
+/// is partitioned into [`JACOBI_TILE`]-edge tiles and each sweep walks
+/// the Brent-Luk round-robin schedule over *tile pairs*: per round the
+/// 2b x 2b pivot subproblems are solved concurrently from the
+/// round-start matrix (shared serial kernel, hot in cache), then the
+/// accumulated block rotations are applied as W ← Qᵀ (W Q), V ← V Q in
+/// fanned-out column / row phases — O(n·b) memory traffic per tile
+/// rotation instead of the flat path's O(n) per element rotation, of
+/// which there are b² per tile pair.
+///
+/// Width contract: the tile schedule is a pure function of n, a round's
+/// pairs own disjoint tiles (disjoint reads in the solve phase, disjoint
+/// writes in both update phases), and every kernel accumulates in a
+/// fixed per-element order — bitwise identical at every pool width, per
+/// feature setting (`tests/decomp_parity.rs`).
+pub fn jacobi_eigh_blocked(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+    let n = a.rows;
+    assert_eq!(n, a.cols);
+    let tiles = tile_ranges(n);
+    if tiles.len() < 2 {
+        // a single tile has no pairs to schedule — the serial kernel IS
+        // the subproblem solver at that size
+        return jacobi_eigh_serial(a, sweeps);
+    }
+    let mut w = symmetric_finite(a);
+    let mut v = Mat::eye(n);
+    let tol = pivot_threshold(&w);
+    let rounds = jacobi_rounds(tiles.len());
+    for _ in 0..sweeps {
+        if off_diag_small(&w) {
+            break;
+        }
+        for pairs in &rounds {
+            // pivot phase: independent 2b x 2b solves off the
+            // round-start matrix — disjoint tiles, shared reads
+            let rot: Vec<Option<TileRot>> = pool::map(pairs.len(), |t| {
+                solve_tile_pair(&w, tiles[pairs[t].0], tiles[pairs[t].1], tol)
+            });
+            if rot.iter().all(|r| r.is_none()) {
+                continue;
+            }
+            // column phase: W ← W · diag(Q), row blocks fan out
+            apply_tile_col_rotations(&mut w.data, n, &tiles, pairs, &rot);
+            // row phase: W ← diag(Q)ᵀ · W, pairs own disjoint bands
+            apply_tile_row_rotations(&mut w.data, n, &tiles, pairs, &rot);
+            // eigenvector phase: V ← V · diag(Q), columns only
+            apply_tile_col_rotations(&mut v.data, n, &tiles, pairs, &rot);
+        }
+    }
+    sort_eigh(w, v)
+}
+
+/// Shared epilogue: read eigenvalues off the diagonal and sort
+/// descending. `total_cmp`, not `partial_cmp().unwrap()` — the sort must
+/// never panic on data-derived floats (and the entry guards keep λ
+/// finite anyway).
 fn sort_eigh(w: Mat, v: Mat) -> (Mat, Vec<f32>) {
     let n = w.rows;
     let lam: Vec<f32> = (0..n).map(|i| w.at(i, i)).collect();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
+    order.sort_by(|&i, &j| lam[j].total_cmp(&lam[i]));
     let vs = Mat::from_fn(n, n, |i, j| v.at(i, order[j]));
     let lam = order.iter().map(|&i| lam[i]).collect();
     (vs, lam)
@@ -351,7 +680,9 @@ pub fn complete_basis(u: &Mat) -> Mat {
             (k, n)
         })
         .collect();
-    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    // total_cmp: residual norms derive from U's data, which a blown-up
+    // refresh can make non-finite — ordering must not panic on it
+    norms.sort_by(|a, b| b.1.total_cmp(&a.1));
     let picked: Vec<usize> = norms[..m - r].iter().map(|&(k, _)| k).collect();
     let cand = Mat::from_fn(m, m - r, |i, j| resid.at(i, picked[j]));
     mgs_qr(&cand)
@@ -505,6 +836,127 @@ mod tests {
         }
         let rec = vd.matmul_nt(&v);
         assert!(rec.sub(&a).max_abs() < 1e-3 * a.max_abs());
+    }
+
+    #[test]
+    fn tile_ranges_partition_exactly() {
+        for n in [65usize, 128, 130, 160, 1024, 1091] {
+            let tiles = tile_ranges(n);
+            let mut next = 0;
+            for &(lo, len) in &tiles {
+                assert_eq!(lo, next, "tiles must be contiguous at n = {n}");
+                assert!(len > 0 && len <= JACOBI_TILE);
+                next = lo + len;
+            }
+            assert_eq!(next, n, "tiles must cover [0, n) at n = {n}");
+            assert_eq!(tiles.len(), n.div_ceil(JACOBI_TILE));
+        }
+    }
+
+    #[test]
+    fn blocked_two_tile_edge_matches_serial() {
+        // nt = 2 (80 = one full tile + a 16-wide tail): the single tile
+        // pair spans the whole matrix, so the pivot subproblem IS the
+        // matrix — the degenerate edge the ragged multi-tile sizes in
+        // `tests/decomp_parity.rs` (130/160) don't reach
+        let a = spd(80, 17);
+        let (vb, lam_b) = jacobi_eigh_blocked(&a, 30);
+        let (_, lam_s) = jacobi_eigh_serial(&a, 30);
+        assert!(ortho_err(&vb) < 1e-3);
+        let scale = lam_s[0].abs().max(1.0);
+        for (got, want) in lam_b.iter().zip(&lam_s) {
+            assert!((got - want).abs() < 1e-2 * scale, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn blocked_single_tile_falls_back_to_serial() {
+        let a = spd(20, 18);
+        let (vb, lb) = jacobi_eigh_blocked(&a, 30);
+        let (vs, ls) = jacobi_eigh_serial(&a, 30);
+        assert_eq!(vb.data, vs.data);
+        assert_eq!(lb, ls);
+    }
+
+    #[test]
+    fn non_finite_guard_is_exactly_sanitization() {
+        // the guard's *semantics* (no-panic + orthonormality across
+        // dispatch paths lives in `tests/decomp_parity.rs`): zeroing
+        // exactly the contaminated symmetrized slots — the result is
+        // bitwise the decomposition of that sanitized matrix
+        let mut a = spd(12, 19);
+        *a.at_mut(2, 5) = f32::NAN;
+        *a.at_mut(7, 1) = f32::INFINITY;
+        let (v, lam) = jacobi_eigh(&a, 30);
+        let mut clean = a.clone();
+        clean.symmetrize_();
+        for x in clean.data.iter_mut() {
+            if !x.is_finite() {
+                *x = 0.0;
+            }
+        }
+        let (vc, lc) = jacobi_eigh(&clean, 30);
+        assert_eq!(v.data, vc.data);
+        assert_eq!(lam, lc);
+    }
+
+    #[test]
+    fn tiny_scale_spd_converges_on_the_serial_path() {
+        // late-training GGᵀ scale: entries ~1e-12 sat below the old
+        // absolute 1e-12 pivot cutoff, so refreshes no-opped to a stale
+        // basis; the relative threshold must rotate like unit scale.
+        // n = 12 pins the serial dispatch path (the rounds path lives in
+        // `tests/decomp_parity.rs`).
+        let a = spd(12, 21).scale(1e-12);
+        let (v, lam) = jacobi_eigh(&a, 30);
+        assert!(ortho_err(&v) < 1e-3);
+        assert!(
+            v.sub(&Mat::eye(12)).max_abs() > 0.1,
+            "tiny-scale refresh must actually rotate the basis"
+        );
+        let mut vd = v.clone();
+        for i in 0..v.rows {
+            for j in 0..v.cols {
+                *vd.at_mut(i, j) *= lam[j];
+            }
+        }
+        let rec = vd.matmul_nt(&v);
+        assert!(rec.sub(&a).max_abs() < 2e-3 * a.max_abs());
+    }
+
+    #[test]
+    fn tiny_scale_qr_still_orthogonalizes() {
+        let mut rng = Pcg::seeded(22);
+        let a = Mat::from_vec(30, 8, rng.normal_vec(240, 1.0)).scale(1e-12);
+        let q = mgs_qr(&a);
+        assert!(ortho_err(&q) < 1e-4);
+        // the columns must span the input, not the canonical fallback —
+        // relative tolerance, or a zero Q would pass at this scale
+        let rec = q.matmul(&q.matmul_tn(&a));
+        assert!(rec.sub(&a).max_abs() < 1e-3 * a.max_abs());
+    }
+
+    #[test]
+    fn off_fro_accumulates_in_f64() {
+        // small n: exact agreement with hand-computed f64 sums
+        let a = Mat::from_vec(3, 3, vec![2.0, 0.5, -1.0, 0.5, 3.0, 0.25, -1.0, 0.25, 4.0]);
+        let (off, fro) = off_fro_sq(&a);
+        let want_off = 0.25f64 + 1.0 + 0.0625;
+        let want_fro = 4.0f64 + 9.0 + 16.0 + 2.0 * want_off;
+        assert!((off - want_off).abs() < 1e-12);
+        assert!((fro - want_fro).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convergence_check_sane_at_n_2048() {
+        // pure diagonal: trivially converged, and the n²/2-term serial
+        // f64 sum neither overflows nor drags (the f32 left-fold lost
+        // low bits at exactly this size — ISSUE 5)
+        let diag = Mat::from_fn(2048, 2048, |i, j| if i == j { 2.0 } else { 0.0 });
+        assert!(off_diag_small(&diag));
+        // uniform 1e-3 off-diagonal mass is far from converged
+        let noisy = Mat::from_fn(2048, 2048, |i, j| if i == j { 2.0 } else { 1e-3 });
+        assert!(!off_diag_small(&noisy));
     }
 
     #[test]

@@ -23,7 +23,9 @@
 //! The inner loops route through `linalg::simd`: scalar (the historical
 //! loops) without the `simd` cargo feature, 8-lane tiled kernels with it.
 //! `matmul` additionally swaps its whole block kernel for a packed
-//! register-blocked microkernel ([`simd::matmul_block_packed`]). Per
+//! register-blocked microkernel ([`simd::matmul_block_packed`]; the
+//! blocked-Jacobi tile rotations in `linalg::decomp` ride the same
+//! microkernel through [`simd::matmul_into`]). Per
 //! feature setting every guarantee above is unchanged — the width
 //! contract is about partitioning and per-element op order, and neither
 //! depends on the lane count. Scalar↔simd drift is ulp-bounded and pinned

@@ -11,8 +11,9 @@ pub mod mat;
 pub mod simd;
 
 pub use decomp::{
-    complete_basis, inv_fourth_root, jacobi_eigh, jacobi_eigh_serial, mgs_qr,
-    newton_schulz, ns_step, random_orthonormal, subspace_iter, whiten,
+    complete_basis, inv_fourth_root, jacobi_eigh, jacobi_eigh_blocked,
+    jacobi_eigh_rounds, jacobi_eigh_serial, mgs_qr, newton_schulz, ns_step,
+    random_orthonormal, subspace_iter, whiten,
 };
 pub use kron::{block_diag, diag_m, diag_v, kron, mat_cols, vec_cols};
 pub use mat::Mat;

@@ -297,6 +297,23 @@ pub mod scalar {
         }
     }
 
+    /// C += A @ B over contiguous row-major slices (`c.len() / n` rows,
+    /// `a` rows x k, `b` k x n), with ascending-k per-element
+    /// accumulation and the blocked kernel's zero-skip — the scalar twin
+    /// of the packed microkernel, behind [`super::matmul_into`].
+    pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+        for (crow, arow) in c.chunks_mut(n).zip(a.chunks(k)) {
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (cv, &bv) in crow.iter_mut().zip(&b[kk * n..(kk + 1) * n]) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+
     /// Apply one Jacobi round's column rotations to a row-major block
     /// (`rows.len() / n` rows): the historical row-outer / pair-inner
     /// order. Pairs are disjoint within a round, so every loop order
@@ -954,6 +971,23 @@ pub fn matmul_block_packed(crows: &mut [f32], arows: &[f32], b: &[f32], k: usize
     matmul_block_impl(crows, arows, b, k, n)
 }
 
+/// C = A @ B, **overwriting** C (`c.len() / n` rows; `a` row-major
+/// rows x k, `b` row-major k x n) — the tile-rotation product of the
+/// blocked Jacobi path. One dispatch per call, like the slice kernels:
+/// the scalar accumulation loop under [`with_scalar`] / without the
+/// feature, the packed microkernel otherwise. Both paths accumulate each
+/// C element in ascending-k order, so the result is deterministic and
+/// independent of how the caller partitioned its rows (the blocked
+/// Jacobi width contract rides on this); scalar↔simd drift is
+/// ulp-bounded (`tests/simd_parity.rs`).
+pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+    c.fill(0.0);
+    if !active() {
+        return scalar::matmul_acc(c, a, b, k, n);
+    }
+    matmul_block_packed(c, a, b, k, n)
+}
+
 // ------------------------------------------------------ strided copies ---
 
 /// dst[i] = src[i * stride] — the strided column gather shared by
@@ -1095,6 +1129,35 @@ mod tests {
             let b = rng.normal_vec(k * n, 1.0);
             let mut c = vec![0.0f32; m * n];
             matmul_block_impl(&mut c, &a, &b, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += a[i * k + kk] * b[kk * n + j];
+                    }
+                    assert!(
+                        close(c[i * n + j], acc, 1e-4),
+                        "({m},{k},{n}) at ({i},{j}): {} vs {acc}",
+                        c[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_overwrites_and_matches_naive() {
+        let mut rng = Pcg::seeded(6);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 9, 7), (13, 128, 40), (32, 96, 96)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            // garbage initial contents must not leak into the product
+            let mut c = vec![f32::NAN; m * n];
+            matmul_into(&mut c, &a, &b, k, n);
+            let zero_a = vec![0.0f32; m * k];
+            let mut c_scalar = vec![7.0f32; m * n];
+            scalar::matmul_acc(&mut c_scalar, &zero_a, &b, k, n);
+            assert_eq!(c_scalar, vec![7.0f32; m * n], "matmul_acc accumulates, never clears");
             for i in 0..m {
                 for j in 0..n {
                     let mut acc = 0.0f32;

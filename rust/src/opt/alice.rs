@@ -7,7 +7,9 @@
 //!   sampled from the orthogonal complement (Prop. 4 motivates why);
 //! * **compensation** — Theorem 5.1's optimal column scaling of the
 //!   projector residual (Algorithm 3), turning the low-rank update
-//!   full-rank.
+//!   full-rank. The Fig. 5(c) ablation arms are all distinct: `None`,
+//!   `Fira` (global norm limiter), `FiraPlus` (per-column norm limiter,
+//!   per the Fira paper), `Optimal` (Thm 5.1).
 //!
 //! Instrumentation: each refresh records per-index cosine similarity
 //! between old and new basis columns into `state.vecs["diag_cos"]` — the
@@ -16,7 +18,10 @@
 use crate::linalg::{complete_basis, subspace_iter, Mat};
 use crate::util::Pcg;
 
-use super::{bias_corr, limiter, lowrank::eff_rank, Compen, Hyper, Optimizer, State, Switch, EPS};
+use super::{
+    bias_corr, limiter, limiter_cols, lowrank::eff_rank, Compen, Hyper, Optimizer, State,
+    Switch, EPS,
+};
 
 pub struct Alice {
     pub hp: Hyper,
@@ -34,12 +39,28 @@ impl Alice {
         let hp = &self.hp;
         match hp.compen {
             Compen::None => Mat::zeros(g.rows, g.cols),
-            Compen::Fira | Compen::FiraPlus => {
+            Compen::Fira => {
                 let resid = g.sub(&u.matmul(sigma));
                 let scale = 1.0 / (sigma.fro_norm() + EPS);
                 let (c, phi) =
                     limiter(resid.scale(scale), state.scalar("phi"), hp.gamma);
                 state.scalars.insert("phi", phi);
+                c
+            }
+            Compen::FiraPlus => {
+                // Fira's norm-based scaling applied per column (the Fira
+                // paper's column-wise limiter): column j of the residual
+                // is scaled by 1/‖σⱼ‖ and growth-capped independently —
+                // previously this arm collapsed onto Fira, flattening the
+                // Fig. 5(c) ablation axis (ISSUE 5).
+                let resid = g.sub(&u.matmul(sigma));
+                let s_col = sigma.col_sq_norms();
+                let scaled = Mat::from_fn(resid.rows, resid.cols, |i, j| {
+                    resid.at(i, j) / (s_col[j].sqrt() + EPS)
+                });
+                let mut phi = state.vecs.remove("phi_col").expect("fira_plus phi_col state");
+                let c = limiter_cols(&scaled, &mut phi, hp.gamma);
+                state.vecs.insert("phi_col", phi);
                 c
             }
             Compen::Optimal => {
@@ -154,6 +175,10 @@ impl Optimizer for Alice {
         st.mats.insert("v", Mat::zeros(r, cols));
         st.vecs.insert("p", vec![0.0; cols]);
         st.scalars.insert("phi", 0.0);
+        if self.hp.compen == Compen::FiraPlus {
+            // per-column limiter state (one φ per column)
+            st.vecs.insert("phi_col", vec![0.0; cols]);
+        }
         st
     }
 
@@ -229,8 +254,12 @@ impl Optimizer for Alice {
     fn state_elems(&self, rows: usize, cols: usize) -> u64 {
         let r = eff_rank(&self.hp, rows, cols);
         let tracking = if self.hp.tracking { (r * r) as u64 } else { 0 };
-        // u + m + v + p + phi (+ Q̃); diag_cos only exists post-refresh
-        (rows * r + 2 * r * cols + cols + 1) as u64 + tracking
+        // FiraPlus carries one φ slot per column instead of the scalar
+        let fira_plus =
+            if self.hp.compen == Compen::FiraPlus { cols as u64 } else { 0 };
+        // u + m + v + p + phi (+ Q̃) (+ phi_col); diag_cos only exists
+        // post-refresh
+        (rows * r + 2 * r * cols + cols + 1) as u64 + tracking + fira_plus
     }
 }
 
@@ -309,6 +338,62 @@ mod tests {
                 assert!((nrm - 1.0).abs() < 1e-3, "{sw:?}: column norm {nrm}");
             }
         }
+    }
+
+    #[test]
+    fn every_compensation_variant_is_distinct() {
+        // the Fig. 5(c) axis: all four arms must produce different
+        // updates on the same gradient (Fira and FiraPlus used to share
+        // one arm — ISSUE 5)
+        let variants =
+            [Compen::None, Compen::Fira, Compen::FiraPlus, Compen::Optimal];
+        let g = grad(77, 12, 16);
+        let updates: Vec<Mat> = variants
+            .iter()
+            .map(|&compen| {
+                let a = alice(Hyper {
+                    rank: 4,
+                    leading: 2,
+                    compen,
+                    ..Hyper::alice_defaults()
+                });
+                let mut st = a.init(12, 16);
+                a.refresh(&g, &mut st, 1); // same seed → same basis for all
+                a.step(&g, &mut st, 1)
+            })
+            .collect();
+        for i in 0..variants.len() {
+            for j in (i + 1)..variants.len() {
+                let diff = updates[i].sub(&updates[j]).max_abs();
+                assert!(
+                    diff > 1e-5,
+                    "{:?} vs {:?} produced identical updates (diff {diff})",
+                    variants[i],
+                    variants[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fira_plus_state_accounting_and_capping() {
+        let hp = Hyper {
+            rank: 4,
+            leading: 2,
+            compen: Compen::FiraPlus,
+            ..Hyper::alice_defaults()
+        };
+        let a = alice(hp);
+        let mut st = a.init(12, 16);
+        assert_eq!(st.vec("phi_col").len(), 16);
+        assert_eq!(st.elems(), a.state_elems(12, 16));
+        // per-column phi fills in on the first step and caps afterwards
+        let g = grad(78, 12, 16);
+        a.refresh(&g, &mut st, 1);
+        a.step(&g, &mut st, 1);
+        assert!(st.vec("phi_col").iter().all(|&p| p > 0.0));
+        let d2 = a.step(&g.scale(100.0), &mut st, 2);
+        assert!(d2.is_finite(), "capped compensation must stay finite");
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! These are the "general structure" end of the paper's
 //! generality-vs-efficiency trade-off (Table 1): better FIM approximations,
 //! O(m²) – O(m²+n²) state. Eigen-basis refreshes are amortized to the
-//! coordinator's K-interval schedule.
+//! coordinator's K-interval schedule and route through the size-dispatched
+//! `jacobi_eigh` (serial < 96 ≤ Brent-Luk rounds < 1024 ≤ blocked
+//! two-sided — the lm-head-scale Kron factors take the blocked path), so
+//! refresh cost tracks the `linalg::decomp` dispatch table; the solver's
+//! entry guard keeps a blown-up GGᵀ EMA from panicking a refresh.
 
 use crate::linalg::{inv_fourth_root, jacobi_eigh, Mat};
 
@@ -204,6 +208,24 @@ mod tests {
             let da = adam.step(&g, &mut st_a, t);
             assert!(de.sub(&da).max_abs() < 1e-5, "t={t}");
         }
+    }
+
+    #[test]
+    fn eigen_adam_refresh_survives_non_finite_accumulator() {
+        // a gradient blowup poisons the GGᵀ EMA; the refresh must not
+        // panic and must keep U orthonormal (solver entry guard, ISSUE 5)
+        let ea = EigenAdam { hp: Hyper { eig_sweeps: 30, ..Hyper::default() } };
+        let mut st = ea.init(8, 12);
+        let mut rng = Pcg::seeded(24);
+        let g = Mat::from_vec(8, 12, rng.normal_vec(96, 1.0));
+        ea.step(&g, &mut st, 1);
+        *st.mats.get_mut("q").unwrap().at_mut(3, 5) = f32::NAN;
+        *st.mats.get_mut("q").unwrap().at_mut(1, 2) = f32::INFINITY;
+        ea.refresh(&g, &mut st, 0);
+        let u = st.mat("u");
+        assert!(u.is_finite());
+        let err = u.matmul_tn(u).sub(&Mat::eye(8)).max_abs();
+        assert!(err < 1e-3, "U not orthonormal after sanitized refresh: {err}");
     }
 
     #[test]

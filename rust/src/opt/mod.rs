@@ -186,6 +186,36 @@ pub fn limiter(delta: Mat, phi: f32, gamma: f32) -> (Mat, f32) {
     (delta.scale(eta), phi2)
 }
 
+/// Per-column variant of [`limiter`] — the FiraPlus compensation arm
+/// (Fig. 5(c) ablation, per the Fira paper's column-wise norm limiter):
+/// each column's norm growth is capped at `gamma` independently, with
+/// one φ slot per column, so a single exploding column can no longer
+/// throttle (or unleash) every other column the way the global limiter
+/// does. Per column the recurrence mirrors [`limiter`] exactly: first
+/// sight passes through and records φⱼ, later steps cap growth at
+/// `gamma · φⱼ`. Updates `phi` in place and returns the scaled delta.
+pub fn limiter_cols(delta: &Mat, phi: &mut [f32], gamma: f32) -> Mat {
+    assert_eq!(phi.len(), delta.cols, "one phi slot per column");
+    let etas: Vec<f32> = delta
+        .col_sq_norms()
+        .iter()
+        .zip(phi.iter_mut())
+        .map(|(&sq, p)| {
+            let dn = sq.sqrt() + EPS;
+            if *p > 0.0 {
+                let ratio = dn / (*p + EPS);
+                let eta = gamma / ratio.max(gamma);
+                *p = eta * dn;
+                eta
+            } else {
+                *p = dn;
+                1.0
+            }
+        })
+        .collect();
+    Mat::from_fn(delta.rows, delta.cols, |i, j| delta.at(i, j) * etas[j])
+}
+
 /// Bias-correction denominators (1 - βᵗ).
 pub fn bias_corr(hp: &Hyper, t: u64) -> (f32, f32) {
     if !hp.bias_correction {
@@ -376,6 +406,26 @@ mod tests {
         // capped to gamma * previous phi
         assert!((d2.fro_norm() - 1.01 * 50.0).abs() < 0.5);
         assert!(phi2 <= 1.01 * 50.0 + 0.5);
+    }
+
+    #[test]
+    fn limiter_cols_caps_each_column_independently() {
+        // col 0 norm 50, col 1 norm 3: first step passes both through
+        let d1 = Mat::from_vec(2, 2, vec![30.0, 3.0, 40.0, 0.0]);
+        let mut phi = vec![0.0f32; 2];
+        let out1 = limiter_cols(&d1, &mut phi, 1.01);
+        assert_eq!(out1.data, d1.data, "first sight passes through");
+        assert!((phi[0] - 50.0).abs() < 1e-2 && (phi[1] - 3.0).abs() < 1e-2);
+        // col 0 doubles (capped at gamma·φ₀), col 1 shrinks (passes) —
+        // the global limiter would have scaled both by one factor
+        let d2 = Mat::from_vec(2, 2, vec![60.0, 1.0, 80.0, 0.0]);
+        let out2 = limiter_cols(&d2, &mut phi, 1.01);
+        let n0 = (out2.at(0, 0).powi(2) + out2.at(1, 0).powi(2)).sqrt();
+        let n1 = (out2.at(0, 1).powi(2) + out2.at(1, 1).powi(2)).sqrt();
+        assert!((n0 - 1.01 * 50.0).abs() < 0.5, "col 0 capped, got {n0}");
+        assert!((n1 - 1.0).abs() < 1e-3, "col 1 must pass untouched, got {n1}");
+        assert!(phi[0] <= 1.01 * 50.0 + 0.5);
+        assert!((phi[1] - 1.0).abs() < 1e-2);
     }
 
     #[test]

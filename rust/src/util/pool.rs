@@ -63,7 +63,9 @@
 //! submitting computation's bits is what keeps a forced-scalar
 //! measurement from silently mixing SIMD tiles on helper threads.
 //! [`with_scratch`] hands out a reusable per-thread f32 workspace so
-//! per-task buffers (packed matmul panels) skip the allocator.
+//! per-task buffers (packed matmul panels, blocked-Jacobi tile gathers)
+//! skip the allocator — one reused buffer per nesting depth, so
+//! re-entrant borrows compose instead of degrading to fresh temporaries.
 //!
 //! # Panic propagation
 //!
@@ -111,8 +113,19 @@ thread_local! {
     /// Opaque per-computation context bits (see [`with_context`]).
     static LOCAL_CTX: Cell<u32> = const { Cell::new(0) };
 
-    /// Per-thread f32 scratch buffer (see [`with_scratch`]).
-    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread stack of f32 scratch buffers, indexed by borrow depth
+    /// (see [`with_scratch`]).
+    static SCRATCH: RefCell<ScratchStack> =
+        const { RefCell::new(ScratchStack { bufs: Vec::new(), depth: 0 }) };
+}
+
+/// Depth-indexed scratch buffers: slot d serves the d-th nested
+/// [`with_scratch`] borrow on this thread, so re-entrant borrows (a tile
+/// gather feeding the packed-matmul panel packing, say) reuse their own
+/// long-lived allocation instead of falling back to a fresh temporary.
+struct ScratchStack {
+    bufs: Vec<Vec<f32>>,
+    depth: usize,
 }
 
 /// Root-region helper-permit counter. Lives on the root region's stack
@@ -259,20 +272,39 @@ pub fn with_context<R>(bits: u32, f: impl FnOnce() -> R) -> R {
 /// Borrow a thread-local f32 scratch buffer of at least `len` elements.
 /// Contents are **unspecified** on entry (stale bytes from earlier
 /// borrows) — callers must overwrite everything they read. One allocation
-/// per thread is reused across tasks, so per-task workspaces (the packed
-/// matmul panels in `linalg::simd`) stay off the allocator's hot path; a
-/// re-entrant borrow (a task needing scratch while its caller holds it)
-/// falls back to a fresh temporary buffer.
+/// per thread *per nesting depth* is reused across tasks: the first
+/// borrow always sees the same buffer, and a re-entrant borrow (a task
+/// needing scratch while its caller holds it — the blocked-Jacobi tile
+/// gather feeding the packed matmul's panel packing) gets its own reused
+/// slot one depth down instead of a throwaway allocation. Unwind-safe:
+/// the depth and buffer are restored even when `f` panics.
 pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
-    SCRATCH.with(|cell| match cell.try_borrow_mut() {
-        Ok(mut buf) => {
-            if buf.len() < len {
-                buf.resize(len, 0.0);
-            }
-            f(&mut buf[..len])
+    struct Restore {
+        buf: Vec<f32>,
+        depth: usize,
+    }
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SCRATCH.with(|cell| {
+                let mut st = cell.borrow_mut();
+                st.bufs[self.depth] = std::mem::take(&mut self.buf);
+                st.depth = self.depth;
+            });
         }
-        Err(_) => f(&mut vec![0.0; len]),
-    })
+    }
+    let mut restore = SCRATCH.with(|cell| {
+        let mut st = cell.borrow_mut();
+        let d = st.depth;
+        if st.bufs.len() <= d {
+            st.bufs.push(Vec::new());
+        }
+        st.depth = d + 1;
+        Restore { buf: std::mem::take(&mut st.bufs[d]), depth: d }
+    });
+    if restore.buf.len() < len {
+        restore.buf.resize(len, 0.0);
+    }
+    f(&mut restore.buf[..len])
 }
 
 // ------------------------------------------------------------ the pool ---
@@ -772,12 +804,20 @@ mod tests {
         with_scratch(50, |buf| {
             assert_eq!(buf.as_ptr() as usize, cap);
             assert_eq!(buf[49], 7.0, "scratch contents are unspecified, not zeroed");
-            // re-entrant borrow must not alias the outer one
-            with_scratch(10, |inner| {
+            // re-entrant borrow must not alias the outer one — and its
+            // depth-1 slot is itself reused across nested borrows
+            let nested = with_scratch(10, |inner| {
                 inner[0] = 1.0;
                 assert_ne!(inner.as_ptr() as usize, cap);
+                inner.as_ptr() as usize
+            });
+            with_scratch(10, |inner| {
+                assert_eq!(inner.as_ptr() as usize, nested, "nested slot must be reused");
+                assert_eq!(inner[0], 1.0, "nested slot keeps stale contents too");
             });
         });
+        // depth restored: the outer slot serves top-level borrows again
+        with_scratch(50, |buf| assert_eq!(buf.as_ptr() as usize, cap));
         // works inside pool tasks: each worker has its own buffer
         with_threads(4, || {
             run(16, |i| {
@@ -787,6 +827,17 @@ mod tests {
                 });
             });
         });
+    }
+
+    #[test]
+    fn scratch_depth_unwinds_after_a_panic() {
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            with_scratch(8, |_| panic!("boom in scratch"));
+        }));
+        // the guard restored depth 0: top-level borrows reuse one slot
+        let p1 = with_scratch(8, |b| b.as_ptr() as usize);
+        let p2 = with_scratch(8, |b| b.as_ptr() as usize);
+        assert_eq!(p1, p2, "depth must unwind back to the top-level slot");
     }
 
     #[test]

@@ -1,12 +1,26 @@
 //! Width-parity harness for the parallel decompositions: `jacobi_eigh`
-//! and `mgs_qr` must produce **bitwise identical** output at pool widths
-//! 1 (the serial baseline — width 1 runs every region inline on the
-//! calling thread) and 4, while satisfying the usual reconstruction /
-//! orthonormality / triangularity invariants on ragged shapes straddling
-//! the serial↔parallel dispatch thresholds. See `linalg::decomp` for the
-//! ordering argument that makes the fan-outs width-invariant.
+//! (all three dispatch paths — serial cyclic, Brent-Luk rounds, blocked
+//! two-sided) and `mgs_qr` must produce **bitwise identical** output at
+//! pool widths 1 (the serial baseline — width 1 runs every region inline
+//! on the calling thread) and 4, while satisfying the usual
+//! reconstruction / orthonormality / triangularity invariants on ragged
+//! shapes straddling the serial↔parallel dispatch thresholds. The CI
+//! matrix compiles this suite under both feature settings, so every
+//! contract here is pinned on the scalar and the simd dispatch path. See
+//! `linalg::decomp` for the ordering argument that makes the fan-outs
+//! width-invariant. The blocked kernel is pinned through its public
+//! entry (`jacobi_eigh_blocked`) at sub-dispatch sizes — the kernel is
+//! size-agnostic, and its dispatch floor (n = 1024) is too slow for the
+//! debug-mode suite; the `#[ignore]`d huge-n test covers the dispatch
+//! route itself (run with `--release -- --ignored`).
+//!
+//! Also here: the eigensolver robustness regressions of ISSUE 5
+//! (non-finite input guard, relative pivot thresholds on tiny-scale
+//! input) at sizes that exercise the rounds path.
 
-use alice_racs::linalg::{jacobi_eigh, mgs_qr, Mat};
+use alice_racs::linalg::{
+    jacobi_eigh, jacobi_eigh_blocked, jacobi_eigh_serial, mgs_qr, Mat,
+};
 use alice_racs::util::{pool, Pcg};
 
 fn spd(n: usize, seed: u64) -> Mat {
@@ -66,6 +80,113 @@ fn eigh_invariants_on_ragged_shapes() {
         let err = rec.sub(&a).max_abs();
         assert!(err < 2e-3 * a.max_abs(), "reconstruction err at n = {n}: {err}");
     }
+}
+
+/// Dimensions for the blocked kernel: 130 = two full 64-tiles + a 2-wide
+/// sliver, 160 = two full tiles + a 32-wide tail — both exercise the
+/// ragged tile schedule and m < 2b pivot subproblems.
+const BLOCKED_DIMS: &[usize] = &[130, 160];
+
+#[test]
+fn blocked_matches_serial_eigenvalues() {
+    for (i, &n) in BLOCKED_DIMS.iter().enumerate() {
+        let a = spd(n, 300 + i as u64);
+        let (vb, lam_b) = jacobi_eigh_blocked(&a, 30);
+        let (_, lam_s) = jacobi_eigh_serial(&a, 30);
+        assert!(ortho_err(&vb) < 1e-3, "blocked ortho err at n = {n}");
+        let scale = lam_s[0].abs().max(1.0);
+        for (got, want) in lam_b.iter().zip(&lam_s) {
+            assert!(
+                (got - want).abs() < 1e-2 * scale,
+                "blocked λ {got} vs serial {want} at n = {n}"
+            );
+        }
+        // reconstruction through the blocked basis
+        let mut vd = vb.clone();
+        for r in 0..vb.rows {
+            for c in 0..vb.cols {
+                *vd.at_mut(r, c) *= lam_b[c];
+            }
+        }
+        let err = vd.matmul_nt(&vb).sub(&a).max_abs();
+        assert!(err < 2e-3 * a.max_abs(), "blocked reconstruction at n = {n}: {err}");
+    }
+}
+
+#[test]
+fn blocked_bitwise_identical_across_widths() {
+    for (i, &n) in BLOCKED_DIMS.iter().enumerate() {
+        let a = spd(n, 300 + i as u64);
+        // parity needs the full tile schedule, not convergence — 6
+        // sweeps keep the debug-mode suite fast
+        let (v1, l1) = pool::with_threads(1, || jacobi_eigh_blocked(&a, 6));
+        let (v4, l4) = pool::with_threads(4, || jacobi_eigh_blocked(&a, 6));
+        assert_eq!(v1.data, v4.data, "blocked eigenvectors diverge at n = {n}");
+        assert_eq!(l1, l4, "blocked eigenvalues diverge at n = {n}");
+    }
+}
+
+/// The dispatch route itself, above the n = 1024 blocked floor. Too slow
+/// for the debug-mode suite — run with
+/// `cargo test --release --test decomp_parity -- --ignored`.
+#[test]
+#[ignore = "n above the blocked-dispatch floor; run in release with --ignored"]
+fn huge_n_dispatch_is_blocked_and_width_invariant() {
+    let n = 1091; // 17 tiles + a 3-wide sliver
+    let a = spd(n, 400);
+    // parity does not need convergence: 2 sweeps pin the full schedule
+    let (v1, l1) = pool::with_threads(1, || jacobi_eigh(&a, 2));
+    let (v4, l4) = pool::with_threads(4, || jacobi_eigh(&a, 2));
+    assert_eq!(v1.data, v4.data, "dispatch-level blocked V diverges");
+    assert_eq!(l1, l4, "dispatch-level blocked λ diverges");
+    // and the dispatch really is the blocked kernel
+    let (vb, lb) = jacobi_eigh_blocked(&a, 2);
+    assert_eq!(v1.data, vb.data);
+    assert_eq!(l1, lb);
+}
+
+#[test]
+fn non_finite_input_does_not_panic_any_path() {
+    // ISSUE 5 regression: one blown-up entry used to panic
+    // sort_eigh's partial_cmp().unwrap() mid-run. Serial (12), rounds
+    // (121) and blocked (130, direct) paths all sanitize instead.
+    for &n in &[12usize, 121] {
+        let mut a = spd(n, 500 + n as u64);
+        *a.at_mut(1, 3) = f32::NAN;
+        *a.at_mut(5, 0) = f32::NEG_INFINITY;
+        let (v, lam) = jacobi_eigh(&a, 30);
+        assert!(v.is_finite(), "non-finite V at n = {n}");
+        assert!(lam.iter().all(|l| l.is_finite()), "non-finite λ at n = {n}");
+        assert!(ortho_err(&v) < 1e-3, "ortho err at n = {n}");
+    }
+    let mut a = spd(130, 501);
+    *a.at_mut(7, 99) = f32::NAN;
+    let (v, lam) = jacobi_eigh_blocked(&a, 30);
+    assert!(v.is_finite() && lam.iter().all(|l| l.is_finite()));
+    assert!(ortho_err(&v) < 1e-3);
+}
+
+#[test]
+fn tiny_scale_spd_converges_on_the_rounds_path() {
+    // ISSUE 5 regression: entries ~1e-12 sat below the old absolute
+    // pivot cutoff — whole refreshes no-opped and returned a stale
+    // basis. Relative thresholds must rotate exactly like unit scale.
+    let n = 121;
+    let a = spd(n, 502).scale(1e-12);
+    let (v, lam) = jacobi_eigh(&a, 30);
+    assert!(ortho_err(&v) < 1e-3);
+    assert!(
+        v.sub(&Mat::eye(n)).max_abs() > 0.1,
+        "tiny-scale refresh must actually rotate the basis"
+    );
+    let mut vd = v.clone();
+    for r in 0..n {
+        for c in 0..n {
+            *vd.at_mut(r, c) *= lam[c];
+        }
+    }
+    let err = vd.matmul_nt(&v).sub(&a).max_abs();
+    assert!(err < 2e-3 * a.max_abs(), "tiny-scale reconstruction err {err}");
 }
 
 #[test]

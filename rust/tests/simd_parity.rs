@@ -14,7 +14,9 @@
 //!   partitioning and lane geometry are pure functions of shape, never of
 //!   the worker count.
 
-use alice_racs::linalg::{jacobi_eigh, mat_cols, mgs_qr, simd, vec_cols, Mat};
+use alice_racs::linalg::{
+    jacobi_eigh, jacobi_eigh_blocked, mat_cols, mgs_qr, simd, vec_cols, Mat,
+};
 use alice_racs::util::{pool, Pcg};
 
 /// Relative closeness bound for kernels that regroup float sums.
@@ -178,6 +180,62 @@ fn decompositions_agree_across_dispatch_paths() {
         assert_eq!(w1.0.data, w4.0.data, "QR width (forced={forced_scalar})");
         assert_eq!(w1.1 .0.data, w4.1 .0.data, "eigh V width (forced={forced_scalar})");
         assert_eq!(w1.1 .1, w4.1 .1, "eigh λ width (forced={forced_scalar})");
+    }
+}
+
+#[test]
+fn matmul_into_scalar_vs_dispatch_ulp_bounded() {
+    // the blocked-Jacobi tile-rotation product: overwrite semantics on
+    // both dispatch paths, ulp-bounded drift between them
+    for &(rows, k, n) in &[(1usize, 1usize, 1usize), (9, 17, 5), (32, 128, 40), (13, 96, 130)] {
+        let mut rng = Pcg::seeded((rows * 100 + k + n) as u64);
+        let a = rng.normal_vec(rows * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut c_scalar = vec![f32::NAN; rows * n]; // garbage must be overwritten
+        let mut c_fast = vec![f32::NAN; rows * n];
+        simd::with_scalar(|| simd::matmul_into(&mut c_scalar, &a, &b, k, n));
+        simd::matmul_into(&mut c_fast, &a, &b, k, n);
+        assert_close(&c_scalar, &c_fast, &format!("matmul_into {rows}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn blocked_eigh_agrees_across_dispatch_paths() {
+    // the blocked two-sided Jacobi routes its tile gathers and rotation
+    // products through matmul_into: pin the invariants on both kernel
+    // dispatch paths, plus bitwise width-invariance per path
+    let mut rng = Pcg::seeded(0xb10c);
+    let n = 130; // two full 64-tiles + a 2-wide sliver
+    let bsrc = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    let mut spd = bsrc.matmul_nt(&bsrc);
+    for i in 0..n {
+        *spd.at_mut(i, i) += 0.5;
+    }
+    let ortho_err = |q: &Mat| q.matmul_tn(q).sub(&Mat::eye(q.cols)).max_abs();
+    for forced_scalar in [false, true] {
+        let run = |sweeps: usize| {
+            if forced_scalar {
+                simd::with_scalar(|| jacobi_eigh_blocked(&spd, sweeps))
+            } else {
+                jacobi_eigh_blocked(&spd, sweeps)
+            }
+        };
+        let (v, lam) = run(30);
+        assert!(ortho_err(&v) < 1e-3, "V ortho err (forced={forced_scalar})");
+        let mut vd = v.clone();
+        for r in 0..n {
+            for c in 0..n {
+                *vd.at_mut(r, c) *= lam[c];
+            }
+        }
+        let err = vd.matmul_nt(&v).sub(&spd).max_abs();
+        assert!(err < 2e-3 * spd.max_abs(), "reconstruction (forced={forced_scalar}): {err}");
+        // width invariance holds on each dispatch path independently
+        // (parity needs the full schedule, not convergence — 6 sweeps)
+        let w1 = pool::with_threads(1, || run(6));
+        let w4 = pool::with_threads(4, || run(6));
+        assert_eq!(w1.0.data, w4.0.data, "blocked V width (forced={forced_scalar})");
+        assert_eq!(w1.1, w4.1, "blocked λ width (forced={forced_scalar})");
     }
 }
 
