@@ -103,6 +103,17 @@ pub fn write_summary(name: &str, summary: &Json) -> Result<String> {
     Ok(path)
 }
 
+/// Eigen-refresh mode for bench/e2e runs (the CI matrix sets
+/// `AR_REFRESH=sketch` on the sketch cell so training-path coverage of
+/// the randomized range finder rides the existing jobs; unset/other =
+/// the exact default).
+pub fn bench_refresh() -> opt::Refresh {
+    match std::env::var("AR_REFRESH") {
+        Ok(v) if v.trim() == "sketch" => opt::Refresh::Sketch,
+        _ => opt::Refresh::Exact,
+    }
+}
+
 /// Simulated DP worker count for the dist benches/tests (the CI matrix
 /// sets `AR_DP_WORKERS=8` on the dist cell — 8 workers oversubscribing a
 /// width-4 pool, past the {1, 2, 4} base sweep; 0/unset = the default).
@@ -200,6 +211,7 @@ pub fn bench_cfg(opt: &str, tag: &str, steps: usize) -> RunConfig {
     cfg.hp.rank = 16;
     cfg.hp.leading = 6;
     cfg.hp.interval = 50;
+    cfg.hp.refresh = bench_refresh();
     cfg
 }
 
@@ -292,6 +304,14 @@ mod tests {
         assert_eq!(bench_threads(0), 0);
         assert_eq!(bench_dp_workers(4), 4, "unset env falls back to the default");
         assert!(!smoke(), "smoke mode requires AR_BENCH_SMOKE=1");
+        // AR_REFRESH is read per-call; no other test mutates it, so
+        // exercising both arms here is race-free under the env-var lock
+        // convention of this suite (all env tests live in this one fn)
+        std::env::remove_var("AR_REFRESH");
+        assert_eq!(bench_refresh(), opt::Refresh::Exact);
+        std::env::set_var("AR_REFRESH", "sketch");
+        assert_eq!(bench_refresh(), opt::Refresh::Sketch);
+        std::env::remove_var("AR_REFRESH");
     }
 
     #[test]

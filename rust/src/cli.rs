@@ -75,6 +75,11 @@ USAGE:
   alice-racs train   [--config FILE] [--opt NAME] [--steps N] [--lr F]
                      [--artifacts DIR] [--out DIR] [--path coordinator|fused]
                      [--rank N] [--interval N] [--seed N] [--tuned]
+                     [--refresh exact|sketch] (eigen-refresh dispatch;
+                                      sketch = randomized range finder)
+                     [--sketch-oversample N] [--sketch-power-iters N]
+                     [--anchor-every N] (every N-th sketch refresh runs
+                                      the exact path as a drift anchor)
                      [--threads N]   (1 = serial; 0 = AR_BENCH_THREADS if
                                       set, else all cores; default 0)
                      [--pool-warmup] (pre-spawn pool workers before step 1)
@@ -139,6 +144,15 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     }
     cfg.hp.rank = args.usize_or("rank", cfg.hp.rank)?;
     cfg.hp.interval = args.usize_or("interval", cfg.hp.interval)?;
+    if let Some(r) = args.get("refresh") {
+        cfg.hp.refresh = opt::Refresh::parse(r)?;
+    }
+    cfg.hp.sketch_oversample =
+        args.usize_or("sketch-oversample", cfg.hp.sketch_oversample)?;
+    cfg.hp.sketch_power_iters =
+        args.usize_or("sketch-power-iters", cfg.hp.sketch_power_iters)?;
+    cfg.hp.refresh_anchor_every =
+        args.usize_or("anchor-every", cfg.hp.refresh_anchor_every)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     if let Some(p) = args.get("path") {
         cfg.path = match p {
@@ -266,6 +280,27 @@ mod tests {
         assert!(cfg.dist.sim);
         assert!(cfg.dist.enabled());
         assert!((cfg.hp.alpha - 0.2).abs() < 1e-6); // tuned racs alpha
+    }
+
+    #[test]
+    fn refresh_overrides() {
+        let a = Args::parse(&argv(&[
+            "train", "--opt", "alice", "--refresh", "sketch",
+            "--sketch-oversample", "4", "--sketch-power-iters", "1",
+            "--anchor-every", "3",
+        ]))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.hp.refresh, opt::Refresh::Sketch);
+        assert_eq!(cfg.hp.sketch_oversample, 4);
+        assert_eq!(cfg.hp.sketch_power_iters, 1);
+        assert_eq!(cfg.hp.refresh_anchor_every, 3);
+        // default stays exact
+        let d = Args::parse(&argv(&["train", "--opt", "alice"])).unwrap();
+        assert_eq!(config_from_args(&d).unwrap().hp.refresh, opt::Refresh::Exact);
+        // and garbage is rejected
+        let bad = Args::parse(&argv(&["train", "--refresh", "approx"])).unwrap();
+        assert!(config_from_args(&bad).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::dist::DistConfig;
-use crate::opt::{Compen, Hyper, Switch};
+use crate::opt::{Compen, Hyper, Refresh, Switch};
 use toml::View;
 
 /// Which execution path the trainer uses (DESIGN.md §1).
@@ -123,6 +123,22 @@ impl RunConfig {
             racs_ema: v.bool_or("optimizer", "racs_ema", hp_d.racs_ema),
             bias_correction: v.bool_or("optimizer", "bias_correction", true),
             tracking: v.bool_or("optimizer", "tracking", true),
+            refresh: Refresh::parse(&v.str_or("optimizer", "refresh", "exact"))?,
+            sketch_oversample: v.usize_or(
+                "optimizer",
+                "sketch_oversample",
+                hp_d.sketch_oversample,
+            ),
+            sketch_power_iters: v.usize_or(
+                "optimizer",
+                "sketch_power_iters",
+                hp_d.sketch_power_iters,
+            ),
+            refresh_anchor_every: v.usize_or(
+                "optimizer",
+                "refresh_anchor_every",
+                hp_d.refresh_anchor_every,
+            ),
         };
         let path = match v.str_or("train", "path", "coordinator").as_str() {
             "fused" => ExecPath::Fused,
@@ -302,5 +318,29 @@ mix = 0.5
     #[test]
     fn bad_switch_rejected() {
         assert!(RunConfig::from_toml("[optimizer]\nswitch = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn parses_refresh_section() {
+        let c = RunConfig::from_toml(
+            "[optimizer]\nrefresh = \"sketch\"\nsketch_oversample = 4\n\
+             sketch_power_iters = 1\nrefresh_anchor_every = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.hp.refresh, Refresh::Sketch);
+        assert_eq!(c.hp.sketch_oversample, 4);
+        assert_eq!(c.hp.sketch_power_iters, 1);
+        assert_eq!(c.hp.refresh_anchor_every, 5);
+        // defaults: exact refresh, paper-scale sketch geometry
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.hp.refresh, Refresh::Exact);
+        assert_eq!(d.hp.sketch_oversample, 8);
+        assert_eq!(d.hp.sketch_power_iters, 2);
+        assert_eq!(d.hp.refresh_anchor_every, 8);
+    }
+
+    #[test]
+    fn bad_refresh_rejected() {
+        assert!(RunConfig::from_toml("[optimizer]\nrefresh = \"approx\"").is_err());
     }
 }

@@ -48,7 +48,16 @@ pub enum Solution {
 
 /// Solve Eq. (2) for the given structure from gradient samples (each an
 /// m×n matrix; E[·] is the sample mean, as the paper estimates with EMA).
+/// Uses the configured default eigensolver budget — callers with their
+/// own `Hyper` should go through [`solve_with`].
 pub fn solve(structure: Structure, grads: &[Mat]) -> Solution {
+    solve_with(structure, grads, crate::opt::Hyper::default().eig_sweeps)
+}
+
+/// [`solve`] with an explicit Jacobi sweep budget for the eigensolving
+/// structures (`BlockDiagSharedEig`) — previously hardcoded at 40
+/// sweeps, ignoring the `eig_sweeps` every other refresh honors.
+pub fn solve_with(structure: Structure, grads: &[Mat], eig_sweeps: usize) -> Solution {
     assert!(!grads.is_empty());
     let (m, n) = (grads[0].rows, grads[0].cols);
     let k = grads.len() as f32;
@@ -116,7 +125,7 @@ pub fn solve(structure: Structure, grads: &[Mat]) -> Solution {
             for g in grads {
                 q.ema_(1.0, &g.matmul_nt(g), 1.0 / k);
             }
-            let (u, _) = jacobi_eigh(&q, 40);
+            let (u, _) = jacobi_eigh(&q, eig_sweeps.max(1));
             let mut d = Mat::zeros(m, n);
             for g in grads {
                 let rot = u.matmul_tn(g);
@@ -339,6 +348,37 @@ mod tests {
         assert!(eig <= diag + 1e-3, "eigen {eig} vs diag {diag}");
         // and normalization can't beat the strictly more general two-sided
         assert!(diag > 0.0 && norm > 0.0);
+    }
+
+    #[test]
+    fn solve_with_honors_the_sweep_budget() {
+        // 1 sweep vs converged: both finite/orthonormal (the solver
+        // normalizes either way), but the bases must differ — proof the
+        // budget actually reaches the eigensolver instead of the old
+        // hardcoded 40
+        let grads = samples(8, 6, 10, 60);
+        let one = solve_with(Structure::BlockDiagSharedEig, &grads, 1);
+        let full = solve_with(Structure::BlockDiagSharedEig, &grads, 40);
+        let (Solution::BlockDiagSharedEig { u: u1, .. },
+             Solution::BlockDiagSharedEig { u: u40, .. }) = (one, full)
+        else {
+            panic!("wrong variant");
+        };
+        assert!(u1.is_finite() && u40.is_finite());
+        assert_ne!(u1.data, u40.data, "sweep budget must reach jacobi_eigh");
+        // and the default entry follows Hyper::default().eig_sweeps
+        let via_default = solve(Structure::BlockDiagSharedEig, &grads);
+        let via_explicit = solve_with(
+            Structure::BlockDiagSharedEig,
+            &grads,
+            crate::opt::Hyper::default().eig_sweeps,
+        );
+        let (Solution::BlockDiagSharedEig { u: ud, .. },
+             Solution::BlockDiagSharedEig { u: ue, .. }) = (via_default, via_explicit)
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(ud.data, ue.data);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod decomp;
 pub mod kron;
 pub mod mat;
+pub mod rangefinder;
 pub mod simd;
 
 pub use decomp::{
@@ -17,3 +18,4 @@ pub use decomp::{
 };
 pub use kron::{block_diag, diag_m, diag_v, kron, mat_cols, vec_cols};
 pub use mat::Mat;
+pub use rangefinder::{sketched_eigh, sketched_eigh_mat, SketchSpec};

@@ -1,0 +1,226 @@
+//! Randomized range finder for the sketched subspace refresh
+//! (ISSUE 6 / ROADMAP "Sketched subspace refresh").
+//!
+//! The eigen-refresh optimizers (Alice, Eigen-Adam, SOAP) only ever
+//! consume r ≪ n leading directions of a symmetric PSD operator A
+//! (GGᵀ, or its tracked reconstruction, or a stored EMA), yet the exact
+//! path eigendecomposes the full n×n matrix — O(sweeps · n³) — just to
+//! keep that basis fresh. The Halko-style randomized range finder here
+//! delivers the same leading subspace from (q + 2) thin applications of
+//! A to an n×(r+p) block:
+//!
+//! 1. seeded Gaussian sketch Ω (n×s, s = r + p oversampled columns),
+//!    warm-started from the previous basis columns;
+//! 2. Y = A·Ω, orthonormalized by [`mgs_qr`], then `q` power iterations
+//!    Q ← qr(A·Q) to sharpen the spectral gap;
+//! 3. the s×s projected eigenproblem B = Qᵀ(A·Q), solved by the
+//!    existing serial Jacobi kernel ([`jacobi_eigh_serial`] — s is
+//!    pivot-subproblem-sized, the parallel paths would be overhead);
+//! 4. U = Q·W, truncated to the leading r columns.
+//!
+//! `A` is passed as an *operator* (`&dyn Fn(&Mat) -> Mat` applying A to
+//! a thin block), so callers whose A is itself a product — Alice's
+//! β₃·U(Q̃(UᵀX)) + (1−β₃)·G(GᵀX) — never materialize an n×n matrix at
+//! all: the sketch path costs O(n·m·s·(q+2)) against the exact path's
+//! O(n²·m + sweeps·n³).
+//!
+//! # Determinism
+//!
+//! Ω is drawn serially on the calling thread from a [`Pcg`] stream
+//! derived from the caller's seed (the coordinator draws refresh seeds
+//! on its own thread, like every existing refresh), and every stage —
+//! the pool-parallel `matmul` family, [`mgs_qr`], the serial Jacobi
+//! kernel — is bitwise width-invariant, so sketched bases are **bitwise
+//! identical at every pool width** per feature setting
+//! (`tests/decomp_parity.rs`).
+//!
+//! # Numerical robustness
+//!
+//! Every operator application is sanitized like the exact solver's
+//! entry guard (ISSUE 5): non-finite entries in A·X (a blown-up G or a
+//! poisoned EMA) are zeroed before orthonormalization, and warm-start
+//! columns carrying non-finite values are skipped in favor of the
+//! Gaussian draw — a sketched refresh never panics and always returns
+//! an orthonormal basis with finite eigenvalues.
+
+use crate::util::Pcg;
+
+use super::decomp::{jacobi_eigh_serial, mgs_qr};
+use super::mat::Mat;
+
+/// Geometry of one sketched refresh: target rank, oversampling columns,
+/// power iterations, and the sweep budget of the projected eigenproblem.
+/// Built from `opt::Hyper` via `Hyper::sketch_spec`.
+#[derive(Debug, Clone, Copy)]
+pub struct SketchSpec {
+    /// Leading directions the caller consumes (columns of the result).
+    pub rank: usize,
+    /// Extra sketch columns p — the classic range-finder accuracy knob.
+    pub oversample: usize,
+    /// Power iterations q sharpening the spectral gap (0 = plain sketch).
+    pub power_iters: usize,
+    /// Jacobi sweeps for the (r+p)×(r+p) projected eigenproblem.
+    pub sweeps: usize,
+}
+
+/// Zero any non-finite entry of a freshly applied block — the sketch
+/// path's analogue of the exact solver's `symmetric_finite` entry guard.
+fn finite_block(mut y: Mat) -> Mat {
+    if !y.is_finite() {
+        for v in y.data.iter_mut() {
+            if !v.is_finite() {
+                *v = 0.0;
+            }
+        }
+    }
+    y
+}
+
+/// Apply the operator and orthonormalize the result. `mgs_qr`'s
+/// degenerate-column fallback covers a sanitized-to-zero block.
+fn orthonormal_range(apply: &dyn Fn(&Mat) -> Mat, x: &Mat) -> Mat {
+    mgs_qr(&finite_block(apply(x)))
+}
+
+/// Leading eigenpairs of a symmetric PSD operator on ℝⁿ via the
+/// randomized range finder: returns (U, λ) with U n×r orthonormal and λ
+/// the r leading Rayleigh–Ritz values, descending. `apply` must map an
+/// n×k block X to A·X; `warm` (previous basis, n×·) seeds the leading
+/// sketch columns so successive refreshes track a drifting subspace.
+pub fn sketched_eigh(
+    n: usize,
+    apply: &dyn Fn(&Mat) -> Mat,
+    warm: Option<&Mat>,
+    spec: &SketchSpec,
+    seed: u64,
+) -> (Mat, Vec<f32>) {
+    assert!(n > 0, "sketched_eigh needs a non-empty operator");
+    let r = spec.rank.clamp(1, n);
+    let s = (r + spec.oversample).min(n);
+    // Ω: serial draw on the calling thread — width-invariant by
+    // construction, like every coordinator-side refresh seed
+    let mut rng = Pcg::seeded(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0x5ce7));
+    let mut omega = Mat::from_vec(n, s, rng.normal_vec(n * s, 1.0));
+    if let Some(w) = warm {
+        if w.rows == n {
+            // previous basis columns replace the leading sketch columns;
+            // a poisoned column falls back to its Gaussian draw
+            for j in 0..w.cols.min(s) {
+                let col = w.col_vec(j);
+                if col.iter().all(|x| x.is_finite()) {
+                    omega.set_col(j, &col);
+                }
+            }
+        }
+    }
+    let mut q = orthonormal_range(apply, &omega);
+    for _ in 0..spec.power_iters {
+        q = orthonormal_range(apply, &q);
+    }
+    // projected s×s eigenproblem off one final application
+    let aq = finite_block(apply(&q));
+    let mut b = q.matmul_tn(&aq);
+    b.symmetrize_();
+    let (w, lam) = jacobi_eigh_serial(&b, spec.sweeps.max(1));
+    let u = q.matmul(&w);
+    if r == s {
+        (u, lam)
+    } else {
+        (u.take_cols(r), lam[..r].to_vec())
+    }
+}
+
+/// [`sketched_eigh`] over an explicit symmetric matrix (the stored-EMA
+/// refreshes of Eigen-Adam / SOAP, and the test/bench harnesses).
+pub fn sketched_eigh_mat(
+    a: &Mat,
+    warm: Option<&Mat>,
+    spec: &SketchSpec,
+    seed: u64,
+) -> (Mat, Vec<f32>) {
+    assert_eq!(a.rows, a.cols, "sketched_eigh_mat needs a square operator");
+    sketched_eigh(a.rows, &|x| a.matmul(x), warm, spec, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{jacobi_eigh, random_orthonormal};
+
+    fn spec(rank: usize) -> SketchSpec {
+        SketchSpec { rank, oversample: 4, power_iters: 2, sweeps: 30 }
+    }
+
+    fn ortho_err(q: &Mat) -> f32 {
+        q.matmul_tn(q).sub(&Mat::eye(q.cols)).max_abs()
+    }
+
+    /// Planted low-rank-plus-noise PSD: B Bᵀ dominant on r directions.
+    fn planted(n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::seeded(seed);
+        let b = Mat::from_vec(n, r, rng.normal_vec(n * r, 1.0));
+        let e = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+        b.matmul_nt(&b).scale(4.0).add(&e.matmul_nt(&e).scale(1e-3 / n as f32))
+    }
+
+    #[test]
+    fn recovers_planted_eigenvalues() {
+        let (n, r) = (60, 5);
+        let a = planted(n, r, 11);
+        let (u, lam) = sketched_eigh_mat(&a, None, &spec(r), 3);
+        assert_eq!((u.rows, u.cols), (n, r));
+        assert!(ortho_err(&u) < 1e-3);
+        let (_, lam_exact) = jacobi_eigh(&a, 40);
+        for (got, want) in lam.iter().zip(&lam_exact[..r]) {
+            assert!(
+                (got - want).abs() < 2e-2 * want.abs().max(1.0),
+                "sketched λ {got} vs exact {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversample_clamps_to_n() {
+        // r + p past n must clamp instead of panicking the QR
+        let a = planted(10, 3, 12);
+        let s = SketchSpec { rank: 8, oversample: 16, power_iters: 1, sweeps: 30 };
+        let (u, lam) = sketched_eigh_mat(&a, None, &s, 4);
+        assert_eq!((u.rows, u.cols), (10, 8));
+        assert_eq!(lam.len(), 8);
+        assert!(ortho_err(&u) < 1e-3);
+    }
+
+    #[test]
+    fn warm_start_skips_poisoned_columns() {
+        let a = planted(40, 4, 13);
+        let mut rng = Pcg::seeded(14);
+        let mut warm = random_orthonormal(40, 4, &mut rng);
+        *warm.at_mut(3, 2) = f32::NAN;
+        let (u, lam) = sketched_eigh_mat(&a, Some(&warm), &spec(4), 5);
+        assert!(u.is_finite());
+        assert!(lam.iter().all(|l| l.is_finite()));
+        assert!(ortho_err(&u) < 1e-3);
+    }
+
+    #[test]
+    fn non_finite_operator_is_sanitized() {
+        let mut a = planted(40, 4, 15);
+        *a.at_mut(2, 7) = f32::NAN;
+        *a.at_mut(30, 1) = f32::NEG_INFINITY;
+        let (u, lam) = sketched_eigh_mat(&a, None, &spec(4), 6);
+        assert!(u.is_finite(), "sketch must sanitize a poisoned operator");
+        assert!(lam.iter().all(|l| l.is_finite()));
+        assert!(ortho_err(&u) < 1e-3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = planted(30, 3, 16);
+        let (u1, l1) = sketched_eigh_mat(&a, None, &spec(3), 9);
+        let (u2, l2) = sketched_eigh_mat(&a, None, &spec(3), 9);
+        assert_eq!(u1.data, u2.data);
+        assert_eq!(l1, l2);
+        let (u3, _) = sketched_eigh_mat(&a, None, &spec(3), 10);
+        assert_ne!(u1.data, u3.data, "different seeds draw different sketches");
+    }
+}

@@ -15,12 +15,12 @@
 //! between old and new basis columns into `state.vecs["diag_cos"]` — the
 //! data behind Fig. 6.
 
-use crate::linalg::{complete_basis, subspace_iter, Mat};
+use crate::linalg::{complete_basis, simd, sketched_eigh, subspace_iter, Mat};
 use crate::util::Pcg;
 
 use super::{
-    bias_corr, limiter, limiter_cols, lowrank::eff_rank, Compen, Hyper, Optimizer, State,
-    Switch, EPS,
+    bias_corr, limiter, limiter_cols, lowrank::eff_rank, sketch_anchor_due, Compen,
+    Hyper, Optimizer, Refresh, State, Switch, EPS,
 };
 
 pub struct Alice {
@@ -88,47 +88,41 @@ impl Alice {
         }
     }
 
-    /// Algorithm 2 + the Fig. 5(b) strategy ablations.
-    fn switch(&self, q_rec: &Mat, u_prev: &Mat, seed: u64) -> Mat {
-        let hp = &self.hp;
-        let m = q_rec.rows;
-        let r = u_prev.cols;
-        let l = hp.leading.min(r);
-        let mut rng = Pcg::seeded(seed.wrapping_mul(0x2545f491).wrapping_add(7));
+    /// Per-refresh RNG — one stream per (seed), drawn serially on the
+    /// refreshing thread so both refresh modes stay width-invariant.
+    fn switch_rng(seed: u64) -> Pcg {
+        Pcg::seeded(seed.wrapping_mul(0x2545f491).wrapping_add(7))
+    }
 
-        if hp.switch == Switch::Gaussian {
-            let mut u = Mat::from_vec(m, r, rng.normal_vec(m * r, 1.0));
-            // unit column norms (paper's Gaussian ablation setup, App. F.7)
-            for j in 0..r {
-                let nrm: f32 =
-                    (0..m).map(|i| u.at(i, j).powi(2)).sum::<f32>().sqrt() + EPS;
-                for i in 0..m {
-                    *u.at_mut(i, j) /= nrm;
-                }
+    /// m×k Gaussian block with unit column norms (paper's Gaussian
+    /// ablation setup, App. F.7) — also the GaussianMix tail.
+    fn gaussian_cols(m: usize, k: usize, rng: &mut Pcg) -> Mat {
+        let mut u = Mat::from_vec(m, k, rng.normal_vec(m * k, 1.0));
+        for j in 0..k {
+            let nrm: f32 =
+                (0..m).map(|i| u.at(i, j).powi(2)).sum::<f32>().sqrt() + EPS;
+            for i in 0..m {
+                *u.at_mut(i, j) /= nrm;
             }
-            return u;
         }
+        u
+    }
 
-        let (u_new, _) = subspace_iter(q_rec, u_prev, hp.sub_iters);
+    /// Algorithm 2's mixing step over an already-refreshed leading basis:
+    /// keep the `leading` columns, resample the tail per the Fig. 5(b)
+    /// strategy. Shared verbatim by the exact and sketch refresh paths
+    /// (same RNG draw order, so the exact path is bitwise unchanged).
+    fn mix_switched(&self, u_new: Mat, rng: &mut Pcg) -> Mat {
+        let hp = &self.hp;
+        let m = u_new.rows;
+        let r = u_new.cols;
+        let l = hp.leading.min(r);
         if hp.switch == Switch::Evd || r == l || m == r {
             return u_new;
         }
         let top = u_new.take_cols(l);
         match hp.switch {
-            Switch::GaussianMix => {
-                let mut gs = Mat::from_vec(m, r - l, rng.normal_vec(m * (r - l), 1.0));
-                for j in 0..(r - l) {
-                    let nrm: f32 = (0..m)
-                        .map(|i| gs.at(i, j).powi(2))
-                        .sum::<f32>()
-                        .sqrt()
-                        + EPS;
-                    for i in 0..m {
-                        *gs.at_mut(i, j) /= nrm;
-                    }
-                }
-                top.hcat(&gs)
-            }
+            Switch::GaussianMix => top.hcat(&Self::gaussian_cols(m, r - l, rng)),
             Switch::FullBasis => {
                 let u_c = complete_basis(&u_new);
                 let tail = Mat::from_fn(m, r - l, |i, j| u_new.at(i, j + l));
@@ -149,6 +143,47 @@ impl Alice {
                 top.hcat(&picked)
             }
         }
+    }
+
+    /// Algorithm 2 + the Fig. 5(b) strategy ablations (exact path).
+    fn switch(&self, q_rec: &Mat, u_prev: &Mat, seed: u64) -> Mat {
+        let hp = &self.hp;
+        let mut rng = Self::switch_rng(seed);
+        if hp.switch == Switch::Gaussian {
+            return Self::gaussian_cols(q_rec.rows, u_prev.cols, &mut rng);
+        }
+        let (u_new, _) = subspace_iter(q_rec, u_prev, hp.sub_iters);
+        self.mix_switched(u_new, &mut rng)
+    }
+
+    /// Sketched refresh (ISSUE 6): the reconstruction is applied as an
+    /// operator X ↦ β₃·U(Q̃(UᵀX)) + (1−β₃)·G(GᵀX) on n×s blocks — no
+    /// GGᵀ, no m×m reconstruction, ever. Cost O(m·n·s·(q+2)) against the
+    /// exact path's O(m²·n + sweeps·m³).
+    fn sketch_switch(&self, g: &Mat, u_prev: &Mat, qt: Option<&Mat>, seed: u64) -> Mat {
+        let hp = &self.hp;
+        let mut rng = Self::switch_rng(seed);
+        if hp.switch == Switch::Gaussian {
+            return Self::gaussian_cols(g.rows, u_prev.cols, &mut rng);
+        }
+        let apply = |x: &Mat| -> Mat {
+            let low = g.matmul(&g.matmul_tn(x));
+            match qt {
+                Some(qt) => u_prev
+                    .matmul(&qt.matmul(&u_prev.matmul_tn(x)))
+                    .scale(hp.b3)
+                    .add(&low.scale(1.0 - hp.b3)),
+                None => low,
+            }
+        };
+        // rank pinned to the stored basis width (eff_rank may clamp on
+        // the column side, which sketch_spec's n-only clamp cannot see)
+        let spec = crate::linalg::SketchSpec {
+            rank: u_prev.cols,
+            ..hp.sketch_spec(g.rows)
+        };
+        let (u_new, _) = sketched_eigh(g.rows, &apply, Some(u_prev), &spec, seed);
+        self.mix_switched(u_new, &mut rng)
     }
 }
 
@@ -179,6 +214,10 @@ impl Optimizer for Alice {
             // per-column limiter state (one φ per column)
             st.vecs.insert("phi_col", vec![0.0; cols]);
         }
+        if self.hp.refresh == Refresh::Sketch {
+            // per-slot refresh counter driving the exact-anchor cadence
+            st.scalars.insert("rc", 0.0);
+        }
         st
     }
 
@@ -208,30 +247,41 @@ impl Optimizer for Alice {
             .scale(hp.alpha)
     }
 
-    /// Algorithm 4 lines 6-7: reconstruct Q, switch basis. Records Fig. 6
-    /// cosine diagnostics.
+    /// Algorithm 4 lines 6-7: reconstruct Q, switch basis. In sketch mode
+    /// (ISSUE 6) the reconstruction stays an operator — no GGᵀ is formed —
+    /// except on the `refresh_anchor_every`-th anchor refreshes, which run
+    /// the exact path to pin accumulated sketch drift. Records Fig. 6
+    /// cosine diagnostics either way.
     fn refresh(&self, g: &Mat, state: &mut State, seed: u64) {
         let hp = &self.hp;
         let u = state.mat("u").clone();
-        let ggt = g.matmul_nt(g);
-        let q_rec = if hp.tracking {
-            // β₃ U Q̃ Uᵀ + (1-β₃) G Gᵀ
-            let uq = u.matmul(state.mat("qt"));
-            let rec = uq.matmul_nt(&u);
-            rec.scale(hp.b3).add(&ggt.scale(1.0 - hp.b3))
+        let sketch = hp.refresh == Refresh::Sketch
+            && !sketch_anchor_due(state, hp.refresh_anchor_every);
+        let u_new = if sketch {
+            let qt = if hp.tracking { Some(state.mat("qt").clone()) } else { None };
+            self.sketch_switch(g, &u, qt.as_ref(), seed)
         } else {
-            ggt
+            let ggt = g.matmul_nt(g);
+            let q_rec = if hp.tracking {
+                // β₃ U Q̃ Uᵀ + (1-β₃) G Gᵀ
+                let uq = u.matmul(state.mat("qt"));
+                let rec = uq.matmul_nt(&u);
+                rec.scale(hp.b3).add(&ggt.scale(1.0 - hp.b3))
+            } else {
+                ggt
+            };
+            self.switch(&q_rec, &u, seed)
         };
-        let u_new = self.switch(&q_rec, &u, seed);
-        // Fig. 6 instrumentation: cos∠(uᵢ, uᵢ') per index.
+        // Fig. 6 instrumentation: cos∠(uᵢ, uᵢ') per index, through the
+        // simd strided-gather + dot/sum_sq kernels.
         let r = u.cols.min(u_new.cols);
         let cos: Vec<f32> = (0..r)
             .map(|j| {
                 let a = u.col_vec(j);
                 let b = u_new.col_vec(j);
-                let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-                let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
-                let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let dot = simd::dot(&a, &b);
+                let na = simd::sum_sq(&a).sqrt();
+                let nb = simd::sum_sq(&b).sqrt();
                 (dot / (na * nb + EPS)).abs()
             })
             .collect();
@@ -257,9 +307,11 @@ impl Optimizer for Alice {
         // FiraPlus carries one φ slot per column instead of the scalar
         let fira_plus =
             if self.hp.compen == Compen::FiraPlus { cols as u64 } else { 0 };
-        // u + m + v + p + phi (+ Q̃) (+ phi_col); diag_cos only exists
-        // post-refresh
-        (rows * r + 2 * r * cols + cols + 1) as u64 + tracking + fira_plus
+        // sketch mode carries the anchor-cadence refresh counter
+        let sketch = if self.hp.refresh == Refresh::Sketch { 1 } else { 0 };
+        // u + m + v + p + phi (+ Q̃) (+ phi_col) (+ rc); diag_cos only
+        // exists post-refresh
+        (rows * r + 2 * r * cols + cols + 1) as u64 + tracking + fira_plus + sketch
     }
 }
 
@@ -416,6 +468,79 @@ mod tests {
         let st = a.init(10, 12);
         assert!(!st.mats.contains_key("qt"));
         assert_eq!(a.name(), "alice0");
+    }
+
+    #[test]
+    fn sketch_refresh_is_orthonormal_and_accounts_state() {
+        for tracking in [true, false] {
+            let hp = Hyper {
+                rank: 5,
+                leading: 2,
+                tracking,
+                refresh: Refresh::Sketch,
+                refresh_anchor_every: 4,
+                ..Hyper::alice_defaults()
+            };
+            let a = alice(hp);
+            let mut st = a.init(14, 18);
+            assert_eq!(st.elems(), a.state_elems(14, 18), "rc must be counted");
+            for t in 1..=3 {
+                let g = grad(300 + t, 14, 18);
+                a.refresh(&g, &mut st, t); // t=1 anchors, 2-3 sketch
+                a.step(&g, &mut st, t);
+                let u = st.mat("u");
+                let err = u.matmul_tn(u).sub(&Mat::eye(u.cols)).max_abs();
+                assert!(err < 1e-3, "tracking={tracking} t={t}: ortho err {err}");
+            }
+            assert_eq!(st.scalar("rc"), 3.0, "refresh counter must advance");
+            assert_eq!(st.elems(), a.state_elems(14, 18));
+        }
+    }
+
+    #[test]
+    fn anchor_every_refresh_reproduces_exact_path_bitwise() {
+        // anchor_every = 1 → every refresh is an exact anchor, so the
+        // sketch configuration must match the exact configuration bitwise
+        let mk = |refresh, anchor| {
+            alice(Hyper {
+                rank: 4,
+                leading: 2,
+                refresh,
+                refresh_anchor_every: anchor,
+                ..Hyper::alice_defaults()
+            })
+        };
+        let (ax, ask) = (mk(Refresh::Exact, 8), mk(Refresh::Sketch, 1));
+        let mut sx = ax.init(12, 16);
+        let mut ss = ask.init(12, 16);
+        for t in 1..=3 {
+            let g = grad(400 + t, 12, 16);
+            ax.refresh(&g, &mut sx, t);
+            ask.refresh(&g, &mut ss, t);
+            assert_eq!(
+                sx.mat("u").data,
+                ss.mat("u").data,
+                "anchored refresh must be the exact path, t={t}"
+            );
+            ax.step(&g, &mut sx, t);
+            ask.step(&g, &mut ss, t);
+        }
+        // while anchor_every = 4 diverges onto the sketch path at t = 2
+        let ask2 = mk(Refresh::Sketch, 4);
+        let mut s2 = ask2.init(12, 16);
+        let mut sx2 = ax.init(12, 16);
+        for t in 1..=2 {
+            let g = grad(400 + t, 12, 16);
+            ax.refresh(&g, &mut sx2, t);
+            ask2.refresh(&g, &mut s2, t);
+            ax.step(&g, &mut sx2, t);
+            ask2.step(&g, &mut s2, t);
+        }
+        assert_ne!(
+            sx2.mat("u").data,
+            s2.mat("u").data,
+            "second refresh must take the sketch path"
+        );
     }
 
     #[test]

@@ -10,9 +10,28 @@
 //! refresh cost tracks the `linalg::decomp` dispatch table; the solver's
 //! entry guard keeps a blown-up GGᵀ EMA from panicking a refresh.
 
-use crate::linalg::{inv_fourth_root, jacobi_eigh, Mat};
+use crate::linalg::{complete_basis, inv_fourth_root, jacobi_eigh, sketched_eigh_mat, Mat};
 
-use super::{bias_corr, Hyper, Optimizer, State};
+use super::{bias_corr, sketch_anchor_due, Hyper, Optimizer, Refresh, State};
+
+/// Sketched full-rank eigenbasis refresh (ISSUE 6) for the optimizers
+/// whose step() rotates through a *square* n×n U (Eigen-Adam, SOAP):
+/// the randomized range finder delivers the r+p leading eigenvectors of
+/// the stored EMA in O(n²·s·(q+2)), and one [`complete_basis`] QR pass
+/// fills the trailing directions — a single O(n³)-class pass replacing
+/// `eig_sweeps` full Jacobi sweeps, each itself O(n³). The trailing
+/// block is an arbitrary orthonormal complement rather than the exact
+/// minor eigenvectors; Adam's per-coordinate second moment in the
+/// rotated space absorbs the difference, and the anchor cadence pins
+/// any accumulated drift.
+fn sketched_full_basis(q_ema: &Mat, u_prev: &Mat, hp: &Hyper, seed: u64) -> Mat {
+    let n = q_ema.rows;
+    let (u_s, _) = sketched_eigh_mat(q_ema, Some(u_prev), &hp.sketch_spec(n), seed);
+    if u_s.cols == n {
+        return u_s;
+    }
+    u_s.hcat(&complete_basis(&u_s))
+}
 
 // ---------------------------------------------------------- Eigen-Adam ----
 /// Structure: Diag_B(U D₁ Uᵀ, …, U Dₙ Uᵀ) with shared full-rank eigenspace
@@ -32,6 +51,9 @@ impl Optimizer for EigenAdam {
         st.mats.insert("u", Mat::eye(rows));
         st.mats.insert("m", Mat::zeros(rows, cols));
         st.mats.insert("v", Mat::zeros(rows, cols));
+        if self.hp.refresh == Refresh::Sketch {
+            st.scalars.insert("rc", 0.0);
+        }
         st
     }
 
@@ -55,8 +77,15 @@ impl Optimizer for EigenAdam {
         u.matmul(&direction).scale(hp.alpha)
     }
 
-    fn refresh(&self, _g: &Mat, state: &mut State, _seed: u64) {
-        let (u, _) = jacobi_eigh(state.mat("q"), self.hp.eig_sweeps);
+    fn refresh(&self, _g: &Mat, state: &mut State, seed: u64) {
+        let hp = &self.hp;
+        let u = if hp.refresh == Refresh::Sketch
+            && !sketch_anchor_due(state, hp.refresh_anchor_every)
+        {
+            sketched_full_basis(state.mat("q"), state.mat("u"), hp, seed)
+        } else {
+            jacobi_eigh(state.mat("q"), hp.eig_sweeps).0
+        };
         state.mats.insert("u", u);
     }
 
@@ -69,7 +98,8 @@ impl Optimizer for EigenAdam {
     }
 
     fn state_elems(&self, rows: usize, cols: usize) -> u64 {
-        (2 * rows * rows + 2 * rows * cols) as u64
+        let sketch = if self.hp.refresh == Refresh::Sketch { 1 } else { 0 };
+        (2 * rows * rows + 2 * rows * cols) as u64 + sketch
     }
 }
 
@@ -143,6 +173,9 @@ impl Optimizer for Soap {
         st.mats.insert("ur", Mat::eye(cols));
         st.mats.insert("m", Mat::zeros(rows, cols));
         st.mats.insert("v", Mat::zeros(rows, cols));
+        if self.hp.refresh == Refresh::Sketch {
+            st.scalars.insert("rc", 0.0);
+        }
         st
     }
 
@@ -168,9 +201,23 @@ impl Optimizer for Soap {
         ul.matmul(&dir).matmul_nt(&ur).scale(hp.alpha)
     }
 
-    fn refresh(&self, _g: &Mat, state: &mut State, _seed: u64) {
-        let (ul, _) = jacobi_eigh(state.mat("l"), self.hp.eig_sweeps);
-        let (ur, _) = jacobi_eigh(state.mat("r"), self.hp.eig_sweeps);
+    fn refresh(&self, _g: &Mat, state: &mut State, seed: u64) {
+        let hp = &self.hp;
+        let (ul, ur) = if hp.refresh == Refresh::Sketch
+            && !sketch_anchor_due(state, hp.refresh_anchor_every)
+        {
+            // decorrelated streams for the two Kron sides
+            let seed_r = seed ^ 0xa5a5_5a5a_1234_5678;
+            (
+                sketched_full_basis(state.mat("l"), state.mat("ul"), hp, seed),
+                sketched_full_basis(state.mat("r"), state.mat("ur"), hp, seed_r),
+            )
+        } else {
+            (
+                jacobi_eigh(state.mat("l"), hp.eig_sweeps).0,
+                jacobi_eigh(state.mat("r"), hp.eig_sweeps).0,
+            )
+        };
         state.mats.insert("ul", ul);
         state.mats.insert("ur", ur);
     }
@@ -184,7 +231,8 @@ impl Optimizer for Soap {
     }
 
     fn state_elems(&self, rows: usize, cols: usize) -> u64 {
-        (2 * rows * rows + 2 * cols * cols + 2 * rows * cols) as u64
+        let sketch = if self.hp.refresh == Refresh::Sketch { 1 } else { 0 };
+        (2 * rows * rows + 2 * cols * cols + 2 * rows * cols) as u64 + sketch
     }
 }
 
@@ -242,6 +290,62 @@ mod tests {
         let u = st.mat("u");
         let err = u.matmul_tn(u).sub(&Mat::eye(8)).max_abs();
         assert!(err < 1e-3, "U not orthonormal: {err}");
+    }
+
+    #[test]
+    fn eigen_adam_sketch_refresh_keeps_square_orthonormal_u() {
+        let hp = Hyper {
+            rank: 4,
+            eig_sweeps: 30,
+            refresh: Refresh::Sketch,
+            refresh_anchor_every: 4,
+            ..Hyper::default()
+        };
+        let ea = EigenAdam { hp };
+        let mut st = ea.init(10, 14);
+        assert_eq!(st.elems(), ea.state_elems(10, 14), "rc must be counted");
+        let mut rng = Pcg::seeded(30);
+        for t in 1..=3 {
+            let g = Mat::from_vec(10, 14, rng.normal_vec(140, 1.0));
+            ea.step(&g, &mut st, t);
+            ea.refresh(&g, &mut st, t); // t=1 anchors, 2-3 take the sketch
+            let u = st.mat("u");
+            assert_eq!((u.rows, u.cols), (10, 10), "step needs a square U");
+            let err = u.matmul_tn(u).sub(&Mat::eye(10)).max_abs();
+            assert!(err < 1e-3, "t={t}: sketched U not orthonormal: {err}");
+            let d = ea.step(&g, &mut st, t);
+            assert!(d.is_finite());
+        }
+        assert_eq!(st.scalar("rc"), 3.0);
+        assert_eq!(st.elems(), ea.state_elems(10, 14));
+    }
+
+    #[test]
+    fn soap_sketch_refresh_keeps_both_bases_orthonormal() {
+        let hp = Hyper {
+            rank: 3,
+            eig_sweeps: 30,
+            refresh: Refresh::Sketch,
+            refresh_anchor_every: 4,
+            ..Hyper::default()
+        };
+        let soap = Soap { hp };
+        let mut st = soap.init(8, 11);
+        assert_eq!(st.elems(), soap.state_elems(8, 11));
+        let mut rng = Pcg::seeded(31);
+        for t in 1..=3 {
+            let g = Mat::from_vec(8, 11, rng.normal_vec(88, 1.0));
+            soap.step(&g, &mut st, t);
+            soap.refresh(&g, &mut st, t);
+            for (key, n) in [("ul", 8usize), ("ur", 11usize)] {
+                let u = st.mat(key);
+                assert_eq!((u.rows, u.cols), (n, n), "{key} must stay square");
+                let err = u.matmul_tn(u).sub(&Mat::eye(n)).max_abs();
+                assert!(err < 1e-3, "t={t}: {key} not orthonormal: {err}");
+            }
+            assert!(soap.step(&g, &mut st, t).is_finite());
+        }
+        assert_eq!(st.elems(), soap.state_elems(8, 11));
     }
 
     #[test]

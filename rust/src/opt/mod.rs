@@ -22,7 +22,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, SketchSpec};
 
 pub const EPS: f32 = 1e-8;
 
@@ -50,6 +50,15 @@ pub struct Hyper {
     pub bias_correction: bool,
     /// Alice tracking (β₃ EMA of the projected Q̃) — false for Alice-0.
     pub tracking: bool,
+    /// Eigen-refresh dispatch: exact Jacobi vs randomized sketch (ISSUE 6).
+    pub refresh: Refresh,
+    /// Extra sketch columns p beyond the target rank.
+    pub sketch_oversample: usize,
+    /// Power iterations q of the randomized range finder.
+    pub sketch_power_iters: usize,
+    /// Every k-th refresh runs the exact path as a drift anchor
+    /// (0 = never anchor; the first refresh is always an anchor).
+    pub refresh_anchor_every: usize,
 }
 
 impl Default for Hyper {
@@ -75,6 +84,10 @@ impl Default for Hyper {
             racs_ema: true,
             bias_correction: true,
             tracking: true,
+            refresh: Refresh::Exact,
+            sketch_oversample: 8,
+            sketch_power_iters: 2,
+            refresh_anchor_every: 8,
         }
     }
 }
@@ -84,6 +97,51 @@ impl Hyper {
     pub fn alice_defaults() -> Self {
         Hyper { b2: 0.9, ..Default::default() }
     }
+
+    /// Range-finder geometry for a sketched refresh over an n-dimensional
+    /// operator: target rank from `rank` (clamped like [`lowrank::eff_rank`]),
+    /// oversampling / power iterations from the sketch knobs, and the
+    /// projected eigenproblem reusing `eig_sweeps`.
+    pub fn sketch_spec(&self, n: usize) -> SketchSpec {
+        SketchSpec {
+            rank: self.rank.clamp(1, n.max(1)),
+            oversample: self.sketch_oversample,
+            power_iters: self.sketch_power_iters,
+            sweeps: self.eig_sweeps,
+        }
+    }
+}
+
+/// Eigen-refresh dispatch (ISSUE 6): `Exact` runs the size-dispatched
+/// `jacobi_eigh` over the full operator; `Sketch` runs the randomized
+/// range finder (`linalg::rangefinder`) warm-started from the previous
+/// basis, anchored back to exact every `refresh_anchor_every`-th refresh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Refresh {
+    Exact,
+    Sketch,
+}
+
+impl Refresh {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exact" => Refresh::Exact,
+            "sketch" => Refresh::Sketch,
+            _ => return Err(anyhow!("unknown refresh mode {s:?}")),
+        })
+    }
+}
+
+/// Shared anchor bookkeeping for the sketch path: bump the per-slot
+/// refresh counter (`"rc"`, installed by `init` in sketch mode) and
+/// report whether this refresh is an exact drift anchor. Refresh 0 —
+/// the very first, where the stored basis is still the identity/zero
+/// placeholder — always anchors, so the sketch warm-start begins from a
+/// genuine eigenbasis; `anchor_every == 0` never anchors again.
+pub(crate) fn sketch_anchor_due(state: &mut State, anchor_every: usize) -> bool {
+    let c = state.scalar("rc");
+    state.scalars.insert("rc", c + 1.0);
+    c == 0.0 || (anchor_every > 0 && (c as u64) % (anchor_every as u64) == 0)
 }
 
 /// Subspace-switching strategies — Fig. 5(b) ablation axis (Alg. 2 = Switch).
@@ -390,6 +448,63 @@ mod tests {
                     slot.state.elems(),
                     slot.opt.state_elems(er, ec),
                     "{name}: state_elems formula disagrees with actual state"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_parse_roundtrip() {
+        assert_eq!(Refresh::parse("exact").unwrap(), Refresh::Exact);
+        assert_eq!(Refresh::parse("sketch").unwrap(), Refresh::Sketch);
+        assert!(Refresh::parse("approx").is_err());
+    }
+
+    #[test]
+    fn sketch_anchor_cadence() {
+        let mut st = State::default();
+        st.scalars.insert("rc", 0.0);
+        // anchor_every = 2: refreshes 0, 2, 4 anchor; 1, 3 sketch
+        let due: Vec<bool> = (0..5).map(|_| sketch_anchor_due(&mut st, 2)).collect();
+        assert_eq!(due, [true, false, true, false, true]);
+        assert_eq!(st.scalar("rc"), 5.0);
+        // anchor_every = 0: only the very first refresh anchors
+        let mut st0 = State::default();
+        st0.scalars.insert("rc", 0.0);
+        let due0: Vec<bool> = (0..4).map(|_| sketch_anchor_due(&mut st0, 0)).collect();
+        assert_eq!(due0, [true, false, false, false]);
+    }
+
+    #[test]
+    fn sketch_mode_runs_and_matches_state_accounting() {
+        // the sketch-capable registry entries, through the Slot
+        // orientation wrapper, past the first (anchor) refresh and onto
+        // the sketch path proper
+        let hp = Hyper {
+            rank: 8,
+            leading: 3,
+            interval: 10,
+            refresh: Refresh::Sketch,
+            refresh_anchor_every: 2,
+            ..Hyper::default()
+        };
+        let mut rng = Pcg::seeded(43);
+        for name in ["alice", "alice0", "eigen_adam", "soap"] {
+            for (r, c) in [(24, 40), (40, 24)] {
+                let opt = build(name, &hp).unwrap();
+                let mut slot = Slot::new(opt, r, c);
+                for t in 1..=2 {
+                    let g = Mat::from_vec(r, c, rng.normal_vec(r * c, 0.1));
+                    slot.refresh(&g, t as u64);
+                    let d = slot.step(&g, t as u64);
+                    assert_eq!((d.rows, d.cols), (r, c), "{name}");
+                    assert!(d.is_finite(), "{name} t={t} non-finite update");
+                }
+                let (er, ec) = if slot.transposed { (c, r) } else { (r, c) };
+                assert_eq!(
+                    slot.state.elems(),
+                    slot.opt.state_elems(er, ec),
+                    "{name}: sketch-mode accounting disagrees"
                 );
             }
         }

@@ -19,7 +19,8 @@
 //! input) at sizes that exercise the rounds path.
 
 use alice_racs::linalg::{
-    jacobi_eigh, jacobi_eigh_blocked, jacobi_eigh_serial, mgs_qr, Mat,
+    jacobi_eigh, jacobi_eigh_blocked, jacobi_eigh_serial, mgs_qr, sketched_eigh_mat,
+    Mat, SketchSpec,
 };
 use alice_racs::util::{pool, Pcg};
 
@@ -187,6 +188,96 @@ fn tiny_scale_spd_converges_on_the_rounds_path() {
     }
     let err = vd.matmul_nt(&v).sub(&a).max_abs();
     assert!(err < 2e-3 * a.max_abs(), "tiny-scale reconstruction err {err}");
+}
+
+// ----------------------------------------------------- sketched refresh ----
+// ISSUE 6: the randomized range finder must honor the same bitwise
+// width-invariance contract as the decompositions it composes (serial Ω
+// draw + width-invariant matmul/mgs_qr/serial-Jacobi stages), recover
+// the planted leading subspace on low-rank-plus-noise operators, and
+// inherit the non-finite sanitize guard at its own entry.
+
+fn sketch_spec(rank: usize) -> SketchSpec {
+    SketchSpec { rank, oversample: 4, power_iters: 2, sweeps: 30 }
+}
+
+/// Planted low-rank-plus-noise GGᵀ: r strong directions over a weak
+/// isotropic floor — the gradient-covariance shape the sketch targets.
+fn planted(n: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg::seeded(seed);
+    let b = Mat::from_vec(n, r, rng.normal_vec(n * r, 1.0));
+    let e = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    b.matmul_nt(&b).scale(4.0).add(&e.matmul_nt(&e).scale(1e-3 / n as f32))
+}
+
+/// min over the r principal angles of cos²∠(span Ue, span Us), via the
+/// smallest eigenvalue of (UeᵀUs)ᵀ(UeᵀUs).
+fn min_cos2(ue: &Mat, us: &Mat) -> f32 {
+    let m = ue.matmul_tn(us);
+    let (_, lam) = jacobi_eigh_serial(&m.matmul_tn(&m), 30);
+    *lam.last().unwrap()
+}
+
+#[test]
+fn sketch_bitwise_identical_across_widths() {
+    // sizes straddling both the QR fan-out and the eigh dispatch
+    // thresholds of the stages the sketch composes
+    for (i, &n) in [80usize, 121, 200].iter().enumerate() {
+        let a = spd(n, 600 + i as u64);
+        let r1 = pool::with_threads(1, || sketched_eigh_mat(&a, None, &sketch_spec(12), 42));
+        let r4 = pool::with_threads(4, || sketched_eigh_mat(&a, None, &sketch_spec(12), 42));
+        assert_eq!(r1.0.data, r4.0.data, "sketched basis diverges at n = {n}");
+        assert_eq!(r1.1, r4.1, "sketched λ diverge at n = {n}");
+    }
+}
+
+#[test]
+fn sketch_recovers_planted_subspace() {
+    let (n, r) = (150usize, 8usize);
+    let a = planted(n, r, 700);
+    let (ue, _) = jacobi_eigh(&a, 30);
+    let ue = ue.take_cols(r);
+    let (us, lam) = sketched_eigh_mat(&a, None, &sketch_spec(r), 7);
+    assert_eq!((us.rows, us.cols), (n, r));
+    assert!(ortho_err(&us) < 1e-3);
+    assert!(lam.iter().all(|l| l.is_finite()));
+    let c2 = min_cos2(&ue, &us);
+    assert!(
+        c2 > 0.98,
+        "sketch-vs-exact principal angles too wide: min cos² = {c2}"
+    );
+}
+
+#[test]
+fn sketch_warm_start_tracks_a_drifting_operator() {
+    // warm-starting from the previous basis must not hurt: re-sketching a
+    // slightly drifted operator from the old basis still recovers the
+    // planted subspace
+    let (n, r) = (120usize, 6usize);
+    let a0 = planted(n, r, 701);
+    let (u0, _) = sketched_eigh_mat(&a0, None, &sketch_spec(r), 8);
+    let drift = planted(n, r, 702).scale(0.05);
+    let a1 = a0.add(&drift);
+    let (u1, _) = sketched_eigh_mat(&a1, Some(&u0), &sketch_spec(r), 9);
+    let (ue, _) = jacobi_eigh(&a1, 30);
+    let c2 = min_cos2(&ue.take_cols(r), &u1);
+    assert!(c2 > 0.97, "warm-started sketch lost the subspace: {c2}");
+}
+
+#[test]
+fn sketch_sanitizes_non_finite_operator_entry() {
+    // the sketch path's analogue of the solver entry guard: a poisoned
+    // operator (and a poisoned warm-start basis) must yield a finite
+    // orthonormal basis, never a panic
+    let mut a = spd(121, 703);
+    *a.at_mut(2, 77) = f32::NAN;
+    *a.at_mut(100, 5) = f32::NEG_INFINITY;
+    let mut warm = Mat::from_fn(121, 12, |i, j| if i == j { 1.0 } else { 0.0 });
+    *warm.at_mut(0, 3) = f32::NAN;
+    let (u, lam) = sketched_eigh_mat(&a, Some(&warm), &sketch_spec(12), 10);
+    assert!(u.is_finite(), "sketched basis must be finite");
+    assert!(lam.iter().all(|l| l.is_finite()));
+    assert!(ortho_err(&u) < 1e-3);
 }
 
 #[test]

@@ -28,6 +28,10 @@ fn base_cfg(opt: &str, tag: &str) -> RunConfig {
     cfg.hp.interval = 5;
     cfg.hp.rank = 16;
     cfg.hp.leading = 6;
+    // CI's sketch matrix cell sets AR_REFRESH=sketch so this whole suite
+    // (determinism, checkpoint resume, width parity) also runs against
+    // the randomized-range-finder refresh path
+    cfg.hp.refresh = alice_racs::bench::bench_refresh();
     cfg
 }
 
