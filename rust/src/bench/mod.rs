@@ -124,6 +124,17 @@ pub fn bench_dp_workers(default: usize) -> usize {
     }
 }
 
+/// Transport for the dist tests (the CI matrix sets `AR_TRANSPORT=tcp`
+/// on one dist cell so the wire path — real sockets, framing, requeue on
+/// disconnect — rides the same parity suite as the loopback cell;
+/// unset/other = the in-process loopback default).
+pub fn bench_transport() -> crate::dist::TransportKind {
+    match std::env::var("AR_TRANSPORT") {
+        Ok(v) if v.trim() == "tcp" => crate::dist::TransportKind::Tcp,
+        _ => crate::dist::TransportKind::Loopback,
+    }
+}
+
 /// The dist dp-worker sweep shared by `fig7_dp_scaling` and
 /// `tests/dist_parity.rs`: {1, 2, 4} ∪ {`AR_DP_WORKERS`} — one place, so
 /// what CI tests and what the bench reports cannot diverge.
@@ -312,6 +323,11 @@ mod tests {
         std::env::set_var("AR_REFRESH", "sketch");
         assert_eq!(bench_refresh(), opt::Refresh::Sketch);
         std::env::remove_var("AR_REFRESH");
+        std::env::remove_var("AR_TRANSPORT");
+        assert_eq!(bench_transport(), crate::dist::TransportKind::Loopback);
+        std::env::set_var("AR_TRANSPORT", "tcp");
+        assert_eq!(bench_transport(), crate::dist::TransportKind::Tcp);
+        std::env::remove_var("AR_TRANSPORT");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{ExecPath, RunConfig};
 use crate::coordinator;
+use crate::dist::{self, demo, DistConfig, TcpCoordinator, TransportKind, WorkerCfg};
 use crate::opt;
 use crate::runtime::Engine;
 
@@ -89,6 +90,24 @@ USAGE:
                      [--dist-sim]    (round-coordinator path even at
                                       dp-workers 1 — bitwise comparable to
                                       any dp-workers count)
+                     [--transport loopback|tcp] [--listen HOST:PORT]
+                     [--connect HOST:PORT] [--run-id ID]
+                                     (tcp = this process coordinates real
+                                      worker processes over sockets; see
+                                      `dist-demo` for the worker side)
+  alice-racs dist-demo [--role loopback|coordinator|worker]
+                     (synthetic-gradient transport demo / parity harness;
+                      prints one `demo digest=...` line for bitwise
+                      comparison across transports)
+                     loopback:    [--dp-workers N] [--threads N]
+                     coordinator: [--listen HOST:PORT] [--run-id ID]
+                                  [--min-workers N] [--tick-ms N]
+                                  [--join-timeout-s F] [--round-timeout-s F]
+                                  (prints `listening HOST:PORT` once bound)
+                     worker:      --connect HOST:PORT [--run-id ID]
+                                  [--fail-after-micro N] (drop the
+                                   connection mid-shard, for requeue tests)
+                     shared:      [--micro N] [--steps N]
   alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
   alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
   alice-racs inspect [--artifacts DIR]
@@ -103,6 +122,7 @@ pub fn main() -> Result<()> {
     let args = Args::parse(&argv)?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
+        "dist-demo" => cmd_dist_demo(&args),
         "eval" => cmd_eval(&args),
         "memory" => cmd_memory(&args),
         "inspect" => cmd_inspect(&args),
@@ -142,6 +162,18 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     if args.get("dist-sim").is_some() {
         cfg.dist.sim = true;
     }
+    if let Some(t) = args.get("transport") {
+        cfg.dist.transport = TransportKind::parse(t)?;
+    }
+    if let Some(l) = args.get("listen") {
+        cfg.dist.listen = l.to_string();
+    }
+    if let Some(c) = args.get("connect") {
+        cfg.dist.connect = c.to_string();
+    }
+    if let Some(r) = args.get("run-id") {
+        cfg.dist.run_id = r.to_string();
+    }
     cfg.hp.rank = args.usize_or("rank", cfg.hp.rank)?;
     cfg.hp.interval = args.usize_or("interval", cfg.hp.interval)?;
     if let Some(r) = args.get("refresh") {
@@ -171,6 +203,90 @@ fn cmd_train(args: &Args) -> Result<()> {
         "final: train_loss={:.4} eval_loss={:?} tokens/s={:.0}",
         summary.last_train_loss, summary.final_eval_loss, summary.tokens_per_sec
     );
+    Ok(())
+}
+
+/// The synthetic-gradient transport demo: the same miniature training
+/// loop as `rust/tests/dist_parity.rs`, runnable as an in-process
+/// loopback cluster, a TCP coordinator, or a TCP worker — the output
+/// `demo digest=...` line must match bitwise across all of them
+/// (`rust/tests/transport_e2e.rs` drives exactly this subcommand).
+fn cmd_dist_demo(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+
+    let cfg = demo::DemoCfg {
+        micro: args.usize_or("micro", 8)?.max(1),
+        steps: args.usize_or("steps", 4)?.max(1) as u64,
+    };
+    let print_demo = |out: &demo::DemoOut| {
+        let losses: Vec<String> =
+            out.loss_bits.iter().map(|b| format!("{b:08x}")).collect();
+        println!(
+            "demo digest={:016x} losses={} rounds={} requeues={}",
+            out.weight_digest,
+            losses.join(","),
+            out.rounds,
+            out.requeues
+        );
+    };
+    match args.get("role").unwrap_or("loopback") {
+        "loopback" => {
+            let dp = args.usize_or("dp-workers", 2)?.max(1);
+            let width = args.usize_or("threads", 1)?.max(1);
+            print_demo(&demo::run_loopback(&cfg, dp, width)?);
+        }
+        "coordinator" => {
+            let min = args.usize_or("min-workers", 1)?.max(1);
+            let d = DistConfig::default();
+            let dist_cfg = DistConfig {
+                transport: TransportKind::Tcp,
+                listen: args.get("listen").unwrap_or("127.0.0.1:0").to_string(),
+                run_id: args.get("run-id").unwrap_or("demo").to_string(),
+                // round_cfg clamps min_workers to dp_workers, so mirror it
+                dp_workers: min,
+                min_workers: min,
+                tick_ms: args.usize_or("tick-ms", d.tick_ms as usize)? as u64,
+                join_timeout_s: args.f64_or("join-timeout-s", d.join_timeout_s)?,
+                round_timeout_s: args.f64_or("round-timeout-s", d.round_timeout_s)?,
+                ..d
+            };
+            let mut tcp = TcpCoordinator::bind(&dist_cfg.listen, dist_cfg.wire_cfg())?;
+            // worker launchers parse this line for the bound port, so it
+            // must hit the pipe before the join wait starts
+            println!("listening {}", tcp.local_addr());
+            std::io::stdout().flush()?;
+            let mut coord = dist_cfg.empty_coordinator();
+            print_demo(&demo::drive(&mut tcp, &mut coord, &cfg)?);
+        }
+        "worker" => {
+            let wc = WorkerCfg {
+                connect: args
+                    .get("connect")
+                    .ok_or_else(|| anyhow!("--connect HOST:PORT required"))?
+                    .to_string(),
+                run_id: args.get("run-id").unwrap_or("demo").to_string(),
+                fail_after_micro: match args.get("fail-after-micro") {
+                    Some(v) => {
+                        Some(v.parse().map_err(|e| anyhow!("--fail-after-micro: {e}"))?)
+                    }
+                    None => None,
+                },
+            };
+            let report = dist::transport::run_worker(&wc, &demo::demo_src())?;
+            println!(
+                "worker member={} shards={} micro={} joined_step={}",
+                report.member,
+                report.shards,
+                report.micro,
+                report
+                    .joined_state
+                    .as_ref()
+                    .map(|s| s.0 as i64)
+                    .unwrap_or(-1)
+            );
+        }
+        other => bail!("--role must be loopback|coordinator|worker, got {other:?}"),
+    }
     Ok(())
 }
 
@@ -308,6 +424,30 @@ mod tests {
         let a = Args::parse(&argv(&["train", "--opt", "adam"])).unwrap();
         let cfg = config_from_args(&a).unwrap();
         assert!(!cfg.dist.enabled());
+        assert_eq!(cfg.dist.transport, TransportKind::Loopback);
+    }
+
+    #[test]
+    fn transport_flags_override() {
+        let a = Args::parse(&argv(&[
+            "train", "--dp-workers", "2", "--transport", "tcp",
+            "--listen", "127.0.0.1:7402", "--run-id", "pr7",
+        ]))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.dist.transport, TransportKind::Tcp);
+        assert_eq!(cfg.dist.listen, "127.0.0.1:7402");
+        assert_eq!(cfg.dist.run_id, "pr7");
+        let bad = Args::parse(&argv(&["train", "--transport", "smoke-signal"])).unwrap();
+        assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn dist_demo_rejects_bad_role_and_missing_connect() {
+        let a = Args::parse(&argv(&["dist-demo", "--role", "spectator"])).unwrap();
+        assert!(cmd_dist_demo(&a).is_err());
+        let w = Args::parse(&argv(&["dist-demo", "--role", "worker"])).unwrap();
+        assert!(cmd_dist_demo(&w).is_err(), "worker without --connect must fail");
     }
 
     #[test]

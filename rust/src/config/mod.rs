@@ -8,7 +8,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::dist::DistConfig;
+use crate::dist::{DistConfig, TransportKind};
 use crate::opt::{Compen, Hyper, Refresh, Switch};
 use toml::View;
 
@@ -155,6 +155,13 @@ impl RunConfig {
                 .usize_or("dist", "cooldown_ticks", dist_d.cooldown_ticks as usize)
                 as u32,
             straggler_factor: v.f64_or("dist", "straggler_factor", dist_d.straggler_factor),
+            transport: TransportKind::parse(&v.str_or("dist", "transport", "loopback"))?,
+            listen: v.str_or("dist", "listen", &dist_d.listen),
+            connect: v.str_or("dist", "connect", &dist_d.connect),
+            run_id: v.str_or("dist", "run_id", &dist_d.run_id),
+            tick_ms: v.usize_or("dist", "tick_ms", dist_d.tick_ms as usize) as u64,
+            join_timeout_s: v.f64_or("dist", "join_timeout_s", dist_d.join_timeout_s),
+            round_timeout_s: v.f64_or("dist", "round_timeout_s", dist_d.round_timeout_s),
         };
         Ok(RunConfig {
             artifacts: v.str_or("", "artifacts", &d.artifacts),
@@ -267,6 +274,20 @@ mod tests {
         let z = RunConfig::from_toml("[dist]\ndp_workers = 0\nsim = true\n").unwrap();
         assert_eq!(z.dist.dp_workers, 1);
         assert!(z.dist.enabled());
+        // wire keys ride in the same section; loopback is the default
+        assert_eq!(z.dist.transport, TransportKind::Loopback);
+        let w = RunConfig::from_toml(
+            "[dist]\ndp_workers = 2\ntransport = \"tcp\"\nlisten = \"127.0.0.1:7401\"\n\
+             run_id = \"exp9\"\ntick_ms = 2\njoin_timeout_s = 5.5\nround_timeout_s = 60\n",
+        )
+        .unwrap();
+        assert_eq!(w.dist.transport, TransportKind::Tcp);
+        assert_eq!(w.dist.listen, "127.0.0.1:7401");
+        assert_eq!(w.dist.run_id, "exp9");
+        assert_eq!(w.dist.tick_ms, 2);
+        assert_eq!(w.dist.join_timeout_s, 5.5);
+        assert_eq!(w.dist.round_timeout_s, 60.0);
+        assert!(RunConfig::from_toml("[dist]\ntransport = \"carrier-pigeon\"\n").is_err());
     }
 
     #[test]

@@ -56,6 +56,21 @@ impl Checkpoint {
             std::fs::File::create(&path)
                 .with_context(|| format!("creating {}", path.as_ref().display()))?,
         );
+        self.encode_into(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// The checkpoint file bytes, in memory — what the TCP transport
+    /// broadcasts to late joiners ([`crate::dist::Transport`]'s `State`
+    /// frame). Byte-for-byte what [`Checkpoint::save`] writes.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out)?;
+        Ok(out)
+    }
+
+    fn encode_into(&self, w: &mut impl Write) -> Result<()> {
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
@@ -75,7 +90,6 @@ impl Checkpoint {
                 w.write_all(blob)?;
             }
         }
-        w.flush()?;
         Ok(())
     }
 
@@ -160,6 +174,17 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn encode_matches_save_bytes() {
+        let mut ck = Checkpoint { step: 11, ..Default::default() };
+        ck.insert("w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        ck.insert("state.v", vec![1], vec![-0.5]);
+        let path = std::env::temp_dir().join(format!("arck_enc_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        assert_eq!(ck.encode().unwrap(), std::fs::read(&path).unwrap());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -64,6 +64,11 @@ impl MetricsLogger {
             (eval_loss as f64).exp()
         )?;
         self.eval_history.push((step, eval_loss));
+        // Flush both curves at every eval point: a crash, kill, or dropped
+        // worker mid-run must not lose the tail of the training trajectory
+        // (long networked runs are exactly where this bites).
+        self.train_csv.flush()?;
+        self.eval_csv.flush()?;
         Ok(())
     }
 
@@ -182,6 +187,22 @@ mod tests {
         assert!(csv.lines().count() == 3);
         let js = fs::read_to_string(dir.join("summary.json")).unwrap();
         assert!(js.contains("\"optimizer\":\"adam\""));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eval_point_flushes_curves_to_disk() {
+        // the CSVs must be readable right after an eval point — before
+        // finish() — so a killed run keeps its trajectory
+        let dir = tmpdir("flush");
+        let mut m = MetricsLogger::create(&dir).unwrap();
+        m.train_step(1, 5.0, 0.01, 512).unwrap();
+        m.eval_point(1, 4.9).unwrap();
+        let train = fs::read_to_string(dir.join("train.csv")).unwrap();
+        assert!(train.lines().any(|l| l.starts_with("1,5")), "{train}");
+        let eval = fs::read_to_string(dir.join("eval.csv")).unwrap();
+        assert!(eval.lines().any(|l| l.starts_with("1,4.9")), "{eval}");
+        drop(m);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -26,7 +26,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExecPath, RunConfig};
 use crate::data::{CorpusConfig, SyncBatcher};
-use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord};
+use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord, Transport, TransportKind};
 use crate::info;
 use crate::linalg::Mat;
 use crate::opt::{build, Slot};
@@ -66,6 +66,9 @@ pub struct Trainer {
     /// Round coordinator of the simulated DP cluster (None = serial
     /// microbatch loop; `RunConfig.dist` decides).
     dist: Option<RoundCoordinator>,
+    /// How rounds execute: in-process loopback (default) or the TCP
+    /// coordinator serving remote workers (`[dist] transport = "tcp"`).
+    transport: Box<dyn Transport>,
 }
 
 impl Trainer {
@@ -173,16 +176,36 @@ impl Trainer {
                     cfg.dist.sim
                 );
             }
-            info!(
-                "dist: simulated data-parallel cluster — {} worker(s), min {}, \
-                 deterministic tree all-reduce",
-                cfg.dist.dp_workers.max(1),
-                cfg.dist.round_cfg().min_workers
-            );
-            Some(cfg.dist.coordinator())
+            match cfg.dist.transport {
+                TransportKind::Loopback => {
+                    info!(
+                        "dist: simulated data-parallel cluster — {} worker(s), min {}, \
+                         deterministic tree all-reduce",
+                        cfg.dist.dp_workers.max(1),
+                        cfg.dist.round_cfg().min_workers
+                    );
+                    Some(cfg.dist.coordinator())
+                }
+                // over the wire the cluster starts empty: members join via
+                // the run-id handshake as worker processes connect
+                TransportKind::Tcp => Some(cfg.dist.empty_coordinator()),
+            }
         } else {
             None
         };
+        let transport: Box<dyn Transport> =
+            if cfg.dist.enabled() && cfg.dist.transport == TransportKind::Tcp {
+                let t = dist::TcpCoordinator::bind(&cfg.dist.listen, cfg.dist.wire_cfg())?;
+                info!(
+                    "dist: tcp coordinator listening on {} (run-id {:?}, min {} worker(s))",
+                    t.local_addr(),
+                    cfg.dist.run_id,
+                    cfg.dist.round_cfg().min_workers
+                );
+                Box::new(t)
+            } else {
+                Box::new(dist::Loopback)
+            };
 
         Ok(Trainer {
             engine,
@@ -198,6 +221,7 @@ impl Trainer {
             rng,
             cos_log: Vec::new(),
             dist,
+            transport,
         })
     }
 
@@ -288,7 +312,7 @@ impl Trainer {
         let mut coord = self.dist.take().expect("dist coordinator present");
         let out = {
             let src = EngineGradSource { engine: &self.engine, params: &self.params };
-            dist::run_round(&mut coord, &src, &token_batches)
+            dist::run_round_via(&mut *self.transport, &mut coord, &src, &token_batches)
         };
         self.dist = Some(coord);
         let out = out?;
@@ -539,6 +563,19 @@ impl Trainer {
         ck
     }
 
+    /// Hand the current checkpoint to the transport for late-joiner
+    /// streaming (TCP caches it and replays it to every subsequent join;
+    /// loopback ignores it — `wants_state()` is false, so the encode cost
+    /// is skipped entirely on the in-process path).
+    pub fn publish_state(&mut self, ck: &Checkpoint) -> Result<()> {
+        if !self.transport.wants_state() {
+            return Ok(());
+        }
+        let snap = self.dist.as_ref().map(|c| c.snapshot()).unwrap_or_default();
+        let blob = ck.encode()?;
+        self.transport.publish_state(ck.step, &snap, &blob)
+    }
+
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         self.step = ck.step;
         for (p, spec) in self.params.iter_mut().zip(&self.engine.manifest.params) {
@@ -594,9 +631,13 @@ impl Trainer {
                 let coord = RoundCoordinator::restore(self.cfg.dist.round_cfg(), data)?;
                 // the snapshot's membership would silently override the
                 // configured cluster size — same silently-ignored-config
-                // class as [dist]+fused, so reject the mismatch instead
+                // class as [dist]+fused, so reject the mismatch instead.
+                // Over TCP the roster is wire-dynamic: restored members
+                // whose sockets are gone self-heal through the dispatch-
+                // failure → Closed → leave() requeue cascade, so the
+                // static-cluster check does not apply.
                 let want = self.cfg.dist.dp_workers.max(1);
-                if coord.alive() != want {
+                if self.cfg.dist.transport != TransportKind::Tcp && coord.alive() != want {
                     bail!(
                         "checkpoint restores a {}-worker DP cluster but the \
                          config asks for dp_workers = {want}; resume with the \
@@ -694,12 +735,14 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
             info!("step {t:>5}  eval_loss {ev:.4}  ppl {:.2}", (ev as f64).exp());
         }
         if cfg.ckpt_every > 0 && t % cfg.ckpt_every == 0 {
-            trainer
-                .checkpoint()
-                .save(format!("{}/ckpt_{t}.bin", cfg.out_dir))?;
+            let ck = trainer.checkpoint();
+            trainer.publish_state(&ck)?;
+            ck.save(format!("{}/ckpt_{t}.bin", cfg.out_dir))?;
         }
     }
-    trainer.checkpoint().save(format!("{}/ckpt_final.bin", cfg.out_dir))?;
+    let ck = trainer.checkpoint();
+    trainer.publish_state(&ck)?;
+    ck.save(format!("{}/ckpt_final.bin", cfg.out_dir))?;
     // Fig. 6 data
     if !trainer.cos_log.is_empty() {
         let mut csv = String::from("step,param,index,cos\n");

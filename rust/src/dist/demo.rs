@@ -1,0 +1,151 @@
+//! Shared synthetic-training driver for the transport layer: the same
+//! miniature loop `rust/tests/dist_parity.rs` pins (synthetic microbatch
+//! gradients → round pipeline → real optimizer slots), parameterized by a
+//! [`Transport`] so one binary can run it as a loopback cluster, a TCP
+//! coordinator, or compare the two.
+//!
+//! The `dist-demo` CLI subcommand and the `transport_parity` /
+//! `transport_e2e` tests all call [`drive`]; bitwise identity across
+//! transports is checked on the per-step loss bits and an FNV-1a digest
+//! of the final weight bits.
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::opt::{build, Hyper, Slot};
+use crate::runtime::HostTensor;
+use crate::util::pool;
+
+use super::worker::SyntheticGradSource;
+use super::{run_round_via, DistConfig, Loopback, RoundCoordinator, Transport};
+
+/// Deterministic token blocks, exactly the `dist_parity` formula — any
+/// process that agrees on `(micro, step)` regenerates identical data.
+pub fn token_block(micro: usize, seed: i32) -> Vec<HostTensor> {
+    (0..micro)
+        .map(|i| {
+            let base = seed + i as i32 * 31;
+            HostTensor::i32(vec![8], (0..8).map(|k| (base + k * 7) % 997).collect())
+        })
+        .collect()
+}
+
+/// The `dist_parity` gradient geometry (three ragged parameters).
+pub fn demo_src() -> SyntheticGradSource {
+    SyntheticGradSource { shapes: vec![(6, 10), (8, 4), (1, 12)], work: 0 }
+}
+
+/// Demo run shape.
+#[derive(Debug, Clone)]
+pub struct DemoCfg {
+    /// Microbatches per optimizer step (global, sharded over members).
+    pub micro: usize,
+    pub steps: u64,
+}
+
+impl Default for DemoCfg {
+    fn default() -> Self {
+        DemoCfg { micro: 8, steps: 4 }
+    }
+}
+
+/// What a demo run produced — everything needed for bitwise comparison.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DemoOut {
+    /// Per-step reduced loss bits.
+    pub loss_bits: Vec<u32>,
+    /// FNV-1a over the final weight bit patterns (order: parameter, then
+    /// row-major element) — one line to compare across processes.
+    pub weight_digest: u64,
+    pub rounds: u64,
+    pub requeues: u64,
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h = (*h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+}
+
+/// Flatten the weights to little-endian f32 bytes (the `State` blob the
+/// coordinator streams to late joiners — real content, so the tests can
+/// assert a joiner received a non-trivial checkpoint).
+fn weight_blob(weights: &[Mat]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for w in weights {
+        for &x in &w.data {
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Run `cfg.steps` optimizer steps of the synthetic training loop over
+/// `transport`, publishing the weight blob after every step (so late
+/// joiners always receive the newest state). The transport is shut down
+/// before returning.
+pub fn drive(
+    transport: &mut dyn Transport,
+    coord: &mut RoundCoordinator,
+    cfg: &DemoCfg,
+) -> Result<DemoOut> {
+    let s = demo_src();
+    let hp = Hyper::default();
+    let mut slots: Vec<Slot> = s
+        .shapes
+        .iter()
+        .map(|&(r, c)| -> Result<Slot> { Ok(Slot::new(build("adam", &hp)?, r, c)) })
+        .collect::<Result<_>>()?;
+    let mut weights: Vec<Mat> = s.shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+    let mut loss_bits = Vec::new();
+    for t in 1..=cfg.steps {
+        let toks = token_block(cfg.micro, 1000 * t as i32);
+        let out = run_round_via(transport, coord, &s, &toks)?;
+        loss_bits.push(out.loss.to_bits());
+        for ((slot, w), g) in slots.iter_mut().zip(&mut weights).zip(&out.grads) {
+            if t == 1 {
+                slot.refresh(g, 0xd157 ^ t);
+            }
+            let delta = slot.step(g, t);
+            w.ema_(1.0, &delta, -0.01);
+        }
+        if transport.wants_state() {
+            transport.publish_state(t, &coord.snapshot(), &weight_blob(&weights))?;
+        }
+    }
+    transport.shutdown();
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a(&mut digest, &weight_blob(&weights));
+    Ok(DemoOut {
+        loss_bits,
+        weight_digest: digest,
+        rounds: coord.round,
+        requeues: coord.log.iter().map(|l| l.requeues).sum(),
+    })
+}
+
+/// The in-process reference run: `dp` simulated workers on the loopback
+/// transport at pool width `width`.
+pub fn run_loopback(cfg: &DemoCfg, dp: usize, width: usize) -> Result<DemoOut> {
+    pool::with_threads(width, || {
+        let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
+        let mut coord = dist.coordinator();
+        drive(&mut Loopback, &mut coord, cfg)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_demo_is_dp_invariant() {
+        let cfg = DemoCfg { micro: 6, steps: 3 };
+        let a = run_loopback(&cfg, 1, 1).unwrap();
+        let b = run_loopback(&cfg, 3, 2).unwrap();
+        assert_eq!(a.loss_bits, b.loss_bits);
+        assert_eq!(a.weight_digest, b.weight_digest);
+        assert_eq!(b.rounds, 3);
+        assert_eq!(b.requeues, 0);
+    }
+}

@@ -13,23 +13,34 @@
 //! * [`round`] — tick-driven round lifecycle (`WaitingForMembers →
 //!   Warmup → RoundTrain → Reduce → Cooldown`) with membership, straggler
 //!   accounting, mid-round requeue, and a checkpointable snapshot.
+//! * [`transport`] — how a round crosses (or doesn't cross) a process
+//!   boundary: the in-process [`Loopback`] and a wall-clock-ticking TCP
+//!   coordinator/worker pair with a run-id handshake and late-joiner
+//!   state streaming ([`transport::TcpCoordinator`] /
+//!   [`transport::run_worker`]).
+//! * [`demo`] — the shared synthetic-training driver behind the
+//!   `dist-demo` CLI subcommand and the transport parity/e2e tests.
 //!
 //! The trainer enables it via the `[dist]` config section /
-//! `--dp-workers` / `--dist-sim`; `rust/tests/dist_parity.rs` pins the
-//! bitwise contract and `benches/fig7_dp_scaling.rs` measures the
-//! grad-phase speedup.
+//! `--dp-workers` / `--dist-sim` (plus `--transport tcp --listen ...` for
+//! the wire); `rust/tests/dist_parity.rs` pins the bitwise contract,
+//! `rust/tests/transport_parity.rs` extends it across the wire, and
+//! `benches/fig7_dp_scaling.rs` measures the grad-phase speedup.
 
+pub mod demo;
 pub mod reduce;
 pub mod round;
+pub mod transport;
 pub mod worker;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
 use crate::runtime::HostTensor;
 use crate::util::Timer;
 
 pub use round::{Phase, RoundCfg, RoundCoordinator, RoundRecord, WorkerHealth};
+pub use transport::{Loopback, TcpCoordinator, Transport, WireCfg, WorkerCfg};
 pub use worker::{GradSource, SyntheticGradSource};
 
 /// `[dist]` config section: the simulated data-parallel cluster.
@@ -47,6 +58,37 @@ pub struct DistConfig {
     pub cooldown_ticks: u32,
     /// Straggler threshold: shard time > factor × round median.
     pub straggler_factor: f64,
+    /// Which [`Transport`] carries the rounds.
+    pub transport: TransportKind,
+    /// Coordinator bind address (TCP transport; `:0` picks a free port).
+    pub listen: String,
+    /// Coordinator address a worker process connects to.
+    pub connect: String,
+    /// Run identity for the join handshake.
+    pub run_id: String,
+    /// Wall-clock milliseconds per state-machine tick (TCP transport).
+    pub tick_ms: u64,
+    pub join_timeout_s: f64,
+    pub round_timeout_s: f64,
+}
+
+/// Transport selector for the `[dist]` section / `--transport` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process simulated cluster (the default; bitwise reference).
+    Loopback,
+    /// Real sockets: this process coordinates, workers join over TCP.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "loopback" => TransportKind::Loopback,
+            "tcp" => TransportKind::Tcp,
+            _ => return Err(anyhow!("unknown transport {s:?} (want loopback|tcp)")),
+        })
+    }
 }
 
 impl Default for DistConfig {
@@ -58,6 +100,13 @@ impl Default for DistConfig {
             warmup_ticks: 1,
             cooldown_ticks: 1,
             straggler_factor: 3.0,
+            transport: TransportKind::Loopback,
+            listen: "127.0.0.1:0".to_string(),
+            connect: String::new(),
+            run_id: "run".to_string(),
+            tick_ms: 5,
+            join_timeout_s: 30.0,
+            round_timeout_s: 120.0,
         }
     }
 }
@@ -86,6 +135,29 @@ impl DistConfig {
         }
         c
     }
+
+    /// A fresh coordinator with *no* members — the TCP transport starts
+    /// empty and admits members over the wire as they join.
+    pub fn empty_coordinator(&self) -> RoundCoordinator {
+        RoundCoordinator::new(self.round_cfg())
+    }
+
+    pub fn wire_cfg(&self) -> WireCfg {
+        WireCfg {
+            run_id: self.run_id.clone(),
+            tick_ms: self.tick_ms,
+            join_timeout_s: self.join_timeout_s,
+            round_timeout_s: self.round_timeout_s,
+        }
+    }
+
+    /// Build the configured transport (binds the listener for TCP).
+    pub fn make_transport(&self) -> Result<Box<dyn Transport>> {
+        Ok(match self.transport {
+            TransportKind::Loopback => Box::new(Loopback),
+            TransportKind::Tcp => Box::new(TcpCoordinator::bind(&self.listen, self.wire_cfg())?),
+        })
+    }
 }
 
 /// One finished round's reduced result + timing.
@@ -100,17 +172,22 @@ pub struct RoundOutput {
     pub reduce_secs: f64,
 }
 
-/// Drive one full data-parallel round: advance the state machine to
-/// `RoundTrain`, shard `tokens` over the alive members, fan the shard
-/// executions out across the pool, tree-reduce the results, and walk the
-/// machine through `Reduce → Cooldown`.
+/// Drive one full data-parallel round over an explicit [`Transport`]:
+/// advance the state machine to `RoundTrain` (the transport decides how —
+/// logical ticks in-process, wall-clock ticks with live joins over TCP),
+/// shard `tokens` over the alive members, execute the shards wherever the
+/// transport puts them, tree-reduce the results, and walk the machine
+/// through `Reduce → Cooldown`.
 ///
 /// This is the one round implementation — the trainer, the parity tests,
-/// and the fig7 bench all call it (with different [`GradSource`]s), so
-/// the determinism contract is pinned on exactly the code that trains.
-pub fn run_round<S: GradSource>(
+/// and the fig7 bench all call it (with different [`GradSource`]s and
+/// transports), so the determinism contract is pinned on exactly the code
+/// that trains: the reduce runs over the transport-returned node set, and
+/// node sets are a pure function of the global microbatch indices.
+pub fn run_round_via(
+    transport: &mut dyn Transport,
     coord: &mut RoundCoordinator,
-    src: &S,
+    src: &dyn GradSource,
     tokens: &[HostTensor],
 ) -> Result<RoundOutput> {
     if coord.mid_round() {
@@ -119,21 +196,11 @@ pub fn run_round<S: GradSource>(
         // re-execute the same round
         coord.resume_round(tokens.len())?;
     } else {
-        coord.advance_to_train()?;
+        transport.advance_to_train(coord)?;
         coord.begin_round(tokens.len())?;
     }
-    let assignments = coord.assignments().to_vec();
 
-    let t0 = Timer::start();
-    let outs = worker::run_workers(src, &assignments, tokens);
-    let grad_secs = t0.secs();
-
-    let mut nodes = Vec::new();
-    for (w, out) in outs.into_iter().enumerate() {
-        let out = out.with_context(|| format!("dp worker {w}"))?;
-        coord.complete(w, out.secs);
-        nodes.extend(out.nodes);
-    }
+    let (nodes, grad_secs) = transport.execute_round(coord, src, tokens)?;
     coord.tick(); // RoundTrain → Reduce
 
     let t1 = Timer::start();
@@ -150,6 +217,16 @@ pub fn run_round<S: GradSource>(
         grad_secs,
         reduce_secs,
     })
+}
+
+/// [`run_round_via`] on the in-process [`Loopback`] transport — the PR-3
+/// entry point, unchanged for every existing caller.
+pub fn run_round<S: GradSource>(
+    coord: &mut RoundCoordinator,
+    src: &S,
+    tokens: &[HostTensor],
+) -> Result<RoundOutput> {
+    run_round_via(&mut Loopback, coord, src, tokens)
 }
 
 #[cfg(test)]

@@ -445,10 +445,16 @@ impl RoundCoordinator {
     }
 
     /// Close the books on the finished round: straggler detection against
-    /// the median shard time, imbalance, and the log entry.
+    /// the median shard time, imbalance, and the log entry. Non-finite
+    /// shard times (a clock gone wrong, or a remote worker reporting
+    /// garbage over the wire) are excluded from every statistic — they
+    /// must never poison the median or flag honest workers as stragglers.
     fn record_round(&mut self) {
-        let times: Vec<f64> = (0..self.members.len())
+        let workers = (0..self.members.len())
             .filter(|&i| !self.assignment[i].is_empty())
+            .count();
+        let times: Vec<f64> = (0..self.members.len())
+            .filter(|&i| !self.assignment[i].is_empty() && self.shard_secs[i].is_finite())
             .map(|i| self.shard_secs[i])
             .collect();
         let med = median(&times);
@@ -456,6 +462,7 @@ impl RoundCoordinator {
         for i in 0..self.members.len() {
             if !self.assignment[i].is_empty()
                 && med > 0.0
+                && self.shard_secs[i].is_finite()
                 && self.shard_secs[i] > self.cfg.straggler_factor * med
             {
                 self.members[i].straggles += 1;
@@ -470,7 +477,7 @@ impl RoundCoordinator {
         };
         self.log.push(RoundRecord {
             round: self.round,
-            workers: times.len(),
+            workers,
             micro: self.round_micro,
             requeues: self.requeues_this_round,
             stragglers,
@@ -489,53 +496,84 @@ impl RoundCoordinator {
 
     // ------------------------------------------------ checkpoint codec ---
 
-    const SNAP_VERSION: f32 = 1.0;
+    const SNAP_VERSION: f32 = 2.0;
+    const SNAP_VERSION_V1: f32 = 1.0;
 
     /// Flatten the machine (phase, round counter, membership ledger, and —
     /// mid-round — assignments + completion flags) into small exact-f32
     /// integers, the same container the `trainer.stream` blob uses. The
     /// round log is *not* carried: it is run telemetry, surfaced through
     /// `Summary`, and a resumed run starts a fresh log.
+    ///
+    /// v2 codec: every integer (member ids, assignment lengths, global
+    /// microbatch indices, tick counters) goes through `u64_to_chunks`
+    /// instead of a raw `x as f32` — indices ≥ 2²⁴ would silently round
+    /// otherwise — and `shard_secs` travels as the f64 bit pattern split
+    /// into the same chunks, so post-resume straggler accounting is
+    /// bit-identical to an uninterrupted run.
     pub fn snapshot(&self) -> Vec<f32> {
         let mut out = vec![
             Self::SNAP_VERSION,
             self.phase.index() as f32,
-            self.ticks_in_phase as f32,
             if self.reduce_done { 1.0 } else { 0.0 },
-            self.round_micro as f32,
-            self.requeues_this_round as f32,
-            self.members.len() as f32,
         ];
-        out.extend_from_slice(&u64_to_chunks(self.round));
+        for w in [
+            self.ticks_in_phase as u64,
+            self.round_micro as u64,
+            self.requeues_this_round,
+            self.members.len() as u64,
+            self.round,
+        ] {
+            out.extend_from_slice(&u64_to_chunks(w));
+        }
         for (i, m) in self.members.iter().enumerate() {
-            out.push(m.id as f32);
+            out.extend_from_slice(&u64_to_chunks(m.id as u64));
             out.push(if m.alive { 1.0 } else { 0.0 });
             for w in [m.joined_round, m.rounds_done, m.micro_done, m.requeued, m.straggles] {
                 out.extend_from_slice(&u64_to_chunks(w));
             }
-            out.push(self.assignment[i].len() as f32);
-            out.extend(self.assignment[i].iter().map(|&x| x as f32));
+            out.extend_from_slice(&u64_to_chunks(self.assignment[i].len() as u64));
+            for &x in &self.assignment[i] {
+                out.extend_from_slice(&u64_to_chunks(x as u64));
+            }
             out.push(if self.shard_done[i] { 1.0 } else { 0.0 });
-            // telemetry only — f32 precision is fine here
-            out.push(self.shard_secs[i] as f32);
+            out.extend_from_slice(&u64_to_chunks(self.shard_secs[i].to_bits()));
         }
         out
     }
 
-    /// Rebuild from a [`snapshot`](Self::snapshot) blob.
+    /// Rebuild from a [`snapshot`](Self::snapshot) blob. Accepts the
+    /// current v2 codec and the legacy v1 layout (raw-f32 integers), so
+    /// checkpoints written before the codec fix stay loadable.
     pub fn restore(cfg: RoundCfg, data: &[f32]) -> Result<Self> {
         let mut cur = Cursor { data, pos: 0 };
         let ver = cur.f()?;
-        if ver != Self::SNAP_VERSION {
+        let v1 = if ver == Self::SNAP_VERSION {
+            false
+        } else if ver == Self::SNAP_VERSION_V1 {
+            true
+        } else {
             bail!("unsupported dist snapshot version {ver}");
-        }
+        };
         let phase = Phase::from_index(cur.f()? as u32)?;
-        let ticks_in_phase = cur.f()? as u32;
-        let reduce_done = cur.f()? != 0.0;
-        let round_micro = cur.f()? as usize;
-        let requeues_this_round = cur.f()? as u64;
-        let nmembers = cur.f()? as usize;
-        let round = cur.u()?;
+        // v1 field order: ticks, reduce_done, micro, requeues, nmembers,
+        // round-as-chunks. v2 hoists the flag and chunks every counter.
+        let (ticks_in_phase, reduce_done, round_micro, requeues_this_round, nmembers, round);
+        if v1 {
+            ticks_in_phase = cur.f()? as u32;
+            reduce_done = cur.f()? != 0.0;
+            round_micro = cur.f()? as usize;
+            requeues_this_round = cur.f()? as u64;
+            nmembers = cur.f()? as usize;
+            round = cur.u()?;
+        } else {
+            reduce_done = cur.f()? != 0.0;
+            ticks_in_phase = cur.u()? as u32;
+            round_micro = cur.u()? as usize;
+            requeues_this_round = cur.u()?;
+            nmembers = cur.u()? as usize;
+            round = cur.u()?;
+        }
         let mut coord = RoundCoordinator::new(cfg);
         coord.phase = phase;
         coord.round = round;
@@ -544,7 +582,7 @@ impl RoundCoordinator {
         coord.round_micro = round_micro;
         coord.requeues_this_round = requeues_this_round;
         for _ in 0..nmembers {
-            let id = cur.f()? as usize;
+            let id = if v1 { cur.f()? as usize } else { cur.u()? as usize };
             let alive = cur.f()? != 0.0;
             coord.members.push(WorkerHealth {
                 id,
@@ -555,7 +593,7 @@ impl RoundCoordinator {
                 requeued: cur.u()?,
                 straggles: cur.u()?,
             });
-            let alen = cur.f()? as usize;
+            let alen = if v1 { cur.f()? as usize } else { cur.u()? as usize };
             // each index consumes ≥ 1 word — bound the allocation by the
             // remaining blob so a corrupted length errors instead of
             // attempting a huge Vec::with_capacity
@@ -567,11 +605,15 @@ impl RoundCoordinator {
             }
             let mut assign = Vec::with_capacity(alen);
             for _ in 0..alen {
-                assign.push(cur.f()? as usize);
+                assign.push(if v1 { cur.f()? as usize } else { cur.u()? as usize });
             }
             coord.assignment.push(assign);
             coord.shard_done.push(cur.f()? != 0.0);
-            coord.shard_secs.push(cur.f()? as f64);
+            if v1 {
+                coord.shard_secs.push(cur.f()? as f64);
+            } else {
+                coord.shard_secs.push(f64::from_bits(cur.u()?));
+            }
         }
         Ok(coord)
     }
@@ -795,6 +837,81 @@ mod tests {
     fn snapshot_rejects_garbage() {
         assert!(RoundCoordinator::restore(RoundCfg::default(), &[9.0, 1.0]).is_err());
         assert!(RoundCoordinator::restore(RoundCfg::default(), &[1.0]).is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_exact_above_2_pow_24() {
+        // global microbatch indices past 2^24 are not representable in f32;
+        // the v1 codec silently rounded them. v2 must round-trip exactly,
+        // and shard_secs must come back bit-identical (f64, not via f32).
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        let big = (1usize << 24) + 3;
+        c.assignment[1] = vec![big, big + 1, big + 5];
+        c.complete(0, 0.123_456_789_012_345);
+        let snap = c.snapshot();
+        let r = RoundCoordinator::restore(c.cfg.clone(), &snap).unwrap();
+        assert_eq!(r.assignments()[1], vec![big, big + 1, big + 5]);
+        assert_eq!(
+            r.shard_secs[0].to_bits(),
+            0.123_456_789_012_345_f64.to_bits(),
+            "shard_secs must survive bit-exactly for post-resume straggler accounting"
+        );
+        assert_eq!(r.assignments(), c.assignments());
+    }
+
+    #[test]
+    fn restore_accepts_legacy_v1_blob() {
+        // hand-built v1 layout (raw-f32 integers): header, round chunks,
+        // one alive member with an empty assignment
+        let mut blob = vec![1.0f32, 2.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        blob.extend_from_slice(&u64_to_chunks(3));
+        blob.push(0.0); // id
+        blob.push(1.0); // alive
+        for w in [0u64, 2, 8, 0, 0] {
+            blob.extend_from_slice(&u64_to_chunks(w));
+        }
+        blob.push(0.0); // assignment len
+        blob.push(1.0); // shard_done
+        blob.push(0.25); // shard_secs (f32 in v1)
+        let c = RoundCoordinator::restore(RoundCfg::default(), &blob).unwrap();
+        assert_eq!(c.round, 3);
+        assert_eq!(c.phase, Phase::RoundTrain);
+        assert_eq!(c.members[0].micro_done, 8);
+        assert_eq!(c.shard_secs[0], 0.25);
+    }
+
+    #[test]
+    fn non_finite_shard_time_ignored_in_straggler_accounting() {
+        // one NaN shard time used to panic median() inside record_round;
+        // now it is excluded from median/max/imbalance and never flagged
+        let mut c = training_coord(4);
+        c.advance_to_train().unwrap();
+        c.begin_round(8).unwrap();
+        for (i, secs) in [(0, 0.010), (1, 0.011), (2, 0.009), (3, f64::NAN)] {
+            c.complete(i, secs);
+        }
+        c.tick();
+        c.finish_reduce(0.0);
+        c.tick();
+        assert_eq!(c.log[0].stragglers, 0);
+        assert_eq!(c.log[0].workers, 4, "worker count still reflects assignment");
+        assert!((c.log[0].grad_secs - 0.011).abs() < 1e-12);
+        assert!(c.log[0].imbalance.is_finite());
+
+        let mut c2 = training_coord(3);
+        c2.advance_to_train().unwrap();
+        c2.begin_round(6).unwrap();
+        for (i, secs) in [(0, 0.010), (1, f64::INFINITY), (2, 0.009)] {
+            c2.complete(i, secs);
+        }
+        c2.tick();
+        c2.finish_reduce(0.0);
+        c2.tick();
+        assert_eq!(c2.log[0].stragglers, 0);
+        assert_eq!(c2.members[1].straggles, 0);
+        assert!(c2.log[0].grad_secs.is_finite());
     }
 
     #[test]

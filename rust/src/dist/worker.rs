@@ -42,7 +42,7 @@ pub struct ShardOut {
 /// Execute one worker's shard. `indices` are global microbatch indices
 /// into `tokens`; they are sorted first so requeued (out-of-order) work
 /// still feeds the tree accumulator in increasing index order.
-pub fn run_shard<S: GradSource>(
+pub fn run_shard<S: GradSource + ?Sized>(
     src: &S,
     indices: &[usize],
     tokens: &[HostTensor],
@@ -62,7 +62,7 @@ pub fn run_shard<S: GradSource>(
 /// empty assignment is a cheap no-op task). Results come back in worker
 /// order; each entry is that worker's own `Result`, so a single failing
 /// worker is attributable.
-pub fn run_workers<S: GradSource>(
+pub fn run_workers<S: GradSource + ?Sized>(
     src: &S,
     assignments: &[Vec<usize>],
     tokens: &[HostTensor],

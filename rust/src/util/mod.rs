@@ -49,13 +49,15 @@ pub fn std_dev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Median (sorts a copy).
+/// Median (sorts a copy). Total order per the PR-5 comparator policy:
+/// `total_cmp` sorts NaNs to the ends instead of panicking, so one bad
+/// sample degrades the statistic rather than the process.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -82,5 +84,14 @@ mod tests {
         assert!((median(&xs) - 2.5).abs() < 1e-12);
         assert!((std_dev(&xs) - 1.118033988).abs() < 1e-6);
         assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn median_survives_nan() {
+        // pre-fix this panicked inside sort_by(partial_cmp().unwrap());
+        // total_cmp orders NaN after +inf, so finite medians stay sane
+        let m = median(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(m, 3.0);
+        assert!(median(&[f64::NAN]).is_nan());
     }
 }

@@ -1,0 +1,151 @@
+//! End-to-end transport test across real OS processes: a coordinator
+//! process and worker processes talking over localhost TCP, all through
+//! the `dist-demo` CLI subcommand. The acceptance bar from the module
+//! docs: a 2-worker TCP run is bitwise identical to the in-process
+//! loopback run — including one mid-run join and one mid-round
+//! disconnect.
+//!
+//! The in-thread variant of these checks lives in
+//! `rust/tests/transport_parity.rs`; this file only adds the process
+//! boundary (argv plumbing, stdout protocol, real sockets between
+//! processes).
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdout, Command, Stdio};
+
+use alice_racs::dist::demo;
+
+const BIN: &str = env!("CARGO_BIN_EXE_alice-racs");
+
+/// Spawn a coordinator process and block until it prints its bound
+/// address (`listening HOST:PORT`).
+fn spawn_coordinator(args: &[&str]) -> (Child, BufReader<ChildStdout>, String) {
+    let mut child = Command::new(BIN)
+        .args(["dist-demo", "--role", "coordinator", "--listen", "127.0.0.1:0"])
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn coordinator");
+    let mut rd = BufReader::new(child.stdout.take().expect("coordinator stdout"));
+    let mut line = String::new();
+    rd.read_line(&mut line).expect("read listening line");
+    let addr = line
+        .trim()
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("expected `listening HOST:PORT`, got {line:?}"))
+        .to_string();
+    (child, rd, addr)
+}
+
+fn spawn_worker(addr: &str, run_id: &str, extra: &[&str]) -> Child {
+    Command::new(BIN)
+        .args(["dist-demo", "--role", "worker", "--connect", addr, "--run-id", run_id])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn worker")
+}
+
+/// Read the coordinator's remaining output and return its `demo ...`
+/// summary line, asserting a clean exit.
+fn finish_coordinator(mut child: Child, rd: BufReader<ChildStdout>) -> String {
+    let mut demo_line = None;
+    for line in rd.lines() {
+        let line = line.expect("coordinator stdout line");
+        if line.starts_with("demo ") {
+            demo_line = Some(line);
+        }
+    }
+    let status = child.wait().expect("coordinator wait");
+    assert!(status.success(), "coordinator exited with {status}");
+    demo_line.expect("coordinator printed no demo summary line")
+}
+
+fn field<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")[..]))
+        .unwrap_or_else(|| panic!("no {key}= field in {line:?}"))
+}
+
+/// The `demo digest=... losses=...` line a loopback run of this shape
+/// would print (`cmd_dist_demo` formats from the same `DemoOut`).
+fn loopback_reference(micro: usize, steps: u64) -> (String, String) {
+    let out = demo::run_loopback(&demo::DemoCfg { micro, steps }, 2, 1).unwrap();
+    let losses: Vec<String> = out.loss_bits.iter().map(|b| format!("{b:08x}")).collect();
+    (format!("{:016x}", out.weight_digest), losses.join(","))
+}
+
+fn worker_output(w: Child) -> String {
+    let out = w.wait_with_output().expect("worker wait");
+    assert!(out.status.success(), "worker exited with {}", out.status);
+    String::from_utf8(out.stdout).expect("worker stdout utf8")
+}
+
+#[test]
+fn two_process_tcp_run_matches_loopback_bitwise() {
+    let (child, rd, addr) = spawn_coordinator(&[
+        "--run-id", "e2e", "--min-workers", "2", "--micro", "6", "--steps", "3",
+        "--tick-ms", "1",
+    ]);
+    let wa = spawn_worker(&addr, "e2e", &[]);
+    let wb = spawn_worker(&addr, "e2e", &[]);
+    let line = finish_coordinator(child, rd);
+    let (ref_digest, ref_losses) = loopback_reference(6, 3);
+    assert_eq!(field(&line, "digest"), ref_digest, "weight bits diverged: {line}");
+    assert_eq!(field(&line, "losses"), ref_losses, "loss bits diverged: {line}");
+    assert_eq!(field(&line, "requeues"), "0");
+    for w in [wa, wb] {
+        let out = worker_output(w);
+        assert!(out.starts_with("worker member="), "unexpected worker output {out:?}");
+    }
+}
+
+#[test]
+fn mid_round_disconnect_across_processes_is_bitwise_invisible() {
+    // same shape as the in-thread chaos test: each worker owns 3 of the 6
+    // microbatches per round; a --fail-after-micro 4 worker survives
+    // round 1, drops its connection one microbatch into round 2, and the
+    // coordinator requeues its 3-index shard onto the survivor
+    let (child, rd, addr) = spawn_coordinator(&[
+        "--run-id", "e2e-chaos", "--min-workers", "2", "--micro", "6", "--steps", "2",
+        "--tick-ms", "1",
+    ]);
+    let wa = spawn_worker(&addr, "e2e-chaos", &[]);
+    let wb = spawn_worker(&addr, "e2e-chaos", &["--fail-after-micro", "4"]);
+    let line = finish_coordinator(child, rd);
+    let (ref_digest, ref_losses) = loopback_reference(6, 2);
+    assert_eq!(field(&line, "digest"), ref_digest, "requeue changed the bits: {line}");
+    assert_eq!(field(&line, "losses"), ref_losses);
+    assert_eq!(field(&line, "requeues"), "3");
+    let _ = worker_output(wa);
+    let _ = worker_output(wb); // the chaos worker exits cleanly too
+}
+
+#[test]
+fn mid_run_join_across_processes_is_bitwise_invisible() {
+    // slow the ticks down so a third worker, spawned mid-run, reliably
+    // joins while rounds are still going; re-partitioning onto it must
+    // not move a single bit, and it must receive the streamed state
+    let (child, rd, addr) = spawn_coordinator(&[
+        "--run-id", "e2e-join", "--min-workers", "2", "--micro", "6", "--steps", "16",
+        "--tick-ms", "30",
+    ]);
+    let wa = spawn_worker(&addr, "e2e-join", &[]);
+    let wb = spawn_worker(&addr, "e2e-join", &[]);
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let wc = spawn_worker(&addr, "e2e-join", &[]);
+    let line = finish_coordinator(child, rd);
+    let (ref_digest, ref_losses) = loopback_reference(6, 16);
+    assert_eq!(field(&line, "digest"), ref_digest, "mid-run join changed the bits: {line}");
+    assert_eq!(field(&line, "losses"), ref_losses);
+    let _ = worker_output(wa);
+    let _ = worker_output(wb);
+    let joiner = worker_output(wc);
+    let joined_step: i64 = field(&joiner, "joined_step").parse().expect("joined_step");
+    assert!(
+        joined_step >= 1,
+        "late joiner should have caught a published checkpoint: {joiner:?}"
+    );
+}

@@ -1,0 +1,190 @@
+//! Loopback ↔ TCP bitwise parity for the transport layer (in-process:
+//! the coordinator and the workers share this test process, workers on
+//! plain `std::thread`s talking to `127.0.0.1` sockets).
+//!
+//! The contract under test (`src/dist/transport.rs` module docs): the
+//! tree reduce is defined over global microbatch indices, so a TCP run —
+//! including mid-run joins and mid-round disconnect requeues — produces
+//! exactly the loopback bits. `rust/tests/transport_e2e.rs` repeats the
+//! same checks across real OS processes via the `dist-demo` subcommand.
+
+use std::thread::{self, JoinHandle};
+
+use alice_racs::bench;
+use alice_racs::dist::transport::{run_worker, WorkerReport};
+use alice_racs::dist::{
+    demo, run_round_via, DistConfig, TcpCoordinator, Transport, TransportKind, WireCfg,
+    WorkerCfg,
+};
+
+fn wire(run_id: &str) -> WireCfg {
+    WireCfg {
+        run_id: run_id.to_string(),
+        tick_ms: 1,
+        join_timeout_s: 30.0,
+        round_timeout_s: 60.0,
+    }
+}
+
+fn spawn_worker(
+    addr: String,
+    run_id: &str,
+    fail_after_micro: Option<usize>,
+) -> JoinHandle<anyhow::Result<WorkerReport>> {
+    let run_id = run_id.to_string();
+    thread::spawn(move || {
+        run_worker(
+            &WorkerCfg { connect: addr, run_id, fail_after_micro },
+            &demo::demo_src(),
+        )
+    })
+}
+
+/// Full demo run over TCP: bind a coordinator, spawn one worker thread
+/// per `fails` entry, drive, and join everything.
+fn run_tcp_demo(
+    cfg: &demo::DemoCfg,
+    run_id: &str,
+    fails: &[Option<usize>],
+    min_workers: usize,
+) -> (demo::DemoOut, Vec<WorkerReport>) {
+    let mut tcp = TcpCoordinator::bind("127.0.0.1:0", wire(run_id)).expect("bind");
+    let addr = tcp.local_addr().to_string();
+    let handles: Vec<_> = fails
+        .iter()
+        .map(|&f| spawn_worker(addr.clone(), run_id, f))
+        .collect();
+    let dist_cfg = DistConfig {
+        dp_workers: min_workers,
+        min_workers,
+        transport: TransportKind::Tcp,
+        ..DistConfig::default()
+    };
+    let mut coord = dist_cfg.empty_coordinator();
+    let out = demo::drive(&mut tcp, &mut coord, cfg).expect("tcp demo run");
+    let reports = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker thread").expect("worker run"))
+        .collect();
+    (out, reports)
+}
+
+#[test]
+fn tcp_two_workers_match_loopback_bitwise() {
+    let cfg = demo::DemoCfg { micro: 6, steps: 3 };
+    let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
+    let (out, reports) = run_tcp_demo(&cfg, "parity", &[None, None], 2);
+    assert_eq!(out.loss_bits, reference.loss_bits, "per-step loss bits diverged");
+    assert_eq!(out.weight_digest, reference.weight_digest, "weight bits diverged");
+    assert_eq!(out.rounds, 3);
+    assert_eq!(out.requeues, 0);
+    // both workers actually executed shards, and nothing ran twice
+    for r in &reports {
+        assert!(r.shards > 0, "worker {} never got a shard", r.member);
+    }
+    let total: usize = reports.iter().map(|r| r.micro).sum();
+    assert_eq!(total, 6 * 3, "every microbatch executed exactly once");
+}
+
+#[test]
+fn mid_round_disconnect_requeues_bitwise() {
+    // 2 workers, 6 microbatches/step: each executes 3 per round. A limit
+    // of 4 lets the failing worker finish round 1 (3 micro), execute one
+    // microbatch of round 2, then vanish without a ShardDone — the
+    // coordinator must requeue its whole round-2 shard (3 indices) onto
+    // the survivor, and the result must match an undisturbed loopback
+    // run bit for bit.
+    let cfg = demo::DemoCfg { micro: 6, steps: 2 };
+    let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
+    let (out, reports) = run_tcp_demo(&cfg, "chaos", &[None, Some(4)], 2);
+    assert_eq!(out.loss_bits, reference.loss_bits, "requeue changed the loss bits");
+    assert_eq!(out.weight_digest, reference.weight_digest, "requeue changed the weights");
+    assert_eq!(out.requeues, 3, "the dead worker's round-2 shard requeues whole");
+    let failed = reports.iter().find(|r| r.micro == 4).expect("failing worker report");
+    assert_eq!(failed.shards, 1, "crashed mid-shard, so only round 1 counts");
+}
+
+#[test]
+fn late_joiner_streams_latest_state() {
+    let src = demo::demo_src();
+    let mut tcp = TcpCoordinator::bind("127.0.0.1:0", wire("late")).expect("bind");
+    let addr = tcp.local_addr().to_string();
+    let a = spawn_worker(addr.clone(), "late", None);
+    let dist_cfg = DistConfig {
+        dp_workers: 1,
+        min_workers: 1,
+        transport: TransportKind::Tcp,
+        ..DistConfig::default()
+    };
+    let mut coord = dist_cfg.empty_coordinator();
+    // round 1 with worker A only, then publish a checkpoint
+    let toks = demo::token_block(4, 1000);
+    let r1 = run_round_via(&mut tcp, &mut coord, &src, &toks).expect("round 1");
+    tcp.publish_state(1, &coord.snapshot(), b"ckpt-after-step-1").unwrap();
+    // B connects only now — its Welcome must be followed by the cached
+    // state. Keep running rounds (each pumps the event loop) until the
+    // round machine has admitted it.
+    let b = spawn_worker(addr, "late", None);
+    let mut extra = 0;
+    while coord.alive() < 2 && extra < 500 {
+        extra += 1;
+        let toks = demo::token_block(4, 1000 + extra);
+        run_round_via(&mut tcp, &mut coord, &src, &toks).expect("extra round");
+    }
+    assert_eq!(coord.alive(), 2, "late joiner was never admitted");
+    tcp.shutdown();
+    let ra = a.join().unwrap().expect("worker A");
+    let rb = b.join().unwrap().expect("worker B");
+    let (step, snap, blob) = rb.joined_state.expect("late joiner must receive state");
+    assert_eq!(step, 1);
+    assert_eq!(blob, b"ckpt-after-step-1");
+    assert!(!snap.is_empty(), "round snapshot rides along");
+    // A saw the same broadcast live; and round 1 really ran on A alone
+    assert_eq!(ra.joined_state.expect("broadcast to A").0, 1);
+    assert!(ra.micro >= toks.len(), "A executed round 1");
+    assert!(r1.loss.is_finite());
+}
+
+#[test]
+fn wrong_run_id_is_rejected() {
+    let mut tcp = TcpCoordinator::bind("127.0.0.1:0", wire("right-run")).expect("bind");
+    let addr = tcp.local_addr().to_string();
+    // the impostor connects first (its Hello is queued ahead of the real
+    // worker's), so it is processed — and rejected — while the
+    // coordinator waits for the real member
+    let bad = spawn_worker(addr.clone(), "wrong-run", None);
+    thread::sleep(std::time::Duration::from_millis(50));
+    let good = spawn_worker(addr, "right-run", None);
+    let dist_cfg = DistConfig {
+        dp_workers: 1,
+        min_workers: 1,
+        transport: TransportKind::Tcp,
+        ..DistConfig::default()
+    };
+    let mut coord = dist_cfg.empty_coordinator();
+    let toks = demo::token_block(4, 7000);
+    run_round_via(&mut tcp, &mut coord, &demo::demo_src(), &toks).expect("round");
+    tcp.shutdown();
+    let err = bad.join().unwrap().expect_err("mismatched run-id must not join");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("rejected") || msg.contains("expected Welcome"),
+        "unexpected rejection error: {msg}"
+    );
+    good.join().unwrap().expect("matching run-id joins fine");
+    assert_eq!(coord.alive(), 1, "only the matching worker became a member");
+}
+
+#[test]
+fn env_selected_transport_matches_reference() {
+    // the CI dist cell runs this suite twice, AR_TRANSPORT={loopback,tcp}:
+    // both cells must land on the same reference bits
+    let cfg = demo::DemoCfg { micro: 8, steps: 4 };
+    let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
+    let out = match bench::bench_transport() {
+        TransportKind::Loopback => demo::run_loopback(&cfg, 3, 2).unwrap(),
+        TransportKind::Tcp => run_tcp_demo(&cfg, "env-axis", &[None, None, None], 3).0,
+    };
+    assert_eq!(out.loss_bits, reference.loss_bits);
+    assert_eq!(out.weight_digest, reference.weight_digest);
+}
