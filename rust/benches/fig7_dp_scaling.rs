@@ -22,10 +22,10 @@ use alice_racs::bench::{
     artifacts_available, bench_cfg, bench_steps, dp_sweep, smoke, write_summary, TablePrinter,
 };
 use alice_racs::coordinator::{run_with, Trainer};
-use alice_racs::dist::{run_round, DistConfig, SyntheticGradSource};
+use alice_racs::dist::{run_round, transport, DistConfig, SyntheticGradSource};
 use alice_racs::runtime::HostTensor;
 use alice_racs::util::json::{num, obj, s};
-use alice_racs::util::{mean, pool, Json, Pcg, Timer};
+use alice_racs::util::{mean, pool, trace, Json, Pcg, Timer};
 
 fn synthetic_section() -> Json {
     let cores = pool::available();
@@ -65,6 +65,14 @@ fn synthetic_section() -> Json {
                 times.push(t.millis()); // round 0 is warmup
             }
             loss_bits = out.loss.to_bits();
+            // round-end telemetry: same witness line the TCP workers log,
+            // so CI's bench-smoke artifact carries a loopback witness.jsonl
+            if let Some(w) = coord.witness() {
+                transport::append_witness_line(
+                    std::path::Path::new("runs/witness.jsonl"),
+                    &w,
+                );
+            }
         }
         let ms = mean(&times);
         if dp == 1 {
@@ -140,10 +148,18 @@ fn trainer_section() {
 }
 
 fn main() {
+    // AR_TRACE=1 (or =PATH) turns on the span tracer for the whole bench;
+    // scheduling-only, so every parity assert above stays bitwise live
+    trace::init_resolved("");
     let summary = synthetic_section();
     match write_summary("fig7_dp_scaling", &summary) {
         Ok(path) => println!("summary → {path}"),
         Err(e) => eprintln!("could not write fig7 summary: {e:#}"),
     }
     trainer_section();
+    match trace::finish() {
+        Ok(Some(p)) => println!("trace → {}", p.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("trace write failed: {e:#}"),
+    }
 }

@@ -14,6 +14,7 @@ use crate::coordinator;
 use crate::dist::{self, demo, DistConfig, TcpCoordinator, TransportKind, WorkerCfg};
 use crate::opt;
 use crate::runtime::Engine;
+use crate::util::{log, trace};
 
 /// Parsed `--key value` / `--flag` arguments after the subcommand.
 pub struct Args {
@@ -95,6 +96,11 @@ USAGE:
                                      (tcp = this process coordinates real
                                       worker processes over sockets; see
                                       `dist-demo` for the worker side)
+                     [--log-level error|warn|info|debug|trace]
+                                     (ALICE_RACS_LOG still wins)
+                     [--trace [PATH]] (Chrome trace-event JSON; bare flag
+                                      writes runs/trace.json; AR_TRACE=1
+                                      or AR_TRACE=PATH also enables it)
   alice-racs dist-demo [--role loopback|coordinator|worker]
                      (synthetic-gradient transport demo / parity harness;
                       prints one `demo digest=...` line for bitwise
@@ -108,6 +114,10 @@ USAGE:
                                   [--fail-after-micro N] (drop the
                                    connection mid-shard, for requeue tests)
                      shared:      [--micro N] [--steps N]
+                                  [--trace [PATH]] [--log-level LEVEL]
+                                  [--witness PATH] (append per-round
+                                   witness telemetry as JSON lines;
+                                   workers default to runs/witness.jsonl)
   alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
   alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
   alice-racs inspect [--artifacts DIR]
@@ -186,6 +196,12 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.hp.refresh_anchor_every =
         args.usize_or("anchor-every", cfg.hp.refresh_anchor_every)?;
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    if let Some(l) = args.get("log-level") {
+        cfg.log_level = l.to_string();
+    }
+    if let Some(t) = trace_arg(args) {
+        cfg.trace_path = t;
+    }
     if let Some(p) = args.get("path") {
         cfg.path = match p {
             "fused" => ExecPath::Fused,
@@ -196,13 +212,33 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// `--trace` is value-optional: the bare flag means "default path".
+fn trace_arg(args: &Args) -> Option<String> {
+    args.get("trace").map(|v| {
+        if v == "true" { "runs/trace.json".to_string() } else { v.to_string() }
+    })
+}
+
+/// Write the trace file (if tracing was on) and say where it went —
+/// shared epilogue of every traced subcommand.
+fn finish_trace() {
+    match trace::finish() {
+        Ok(Some(p)) => println!("trace written {}", p.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("trace write failed: {e}"),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
+    log::init_str(&cfg.log_level);
+    trace::init_resolved(&cfg.trace_path);
     let summary = coordinator::run(cfg)?;
     println!(
         "final: train_loss={:.4} eval_loss={:?} tokens/s={:.0}",
         summary.last_train_loss, summary.final_eval_loss, summary.tokens_per_sec
     );
+    finish_trace();
     Ok(())
 }
 
@@ -214,9 +250,14 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_dist_demo(args: &Args) -> Result<()> {
     use std::io::Write as _;
 
+    if let Some(l) = args.get("log-level") {
+        log::init_str(l);
+    }
+    trace::init_resolved(&trace_arg(args).unwrap_or_default());
     let cfg = demo::DemoCfg {
         micro: args.usize_or("micro", 8)?.max(1),
         steps: args.usize_or("steps", 4)?.max(1) as u64,
+        witness_path: args.get("witness").map(std::path::PathBuf::from),
     };
     let print_demo = |out: &demo::DemoOut| {
         let losses: Vec<String> =
@@ -271,10 +312,13 @@ fn cmd_dist_demo(args: &Args) -> Result<()> {
                     }
                     None => None,
                 },
+                witness_path: Some(
+                    args.get("witness").unwrap_or("runs/witness.jsonl").into(),
+                ),
             };
             let report = dist::transport::run_worker(&wc, &demo::demo_src())?;
             println!(
-                "worker member={} shards={} micro={} joined_step={}",
+                "worker member={} shards={} micro={} joined_step={} witnesses={}",
                 report.member,
                 report.shards,
                 report.micro,
@@ -282,11 +326,13 @@ fn cmd_dist_demo(args: &Args) -> Result<()> {
                     .joined_state
                     .as_ref()
                     .map(|s| s.0 as i64)
-                    .unwrap_or(-1)
+                    .unwrap_or(-1),
+                report.witnesses.len()
             );
         }
         other => bail!("--role must be loopback|coordinator|worker, got {other:?}"),
     }
+    finish_trace();
     Ok(())
 }
 

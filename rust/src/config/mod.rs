@@ -59,6 +59,13 @@ pub struct RunConfig {
     /// the trainer routes each step through the round coordinator and
     /// shards the microbatch stream over `dp_workers` logical workers.
     pub dist: DistConfig,
+    /// `[log] level` — stderr log threshold name (`--log-level`; the
+    /// `ALICE_RACS_LOG` env var still wins, see `util::log::init_str`).
+    pub log_level: String,
+    /// `[log] trace_path` — Chrome trace-event JSON output (`--trace`).
+    /// Empty = tracing off; the `AR_TRACE` env var still wins
+    /// (`util::trace::resolve_path`).
+    pub trace_path: String,
 }
 
 impl Default for RunConfig {
@@ -86,6 +93,8 @@ impl Default for RunConfig {
             log_every: 10,
             ckpt_every: 0,
             dist: DistConfig::default(),
+            log_level: "info".into(),
+            trace_path: String::new(),
         }
     }
 }
@@ -186,6 +195,8 @@ impl RunConfig {
             log_every: v.usize_or("train", "log_every", d.log_every),
             ckpt_every: v.usize_or("train", "ckpt_every", d.ckpt_every),
             dist,
+            log_level: v.str_or("log", "level", &d.log_level),
+            trace_path: v.str_or("log", "trace_path", &d.trace_path),
         })
     }
 
@@ -363,5 +374,19 @@ mix = 0.5
     #[test]
     fn bad_refresh_rejected() {
         assert!(RunConfig::from_toml("[optimizer]\nrefresh = \"approx\"").is_err());
+    }
+
+    #[test]
+    fn parses_log_section() {
+        let c = RunConfig::from_toml(
+            "[log]\nlevel = \"debug\"\ntrace_path = \"runs/t.json\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.log_level, "debug");
+        assert_eq!(c.trace_path, "runs/t.json");
+        // defaults: info, tracing off
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.log_level, "info");
+        assert_eq!(d.trace_path, "");
     }
 }

@@ -8,8 +8,26 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::dist::RoundRecord;
+use crate::obs;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Timer;
+
+const TRAIN_HEADER: &str =
+    "step,loss,lr,tokens,elapsed_s,tokens_per_s,round_secs_median,requeues,wire_bytes";
+const EVAL_HEADER: &str = "step,eval_loss,eval_ppl,elapsed_s";
+
+/// Open a CSV for appending; write `header` only when the file is new or
+/// empty, so a mid-run `flush` + reopen (crash recovery, long networked
+/// runs) never duplicates the header row.
+fn open_csv(path: &Path, header: &str) -> Result<BufWriter<File>> {
+    let fresh = fs::metadata(path).map(|m| m.len() == 0).unwrap_or(true);
+    let f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let mut w = BufWriter::new(f);
+    if fresh {
+        writeln!(w, "{header}")?;
+    }
+    Ok(w)
+}
 
 /// Writes train/eval curves and a final summary for one run.
 pub struct MetricsLogger {
@@ -27,11 +45,8 @@ impl MetricsLogger {
         let dir = dir.as_ref().to_path_buf();
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating {}", dir.display()))?;
-        let mut train_csv =
-            BufWriter::new(File::create(dir.join("train.csv"))?);
-        writeln!(train_csv, "step,loss,lr,tokens,elapsed_s,tokens_per_s")?;
-        let mut eval_csv = BufWriter::new(File::create(dir.join("eval.csv"))?);
-        writeln!(eval_csv, "step,eval_loss,eval_ppl,elapsed_s")?;
+        let train_csv = open_csv(&dir.join("train.csv"), TRAIN_HEADER)?;
+        let eval_csv = open_csv(&dir.join("eval.csv"), EVAL_HEADER)?;
         Ok(MetricsLogger {
             dir,
             train_csv,
@@ -43,16 +58,40 @@ impl MetricsLogger {
         })
     }
 
-    pub fn train_step(&mut self, step: usize, loss: f32, lr: f32, tokens: u64) -> Result<()> {
+    /// Log one optimizer step. `round` is the DP round that produced it
+    /// (None on the serial path — the witness columns log as zeros);
+    /// wire bytes come from the process-wide `obs` counters (0 for
+    /// loopback runs, cumulative in+out for TCP).
+    pub fn train_step(
+        &mut self,
+        step: usize,
+        loss: f32,
+        lr: f32,
+        tokens: u64,
+        round: Option<&RoundRecord>,
+    ) -> Result<()> {
         self.tokens_seen += tokens;
         self.last_train_loss = loss;
         let el = self.timer.secs();
         let tps = self.tokens_seen as f64 / el.max(1e-9);
+        let median = round.map(|r| r.median_secs).unwrap_or(0.0);
+        let requeues = round.map(|r| r.requeues).unwrap_or(0);
+        let (win, wout) = obs::wire_totals();
         writeln!(
             self.train_csv,
-            "{step},{loss},{lr},{},{el:.3},{tps:.1}",
-            self.tokens_seen
+            "{step},{loss},{lr},{},{el:.3},{tps:.1},{median},{requeues},{}",
+            self.tokens_seen,
+            win + wout
         )?;
+        Ok(())
+    }
+
+    /// Push both curves to disk without closing the logger — callers that
+    /// checkpoint mid-run pair this with a later reopen ([`Self::create`]
+    /// appends instead of truncating).
+    pub fn flush(&mut self) -> Result<()> {
+        self.train_csv.flush()?;
+        self.eval_csv.flush()?;
         Ok(())
     }
 
@@ -67,9 +106,7 @@ impl MetricsLogger {
         // Flush both curves at every eval point: a crash, kill, or dropped
         // worker mid-run must not lose the tail of the training trajectory
         // (long networked runs are exactly where this bites).
-        self.train_csv.flush()?;
-        self.eval_csv.flush()?;
-        Ok(())
+        self.flush()
     }
 
     pub fn elapsed(&self) -> f64 {
@@ -177,8 +214,8 @@ mod tests {
     fn writes_csvs_and_summary() {
         let dir = tmpdir("a");
         let mut m = MetricsLogger::create(&dir).unwrap();
-        m.train_step(1, 5.0, 0.01, 512).unwrap();
-        m.train_step(2, 4.5, 0.01, 512).unwrap();
+        m.train_step(1, 5.0, 0.01, 512, None).unwrap();
+        m.train_step(2, 4.5, 0.01, 512, None).unwrap();
         m.eval_point(2, 4.4).unwrap();
         let s = m.finish("adam", vec![]).unwrap();
         assert_eq!(s.tokens, 1024);
@@ -196,13 +233,64 @@ mod tests {
         // finish() — so a killed run keeps its trajectory
         let dir = tmpdir("flush");
         let mut m = MetricsLogger::create(&dir).unwrap();
-        m.train_step(1, 5.0, 0.01, 512).unwrap();
+        m.train_step(1, 5.0, 0.01, 512, None).unwrap();
         m.eval_point(1, 4.9).unwrap();
         let train = fs::read_to_string(dir.join("train.csv")).unwrap();
         assert!(train.lines().any(|l| l.starts_with("1,5")), "{train}");
         let eval = fs::read_to_string(dir.join("eval.csv")).unwrap();
         assert!(eval.lines().any(|l| l.starts_with("1,4.9")), "{eval}");
         drop(m);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn witness_columns_follow_the_round_record() {
+        let dir = tmpdir("witness");
+        let mut m = MetricsLogger::create(&dir).unwrap();
+        let r = RoundRecord {
+            round: 1,
+            workers: 3,
+            micro: 6,
+            grad_secs: 0.5,
+            reduce_secs: 0.01,
+            imbalance: 1.2,
+            stragglers: 0,
+            requeues: 2,
+            median_secs: 0.25,
+        };
+        m.train_step(1, 5.0, 0.01, 512, Some(&r)).unwrap();
+        m.flush().unwrap();
+        let csv = fs::read_to_string(dir.join("train.csv")).unwrap();
+        let row = csv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), 9, "{row}");
+        assert_eq!(cols[6], "0.25", "round_secs_median column");
+        assert_eq!(cols[7], "2", "requeues column");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_appends_without_duplicate_header() {
+        // mid-run flush + reopen: the second logger appends rows, the
+        // header appears exactly once, and every line stays parseable
+        let dir = tmpdir("reopen");
+        let mut m = MetricsLogger::create(&dir).unwrap();
+        m.train_step(1, 5.0, 0.01, 512, None).unwrap();
+        m.flush().unwrap();
+        drop(m);
+        let mut m2 = MetricsLogger::create(&dir).unwrap();
+        m2.train_step(2, 4.5, 0.01, 512, None).unwrap();
+        m2.flush().unwrap();
+        drop(m2);
+        let csv = fs::read_to_string(dir.join("train.csv")).unwrap();
+        let headers = csv.lines().filter(|l| l.starts_with("step,")).count();
+        assert_eq!(headers, 1, "header must not duplicate:\n{csv}");
+        let n_cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), n_cols, "ragged row {line:?}");
+        }
+        assert!(csv.lines().any(|l| l.starts_with("1,")));
+        assert!(csv.lines().any(|l| l.starts_with("2,")));
         let _ = fs::remove_dir_all(&dir);
     }
 

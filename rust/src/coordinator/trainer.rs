@@ -29,11 +29,12 @@ use crate::data::{CorpusConfig, SyncBatcher};
 use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord, Transport, TransportKind};
 use crate::info;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::opt::{build, Slot};
 use crate::runtime::{Engine, HostTensor};
 use crate::util::json::{num, Json};
 use crate::util::timer::Profile;
-use crate::util::{pool, Pcg, Timer};
+use crate::util::{pool, trace, Pcg, Timer};
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, Summary};
@@ -243,6 +244,7 @@ impl Trainer {
 
     /// One optimizer step (one or more microbatches). Returns train loss.
     pub fn train_step(&mut self, lr: f32) -> Result<f32> {
+        let _sp = trace::region("train", "train_step");
         self.step += 1;
         match self.cfg.path {
             ExecPath::Coordinator => self.step_coordinator(lr),
@@ -265,6 +267,7 @@ impl Trainer {
     /// Serial microbatch loop: the historical accumulation (left fold in
     /// microbatch order), kept as the non-dist baseline.
     fn accumulate_serial(&mut self, micro: usize) -> Result<(f32, Vec<Mat>)> {
+        let _sp = trace::span("train", "grad_serial");
         // compile once up front; the loop then uses the shared-reference
         // entry point, keeping exec-stat accounting in `run_prepared` only
         self.engine.prepare("grad_step")?;
@@ -306,7 +309,10 @@ impl Trainer {
     /// `dp_workers` and pool widths (`rust/tests/dist_parity.rs`).
     fn accumulate_dist(&mut self, micro: usize) -> Result<(f32, Vec<Mat>)> {
         let t_data = Timer::start();
-        let token_batches: Vec<HostTensor> = (0..micro).map(|_| self.tokens_input()).collect();
+        let token_batches: Vec<HostTensor> = {
+            let _sp = trace::span("train", "data");
+            (0..micro).map(|_| self.tokens_input()).collect()
+        };
         self.profile.add("data", t_data.secs());
         self.engine.prepare("grad_step")?;
         let mut coord = self.dist.take().expect("dist coordinator present");
@@ -355,11 +361,14 @@ impl Trainer {
         }
         struct LayerOut {
             cos: Option<(String, Vec<f32>)>,
-            refresh_s: f64,
-            step_s: f64,
+            /// Worker-side phase accounting, merged into the trainer's
+            /// profile at region end (`Profile::absorb`) — width-4 and
+            /// width-1 runs account the identical phase set.
+            prof: Profile,
             err: Option<String>,
         }
         let t0 = Timer::start();
+        let _sp = trace::region("train", "opt_update");
         let step = self.step;
         let names = &self.engine.manifest.params;
         let mut units: Vec<Unit> = self
@@ -369,12 +378,14 @@ impl Trainer {
             .map(|(slot, (param, grad))| Unit { slot, param, grad })
             .collect();
         let outs: Vec<LayerOut> = pool::map_mut(&mut units, |i, u| {
+            let _sp = trace::span("opt", "layer");
             let mut cos = None;
-            let mut refresh_s = 0.0;
+            let mut prof = Profile::new();
             if let Some(seed) = seeds[i] {
+                let _rsp = trace::span("opt", "refresh");
                 let tr = Timer::start();
                 u.slot.refresh(u.grad, seed);
-                refresh_s = tr.secs();
+                prof.add("opt_refresh_layer", tr.secs());
                 if let Some(c) = u.slot.state.vecs.get("diag_cos") {
                     cos = Some((names[i].name.clone(), c.clone()));
                 }
@@ -390,7 +401,8 @@ impl Trainer {
                 }
                 Err(e) => Some(format!("{e:#}")),
             };
-            LayerOut { cos, refresh_s, step_s: ts.secs(), err }
+            prof.add("opt_step_layer", ts.secs());
+            LayerOut { cos, prof, err }
         });
         drop(units);
         for (i, out) in outs.into_iter().enumerate() {
@@ -399,14 +411,15 @@ impl Trainer {
             }
             // per-layer timings (CPU seconds summed over workers) feed the
             // profile next to the fan-out wall clock below
-            self.profile.add("opt_step_layer", out.step_s);
-            if out.refresh_s > 0.0 {
-                self.profile.add("opt_refresh_layer", out.refresh_s);
-            }
+            self.profile.absorb(&out.prof);
             if let Some((name, cos)) = out.cos {
                 self.cos_log.push((self.step, name, cos));
             }
         }
+        // cost/memory ledger: measured optimizer-state footprint (f32
+        // elements × 4). A gauge, so the latest step wins; refreshes that
+        // allocate state lazily are reflected as soon as they land.
+        obs::STATE_BYTES.set(self.state_elems() * 4);
         self.profile.add("opt_update", t0.secs());
         Ok(())
     }
@@ -470,6 +483,7 @@ impl Trainer {
     /// prepared engine read-only, and the losses combine in batch order,
     /// so the mean is identical to the serial loop at every pool width.
     pub fn eval(&mut self, batches: usize) -> Result<f32> {
+        let _sp = trace::region("train", "eval");
         let m = self.engine.manifest.model.clone();
         let corpus = CorpusConfig {
             vocab: m.vocab,
@@ -725,7 +739,8 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
     for t in 1..=cfg.steps {
         let lr = sched.at(t);
         let loss = trainer.train_step(lr)?;
-        metrics.train_step(t, loss, lr, batch_tokens)?;
+        let round = trainer.round_log().last().cloned();
+        metrics.train_step(t, loss, lr, batch_tokens, round.as_ref())?;
         if t % cfg.log_every.max(1) == 0 || t == 1 {
             info!("step {t:>5}  loss {loss:.4}  lr {lr:.5}");
         }
@@ -788,6 +803,14 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
             rounds.iter().map(|r| r.requeues).sum::<u64>(),
             rounds.iter().map(|r| r.stragglers).sum::<u64>()
         );
+    }
+    // cost/memory ledger: the optimizer state-bytes gauge plus wire
+    // traffic (0/0 for loopback runs) ride along in every summary
+    extra.push(("state_bytes", num(obs::STATE_BYTES.get() as f64)));
+    let (wire_in, wire_out) = obs::wire_totals();
+    if wire_in + wire_out > 0 {
+        extra.push(("wire_bytes_in", num(wire_in as f64)));
+        extra.push(("wire_bytes_out", num(wire_out as f64)));
     }
     let mut summary = metrics.finish(&cfg.optimizer, extra)?;
     summary.rounds = trainer.round_log().to_vec();

@@ -41,11 +41,15 @@ pub struct DemoCfg {
     /// Microbatches per optimizer step (global, sharded over members).
     pub micro: usize,
     pub steps: u64,
+    /// Where the *driver* appends one witness JSON line per round (the
+    /// coordinator/loopback-side `witness.jsonl`; TCP workers write their
+    /// own copy via `WorkerCfg::witness_path`). `None` = no file.
+    pub witness_path: Option<std::path::PathBuf>,
 }
 
 impl Default for DemoCfg {
     fn default() -> Self {
-        DemoCfg { micro: 8, steps: 4 }
+        DemoCfg { micro: 8, steps: 4, witness_path: None }
     }
 }
 
@@ -101,6 +105,15 @@ pub fn drive(
     for t in 1..=cfg.steps {
         let toks = token_block(cfg.micro, 1000 * t as i32);
         let out = run_round_via(transport, coord, &s, &toks)?;
+        // round-end telemetry: broadcast the health ledger to the workers
+        // and (optionally) append it to the driver-side witness.jsonl.
+        // Observational only — nothing below reads it back.
+        if let Some(w) = coord.witness() {
+            transport.publish_witness(&w)?;
+            if let Some(path) = &cfg.witness_path {
+                super::transport::append_witness_line(path, &w);
+            }
+        }
         loss_bits.push(out.loss.to_bits());
         for ((slot, w), g) in slots.iter_mut().zip(&mut weights).zip(&out.grads) {
             if t == 1 {
@@ -140,7 +153,7 @@ mod tests {
 
     #[test]
     fn loopback_demo_is_dp_invariant() {
-        let cfg = DemoCfg { micro: 6, steps: 3 };
+        let cfg = DemoCfg { micro: 6, steps: 3, ..DemoCfg::default() };
         let a = run_loopback(&cfg, 1, 1).unwrap();
         let b = run_loopback(&cfg, 3, 2).unwrap();
         assert_eq!(a.loss_bits, b.loss_bits);

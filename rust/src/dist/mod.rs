@@ -37,9 +37,11 @@ use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
 use crate::runtime::HostTensor;
-use crate::util::Timer;
+use crate::util::{trace, Timer};
 
-pub use round::{Phase, RoundCfg, RoundCoordinator, RoundRecord, WorkerHealth};
+pub use round::{
+    Phase, RoundCfg, RoundCoordinator, RoundRecord, WitnessMember, WitnessReport, WorkerHealth,
+};
 pub use transport::{Loopback, TcpCoordinator, Transport, WireCfg, WorkerCfg};
 pub use worker::{GradSource, SyntheticGradSource};
 
@@ -190,6 +192,7 @@ pub fn run_round_via(
     src: &dyn GradSource,
     tokens: &[HostTensor],
 ) -> Result<RoundOutput> {
+    let _sp = trace::region("round", "dp_round");
     if coord.mid_round() {
         // restored from a mid-round checkpoint: assignments (with any
         // requeue adjustments) survived; gradients did not, so re-arm and
@@ -204,8 +207,10 @@ pub fn run_round_via(
     coord.tick(); // RoundTrain → Reduce
 
     let t1 = Timer::start();
-    let root = reduce::combine(nodes)
-        .ok_or_else(|| anyhow!("round produced no gradient nodes"))?;
+    let root = {
+        let _sp = trace::span("dist", "tree_reduce");
+        reduce::combine(nodes).ok_or_else(|| anyhow!("round produced no gradient nodes"))?
+    };
     let reduce_secs = t1.secs();
     coord.finish_reduce(reduce_secs);
     coord.tick(); // Reduce → Cooldown

@@ -34,10 +34,11 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::checkpoint::{chunks_to_u64, u64_to_chunks};
-use crate::util::median;
+use crate::util::json::{self, Json};
+use crate::util::{median, trace};
 
-/// Phase of the current round (the Psyche lifecycle, minus the witness
-/// machinery that needs a real network).
+/// Phase of the current round (the Psyche lifecycle; round-end witness
+/// broadcast lives in `transport`/`demo`, fed by [`WitnessReport`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     WaitingForMembers,
@@ -67,6 +68,17 @@ impl Phase {
             4 => Phase::Cooldown,
             _ => bail!("invalid phase index {i}"),
         })
+    }
+
+    /// Static display name (trace markers need `&'static str`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::WaitingForMembers => "WaitingForMembers",
+            Phase::Warmup => "Warmup",
+            Phase::RoundTrain => "RoundTrain",
+            Phase::Reduce => "Reduce",
+            Phase::Cooldown => "Cooldown",
+        }
     }
 }
 
@@ -125,6 +137,71 @@ pub struct RoundRecord {
     pub reduce_secs: f64,
     /// Slowest ÷ mean shard time over non-empty shards (1.0 = balanced).
     pub imbalance: f64,
+    /// Median shard wall-clock over non-empty finite shards — the
+    /// straggler baseline, carried so the witness broadcast (and the
+    /// metrics CSV) can surface it without re-deriving.
+    pub median_secs: f64,
+}
+
+/// Per-member entry of the witness health ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WitnessMember {
+    pub id: u64,
+    pub alive: bool,
+    pub micro_done: u64,
+    /// Microbatches picked up from departed members, cumulative.
+    pub requeued: u64,
+    pub straggles: u64,
+}
+
+/// Round-end telemetry broadcast to every connected worker (Psyche's
+/// witness model): the finished round's record plus the per-member
+/// health ledger, so clients can surface straggler/requeue state the
+/// coordinator already tracks. Serialized as a `Witness` wire frame by
+/// `transport` and appended to `runs/witness.jsonl` by demo workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WitnessReport {
+    pub round: u64,
+    pub workers: u64,
+    pub micro: u64,
+    pub requeues: u64,
+    pub stragglers: u64,
+    pub grad_secs: f64,
+    pub reduce_secs: f64,
+    pub imbalance: f64,
+    pub median_secs: f64,
+    pub members: Vec<WitnessMember>,
+}
+
+impl WitnessReport {
+    /// One `witness.jsonl` line (sorted keys, see `util::json`).
+    pub fn to_json(&self) -> Json {
+        let members: Vec<Json> = self
+            .members
+            .iter()
+            .map(|m| {
+                json::obj(vec![
+                    ("id", json::num(m.id as f64)),
+                    ("alive", Json::Bool(m.alive)),
+                    ("micro_done", json::num(m.micro_done as f64)),
+                    ("requeued", json::num(m.requeued as f64)),
+                    ("straggles", json::num(m.straggles as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("round", json::num(self.round as f64)),
+            ("workers", json::num(self.workers as f64)),
+            ("micro", json::num(self.micro as f64)),
+            ("requeues", json::num(self.requeues as f64)),
+            ("stragglers", json::num(self.stragglers as f64)),
+            ("grad_secs", json::num(self.grad_secs)),
+            ("reduce_secs", json::num(self.reduce_secs)),
+            ("imbalance", json::num(self.imbalance)),
+            ("median_secs", json::num(self.median_secs)),
+            ("members", Json::Arr(members)),
+        ])
+    }
 }
 
 #[derive(Debug)]
@@ -223,6 +300,7 @@ impl RoundCoordinator {
                     }
                     self.requeues_this_round += orphaned.len() as u64;
                     self.members[w].requeued += orphaned.len() as u64;
+                    crate::obs::REQUEUES.add(orphaned.len() as u64);
                     self.assignment[w].extend(&orphaned);
                     self.shard_done[w] = false;
                 }
@@ -231,6 +309,7 @@ impl RoundCoordinator {
                     let w = survivors[k % survivors.len()];
                     self.requeues_this_round += 1;
                     self.members[w].requeued += 1;
+                    crate::obs::REQUEUES.incr();
                     self.assignment[w].push(mi);
                 }
             }
@@ -286,8 +365,38 @@ impl RoundCoordinator {
     }
 
     fn enter(&mut self, phase: Phase) {
+        trace::instant("round", phase.name());
         self.phase = phase;
         self.ticks_in_phase = 0;
+    }
+
+    /// Witness for the most recently recorded round: the last
+    /// [`RoundRecord`] joined with the current per-member health ledger.
+    /// `None` until a first round completes.
+    pub fn witness(&self) -> Option<WitnessReport> {
+        let rec = self.log.last()?;
+        Some(WitnessReport {
+            round: rec.round,
+            workers: rec.workers as u64,
+            micro: rec.micro as u64,
+            requeues: rec.requeues,
+            stragglers: rec.stragglers,
+            grad_secs: rec.grad_secs,
+            reduce_secs: rec.reduce_secs,
+            imbalance: rec.imbalance,
+            median_secs: rec.median_secs,
+            members: self
+                .members
+                .iter()
+                .map(|m| WitnessMember {
+                    id: m.id as u64,
+                    alive: m.alive,
+                    micro_done: m.micro_done,
+                    requeued: m.requeued,
+                    straggles: m.straggles,
+                })
+                .collect(),
+        })
     }
 
     /// Tick until the machine sits in `RoundTrain` with no active
@@ -411,6 +520,7 @@ impl RoundCoordinator {
             };
             self.requeues_this_round += orphaned.len() as u64;
             self.members[w].requeued += orphaned.len() as u64;
+            crate::obs::REQUEUES.add(orphaned.len() as u64);
             self.assignment[w].extend(&orphaned);
             self.shard_done[w] = false;
         }
@@ -484,6 +594,7 @@ impl RoundCoordinator {
             grad_secs: max,
             reduce_secs: self.reduce_secs,
             imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+            median_secs: med,
         });
         for a in self.assignment.iter_mut() {
             a.clear();

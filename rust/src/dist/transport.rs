@@ -42,9 +42,18 @@
 //! Shard     := round:u64 | seq:u64 | {index:u64, tensor}*
 //! ShardDone := round:u64 | seq:u64 | secs:f64 | {lo,len,loss,grads}*
 //! Done      := (empty)                              orderly shutdown
+//! Witness   := round:u64 | workers:u64 | micro:u64 | requeues:u64 |
+//!              stragglers:u64 | grad_secs:f64 | reduce_secs:f64 |
+//!              imbalance:f64 | median_secs:f64 |
+//!              {id:u64, alive:u8, micro_done:u64,   coordinator → worker,
+//!               requeued:u64, straggles:u64}*       round-end telemetry
 //! str/[T]   := count:u64 | elements
 //! tensor    := tag:u8 (0=f32, 1=i32) | rank:u64 | dims:u64* | data
 //! ```
+//!
+//! Every frame written or read is accounted in the `obs` wire-byte
+//! counters (per kind, in/out), and frame I/O opens `wire` trace spans —
+//! both observational only, never on the decode path's control flow.
 //!
 //! The handshake (`Hello` → `Welcome`/`Reject`) carries a protocol version
 //! and the run id, so a worker can never silently join the wrong run. All
@@ -63,15 +72,17 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::linalg::Mat;
+use crate::obs;
 use crate::runtime::HostTensor;
-use crate::util::Timer;
+use crate::util::{trace, Timer};
 
 use super::reduce::{GradNode, Node, TreeAccum};
-use super::round::{Phase, RoundCoordinator};
+use super::round::{Phase, RoundCoordinator, WitnessMember, WitnessReport};
 use super::worker::{self, GradSource};
 
-/// Handshake protocol version — bumped on any frame-layout change.
-pub const PROTO_VERSION: u32 = 1;
+/// Handshake protocol version — bumped on any frame-layout change
+/// (v2: the round-end `Witness` telemetry frame, ISSUE 8).
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on one frame body (guards `Vec` allocation from the wire).
 pub const MAX_FRAME: usize = 1 << 30;
@@ -107,6 +118,13 @@ pub trait Transport {
         false
     }
 
+    /// Broadcast the round-end witness telemetry (round record + health
+    /// ledger) to every connected worker. No-op on the loopback — the
+    /// caller already holds the `RoundCoordinator` the report came from.
+    fn publish_witness(&mut self, _w: &WitnessReport) -> Result<()> {
+        Ok(())
+    }
+
     /// Orderly teardown (broadcast `Done`, close sockets). No-op on the
     /// loopback.
     fn shutdown(&mut self) {}
@@ -127,6 +145,7 @@ impl Transport for Loopback {
         src: &dyn GradSource,
         tokens: &[HostTensor],
     ) -> Result<(Vec<Node<GradNode>>, f64)> {
+        let _sp = trace::region("round", "loopback_execute_round");
         let assignments = coord.assignments().to_vec();
         let t0 = Timer::start();
         let outs = worker::run_workers(src, &assignments, tokens);
@@ -150,6 +169,40 @@ const K_STATE: u8 = 4;
 const K_SHARD: u8 = 5;
 const K_SHARD_DONE: u8 = 6;
 const K_DONE: u8 = 7;
+const K_WITNESS: u8 = 8;
+
+/// Static tx/rx span names per frame kind (trace spans need `&'static str`).
+fn span_name(kind: u8, tx: bool) -> &'static str {
+    match (kind, tx) {
+        (K_HELLO, true) => "tx_hello",
+        (K_WELCOME, true) => "tx_welcome",
+        (K_REJECT, true) => "tx_reject",
+        (K_STATE, true) => "tx_state",
+        (K_SHARD, true) => "tx_shard",
+        (K_SHARD_DONE, true) => "tx_shard_done",
+        (K_DONE, true) => "tx_done",
+        (K_WITNESS, true) => "tx_witness",
+        (K_HELLO, false) => "rx_hello",
+        (K_WELCOME, false) => "rx_welcome",
+        (K_REJECT, false) => "rx_reject",
+        (K_STATE, false) => "rx_state",
+        (K_SHARD, false) => "rx_shard",
+        (K_SHARD_DONE, false) => "rx_shard_done",
+        (K_DONE, false) => "rx_done",
+        (K_WITNESS, false) => "rx_witness",
+        (_, true) => "tx_unknown",
+        (_, false) => "rx_unknown",
+    }
+}
+
+/// Write one encoded frame, accounting its bytes per kind and opening a
+/// `wire` tx span (the frame layout puts the kind byte at offset 4).
+fn send_frame(s: &mut TcpStream, buf: &[u8]) -> std::io::Result<()> {
+    let kind = buf[4];
+    let _sp = trace::span("wire", span_name(kind, true));
+    obs::wire_out(kind, buf.len());
+    s.write_all(buf)
+}
 
 /// Little-endian frame builder; `frame()` prepends the length word.
 struct W {
@@ -353,6 +406,7 @@ enum Frame {
     Shard { round: u64, seq: u64, items: Vec<(usize, HostTensor)> },
     ShardDone { round: u64, seq: u64, secs: f64, nodes: Vec<Node<GradNode>> },
     Done,
+    Witness(WitnessReport),
 }
 
 fn enc_hello(run_id: &str) -> Vec<u8> {
@@ -415,6 +469,76 @@ fn enc_done() -> Vec<u8> {
     W::new(K_DONE).frame()
 }
 
+/// Encode a round-end witness broadcast. Public (with
+/// [`dec_witness_frame`]) so `tests/transport_parity.rs` can pin the
+/// codec roundtrip without the private `Frame` plumbing.
+pub fn enc_witness(wr: &WitnessReport) -> Vec<u8> {
+    let mut w = W::new(K_WITNESS);
+    w.u64(wr.round);
+    w.u64(wr.workers);
+    w.u64(wr.micro);
+    w.u64(wr.requeues);
+    w.u64(wr.stragglers);
+    w.f64(wr.grad_secs);
+    w.f64(wr.reduce_secs);
+    w.f64(wr.imbalance);
+    w.f64(wr.median_secs);
+    w.u64(wr.members.len() as u64);
+    for m in &wr.members {
+        w.u64(m.id);
+        w.u8(m.alive as u8);
+        w.u64(m.micro_done);
+        w.u64(m.requeued);
+        w.u64(m.straggles);
+    }
+    w.frame()
+}
+
+fn dec_witness(r: &mut R) -> Result<WitnessReport> {
+    let round = r.u64()?;
+    let workers = r.u64()?;
+    let micro = r.u64()?;
+    let requeues = r.u64()?;
+    let stragglers = r.u64()?;
+    let grad_secs = r.f64()?;
+    let reduce_secs = r.f64()?;
+    let imbalance = r.f64()?;
+    let median_secs = r.f64()?;
+    let n = r.count(33)?; // 4×u64 + u8 per member
+    let mut members = Vec::with_capacity(n);
+    for _ in 0..n {
+        members.push(WitnessMember {
+            id: r.u64()?,
+            alive: r.u8()? != 0,
+            micro_done: r.u64()?,
+            requeued: r.u64()?,
+            straggles: r.u64()?,
+        });
+    }
+    Ok(WitnessReport {
+        round,
+        workers,
+        micro,
+        requeues,
+        stragglers,
+        grad_secs,
+        reduce_secs,
+        imbalance,
+        median_secs,
+        members,
+    })
+}
+
+/// Decode one full `Witness` frame (length word included) — the inverse
+/// of [`enc_witness`], exposed for the parity-suite codec test.
+pub fn dec_witness_frame(bytes: &[u8]) -> Result<WitnessReport> {
+    let mut rd = bytes;
+    match read_frame(&mut rd)? {
+        Some(Frame::Witness(w)) => Ok(w),
+        other => bail!("expected a Witness frame, got {other:?}"),
+    }
+}
+
 /// Read one frame. `Ok(None)` means the peer closed the connection
 /// cleanly (EOF at a frame boundary); a truncated frame is an error.
 fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
@@ -429,7 +553,14 @@ fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
         bail!("invalid frame length {len}");
     }
     let mut body = vec![0u8; len];
-    s.read_exact(&mut body).context("reading frame body")?;
+    // kind byte first, so the rx span can be named; the span then covers
+    // the payload transfer + decode (the blocking wait for the *next*
+    // frame is the caller's tick_wait, not rx time)
+    s.read_exact(&mut body[..1]).context("reading frame kind")?;
+    let kind = body[0];
+    let _sp = trace::span("wire", span_name(kind, false));
+    s.read_exact(&mut body[1..]).context("reading frame body")?;
+    obs::wire_in(kind, 4 + len);
     let mut r = R { d: &body, pos: 0 };
     let frame = match r.u8()? {
         K_HELLO => Frame::Hello { proto: r.u32()?, run_id: r.str()? },
@@ -469,6 +600,7 @@ fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
             Frame::ShardDone { round, seq, secs, nodes }
         }
         K_DONE => Frame::Done,
+        K_WITNESS => Frame::Witness(dec_witness(&mut r)?),
         k => bail!("unknown frame kind {k}"),
     };
     Ok(Some(frame))
@@ -621,19 +753,22 @@ impl TcpCoordinator {
         run_id: &str,
     ) {
         if proto != PROTO_VERSION || run_id != self.cfg.run_id {
-            let _ = stream.write_all(&enc_reject(&format!(
-                "handshake mismatch: proto {proto} (want {PROTO_VERSION}), \
-                 run-id {run_id:?} (want {:?})",
-                self.cfg.run_id
-            )));
+            let _ = send_frame(
+                &mut stream,
+                &enc_reject(&format!(
+                    "handshake mismatch: proto {proto} (want {PROTO_VERSION}), \
+                     run-id {run_id:?} (want {:?})",
+                    self.cfg.run_id
+                )),
+            );
             return;
         }
         coord.join(conn as usize);
-        let mut ok = stream.write_all(&enc_welcome(conn, coord.round)).is_ok();
+        let mut ok = send_frame(&mut stream, &enc_welcome(conn, coord.round)).is_ok();
         if ok {
             if let Some((step, snap, blob)) = &self.state {
                 // the late-joiner stream: latest checkpoint + round state
-                ok = stream.write_all(&enc_state(*step, snap, blob)).is_ok();
+                ok = send_frame(&mut stream, &enc_state(*step, snap, blob)).is_ok();
             }
         }
         if ok {
@@ -675,7 +810,7 @@ impl TcpCoordinator {
         let ok = self
             .conns
             .get_mut(&id)
-            .map(|s| s.write_all(&buf).is_ok())
+            .map(|s| send_frame(s, &buf).is_ok())
             .unwrap_or(false);
         if ok {
             pend.entry(id).or_default().outstanding += 1;
@@ -725,6 +860,7 @@ impl Transport for TcpCoordinator {
     /// the machine reaches an unarmed `RoundTrain`, bailing after
     /// `join_timeout_s` if membership never satisfies `min_workers`.
     fn advance_to_train(&mut self, coord: &mut RoundCoordinator) -> Result<()> {
+        let _sp = trace::span("round", "advance_to_train");
         let tick = Duration::from_millis(self.cfg.tick_ms.max(1));
         let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.join_timeout_s);
         let mut next = Instant::now();
@@ -763,6 +899,7 @@ impl Transport for TcpCoordinator {
         _src: &dyn GradSource,
         tokens: &[HostTensor],
     ) -> Result<(Vec<Node<GradNode>>, f64)> {
+        let _sp = trace::span("round", "tcp_execute_round");
         let t0 = Timer::start();
         let round = coord.round;
         let mut seq = 0u64;
@@ -786,7 +923,11 @@ impl Transport for TcpCoordinator {
                     coord.alive()
                 );
             }
-            let Some(ev) = self.next_event(deadline) else { continue };
+            let ev = {
+                let _sp = trace::span("wire", "tick_wait");
+                self.next_event(deadline)
+            };
+            let Some(ev) = ev else { continue };
             match ev {
                 Event::Hello { conn, stream, proto, run_id } => {
                     self.admit(coord, conn, stream, proto, &run_id);
@@ -832,7 +973,7 @@ impl Transport for TcpCoordinator {
         let dead: Vec<u64> = self
             .conns
             .iter_mut()
-            .filter_map(|(&id, s)| s.write_all(&buf).is_err().then_some(id))
+            .filter_map(|(&id, s)| send_frame(s, &buf).is_err().then_some(id))
             .collect();
         for id in dead {
             self.conns.remove(&id);
@@ -846,11 +987,29 @@ impl Transport for TcpCoordinator {
         true
     }
 
+    /// Broadcast the round-end witness to every live connection. A dead
+    /// connection is queued as `Closed` (same pattern as
+    /// `publish_state`) so the next round's event pump runs the usual
+    /// departure arithmetic.
+    fn publish_witness(&mut self, w: &WitnessReport) -> Result<()> {
+        let buf = enc_witness(w);
+        let dead: Vec<u64> = self
+            .conns
+            .iter_mut()
+            .filter_map(|(&id, s)| send_frame(s, &buf).is_err().then_some(id))
+            .collect();
+        for id in dead {
+            self.conns.remove(&id);
+            self.queued.push_back(Event::Closed { conn: id });
+        }
+        Ok(())
+    }
+
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let done = enc_done();
         for s in self.conns.values_mut() {
-            let _ = s.write_all(&done);
+            let _ = send_frame(s, &done);
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
         self.conns.clear();
@@ -898,6 +1057,10 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: Sender<Event>) {
                 if tx.send(Event::Frame { conn, frame }).is_err() {
                     return;
                 }
+                // reader threads outlive rounds but not the process;
+                // hand rx spans to the sink promptly so a drain on the
+                // coordinator thread misses nothing
+                trace::flush_thread();
             }
             Ok(None) | Err(_) => {
                 let _ = tx.send(Event::Closed { conn });
@@ -920,6 +1083,10 @@ pub struct WorkerCfg {
     /// after executing this many microbatches across the whole run — the
     /// mid-round-disconnect tests use it to stand in for a crash.
     pub fail_after_micro: Option<usize>,
+    /// Where to append one JSON line per received `Witness` frame
+    /// (`dist-demo` workers point this at `runs/witness.jsonl`). `None`
+    /// keeps witnesses in-memory only (`WorkerReport::witnesses`).
+    pub witness_path: Option<std::path::PathBuf>,
 }
 
 /// What a worker saw during its run (returned for tests / logging).
@@ -933,6 +1100,9 @@ pub struct WorkerReport {
     /// Last `State` broadcast received: (step, round snapshot, blob) —
     /// a late joiner uses this to catch up before its first round.
     pub joined_state: Option<(u64, Vec<f32>, Vec<u8>)>,
+    /// Every round-end `Witness` broadcast, in arrival order — the
+    /// worker's view of the coordinator's health ledger.
+    pub witnesses: Vec<WitnessReport>,
 }
 
 /// Worker main loop: handshake, then execute shard messages until the
@@ -943,7 +1113,7 @@ pub fn run_worker(cfg: &WorkerCfg, src: &dyn GradSource) -> Result<WorkerReport>
     let mut stream = TcpStream::connect(&cfg.connect)
         .with_context(|| format!("connecting to {}", cfg.connect))?;
     let _ = stream.set_nodelay(true);
-    stream.write_all(&enc_hello(&cfg.run_id))?;
+    send_frame(&mut stream, &enc_hello(&cfg.run_id))?;
     // Bound the handshake: if the coordinator never processes our Hello
     // (e.g. it shut down between accept and admit), fail instead of
     // blocking on a socket nobody will ever write to again.
@@ -980,7 +1150,16 @@ pub fn run_worker(cfg: &WorkerCfg, src: &dyn GradSource) -> Result<WorkerReport>
                     report.micro += 1;
                 }
                 report.shards += 1;
-                stream.write_all(&enc_shard_done(round, seq, t.secs(), &acc.into_nodes()))?;
+                send_frame(
+                    &mut stream,
+                    &enc_shard_done(round, seq, t.secs(), &acc.into_nodes()),
+                )?;
+            }
+            Frame::Witness(w) => {
+                if let Some(path) = &cfg.witness_path {
+                    append_witness_line(path, &w);
+                }
+                report.witnesses.push(w);
             }
             Frame::Done => return Ok(report),
             _ => {}
@@ -988,9 +1167,42 @@ pub fn run_worker(cfg: &WorkerCfg, src: &dyn GradSource) -> Result<WorkerReport>
     }
 }
 
+/// Append one witness JSON line (best-effort: a full disk must not kill
+/// the worker loop — telemetry is never load-bearing). Also used by
+/// `demo::drive` for the coordinator/loopback-side `witness.jsonl` and
+/// by the fig7 bench.
+pub fn append_witness_line(path: &std::path::Path, w: &WitnessReport) {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = writeln!(f, "{}", w.to_json().to_string());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_witness() -> WitnessReport {
+        WitnessReport {
+            round: 17,
+            workers: 3,
+            micro: 24,
+            requeues: 2,
+            stragglers: 1,
+            grad_secs: 0.75,
+            reduce_secs: 0.0625,
+            imbalance: 1.5,
+            median_secs: 0.25,
+            members: vec![
+                WitnessMember { id: 1, alive: true, micro_done: 9, requeued: 0, straggles: 0 },
+                WitnessMember { id: 4, alive: false, micro_done: 7, requeued: 2, straggles: 1 },
+            ],
+        }
+    }
 
     #[test]
     fn frame_codec_roundtrips_every_kind() {
@@ -1023,6 +1235,7 @@ mod tests {
                     },
                 }],
             ),
+            enc_witness(&sample_witness()),
             enc_done(),
         ];
         for buf in cases {
@@ -1061,6 +1274,10 @@ mod tests {
                     assert_eq!(secs.to_bits(), 0.125f64.to_bits());
                     assert_eq!(nodes[0].lo, (1 << 25) + 1);
                     assert_eq!(nodes[0].value.grads[0].data[3].to_bits(), 3.5f32.to_bits());
+                }
+                Frame::Witness(w) => {
+                    // f64 health figures and member rows travel bit-exactly
+                    assert_eq!(w, sample_witness());
                 }
                 Frame::Done => {}
             }

@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::linalg::Mat;
 use crate::runtime::HostTensor;
-use crate::util::{pool, Pcg, Timer};
+use crate::util::{pool, trace, Pcg, Timer};
 
 use super::reduce::{GradNode, Node, TreeAccum};
 
@@ -47,6 +47,7 @@ pub fn run_shard<S: GradSource + ?Sized>(
     indices: &[usize],
     tokens: &[HostTensor],
 ) -> Result<ShardOut> {
+    let _sp = trace::span("dist", "shard_compute");
     let t = Timer::start();
     let mut order: Vec<usize> = indices.to_vec();
     order.sort_unstable();

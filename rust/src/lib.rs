@@ -26,6 +26,7 @@ pub mod data;
 pub mod dist;
 pub mod fisher;
 pub mod linalg;
+pub mod obs;
 pub mod opt;
 pub mod runtime;
 pub mod testing;

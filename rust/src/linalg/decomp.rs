@@ -65,8 +65,9 @@
 //!   a whole refresh against an absolute cutoff; the degenerate-column
 //!   test in [`mgs_qr`] is scale-relative for the same reason.
 
+use crate::obs;
 use crate::util::pool::{self, SendPtr};
-use crate::util::Pcg;
+use crate::util::{trace, Pcg};
 
 use super::mat::Mat;
 use super::simd;
@@ -121,6 +122,7 @@ const JACOBI_ROW_BLK: usize = 32;
 /// fall back to canonical directions projected off the accepted prefix
 /// (so Q is always full rank).
 pub fn mgs_qr(a: &Mat) -> Mat {
+    let _sp = trace::region("linalg", "mgs_qr");
     let (m, r) = (a.rows, a.cols);
     assert!(r <= m, "mgs_qr needs tall input, got {m}x{r}");
     // column-major working set: the right-looking updates own whole
@@ -201,6 +203,10 @@ fn mgs_pass(cols: &mut [Vec<f32>], m: usize) {
 /// [`symmetric_finite`]) — a gradient blowup must not panic a refresh.
 pub fn jacobi_eigh(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
     if a.rows < JACOBI_PAR_MIN_N {
+        // span here, not in the serial body: the serial kernel doubles
+        // as the blocked path's per-tile subproblem solver, where a
+        // span per tile pair would swamp the trace
+        let _sp = trace::span("linalg", "jacobi_eigh_serial");
         jacobi_eigh_serial(a, sweeps)
     } else if a.rows < JACOBI_BLOCKED_MIN_N {
         jacobi_eigh_rounds(a, sweeps)
@@ -293,6 +299,7 @@ pub fn jacobi_eigh_serial(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
         if off_diag_small(&w) {
             break;
         }
+        obs::EIGENSWEEPS.incr();
         cyclic_sweep(&mut w.data, &mut v.data, n, tol);
     }
     sort_eigh(w, v)
@@ -369,6 +376,7 @@ fn jacobi_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
 /// out over disjoint data. Public as the mid-size baseline the blocked
 /// path is benchmarked against (fig3/fig6 blocked-vs-rounds sections).
 pub fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
+    let _sp = trace::region("linalg", "jacobi_eigh_rounds");
     let n = a.rows;
     assert_eq!(n, a.cols);
     let mut w = symmetric_finite(a);
@@ -379,6 +387,7 @@ pub fn jacobi_eigh_rounds(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
         if off_diag_small(&w) {
             break;
         }
+        obs::EIGENSWEEPS.incr();
         for pairs in &rounds {
             // angles from the round-start matrix; serial — O(n) per round
             let rot: Vec<Option<(f32, f32)>> = pairs
@@ -597,6 +606,7 @@ pub fn jacobi_eigh_blocked(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
         // the subproblem solver at that size
         return jacobi_eigh_serial(a, sweeps);
     }
+    let _sp = trace::region("linalg", "jacobi_eigh_blocked");
     let mut w = symmetric_finite(a);
     let mut v = Mat::eye(n);
     let tol = pivot_threshold(&w);
@@ -605,6 +615,7 @@ pub fn jacobi_eigh_blocked(a: &Mat, sweeps: usize) -> (Mat, Vec<f32>) {
         if off_diag_small(&w) {
             break;
         }
+        obs::EIGENSWEEPS.incr();
         for pairs in &rounds {
             // pivot phase: independent 2b x 2b solves off the
             // round-start matrix — disjoint tiles, shared reads

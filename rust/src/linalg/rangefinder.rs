@@ -43,7 +43,7 @@
 //! Gaussian draw — a sketched refresh never panics and always returns
 //! an orthonormal basis with finite eigenvalues.
 
-use crate::util::Pcg;
+use crate::util::{trace, Pcg};
 
 use super::decomp::{jacobi_eigh_serial, mgs_qr};
 use super::mat::Mat;
@@ -94,6 +94,7 @@ pub fn sketched_eigh(
     spec: &SketchSpec,
     seed: u64,
 ) -> (Mat, Vec<f32>) {
+    let _sp = trace::region("linalg", "sketched_eigh");
     assert!(n > 0, "sketched_eigh needs a non-empty operator");
     let r = spec.rank.clamp(1, n);
     let s = (r + spec.oversample).min(n);

@@ -141,7 +141,14 @@ impl Refresh {
 pub(crate) fn sketch_anchor_due(state: &mut State, anchor_every: usize) -> bool {
     let c = state.scalar("rc");
     state.scalars.insert("rc", c + 1.0);
-    c == 0.0 || (anchor_every > 0 && (c as u64) % (anchor_every as u64) == 0)
+    let anchor = c == 0.0 || (anchor_every > 0 && (c as u64) % (anchor_every as u64) == 0);
+    // cost-ledger accounting only — never read back into control flow
+    if anchor {
+        crate::obs::REFRESH_ANCHOR.incr();
+    } else {
+        crate::obs::REFRESH_SKETCH.incr();
+    }
+    anchor
 }
 
 /// Subspace-switching strategies — Fig. 5(b) ablation axis (Alg. 2 = Switch).

@@ -1,10 +1,13 @@
 //! Tiny leveled logger (no `tracing`/`env_logger` offline).
 //!
-//! Level comes from `ALICE_RACS_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`. Timestamps are seconds since process start so logs
-//! are diff-able across runs.
+//! Level resolution, first hit wins: `ALICE_RACS_LOG` env var →
+//! `--log-level` flag / `[log] level` config key (merged by the CLI into
+//! [`init_str`]) → `info`. Values are `error|warn|info|debug|trace`; an
+//! unrecognized value warns **once** to stderr and falls back to `info`
+//! instead of silently dropping to the default. Timestamps are seconds
+//! since process start so logs are diff-able across runs.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -25,17 +28,40 @@ fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
+static WARNED_BAD: AtomicBool = AtomicBool::new(false);
+
+impl Level {
+    /// Parse a level name; `None` for anything unrecognized. Shared by
+    /// the env var, the `[log] level` config key, and `--log-level`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+/// Warn once per process about an unrecognized level value, then fall
+/// back to `info` — pre-fix this fell through silently (ISSUE 8).
+fn bad_value(source: &str, v: &str) -> Level {
+    if !WARNED_BAD.swap(true, Ordering::Relaxed) {
+        eprintln!("[log] unrecognized {source} value {v:?}; valid: error|warn|info|debug|trace — defaulting to info");
+    }
+    Level::Info
+}
+
 pub fn level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
     if raw != 255 {
         return unsafe { std::mem::transmute::<u8, Level>(raw) };
     }
-    let lv = match std::env::var("ALICE_RACS_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+    let lv = match std::env::var("ALICE_RACS_LOG") {
+        Ok(v) => Level::parse(&v).unwrap_or_else(|| bad_value("ALICE_RACS_LOG", &v)),
+        Err(_) => Level::Info,
     };
     LEVEL.store(lv as u8, Ordering::Relaxed);
     lv
@@ -43,6 +69,17 @@ pub fn level() -> Level {
 
 pub fn set_level(lv: Level) {
     LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Apply the config/CLI-resolved level name. The env var still wins: if
+/// `ALICE_RACS_LOG` is set (even to garbage, which warns), `name` is
+/// ignored. An unrecognized `name` warns once and keeps `info`.
+pub fn init_str(name: &str) {
+    if let Ok(v) = std::env::var("ALICE_RACS_LOG") {
+        set_level(Level::parse(&v).unwrap_or_else(|| bad_value("ALICE_RACS_LOG", &v)));
+        return;
+    }
+    set_level(Level::parse(name).unwrap_or_else(|| bad_value("log level", name)));
 }
 
 pub fn log(lv: Level, args: std::fmt::Arguments<'_>) {
@@ -86,6 +123,9 @@ macro_rules! debug {
 mod tests {
     use super::*;
 
+    // LEVEL is process-global; tests that write it serialize here.
+    static TLOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn levels_order() {
         assert!(Level::Error < Level::Warn);
@@ -94,8 +134,35 @@ mod tests {
 
     #[test]
     fn set_and_get() {
+        let _g = TLOCK.lock().unwrap();
         set_level(Level::Debug);
         assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_all_names() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("verbose"), None);
+        assert_eq!(Level::parse("INFO"), None); // names are lowercase
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn init_str_applies_config_level() {
+        let _g = TLOCK.lock().unwrap();
+        // tests run without ALICE_RACS_LOG in CI; guard so a local
+        // override doesn't produce a confusing failure
+        if std::env::var("ALICE_RACS_LOG").is_err() {
+            init_str("trace");
+            assert_eq!(level(), Level::Trace);
+            init_str("no-such-level"); // warns once, falls back
+            assert_eq!(level(), Level::Info);
+        }
         set_level(Level::Info);
     }
 }

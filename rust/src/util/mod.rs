@@ -9,6 +9,7 @@ pub mod log;
 pub mod pool;
 pub mod rng;
 pub mod timer;
+pub mod trace;
 
 pub use json::Json;
 pub use rng::Pcg;

@@ -269,6 +269,31 @@ pub fn with_context<R>(bits: u32, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// RAII guard for [`scoped_context`]; restores the previous context word
+/// on drop.
+pub struct CtxGuard {
+    prev: u32,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        LOCAL_CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// Replace the `mask` slice of this thread's context word with `bits`
+/// (other bits untouched) until the returned guard drops. Guard-style
+/// sibling of [`with_context`] for callers that can't wrap a closure —
+/// the span tracer stamps its region token this way (`util::trace`
+/// claims the upper 16 bits; bit 0 remains `linalg::simd`'s).
+pub fn scoped_context(mask: u32, bits: u32) -> CtxGuard {
+    LOCAL_CTX.with(|c| {
+        let prev = c.get();
+        c.set((prev & !mask) | (bits & mask));
+        CtxGuard { prev }
+    })
+}
+
 /// Borrow a thread-local f32 scratch buffer of at least `len` elements.
 /// Contents are **unspecified** on entry (stale bytes from earlier
 /// borrows) — callers must overwrite everything they read. One allocation
@@ -404,6 +429,10 @@ unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *
         p
     });
     claim_loop(h, f);
+    // Persistent workers never run TLS destructors between regions, so
+    // hand any spans this region recorded to the tracer sink now (one
+    // atomic load when tracing is off).
+    crate::util::trace::flush_thread();
     LOCAL_BUDGET.with(|c| c.set(prev_budget));
     LOCAL_CTX.with(|c| c.set(prev_ctx));
     LOCAL_THREADS.with(|c| c.set(prev));
@@ -505,6 +534,7 @@ fn run_ref<F: Fn(usize) + Sync>(n: usize, f: &F) {
         }
         return;
     }
+    crate::obs::POOL_DISPATCHES.incr();
     let header = RegionHeader {
         next: AtomicUsize::new(0),
         n,

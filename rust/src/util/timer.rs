@@ -55,6 +55,23 @@ impl Profile {
         out
     }
 
+    /// Merge another profile into this one (totals and call counts sum
+    /// per phase). Worker-side profiles recorded inside pool fan-outs
+    /// are absorbed at region end so per-layer timings are no longer
+    /// dropped on the worker threads (ISSUE 8).
+    pub fn absorb(&mut self, other: &Profile) {
+        for (name, (secs, calls)) in &other.acc {
+            let e = self.acc.entry(name).or_insert((0.0, 0));
+            e.0 += secs;
+            e.1 += calls;
+        }
+    }
+
+    /// Phase names recorded so far (sorted — `acc` is a BTreeMap).
+    pub fn phases(&self) -> Vec<&'static str> {
+        self.acc.keys().copied().collect()
+    }
+
     pub fn total(&self, name: &str) -> f64 {
         self.acc.get(name).map(|e| e.0).unwrap_or(0.0)
     }
@@ -65,7 +82,9 @@ impl Profile {
 
     pub fn report(&self) -> String {
         let mut rows: Vec<_> = self.acc.iter().collect();
-        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        // total_cmp per the PR-5 comparator policy: one NaN sample must
+        // degrade the report ordering, not panic it
+        rows.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
         let mut out = String::from("phase                          total_s   calls   mean_ms\n");
         for (name, (total, calls)) in rows {
             out.push_str(&format!(
@@ -98,5 +117,23 @@ mod tests {
         let v = p.time("x", || 41 + 1);
         assert_eq!(v, 42);
         assert_eq!(p.count("x"), 1);
+    }
+
+    #[test]
+    fn absorb_merges_totals_and_counts() {
+        let mut a = Profile::new();
+        a.add("shared", 1.0);
+        a.add("only_a", 0.5);
+        let mut b = Profile::new();
+        b.add("shared", 2.0);
+        b.add("shared", 1.0);
+        b.add("only_b", 0.25);
+        a.absorb(&b);
+        assert!((a.total("shared") - 4.0).abs() < 1e-12);
+        assert_eq!(a.count("shared"), 3);
+        assert!((a.total("only_b") - 0.25).abs() < 1e-12);
+        assert_eq!(a.phases(), vec!["only_a", "only_b", "shared"]);
+        // b is unchanged
+        assert_eq!(b.count("shared"), 2);
     }
 }

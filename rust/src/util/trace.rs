@@ -1,0 +1,379 @@
+//! Span tracer with Chrome-trace-event export (no `tracing` offline).
+//!
+//! A process-global, **off-by-default** tracer: instrumented call sites
+//! open a [`span`] (RAII guard) and the guard records a complete event —
+//! name, category, start, duration, thread lane — into a lock-free
+//! per-thread buffer when it drops. Buffers drain into a shared sink,
+//! and [`finish`] writes the sink as Chrome trace-event JSON loadable in
+//! `chrome://tracing` / [Perfetto](https://ui.perfetto.dev) (`ph:"X"`
+//! complete events; `pid` is the OS process id so the coordinator and
+//! worker traces of a 2-process TCP run can be merged side by side).
+//!
+//! ## Enabling
+//!
+//! Off by default; resolution order (first hit wins):
+//! 1. `AR_TRACE` env var — `1` means the default `runs/trace.json`,
+//!    any other non-empty value is the output path, `0`/empty disables.
+//! 2. `--trace [path]` CLI flag (see `cli.rs`).
+//! 3. `[log] trace_path` config key.
+//!
+//! ## Disabled cost
+//!
+//! When disabled every instrumented site costs one relaxed atomic load
+//! plus a branch ([`enabled`]) — no clock read, no TLS access, no
+//! allocation. The contract pinned by `tests/trace_obs.rs` is stronger:
+//! tracing **on or off never changes numerics** — spans only read the
+//! clock and append to buffers, they never reorder float ops or consume
+//! RNG draws, so every parity suite passes bitwise-unchanged either way.
+//!
+//! ## Span nesting across pool workers
+//!
+//! Same-thread nesting is positional (Chrome nests same-`tid` events by
+//! time containment). Cross-thread attribution rides the
+//! [`pool::context`](crate::util::pool::context) word: a [`region`]
+//! claims the upper 16 bits ([`CTX_MASK`]) for a fresh region token, and
+//! `pool::run` propagates the caller's context word into its workers, so
+//! spans recorded *inside* pool workers carry the dispatching region's
+//! token in their `args.ctx` — the trace viewer (or a script over the
+//! JSON) can fold worker lanes under the region that dispatched them.
+//! Bit 0 stays with `linalg::simd` per the pool's context-word doc.
+//!
+//! Identifiers passed as span names/categories must be plain
+//! `&'static str` literals without `"` or `\` — the writer does not
+//! escape (it never needs to for compile-time identifiers).
+
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::pool;
+
+/// Upper-16-bit slice of the `pool::context` word claimed for region
+/// tokens (bit 0 belongs to `linalg::simd`'s force-scalar flag).
+pub const CTX_MASK: u32 = 0xffff_0000;
+const CTX_SHIFT: u32 = 16;
+
+/// Per-thread events buffered before draining into the shared sink.
+const FLUSH_AT: usize = 256;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static NEXT_REGION: AtomicU32 = AtomicU32::new(1);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Is tracing live? One relaxed load + branch — the whole disabled-path
+/// cost of any instrumented site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    name: &'static str,
+    cat: &'static str,
+    ts_us: f64,
+    dur_us: f64,
+    tid: u32,
+    ctx: u32,
+}
+
+struct Sink {
+    path: PathBuf,
+    events: Vec<Event>,
+}
+
+struct ThreadBuf {
+    tid: u32,
+    buf: Vec<Event>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        drain_into_sink(&mut self.buf);
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::new(),
+    });
+}
+
+fn drain_into_sink(buf: &mut Vec<Event>) {
+    if buf.is_empty() {
+        return;
+    }
+    if let Ok(mut g) = SINK.lock() {
+        if let Some(sink) = g.as_mut() {
+            sink.events.append(buf);
+        }
+    }
+    // sink gone (tracing finished mid-flight): drop the stragglers
+    buf.clear();
+}
+
+fn record(mut ev: Event) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        ev.tid = t.tid;
+        t.buf.push(ev);
+        if t.buf.len() >= FLUSH_AT {
+            let tb = &mut *t;
+            drain_into_sink(&mut tb.buf);
+        }
+    });
+}
+
+/// Flush this thread's buffered events into the shared sink. The pool
+/// calls it at region end for its persistent workers (whose TLS never
+/// drops); long-lived non-pool threads (TCP readers) call it after each
+/// frame so [`finish`] on another thread misses nothing.
+pub fn flush_thread() {
+    if !enabled() {
+        return;
+    }
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let tb = &mut *t;
+        drain_into_sink(&mut tb.buf);
+    });
+}
+
+struct SpanOpen {
+    t0: f64,
+    cat: &'static str,
+    name: &'static str,
+    /// Context word frozen at open (regions); `None` reads
+    /// `pool::context()` at drop, which inherits the dispatching
+    /// region's token inside pool workers.
+    ctx: Option<u32>,
+}
+
+/// RAII span guard: records one complete event on drop. Zero-sized work
+/// when tracing is off (no clock read, `start` stays `None`).
+pub struct Span {
+    start: Option<SpanOpen>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(open) = self.start.take() {
+            let ctx = open.ctx.unwrap_or_else(pool::context);
+            record(Event {
+                name: open.name,
+                cat: open.cat,
+                ts_us: open.t0,
+                dur_us: now_us() - open.t0,
+                tid: 0,
+                ctx,
+            });
+        }
+    }
+}
+
+/// Open a span; the returned guard records `[open, drop)` as one event.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { start: None };
+    }
+    Span { start: Some(SpanOpen { t0: now_us(), cat, name, ctx: None }) }
+}
+
+/// Zero-duration marker event (state-machine transitions and the like).
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    record(Event { name, cat, ts_us: now_us(), dur_us: 0.0, tid: 0, ctx: pool::context() });
+}
+
+/// A span that also stamps a fresh region token into the upper 16 bits
+/// of the thread's `pool::context` word for its lifetime, so spans
+/// recorded in pool workers dispatched from inside it attribute back to
+/// it (`args.ctx` equality). The token is restored on drop.
+pub struct Region {
+    span: Span,
+    _ctx: Option<pool::CtxGuard>,
+}
+
+/// Open a region span (see [`Region`]).
+#[inline]
+pub fn region(cat: &'static str, name: &'static str) -> Region {
+    if !enabled() {
+        return Region { span: Span { start: None }, _ctx: None };
+    }
+    // 16-bit wrapping token, skipping 0 ("no region")
+    let mut token = NEXT_REGION.fetch_add(1, Ordering::Relaxed) & 0xffff;
+    if token == 0 {
+        token = NEXT_REGION.fetch_add(1, Ordering::Relaxed) & 0xffff;
+    }
+    let word = (pool::context() & !CTX_MASK) | (token << CTX_SHIFT);
+    let guard = pool::scoped_context(CTX_MASK, token << CTX_SHIFT);
+    Region {
+        span: Span { start: Some(SpanOpen { t0: now_us(), cat, name, ctx: Some(word) }) },
+        _ctx: Some(guard),
+    }
+}
+
+/// Region token (0 = none) carried by the current thread's context word.
+pub fn current_region() -> u32 {
+    (pool::context() & CTX_MASK) >> CTX_SHIFT
+}
+
+/// Start tracing into `path` (creates parent dirs at write time). Any
+/// previously buffered-but-undrained sink is replaced.
+pub fn init(path: &Path) {
+    let mut g = SINK.lock().unwrap();
+    *g = Some(Sink { path: path.to_path_buf(), events: Vec::new() });
+    drop(g);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Resolve the trace output path from env + config (see module doc):
+/// `AR_TRACE` wins, then the (CLI-merged) `[log] trace_path` value;
+/// empty means disabled.
+pub fn resolve_path(cfg_trace_path: &str) -> Option<PathBuf> {
+    match std::env::var("AR_TRACE") {
+        Ok(v) if v.is_empty() || v == "0" => None,
+        Ok(v) if v == "1" => Some(PathBuf::from("runs/trace.json")),
+        Ok(v) => Some(PathBuf::from(v)),
+        Err(_) if cfg_trace_path.is_empty() => None,
+        Err(_) => Some(PathBuf::from(cfg_trace_path)),
+    }
+}
+
+/// Convenience: [`resolve_path`] + [`init`]; returns the chosen path.
+pub fn init_resolved(cfg_trace_path: &str) -> Option<PathBuf> {
+    let path = resolve_path(cfg_trace_path)?;
+    init(&path);
+    Some(path)
+}
+
+/// Stop tracing, drain this thread's buffer, and write the sink as
+/// Chrome trace-event JSON. Returns the written path, or `None` if
+/// tracing was never [`init`]ialized. Idempotent.
+pub fn finish() -> std::io::Result<Option<PathBuf>> {
+    ENABLED.store(false, Ordering::Relaxed);
+    // flush the calling thread before taking the sink (pool workers
+    // flushed at their last region end, readers after their last frame)
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let tb = &mut *t;
+        drain_into_sink(&mut tb.buf);
+    });
+    let sink = SINK.lock().unwrap().take();
+    let Some(sink) = sink else { return Ok(None) };
+    write_chrome_json(&sink)?;
+    Ok(Some(sink.path))
+}
+
+fn write_chrome_json(sink: &Sink) -> std::io::Result<()> {
+    if let Some(dir) = sink.path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let pid = std::process::id();
+    let mut w = BufWriter::new(File::create(&sink.path)?);
+    write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    for (i, e) in sink.events.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        write!(
+            w,
+            "{sep}\n{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+             \"cat\":\"{}\",\"name\":\"{}\",\"args\":{{\"ctx\":{}}}}}",
+            e.tid, e.ts_us, e.dur_us, e.cat, e.name, e.ctx
+        )?;
+    }
+    writeln!(w, "\n]}}")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Process-global tracer: tests that toggle it serialize here.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("alice_trace_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _g = LOCK.lock().unwrap();
+        assert!(!enabled());
+        let s = span("t", "noop");
+        assert!(s.start.is_none());
+        drop(s);
+        instant("t", "noop");
+        assert!(finish().unwrap().is_none(), "no sink → Ok(None)");
+    }
+
+    #[test]
+    fn spans_written_as_valid_chrome_json() {
+        let _g = LOCK.lock().unwrap();
+        let path = tmp("basic.json");
+        init(&path);
+        {
+            let _r = region("t", "outer");
+            assert_ne!(current_region(), 0);
+            let _s = span("t", "inner");
+            instant("t", "mark");
+        }
+        assert_eq!(current_region(), 0);
+        let out = finish().unwrap().expect("sink written");
+        assert_eq!(out, path);
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&txt).expect("parses");
+        let evs = j.arr_of("traceEvents").unwrap();
+        let names: Vec<&str> = evs.iter().filter_map(|e| e.str_of("name").ok()).collect();
+        assert!(names.contains(&"outer"));
+        assert!(names.contains(&"inner"));
+        assert!(names.contains(&"mark"));
+        // inner/mark carry the outer region token in args.ctx
+        let ctx_of = |n: &str| -> f64 {
+            evs.iter()
+                .find(|e| e.str_of("name").ok() == Some(n))
+                .and_then(|e| e.get("args"))
+                .and_then(|a| a.f64_of("ctx").ok())
+                .unwrap()
+        };
+        let outer_ctx = ctx_of("outer");
+        assert!(outer_ctx >= (1u32 << 16) as f64);
+        assert_eq!(ctx_of("inner"), outer_ctx, "inner attributes to outer");
+        assert_eq!(ctx_of("mark"), outer_ctx, "mark attributes to outer");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_path_precedence() {
+        let _g = LOCK.lock().unwrap();
+        // env unset in tests: config value decides
+        if std::env::var("AR_TRACE").is_err() {
+            assert_eq!(resolve_path(""), None);
+            assert_eq!(resolve_path("x.json"), Some(PathBuf::from("x.json")));
+        }
+    }
+}

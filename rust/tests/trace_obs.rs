@@ -1,0 +1,140 @@
+//! Observability integration: the span tracer under the thread pool
+//! (token nesting, concurrent emit) and the headline guarantee of the
+//! whole instrumentation layer — **tracing on or off never changes
+//! numerics**, pinned here as bitwise parity of a full loopback dist
+//! run. The counter registry rides along: a clean loopback run must
+//! leave the wire and requeue ledgers untouched.
+//!
+//! The tracer and the `obs` registry are process-global, so every test
+//! in this binary serializes on one lock (the same pattern the tracer's
+//! unit tests use).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use alice_racs::dist::demo;
+use alice_racs::obs;
+use alice_racs::util::json::Json;
+use alice_racs::util::{pool, trace};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("alice_trace_obs_{}_{name}", std::process::id()));
+    p
+}
+
+fn parse_trace(path: &PathBuf) -> Json {
+    let txt = std::fs::read_to_string(path).expect("trace file readable");
+    Json::parse(&txt).expect("trace output must be valid JSON")
+}
+
+#[test]
+fn nested_pool_regions_attribute_worker_spans() {
+    let _g = LOCK.lock().unwrap();
+    let path = tmp("nesting.json");
+    trace::init(&path);
+    pool::with_threads(4, || {
+        let _outer = trace::region("test", "outer_region");
+        let outer_tok = trace::current_region();
+        assert_ne!(outer_tok, 0, "region must stamp a token");
+        {
+            let _inner = trace::region("test", "inner_region");
+            let inner_tok = trace::current_region();
+            assert_ne!(inner_tok, 0);
+            assert_ne!(inner_tok, outer_tok, "nested region gets a fresh token");
+            // spans inside pool workers inherit the *innermost* region's
+            // token via the propagated context word
+            pool::run(8, |_i| {
+                let _s = trace::span("test", "worker_task");
+            });
+        }
+        assert_eq!(trace::current_region(), outer_tok, "outer token restored on drop");
+    });
+    let out = trace::finish().unwrap().expect("trace written");
+    let j = parse_trace(&out);
+    let evs = j.arr_of("traceEvents").unwrap();
+    let ctxs_of = |n: &str| -> Vec<f64> {
+        evs.iter()
+            .filter(|e| e.str_of("name").ok() == Some(n))
+            .map(|e| e.get("args").and_then(|a| a.f64_of("ctx").ok()).expect("args.ctx"))
+            .collect()
+    };
+    let outer_ctx = ctxs_of("outer_region");
+    let inner_ctx = ctxs_of("inner_region");
+    assert_eq!(outer_ctx.len(), 1);
+    assert_eq!(inner_ctx.len(), 1);
+    assert_ne!(outer_ctx[0], inner_ctx[0]);
+    let workers = ctxs_of("worker_task");
+    assert_eq!(workers.len(), 8, "every pool task's span must land in the sink");
+    for c in &workers {
+        assert_eq!(*c, inner_ctx[0], "worker span must attribute to the inner region");
+    }
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn concurrent_width4_emit_writes_valid_json() {
+    let _g = LOCK.lock().unwrap();
+    let path = tmp("concurrent.json");
+    trace::init(&path);
+    pool::with_threads(4, || {
+        let _r = trace::region("test", "fanout");
+        pool::run(64, |i| {
+            let _s = trace::span("test", if i % 2 == 0 { "even" } else { "odd" });
+            std::hint::black_box(i * i);
+        });
+    });
+    let out = trace::finish().unwrap().expect("trace written");
+    let j = parse_trace(&out);
+    let evs = j.arr_of("traceEvents").unwrap();
+    let n = evs
+        .iter()
+        .filter(|e| matches!(e.str_of("name").ok(), Some("even") | Some("odd")))
+        .count();
+    assert_eq!(n, 64, "64 concurrent worker spans, none lost or torn");
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn tracing_never_changes_dist_round_numerics() {
+    let _g = LOCK.lock().unwrap();
+    // spans only read the clock and append to buffers — a traced loopback
+    // run must reproduce the untraced bits exactly, at pool width 4 where
+    // scheduling pressure is real
+    pool::with_threads(4, || {
+        let cfg = demo::DemoCfg { micro: 6, steps: 3, ..Default::default() };
+        let off = demo::run_loopback(&cfg, 2, 1).unwrap();
+        let path = tmp("parity.json");
+        trace::init(&path);
+        let on = demo::run_loopback(&cfg, 2, 1).unwrap();
+        let out = trace::finish().unwrap().expect("trace written");
+        assert_eq!(on.loss_bits, off.loss_bits, "tracing changed the loss bits");
+        assert_eq!(on.weight_digest, off.weight_digest, "tracing changed the weights");
+        // and the traced run really recorded the round machinery
+        let j = parse_trace(&out);
+        let evs = j.arr_of("traceEvents").unwrap();
+        assert!(
+            evs.iter().any(|e| e.str_of("name").ok() == Some("dp_round")),
+            "traced run must contain the dp_round region"
+        );
+        let _ = std::fs::remove_file(&out);
+    });
+}
+
+#[test]
+fn obs_counters_stay_clean_on_a_loopback_run() {
+    let _g = LOCK.lock().unwrap();
+    obs::reset_all();
+    let cfg = demo::DemoCfg { micro: 4, steps: 2, ..Default::default() };
+    demo::run_loopback(&cfg, 2, 1).unwrap();
+    assert_eq!(obs::wire_totals(), (0, 0), "loopback moves no wire bytes");
+    assert_eq!(obs::REQUEUES.get(), 0, "a clean run requeues nothing");
+    // snapshot() surfaces non-zero entries only, and report() renders it
+    obs::STATE_BYTES.set(1234);
+    let snap = obs::snapshot();
+    assert!(snap.iter().any(|(n, v)| n == "opt.state_bytes" && *v == 1234), "{snap:?}");
+    assert!(obs::report().contains("opt.state_bytes"));
+    obs::reset_all();
+}

@@ -220,6 +220,34 @@ fn grad_accumulation_reduces_step_noise() {
 }
 
 #[test]
+fn profile_phase_set_is_width_invariant() {
+    if !have_artifacts() {
+        return;
+    }
+    // Worker-side per-layer profiles are merged into the trainer's profile
+    // at region end (Profile::absorb), so the *set* of accounted phases
+    // must not depend on the pool width — a width-4 run that silently
+    // dropped a worker's phases would desynchronize the profile report.
+    let phases_at = |width: usize| {
+        pool::with_threads(width, || {
+            let mut tr =
+                Trainer::new(base_cfg("alice", &format!("phases_w{width}"))).unwrap();
+            for _ in 0..6 {
+                tr.train_step(0.01).unwrap();
+            }
+            let mut p = tr.profile.phases();
+            p.sort_unstable();
+            p
+        })
+    };
+    let w1 = phases_at(1);
+    let w4 = phases_at(4);
+    assert_eq!(w1, w4, "phase sets diverged between widths");
+    assert!(w1.contains(&"opt_step_layer"), "{w1:?}");
+    assert!(w1.contains(&"opt_refresh_layer"), "{w1:?}");
+}
+
+#[test]
 fn state_elems_tracks_optimizer_memory() {
     if !have_artifacts() {
         return;

@@ -72,7 +72,8 @@ fn field<'a>(line: &'a str, key: &str) -> &'a str {
 /// The `demo digest=... losses=...` line a loopback run of this shape
 /// would print (`cmd_dist_demo` formats from the same `DemoOut`).
 fn loopback_reference(micro: usize, steps: u64) -> (String, String) {
-    let out = demo::run_loopback(&demo::DemoCfg { micro, steps }, 2, 1).unwrap();
+    let out =
+        demo::run_loopback(&demo::DemoCfg { micro, steps, ..Default::default() }, 2, 1).unwrap();
     let losses: Vec<String> = out.loss_bits.iter().map(|b| format!("{b:08x}")).collect();
     (format!("{:016x}", out.weight_digest), losses.join(","))
 }

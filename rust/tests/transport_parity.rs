@@ -11,10 +11,10 @@
 use std::thread::{self, JoinHandle};
 
 use alice_racs::bench;
-use alice_racs::dist::transport::{run_worker, WorkerReport};
+use alice_racs::dist::transport::{dec_witness_frame, enc_witness, run_worker, WorkerReport};
 use alice_racs::dist::{
     demo, run_round_via, DistConfig, TcpCoordinator, Transport, TransportKind, WireCfg,
-    WorkerCfg,
+    WitnessMember, WitnessReport, WorkerCfg,
 };
 
 fn wire(run_id: &str) -> WireCfg {
@@ -34,7 +34,7 @@ fn spawn_worker(
     let run_id = run_id.to_string();
     thread::spawn(move || {
         run_worker(
-            &WorkerCfg { connect: addr, run_id, fail_after_micro },
+            &WorkerCfg { connect: addr, run_id, fail_after_micro, witness_path: None },
             &demo::demo_src(),
         )
     })
@@ -71,7 +71,7 @@ fn run_tcp_demo(
 
 #[test]
 fn tcp_two_workers_match_loopback_bitwise() {
-    let cfg = demo::DemoCfg { micro: 6, steps: 3 };
+    let cfg = demo::DemoCfg { micro: 6, steps: 3, ..Default::default() };
     let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
     let (out, reports) = run_tcp_demo(&cfg, "parity", &[None, None], 2);
     assert_eq!(out.loss_bits, reference.loss_bits, "per-step loss bits diverged");
@@ -84,6 +84,14 @@ fn tcp_two_workers_match_loopback_bitwise() {
     }
     let total: usize = reports.iter().map(|r| r.micro).sum();
     assert_eq!(total, 6 * 3, "every microbatch executed exactly once");
+    // each worker saw one witness broadcast per round, and the ledger
+    // agrees with the executed work
+    for r in &reports {
+        assert_eq!(r.witnesses.len(), 3, "worker {} missed a witness", r.member);
+        assert!(r.witnesses.iter().all(|w| w.workers == 2 && w.requeues == 0));
+        let ledger: u64 = r.witnesses.iter().map(|w| w.micro).sum();
+        assert_eq!(ledger, 6 * 3, "witness ledger disagrees with executed microbatches");
+    }
 }
 
 #[test]
@@ -94,7 +102,7 @@ fn mid_round_disconnect_requeues_bitwise() {
     // coordinator must requeue its whole round-2 shard (3 indices) onto
     // the survivor, and the result must match an undisturbed loopback
     // run bit for bit.
-    let cfg = demo::DemoCfg { micro: 6, steps: 2 };
+    let cfg = demo::DemoCfg { micro: 6, steps: 2, ..Default::default() };
     let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
     let (out, reports) = run_tcp_demo(&cfg, "chaos", &[None, Some(4)], 2);
     assert_eq!(out.loss_bits, reference.loss_bits, "requeue changed the loss bits");
@@ -102,6 +110,39 @@ fn mid_round_disconnect_requeues_bitwise() {
     assert_eq!(out.requeues, 3, "the dead worker's round-2 shard requeues whole");
     let failed = reports.iter().find(|r| r.micro == 4).expect("failing worker report");
     assert_eq!(failed.shards, 1, "crashed mid-shard, so only round 1 counts");
+    // the survivor's round-2 witness carries the requeue ledger the
+    // coordinator saw, straight off the wire
+    let survivor = reports.iter().find(|r| r.micro > 4).expect("survivor report");
+    let last = survivor.witnesses.last().expect("survivor saw the final witness");
+    assert_eq!(last.requeues, 3, "witness broadcast must carry the requeue count");
+    assert!(
+        last.members.iter().any(|m| !m.alive),
+        "health ledger must mark the departed member: {last:?}"
+    );
+}
+
+#[test]
+fn witness_frame_roundtrips_the_wire_encoding() {
+    // codec-level twin of the broadcast checks above: an arbitrary report
+    // survives enc → frame → dec bit-for-bit (f64 fields are exact powers
+    // of two on purpose — equality here is bitwise, not approximate)
+    let w = WitnessReport {
+        round: 9,
+        workers: 2,
+        micro: 12,
+        requeues: 3,
+        stragglers: 1,
+        grad_secs: 0.125,
+        reduce_secs: 0.0625,
+        imbalance: 1.25,
+        median_secs: 0.5,
+        members: vec![
+            WitnessMember { id: 1, alive: true, micro_done: 9, requeued: 3, straggles: 1 },
+            WitnessMember { id: 2, alive: false, micro_done: 3, requeued: 0, straggles: 0 },
+        ],
+    };
+    let frame = enc_witness(&w);
+    assert_eq!(dec_witness_frame(&frame).expect("decode witness frame"), w);
 }
 
 #[test]
@@ -179,7 +220,7 @@ fn wrong_run_id_is_rejected() {
 fn env_selected_transport_matches_reference() {
     // the CI dist cell runs this suite twice, AR_TRANSPORT={loopback,tcp}:
     // both cells must land on the same reference bits
-    let cfg = demo::DemoCfg { micro: 8, steps: 4 };
+    let cfg = demo::DemoCfg { micro: 8, steps: 4, ..Default::default() };
     let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
     let out = match bench::bench_transport() {
         TransportKind::Loopback => demo::run_loopback(&cfg, 3, 2).unwrap(),
