@@ -1,0 +1,244 @@
+//! Figure 8 (repo extension) — serving throughput and latency of the
+//! continuous-batching forward path (`src/serve/`), in both arrival
+//! modes:
+//!
+//! * **Closed-loop**: the whole request set is queued up front and the
+//!   serve loop drains it — peak-throughput shape, swept over pool
+//!   widths {1, 4} × max-batch {1, 3, 8}, with the live bitwise assert
+//!   that every batched score equals the sequential score (batching is
+//!   scheduling, never numerics).
+//! * **Open-loop**: a producer thread submits with deterministic
+//!   inter-arrival gaps and occasional bursts while the serve loop
+//!   coalesces under its max-batch/max-wait policy — the latency-tail
+//!   shape (p50/p95/p99 end to end), plus the obs batch-fill histogram.
+//!
+//! A third, artifact-gated section trains briefly, checkpoints, loads
+//! the checkpoint through `Checkpoint::load_model` (no optimizer state —
+//! the state-bytes gauge is asserted 0), and serves real `eval_loss`
+//! scoring requests.
+//!
+//! Protocol notes live in EXPERIMENTS.md §fig8. `AR_BENCH_SMOKE=1`
+//! shrinks the request counts for CI's bench-smoke job (every parity
+//! assert stays live) and the summary lands in
+//! `runs/bench/fig8_serving_summary.json`.
+
+use std::time::Duration;
+
+use alice_racs::bench::{artifacts_available, bench_cfg, smoke, write_summary, TablePrinter};
+use alice_racs::coordinator::Trainer;
+use alice_racs::obs;
+use alice_racs::serve::{
+    latency_summary, queue, score_batched, serve_loop, synthetic_requests, BatchPolicy,
+    Request, ScoreSource, SyntheticScoreSource,
+};
+use alice_racs::util::json::{num, obj, s};
+use alice_racs::util::{pool, trace, Json, Timer};
+
+/// One measured drain of `reqs` through the continuous-batching queue.
+fn drain(
+    src: &dyn ScoreSource,
+    reqs: &[Request],
+    policy: &BatchPolicy,
+) -> (f64, Vec<alice_racs::serve::Response>) {
+    let (ingress, q) = queue();
+    let t = Timer::start();
+    for r in reqs {
+        ingress.submit(r.id, r.tokens.clone());
+    }
+    drop(ingress);
+    let resps = serve_loop(src, policy, q).expect("serve loop");
+    (t.secs(), resps)
+}
+
+fn closed_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
+    let direct: Vec<u32> = reqs
+        .iter()
+        .map(|r| src.score(r.id, &r.tokens).expect("direct").to_bits())
+        .collect();
+    println!("== closed-loop: {} requests pre-queued, widths x max-batch ==", reqs.len());
+    let mut table = TablePrinter::new(&[
+        "width",
+        "max_batch",
+        "req/s",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for width in [1usize, 4] {
+        for max_batch in [1usize, 3, 8] {
+            let policy =
+                BatchPolicy { max_batch, max_wait: Duration::from_millis(1) };
+            let (secs, resps) =
+                pool::with_threads(width, || drain(src, reqs, &policy));
+            assert_eq!(resps.len(), reqs.len());
+            for r in &resps {
+                // the live determinism contract: batched == sequential, bitwise
+                assert_eq!(
+                    r.score.to_bits(),
+                    direct[r.id as usize],
+                    "width {width}, max_batch {max_batch}, id {}",
+                    r.id
+                );
+            }
+            let lat = latency_summary(&resps);
+            let rps = reqs.len() as f64 / secs.max(1e-9);
+            table.row(vec![
+                width.to_string(),
+                max_batch.to_string(),
+                format!("{rps:.0}"),
+                format!("{:.3}", lat.p50 * 1e3),
+                format!("{:.3}", lat.p95 * 1e3),
+                format!("{:.3}", lat.p99 * 1e3),
+            ]);
+            rows.push(obj(vec![
+                ("width", num(width as f64)),
+                ("max_batch", num(max_batch as f64)),
+                ("req_per_s", num(rps)),
+                ("p50_ms", num(lat.p50 * 1e3)),
+                ("p95_ms", num(lat.p95 * 1e3)),
+                ("p99_ms", num(lat.p99 * 1e3)),
+            ]));
+        }
+    }
+    table.print();
+    println!("(every row scored bitwise-identical to the sequential pass)");
+    obj(vec![
+        ("requests", num(reqs.len() as f64)),
+        ("parity", s("batched == sequential bitwise, widths {1,4} x max-batch {1,3,8}")),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+fn open_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
+    println!("\n== open-loop: producer thread, deterministic arrival gaps ==");
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+    let (ingress, q) = queue();
+    let producer_reqs: Vec<Request> = reqs.to_vec();
+    let producer = std::thread::spawn(move || {
+        for (i, r) in producer_reqs.into_iter().enumerate() {
+            // steady trickle with a burst every 16th request: exercises both
+            // the max-wait timeout path and the batch-full path
+            if i % 16 != 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            assert!(ingress.submit(r.id, r.tokens));
+        }
+    });
+    let t = Timer::start();
+    let resps = serve_loop(src, &policy, q).expect("serve loop");
+    let secs = t.secs();
+    producer.join().unwrap();
+    assert_eq!(resps.len(), reqs.len(), "open loop must drain every request");
+    for r in &resps {
+        let direct = src.score(r.id, &reqs[r.id as usize].tokens).expect("direct");
+        assert_eq!(r.score.to_bits(), direct.to_bits(), "id {}", r.id);
+    }
+    let lat = latency_summary(&resps);
+    let rps = resps.len() as f64 / secs.max(1e-9);
+    let fill = obs::serve_fill_snapshot();
+    println!(
+        "served={} req/s={rps:.0} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+        resps.len(),
+        lat.p50 * 1e3,
+        lat.p95 * 1e3,
+        lat.p99 * 1e3
+    );
+    println!("batch-fill histogram (eighths of max_batch): {fill:?}");
+    obj(vec![
+        ("requests", num(reqs.len() as f64)),
+        ("req_per_s", num(rps)),
+        ("p50_ms", num(lat.p50 * 1e3)),
+        ("p95_ms", num(lat.p95 * 1e3)),
+        ("p99_ms", num(lat.p99 * 1e3)),
+        (
+            "fill_histogram",
+            Json::Arr(fill.iter().map(|&c| num(c as f64)).collect()),
+        ),
+    ])
+}
+
+fn model_section() -> Option<Json> {
+    if !artifacts_available() {
+        return None;
+    }
+    let steps = if smoke() { 6 } else { 20 };
+    println!("\n== checkpoint-served model: train {steps} steps, load, score ==");
+    let mut cfg = bench_cfg("adam", "fig8", steps);
+    cfg.out_dir = "runs/bench/fig8".into();
+    let mut trainer = Trainer::new(cfg).expect("trainer");
+    for _ in 0..steps {
+        trainer.train_step(0.01).expect("train step");
+    }
+    let ck = trainer.checkpoint();
+    drop(trainer);
+    obs::reset_all();
+    let model = ck.load_model("artifacts").expect("load model");
+    assert_eq!(obs::STATE_BYTES.get(), 0, "serving must allocate no optimizer state");
+    let (b, sq) = model.block_shape();
+    let vocab = model.manifest().model.vocab;
+    let n = if smoke() { 8 } else { 32 };
+    let reqs = synthetic_requests(n, b, sq, vocab, 0xf18);
+    let direct: Vec<u32> = reqs
+        .iter()
+        .map(|r| model.score(r.id, &r.tokens).expect("direct").to_bits())
+        .collect();
+    let mut table = TablePrinter::new(&["width", "req/s", "mean score"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for width in [1usize, 4] {
+        let t = Timer::start();
+        let scores =
+            pool::with_threads(width, || score_batched(&*model, &reqs, 4)).expect("scores");
+        let secs = t.secs();
+        let bits: Vec<u32> = scores.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, direct, "model scores must be width-invariant (width {width})");
+        let mean_score =
+            scores.iter().map(|&x| x as f64).sum::<f64>() / scores.len() as f64;
+        let rps = n as f64 / secs.max(1e-9);
+        table.row(vec![
+            width.to_string(),
+            format!("{rps:.1}"),
+            format!("{mean_score:.4}"),
+        ]);
+        rows.push(obj(vec![
+            ("width", num(width as f64)),
+            ("req_per_s", num(rps)),
+            ("mean_score", num(mean_score)),
+        ]));
+    }
+    table.print();
+    Some(obj(vec![
+        ("train_steps", num(steps as f64)),
+        ("requests", num(n as f64)),
+        ("state_bytes", num(obs::STATE_BYTES.get() as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+fn main() {
+    // AR_TRACE=1 (or =PATH) traces the whole bench; scheduling-only, so
+    // every bitwise parity assert above stays live under tracing
+    trace::init_resolved("");
+    let n = if smoke() { 64 } else { 512 };
+    let src = SyntheticScoreSource { work: if smoke() { 24 } else { 48 } };
+    let reqs = synthetic_requests(n, 4, 32, 997, 0x5e1e);
+    let closed = closed_loop_section(&src, &reqs);
+    let open = open_loop_section(&src, &reqs);
+    let mut fields = vec![
+        ("smoke", Json::Bool(smoke())),
+        ("closed_loop", closed),
+        ("open_loop", open),
+    ];
+    if let Some(m) = model_section() {
+        fields.push(("model", m));
+    }
+    match write_summary("fig8_serving", &obj(fields)) {
+        Ok(path) => println!("summary → {path}"),
+        Err(e) => eprintln!("could not write fig8 summary: {e:#}"),
+    }
+    match trace::finish() {
+        Ok(Some(p)) => println!("trace → {}", p.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("trace write failed: {e:#}"),
+    }
+}

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! alice-racs train   [--config run.toml] [--opt alice] [--steps N] ...
+//! alice-racs serve   --ckpt FILE [--artifacts DIR] [--max-batch N] ...
 //! alice-racs eval    --artifacts DIR --ckpt FILE
 //! alice-racs memory  [--preset llama1b] [--opt racs] [--rank 512]
 //! alice-racs inspect [--artifacts DIR]
@@ -14,7 +15,8 @@ use crate::coordinator;
 use crate::dist::{self, demo, DistConfig, TcpCoordinator, TransportKind, WorkerCfg};
 use crate::opt;
 use crate::runtime::Engine;
-use crate::util::{log, trace};
+use crate::serve;
+use crate::util::{log, trace, Timer};
 
 /// Parsed `--key value` / `--flag` arguments after the subcommand.
 pub struct Args {
@@ -118,6 +120,26 @@ USAGE:
                                   [--witness PATH] (append per-round
                                    witness telemetry as JSON lines;
                                    workers default to runs/witness.jsonl)
+  alice-racs serve   [--role loopback|server|client]
+                     (forward-only scoring service on a checkpoint — no
+                      optimizer state, no trainer; prints one
+                      `serve digest=...` line for bitwise comparison
+                      across batching policies and transports)
+                     shared:   [--ckpt FILE] [--artifacts DIR] |
+                               [--synthetic] [--synthetic-work N]
+                               [--max-batch N] [--max-wait-ms N]
+                               [--requests N] [--batch N] [--seq N]
+                               [--vocab N] [--seed N] [--run-id ID]
+                               [--trace [PATH]] [--log-level LEVEL]
+                     loopback: in-process queue → continuous-batching
+                               serve loop (default role)
+                     server:   [--listen HOST:PORT] [--idle-timeout-s F]
+                               (--requests 0 = serve until every client
+                                departs; prints `listening HOST:PORT`
+                                once bound)
+                     client:   --connect HOST:PORT (pipelines a
+                               deterministic synthetic request stream,
+                               prints its own digest line)
   alice-racs eval    [--artifacts DIR] --ckpt FILE [--batches N]
   alice-racs memory  [--preset NAME] [--opt NAME] [--rank N] [--no-head-adam]
   alice-racs inspect [--artifacts DIR]
@@ -132,6 +154,7 @@ pub fn main() -> Result<()> {
     let args = Args::parse(&argv)?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "dist-demo" => cmd_dist_demo(&args),
         "eval" => cmd_eval(&args),
         "memory" => cmd_memory(&args),
@@ -238,6 +261,149 @@ fn cmd_train(args: &Args) -> Result<()> {
         "final: train_loss={:.4} eval_loss={:?} tokens/s={:.0}",
         summary.last_train_loss, summary.final_eval_loss, summary.tokens_per_sec
     );
+    finish_trace();
+    Ok(())
+}
+
+/// The scoring backend a serve role runs against: a checkpoint-loaded
+/// [`serve::Model`] or the artifact-free synthetic stand-in.
+enum ServeSrc {
+    Model(std::sync::Arc<serve::Model>),
+    Synth(serve::SyntheticScoreSource),
+}
+
+impl ServeSrc {
+    fn as_dyn(&self) -> &dyn serve::ScoreSource {
+        match self {
+            ServeSrc::Model(m) => &**m,
+            ServeSrc::Synth(s) => s,
+        }
+    }
+}
+
+/// Build the score source plus the `(batch, seq, vocab)` defaults the
+/// synthetic request stream should use (the model's own block shape when
+/// a checkpoint is loaded, CLI fallbacks otherwise).
+fn serve_source(args: &Args) -> Result<(ServeSrc, (usize, usize, usize))> {
+    if let Some(ckpt) = args.get("ckpt") {
+        let ck = coordinator::Checkpoint::load(ckpt)?;
+        let model = ck.load_model(args.get("artifacts").unwrap_or("artifacts"))?;
+        let (b, s) = model.block_shape();
+        let v = model.manifest().model.vocab;
+        println!(
+            "model loaded: step={} preset={} state_bytes={}",
+            model.step,
+            model.manifest().model.preset,
+            crate::obs::STATE_BYTES.get()
+        );
+        Ok((ServeSrc::Model(model), (b, s, v)))
+    } else if args.get("synthetic").is_some() {
+        let src = serve::SyntheticScoreSource {
+            work: args.usize_or("synthetic-work", 0)?,
+        };
+        Ok((ServeSrc::Synth(src), (4, 32, 997)))
+    } else {
+        bail!("serve needs --ckpt FILE (with --artifacts DIR) or --synthetic")
+    }
+}
+
+/// The serving subcommand: score requests against a checkpoint-loaded
+/// model (or the synthetic source) through the continuous-batching
+/// queue — in-process (`loopback`), or over TCP (`server`/`client`).
+/// The digest lines are bitwise-comparable across roles and policies:
+/// batching and transport are scheduling, never numerics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    if let Some(l) = args.get("log-level") {
+        log::init_str(l);
+    }
+    trace::init_resolved(&trace_arg(args).unwrap_or_default());
+    let policy = serve::BatchPolicy {
+        max_batch: args.usize_or("max-batch", 8)?.max(1),
+        max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
+    };
+    let run_id = args.get("run-id").unwrap_or("serve").to_string();
+    let seed = args.usize_or("seed", 0x5eed)? as u64;
+    match args.get("role").unwrap_or("loopback") {
+        "loopback" => {
+            let (src, (db, ds, dv)) = serve_source(args)?;
+            let n = args.usize_or("requests", 64)?.max(1);
+            let reqs = serve::synthetic_requests(
+                n,
+                args.usize_or("batch", db)?,
+                args.usize_or("seq", ds)?,
+                args.usize_or("vocab", dv)?,
+                seed,
+            );
+            let (ingress, q) = serve::queue();
+            let t = Timer::start();
+            for r in &reqs {
+                ingress.submit(r.id, r.tokens.clone());
+            }
+            drop(ingress); // closed-loop: everything queued, let it drain
+            let resps = serve::serve_loop(src.as_dyn(), &policy, q)?;
+            let secs = t.secs();
+            let lat = serve::latency_summary(&resps);
+            println!(
+                "serve digest={:016x} served={} batches={} state_bytes={}",
+                serve::score_digest(&resps),
+                resps.len(),
+                crate::obs::SERVE_BATCHES.get(),
+                crate::obs::STATE_BYTES.get()
+            );
+            println!(
+                "throughput={:.0} req/s p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                resps.len() as f64 / secs.max(1e-9),
+                lat.p50 * 1e3,
+                lat.p95 * 1e3,
+                lat.p99 * 1e3
+            );
+        }
+        "server" => {
+            let (src, _) = serve_source(args)?;
+            let mut server =
+                serve::TcpServer::bind(args.get("listen").unwrap_or("127.0.0.1:0"), &run_id)?;
+            // client launchers parse this line for the bound port, so it
+            // must hit the pipe before the serve loop starts
+            println!("listening {}", server.local_addr());
+            std::io::stdout().flush()?;
+            let report = server.serve(
+                src.as_dyn(),
+                &policy,
+                args.usize_or("requests", 0)?,
+                Duration::from_secs_f64(args.f64_or("idle-timeout-s", 30.0)?),
+            )?;
+            println!(
+                "served={} batches={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                report.served,
+                report.batches,
+                crate::util::percentile(&report.latencies_s, 0.50) * 1e3,
+                crate::util::percentile(&report.latencies_s, 0.95) * 1e3,
+                crate::util::percentile(&report.latencies_s, 0.99) * 1e3
+            );
+        }
+        "client" => {
+            let connect = args
+                .get("connect")
+                .ok_or_else(|| anyhow!("--connect HOST:PORT required"))?;
+            let reqs = serve::synthetic_requests(
+                args.usize_or("requests", 32)?.max(1),
+                args.usize_or("batch", 4)?,
+                args.usize_or("seq", 32)?,
+                args.usize_or("vocab", 997)?,
+                seed,
+            );
+            let resps = serve::run_client(connect, &run_id, &reqs)?;
+            println!(
+                "client responses={} digest={:016x}",
+                resps.len(),
+                serve::score_digest(&resps)
+            );
+        }
+        other => bail!("--role must be loopback|server|client, got {other:?}"),
+    }
     finish_trace();
     Ok(())
 }
@@ -494,6 +660,25 @@ mod tests {
         assert!(cmd_dist_demo(&a).is_err());
         let w = Args::parse(&argv(&["dist-demo", "--role", "worker"])).unwrap();
         assert!(cmd_dist_demo(&w).is_err(), "worker without --connect must fail");
+    }
+
+    #[test]
+    fn serve_rejects_bad_role_missing_source_and_missing_connect() {
+        let bad = Args::parse(&argv(&["serve", "--role", "oracle"])).unwrap();
+        assert!(cmd_serve(&bad).is_err());
+        let nosrc = Args::parse(&argv(&["serve"])).unwrap();
+        assert!(cmd_serve(&nosrc).is_err(), "loopback without --ckpt/--synthetic must fail");
+        let c = Args::parse(&argv(&["serve", "--role", "client"])).unwrap();
+        assert!(cmd_serve(&c).is_err(), "client without --connect must fail");
+    }
+
+    #[test]
+    fn serve_loopback_synthetic_runs() {
+        let a = Args::parse(&argv(&[
+            "serve", "--synthetic", "--requests", "8", "--max-batch", "3",
+        ]))
+        .unwrap();
+        cmd_serve(&a).unwrap();
     }
 
     #[test]

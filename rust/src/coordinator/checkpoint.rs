@@ -16,8 +16,9 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::runtime::{HostTensor, ParamSpec};
 use crate::util::pool;
 
 /// Split a u64 into four 16-bit chunks stored as exact small f32 integers
@@ -91,6 +92,33 @@ impl Checkpoint {
             }
         }
         Ok(())
+    }
+
+    /// Decode the parameter tensors for `specs` (manifest order), shape-
+    /// checked against the manifest — the single param decoder behind both
+    /// `Trainer::restore` and the read-only serving loader
+    /// (`Checkpoint::load_model`), so the trainer and serve paths cannot
+    /// drift. Optimizer-state / RNG-stream / dist blobs are never touched.
+    pub fn decode_params(&self, specs: &[ParamSpec]) -> Result<Vec<HostTensor>> {
+        specs
+            .iter()
+            .map(|spec| {
+                let key = format!("param.{}", spec.name);
+                let (shape, data) = self
+                    .tensors
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("checkpoint missing tensor {key:?}"))?;
+                if shape != &spec.shape {
+                    bail!(
+                        "checkpoint shape mismatch for {:?}: file {:?}, manifest {:?}",
+                        spec.name,
+                        shape,
+                        spec.shape
+                    );
+                }
+                Ok(HostTensor::f32(shape.clone(), data.clone()))
+            })
+            .collect()
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
@@ -210,6 +238,30 @@ mod tests {
         assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p4).unwrap());
         let _ = std::fs::remove_file(&p1);
         let _ = std::fs::remove_file(&p4);
+    }
+
+    #[test]
+    fn decode_params_shape_checks_and_skips_state() {
+        let spec = |name: &str, shape: Vec<usize>| ParamSpec {
+            name: name.to_string(),
+            shape,
+            init_std: 0.0,
+        };
+        let mut ck = Checkpoint { step: 3, ..Default::default() };
+        ck.insert("param.w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        ck.insert("param.b", vec![3], vec![0.5, -0.5, 0.25]);
+        ck.insert("state.w.m", vec![2, 2], vec![9.0; 4]);
+        ck.insert("trainer.stream", vec![16], vec![0.0; 16]);
+        let params = ck
+            .decode_params(&[spec("w", vec![2, 2]), spec("b", vec![3])])
+            .unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].shape(), &[2, 2]);
+        assert_eq!(params[0].as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(params[1].as_f32().unwrap(), &[0.5, -0.5, 0.25]);
+        // Missing param and manifest/file shape drift are both hard errors.
+        assert!(ck.decode_params(&[spec("missing", vec![1])]).is_err());
+        assert!(ck.decode_params(&[spec("w", vec![4])]).is_err());
     }
 
     #[test]

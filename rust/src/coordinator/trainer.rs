@@ -25,7 +25,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExecPath, RunConfig};
-use crate::data::{CorpusConfig, SyncBatcher};
+use crate::data::{bucket_spans, CorpusConfig, SyncBatcher};
 use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord, Transport, TransportKind};
 use crate::info;
 use crate::linalg::Mat;
@@ -269,7 +269,7 @@ impl Trainer {
     fn accumulate_serial(&mut self, micro: usize) -> Result<(f32, Vec<Mat>)> {
         let _sp = trace::span("train", "grad_serial");
         // compile once up front; the loop then uses the shared-reference
-        // entry point, keeping exec-stat accounting in `run_prepared` only
+        // entry point, keeping exec-stat accounting in `execute` only
         self.engine.prepare("grad_step")?;
         let mut loss_acc = 0.0f32;
         let mut grads: Vec<Mat> = Vec::new();
@@ -281,7 +281,7 @@ impl Trainer {
             inputs.push(&tokens);
             inputs.extend(self.params.iter());
             let t0 = Timer::start();
-            let outs = self.engine.run_prepared("grad_step", &inputs)?;
+            let outs = self.engine.execute("grad_step", &inputs)?;
             self.profile.add("grad_exec", t0.secs());
             loss_acc += outs[0].scalar()?;
             // all-reduce: average microbatch grads
@@ -431,9 +431,10 @@ impl Trainer {
         if self.step == 1 || self.step % k == 0 {
             self.refresh_fused()?;
         }
+        self.engine.prepare(&name)?;
         let t_data = Timer::start();
-            let tokens = self.tokens_input();
-            self.profile.add("data", t_data.secs());
+        let tokens = self.tokens_input();
+        self.profile.add("data", t_data.secs());
         let lr_t = HostTensor::scalar_f32(lr);
         let step_t = HostTensor::scalar_f32(self.step as f32);
         let mut inputs: Vec<&HostTensor> =
@@ -444,7 +445,7 @@ impl Trainer {
         inputs.extend(self.params.iter());
         inputs.extend(self.fused_state.iter());
         let t0 = Timer::start();
-        let mut outs = self.engine.run_refs(&name, &inputs)?;
+        let mut outs = self.engine.execute(&name, &inputs)?;
         self.profile.add("fused_exec", t0.secs());
         let loss = outs[0].scalar()?;
         let np = self.params.len();
@@ -459,6 +460,7 @@ impl Trainer {
         if !self.engine.manifest.artifacts.contains_key(&name) {
             return Ok(()); // optimizer without refresh (e.g. adam)
         }
+        self.engine.prepare(&name)?;
         let tokens = self.tokens_input();
         let seed = (self.rng.next_u32() & 0x7fff_ffff) as i32;
         let seed_t = HostTensor::scalar_i32(seed);
@@ -469,7 +471,7 @@ impl Trainer {
         inputs.extend(self.params.iter());
         inputs.extend(self.fused_state.iter());
         let t0 = Timer::start();
-        self.fused_state = self.engine.run_refs(&name, &inputs)?;
+        self.fused_state = self.engine.execute(&name, &inputs)?;
         self.profile.add("refresh_exec", t0.secs());
         Ok(())
     }
@@ -479,9 +481,11 @@ impl Trainer {
     /// the same held-out set every call).
     ///
     /// The batch stream is drawn serially (deterministic), then the
-    /// batches are *scored* across the pool — each task shares the
-    /// prepared engine read-only, and the losses combine in batch order,
-    /// so the mean is identical to the serial loop at every pool width.
+    /// batches are *scored* across the pool in bounded [`bucket_spans`]
+    /// slices (the same ragged-tail arithmetic the serving batcher uses)
+    /// — each task shares the prepared engine read-only, and the losses
+    /// combine in batch order, so the mean is identical to the serial
+    /// loop at every pool width and any bucket size.
     pub fn eval(&mut self, batches: usize) -> Result<f32> {
         let _sp = trace::region("train", "eval");
         let m = self.engine.manifest.model.clone();
@@ -500,16 +504,22 @@ impl Trainer {
         self.engine.prepare("eval_loss")?;
         let engine = &self.engine;
         let params = &self.params;
-        let losses: Vec<Result<f32>> = pool::map(nb, |i| {
-            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + params.len());
-            inputs.push(&token_batches[i]);
-            inputs.extend(params.iter());
-            let outs = engine.run_prepared("eval_loss", &inputs)?;
-            outs[0].scalar()
-        });
+        // Bounded fan-out: at most EVAL_BUCKET scorings in flight, however
+        // large `batches` is; within a bucket the pool fans out, across
+        // buckets the sums append in batch order (bitwise-identical mean).
+        const EVAL_BUCKET: usize = 32;
         let mut acc = 0.0f32;
-        for loss in losses {
-            acc += loss?;
+        for (lo, len) in bucket_spans(nb, EVAL_BUCKET) {
+            let losses: Vec<Result<f32>> = pool::map(len, |j| {
+                let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + params.len());
+                inputs.push(&token_batches[lo + j]);
+                inputs.extend(params.iter());
+                let outs = engine.execute("eval_loss", &inputs)?;
+                outs[0].scalar()
+            });
+            for loss in losses {
+                acc += loss?;
+            }
         }
         self.profile.add("eval", t0.secs());
         Ok(acc / nb as f32)
@@ -592,16 +602,10 @@ impl Trainer {
 
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         self.step = ck.step;
-        for (p, spec) in self.params.iter_mut().zip(&self.engine.manifest.params) {
-            let (shape, data) = ck
-                .tensors
-                .get(&format!("param.{}", spec.name))
-                .ok_or_else(|| anyhow!("checkpoint missing param {}", spec.name))?;
-            if shape != p.shape() {
-                bail!("checkpoint shape mismatch for {}", spec.name);
-            }
-            p.as_f32_mut()?.copy_from_slice(data);
-        }
+        // Parameters route through the same decoder as the read-only
+        // serving loader (`Checkpoint::load_model`) — one shape-checked
+        // path, so trainer restore and serve load can't drift.
+        self.params = ck.decode_params(&self.engine.manifest.params)?;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let pname = self.engine.manifest.params[i].name.clone();
             for (k, m) in slot.state.mats.iter_mut() {
@@ -670,6 +674,14 @@ impl Trainer {
     pub fn state_elems(&self) -> u64 {
         self.slots.iter().map(|s| s.state_elems()).sum()
     }
+
+    /// Seed of the deterministic held-out eval stream — exposed so a
+    /// serving-side scorer can reconstruct the exact batch sequence
+    /// [`Trainer::eval`] consumes (`tests/serve_parity.rs` pins the
+    /// serve-vs-eval bitwise equality through it).
+    pub fn eval_seed(&self) -> u64 {
+        self.eval_seed
+    }
 }
 
 /// The PJRT-backed [`GradSource`]: one `grad_step` execution per
@@ -686,7 +698,7 @@ impl GradSource for EngineGradSource<'_> {
         let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
         inputs.push(tokens);
         inputs.extend(self.params.iter());
-        let outs = self.engine.run_prepared("grad_step", &inputs)?;
+        let outs = self.engine.execute("grad_step", &inputs)?;
         let mut it = outs.into_iter();
         let loss = it
             .next()

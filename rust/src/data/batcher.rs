@@ -75,9 +75,50 @@ impl SyncBatcher {
     }
 }
 
+/// Width-bucketed batch assembly: split `0..total` into consecutive
+/// `(lo, len)` spans of at most `width` items, covering every index
+/// exactly once — the final span is ragged iff `width` does not divide
+/// `total`. The one slicing helper behind both `Trainer::eval`'s bounded
+/// fan-out and the serving batcher (`serve::score_batched`), so the
+/// ragged-tail arithmetic lives in exactly one place.
+pub fn bucket_spans(total: usize, width: usize) -> Vec<(usize, usize)> {
+    let width = width.max(1);
+    let mut spans = Vec::with_capacity(total.div_ceil(width));
+    let mut lo = 0;
+    while lo < total {
+        let len = width.min(total - lo);
+        spans.push((lo, len));
+        lo += len;
+    }
+    spans
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bucket_spans_cover_every_index_exactly_once() {
+        for (total, width) in [(0, 4), (1, 4), (4, 4), (5, 4), (8, 3), (9, 3), (7, 100), (6, 0)] {
+            let spans = bucket_spans(total, width);
+            let mut seen = Vec::new();
+            for &(lo, len) in &spans {
+                assert!(len >= 1 && len <= width.max(1), "({total},{width}): span len {len}");
+                seen.extend(lo..lo + len);
+            }
+            assert_eq!(seen, (0..total).collect::<Vec<_>>(), "({total},{width})");
+        }
+    }
+
+    #[test]
+    fn bucket_spans_final_span_is_ragged() {
+        assert_eq!(bucket_spans(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(bucket_spans(8, 4), vec![(0, 4), (4, 4)]);
+        assert_eq!(bucket_spans(3, 1), vec![(0, 1), (1, 1), (2, 1)]);
+        assert!(bucket_spans(0, 4).is_empty());
+        // width 0 is clamped to 1 rather than looping forever
+        assert_eq!(bucket_spans(2, 0), vec![(0, 1), (1, 1)]);
+    }
 
     #[test]
     fn async_and_sync_agree() {

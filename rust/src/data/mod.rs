@@ -9,5 +9,5 @@
 pub mod batcher;
 pub mod corpus;
 
-pub use batcher::{Batcher, SyncBatcher};
+pub use batcher::{bucket_spans, Batcher, SyncBatcher};
 pub use corpus::{Corpus, CorpusConfig};

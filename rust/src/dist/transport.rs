@@ -47,9 +47,16 @@
 //!              imbalance:f64 | median_secs:f64 |
 //!              {id:u64, alive:u8, micro_done:u64,   coordinator → worker,
 //!               requeued:u64, straggles:u64}*       round-end telemetry
+//! Request   := id:u64 | tensor                      serve client → server
+//! Response  := id:u64 | score:f32 | latency:f64     serve server → client
 //! str/[T]   := count:u64 | elements
 //! tensor    := tag:u8 (0=f32, 1=i32) | rank:u64 | dims:u64* | data
 //! ```
+//!
+//! The serving plane (`crate::serve::net`) rides the same frame machinery:
+//! its `Request`/`Response` kinds share the handshake, the length/count
+//! validation, and the per-kind obs wire accounting with the training
+//! frames.
 //!
 //! Every frame written or read is accounted in the `obs` wire-byte
 //! counters (per kind, in/out), and frame I/O opens `wire` trace spans —
@@ -81,8 +88,9 @@ use super::round::{Phase, RoundCoordinator, WitnessMember, WitnessReport};
 use super::worker::{self, GradSource};
 
 /// Handshake protocol version — bumped on any frame-layout change
-/// (v2: the round-end `Witness` telemetry frame, ISSUE 8).
-pub const PROTO_VERSION: u32 = 2;
+/// (v2: the round-end `Witness` telemetry frame, ISSUE 8; v3: the
+/// serving-plane `Request`/`Response` frames, ISSUE 9).
+pub const PROTO_VERSION: u32 = 3;
 
 /// Upper bound on one frame body (guards `Vec` allocation from the wire).
 pub const MAX_FRAME: usize = 1 << 30;
@@ -170,6 +178,8 @@ const K_SHARD: u8 = 5;
 const K_SHARD_DONE: u8 = 6;
 const K_DONE: u8 = 7;
 const K_WITNESS: u8 = 8;
+const K_REQUEST: u8 = 9;
+const K_RESPONSE: u8 = 10;
 
 /// Static tx/rx span names per frame kind (trace spans need `&'static str`).
 fn span_name(kind: u8, tx: bool) -> &'static str {
@@ -182,6 +192,8 @@ fn span_name(kind: u8, tx: bool) -> &'static str {
         (K_SHARD_DONE, true) => "tx_shard_done",
         (K_DONE, true) => "tx_done",
         (K_WITNESS, true) => "tx_witness",
+        (K_REQUEST, true) => "tx_request",
+        (K_RESPONSE, true) => "tx_response",
         (K_HELLO, false) => "rx_hello",
         (K_WELCOME, false) => "rx_welcome",
         (K_REJECT, false) => "rx_reject",
@@ -190,6 +202,8 @@ fn span_name(kind: u8, tx: bool) -> &'static str {
         (K_SHARD_DONE, false) => "rx_shard_done",
         (K_DONE, false) => "rx_done",
         (K_WITNESS, false) => "rx_witness",
+        (K_REQUEST, false) => "rx_request",
+        (K_RESPONSE, false) => "rx_response",
         (_, true) => "tx_unknown",
         (_, false) => "rx_unknown",
     }
@@ -197,7 +211,9 @@ fn span_name(kind: u8, tx: bool) -> &'static str {
 
 /// Write one encoded frame, accounting its bytes per kind and opening a
 /// `wire` tx span (the frame layout puts the kind byte at offset 4).
-fn send_frame(s: &mut TcpStream, buf: &[u8]) -> std::io::Result<()> {
+/// Crate-visible so the serving plane (`crate::serve::net`) shares the
+/// accounting path.
+pub(crate) fn send_frame(s: &mut TcpStream, buf: &[u8]) -> std::io::Result<()> {
     let kind = buf[4];
     let _sp = trace::span("wire", span_name(kind, true));
     obs::wire_out(kind, buf.len());
@@ -396,9 +412,11 @@ fn dec_node(r: &mut R) -> Result<Node<GradNode>> {
     Ok(Node { lo, len, value: GradNode { loss, grads } })
 }
 
-/// One parsed frame (coordinator- and worker-side).
+/// One parsed frame (coordinator-, worker-, and serve-side). Crate-visible
+/// so `crate::serve::net` speaks the same frames without re-implementing
+/// the codec.
 #[derive(Debug)]
-enum Frame {
+pub(crate) enum Frame {
     Hello { proto: u32, run_id: String },
     Welcome { member: u64, round: u64 },
     Reject { reason: String },
@@ -407,23 +425,25 @@ enum Frame {
     ShardDone { round: u64, seq: u64, secs: f64, nodes: Vec<Node<GradNode>> },
     Done,
     Witness(WitnessReport),
+    Request { id: u64, tokens: HostTensor },
+    Response { id: u64, score: f32, latency_s: f64 },
 }
 
-fn enc_hello(run_id: &str) -> Vec<u8> {
+pub(crate) fn enc_hello(run_id: &str) -> Vec<u8> {
     let mut w = W::new(K_HELLO);
     w.u32(PROTO_VERSION);
     w.str(run_id);
     w.frame()
 }
 
-fn enc_welcome(member: u64, round: u64) -> Vec<u8> {
+pub(crate) fn enc_welcome(member: u64, round: u64) -> Vec<u8> {
     let mut w = W::new(K_WELCOME);
     w.u64(member);
     w.u64(round);
     w.frame()
 }
 
-fn enc_reject(reason: &str) -> Vec<u8> {
+pub(crate) fn enc_reject(reason: &str) -> Vec<u8> {
     let mut w = W::new(K_REJECT);
     w.str(reason);
     w.frame()
@@ -465,8 +485,27 @@ fn enc_shard_done(round: u64, seq: u64, secs: f64, nodes: &[Node<GradNode>]) -> 
     w.frame()
 }
 
-fn enc_done() -> Vec<u8> {
+pub(crate) fn enc_done() -> Vec<u8> {
     W::new(K_DONE).frame()
+}
+
+/// Encode a serving-plane scoring request (proto v3): request id plus the
+/// token tensor, reusing the shard codec's `tensor` layout.
+pub(crate) fn enc_request(id: u64, tokens: &HostTensor) -> Vec<u8> {
+    let mut w = W::new(K_REQUEST);
+    w.u64(id);
+    enc_tensor(&mut w, tokens);
+    w.frame()
+}
+
+/// Encode a serving-plane scoring response: request id, the f32 score
+/// (bit-exact on the wire), and the server-side enqueue→scored latency.
+pub(crate) fn enc_response(id: u64, score: f32, latency_s: f64) -> Vec<u8> {
+    let mut w = W::new(K_RESPONSE);
+    w.u64(id);
+    w.f32(score);
+    w.f64(latency_s);
+    w.frame()
 }
 
 /// Encode a round-end witness broadcast. Public (with
@@ -541,7 +580,8 @@ pub fn dec_witness_frame(bytes: &[u8]) -> Result<WitnessReport> {
 
 /// Read one frame. `Ok(None)` means the peer closed the connection
 /// cleanly (EOF at a frame boundary); a truncated frame is an error.
-fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
+/// Crate-visible so the serving plane shares the decode/validation path.
+pub(crate) fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
     let mut lenb = [0u8; 4];
     match s.read_exact(&mut lenb) {
         Ok(()) => {}
@@ -601,6 +641,17 @@ fn read_frame(s: &mut impl Read) -> Result<Option<Frame>> {
         }
         K_DONE => Frame::Done,
         K_WITNESS => Frame::Witness(dec_witness(&mut r)?),
+        K_REQUEST => {
+            let id = r.u64()?;
+            let tokens = dec_tensor(&mut r)?;
+            Frame::Request { id, tokens }
+        }
+        K_RESPONSE => {
+            let id = r.u64()?;
+            let score = r.f32()?;
+            let latency_s = r.f64()?;
+            Frame::Response { id, score, latency_s }
+        }
         k => bail!("unknown frame kind {k}"),
     };
     Ok(Some(frame))
@@ -634,7 +685,9 @@ impl Default for WireCfg {
     }
 }
 
-enum Event {
+/// Reader-thread → event-loop message. Crate-visible so the serving
+/// plane's server pumps the same event shape from [`reader_loop`].
+pub(crate) enum Event {
     Hello { conn: u64, stream: TcpStream, proto: u32, run_id: String },
     Frame { conn: u64, frame: Frame },
     Closed { conn: u64 },
@@ -1034,7 +1087,8 @@ impl Drop for TcpCoordinator {
 /// Per-connection reader: handshake first, then frames, then a `Closed`
 /// event on EOF or any wire error — the coordinator treats the three
 /// failure modes (crash, network drop, protocol garbage) identically.
-fn reader_loop(conn: u64, mut stream: TcpStream, tx: Sender<Event>) {
+/// Crate-visible: the serving plane's accept loop spawns the same reader.
+pub(crate) fn reader_loop(conn: u64, mut stream: TcpStream, tx: Sender<Event>) {
     let _ = stream.set_nodelay(true);
     match read_frame(&mut stream) {
         Ok(Some(Frame::Hello { proto, run_id })) => {
@@ -1236,6 +1290,8 @@ mod tests {
                 }],
             ),
             enc_witness(&sample_witness()),
+            enc_request(77, &HostTensor::i32(vec![2, 3], vec![5, 0, -1, 997, 2, 3])),
+            enc_response(77, 3.5, 0.0625),
             enc_done(),
         ];
         for buf in cases {
@@ -1278,6 +1334,16 @@ mod tests {
                 Frame::Witness(w) => {
                     // f64 health figures and member rows travel bit-exactly
                     assert_eq!(w, sample_witness());
+                }
+                Frame::Request { id, tokens } => {
+                    assert_eq!(id, 77);
+                    assert_eq!(tokens.shape(), &[2, 3]);
+                    assert_eq!(tokens.as_i32().unwrap(), &[5, 0, -1, 997, 2, 3]);
+                }
+                Frame::Response { id, score, latency_s } => {
+                    assert_eq!(id, 77);
+                    assert_eq!(score.to_bits(), 3.5f32.to_bits());
+                    assert_eq!(latency_s.to_bits(), 0.0625f64.to_bits());
                 }
                 Frame::Done => {}
             }

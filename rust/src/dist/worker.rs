@@ -9,7 +9,7 @@
 //! shards concurrently while width 1 replays them serially with identical
 //! bits. What a microbatch gradient *is* comes from a [`GradSource`]:
 //! the trainer plugs in the PJRT `grad_step` executable
-//! (`Engine::run_prepared` is `&self`, exactly like the eval fan-out),
+//! (`Engine::execute` is `&self`, exactly like the eval fan-out),
 //! while the parity tests and the fig7 bench plug in
 //! [`SyntheticGradSource`] and need no artifacts at all.
 

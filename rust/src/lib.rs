@@ -29,5 +29,6 @@ pub mod linalg;
 pub mod obs;
 pub mod opt;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

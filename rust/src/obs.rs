@@ -70,12 +70,32 @@ pub static EIGENSWEEPS: Counter = Counter::new("linalg.eigensweeps");
 pub static POOL_DISPATCHES: Counter = Counter::new("pool.dispatches");
 /// Gauge: resident optimizer state, bytes (`state_elems() * 4`).
 pub static STATE_BYTES: Counter = Counter::new("opt.state_bytes");
+/// Scoring requests admitted to the serving queue (any ingress: loopback
+/// submit or TCP `Request` frame).
+pub static SERVE_REQUESTS: Counter = Counter::new("serve.requests");
+/// Request payload bytes admitted (token tensors, 4 bytes/element).
+pub static SERVE_REQ_BYTES: Counter = Counter::new("serve.request_bytes");
+/// Serving batches dispatched across the pool (see [`serve_fill`]).
+pub static SERVE_BATCHES: Counter = Counter::new("serve.batches");
+/// Gauge: requests still waiting in the serve queue after the most
+/// recent enqueue/dispatch.
+pub static SERVE_QUEUE_DEPTH: Counter = Counter::new("serve.queue_depth");
 
-static ALL: &[&Counter] =
-    &[&REQUEUES, &REFRESH_SKETCH, &REFRESH_ANCHOR, &EIGENSWEEPS, &POOL_DISPATCHES, &STATE_BYTES];
+static ALL: &[&Counter] = &[
+    &REQUEUES,
+    &REFRESH_SKETCH,
+    &REFRESH_ANCHOR,
+    &EIGENSWEEPS,
+    &POOL_DISPATCHES,
+    &STATE_BYTES,
+    &SERVE_REQUESTS,
+    &SERVE_REQ_BYTES,
+    &SERVE_BATCHES,
+    &SERVE_QUEUE_DEPTH,
+];
 
 /// Wire-byte accounting is per frame kind; kinds are the one-byte tags
-/// of `dist/transport.rs` (1..=8 today), clamped into this table.
+/// of `dist/transport.rs` (1..=10 today), clamped into this table.
 pub const FRAME_KINDS: usize = 16;
 
 #[allow(clippy::declare_interior_mutable_const)]
@@ -94,8 +114,33 @@ pub fn kind_name(kind: u8) -> &'static str {
         6 => "SHARD_DONE",
         7 => "DONE",
         8 => "WITNESS",
+        9 => "REQUEST",
+        10 => "RESPONSE",
         _ => "UNKNOWN",
     }
+}
+
+/// Batch-fill histogram resolution: dispatched batches are bucketed by
+/// fill fraction (`len / max_batch`) into eighths; the top bucket is
+/// exactly-full batches.
+pub const FILL_BUCKETS: usize = 8;
+
+static SERVE_FILL: [AtomicU64; FILL_BUCKETS] = [ZERO; FILL_BUCKETS];
+
+/// Account one dispatched serving batch of `len` requests under a
+/// `max_batch` cap: bumps [`SERVE_BATCHES`] and the fill histogram
+/// (bucket `ceil(8 · len/max)`, clamped).
+pub fn serve_fill(len: usize, max_batch: usize) {
+    SERVE_BATCHES.incr();
+    let max = max_batch.max(1);
+    let idx = (len * FILL_BUCKETS).div_ceil(max).clamp(1, FILL_BUCKETS) - 1;
+    SERVE_FILL[idx].fetch_add(1, Ordering::Relaxed);
+}
+
+/// The fill histogram — bucket `i` counts batches with fill fraction in
+/// `(i/8, (i+1)/8]` (so the last bucket is exactly-full dispatches).
+pub fn serve_fill_snapshot() -> [u64; FILL_BUCKETS] {
+    std::array::from_fn(|i| SERVE_FILL[i].load(Ordering::Relaxed))
 }
 
 #[inline]
@@ -142,6 +187,12 @@ pub fn snapshot() -> Vec<(String, u64)> {
             out.push((format!("wire.out.{}", kind_name(k as u8)), o));
         }
     }
+    for (i, c) in SERVE_FILL.iter().enumerate() {
+        let v = c.load(Ordering::Relaxed);
+        if v != 0 {
+            out.push((format!("serve.fill.{}of{}", i + 1, FILL_BUCKETS), v));
+        }
+    }
     out.sort();
     out
 }
@@ -164,6 +215,9 @@ pub fn reset_all() {
         WIRE_IN[k].store(0, Ordering::Relaxed);
         WIRE_OUT[k].store(0, Ordering::Relaxed);
     }
+    for c in &SERVE_FILL {
+        c.store(0, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -184,11 +238,28 @@ mod tests {
 
     #[test]
     fn kind_names_cover_protocol() {
-        for k in 1..=8u8 {
+        for k in 1..=10u8 {
             assert_ne!(kind_name(k), "UNKNOWN");
         }
         assert_eq!(kind_name(0), "UNKNOWN");
-        assert_eq!(kind_name(9), "UNKNOWN");
+        assert_eq!(kind_name(11), "UNKNOWN");
+    }
+
+    #[test]
+    fn serve_fill_buckets_by_fraction() {
+        let before = serve_fill_snapshot();
+        let batches = SERVE_BATCHES.get();
+        serve_fill(1, 8); // 1/8 full → bucket 0
+        serve_fill(8, 8); // exactly full → bucket 7
+        serve_fill(5, 8); // 5/8 full → bucket 4
+        serve_fill(3, 0); // max clamped to 1 → overfull clamps to top
+        let after = serve_fill_snapshot();
+        // ≥ deltas: other tests in this binary may bump the process-wide
+        // histogram concurrently
+        assert!(after[0] >= before[0] + 1);
+        assert!(after[4] >= before[4] + 1);
+        assert!(after[7] >= before[7] + 2);
+        assert!(SERVE_BATCHES.get() >= batches + 4);
     }
 
     #[test]

@@ -132,10 +132,11 @@ impl HostTensor {
 
 /// Compiled-executable cache keyed by artifact name.
 ///
-/// Execution is splittable across threads: [`Engine::run_prepared`] takes
+/// Execution is splittable across threads: [`Engine::execute`] takes
 /// `&self` (the PJRT CPU client executes concurrently; the stub types are
-/// plain data), which is what lets `Trainer::eval` fan batches out over
-/// `util::pool`. Compilation ([`Engine::prepare`]) stays `&mut self`.
+/// plain data), which is what lets `Trainer::eval` and the serving batcher
+/// fan batches out over `util::pool` against one shared engine.
+/// Compilation ([`Engine::prepare`]) stays `&mut self`.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -213,28 +214,41 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute an artifact. Inputs must match the manifest signature order;
-    /// outputs come back in manifest order (the lowered module returns a
-    /// tuple — `return_tuple=True` — which is decomposed here).
+    /// Deprecated forwarder: owned-input convenience over the canonical
+    /// [`Engine::execute`] (prepares on the fly, copies nothing extra but
+    /// forces exclusive access). New code should call [`Engine::prepare`]
+    /// once and [`Engine::execute`] per call; kept so historical call
+    /// sites compile.
     pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let refs: Vec<&HostTensor> = inputs.iter().collect();
-        self.run_refs(name, &refs)
+        self.prepare(name)?;
+        self.execute(name, &refs)
     }
 
-    /// Borrowing variant of [`run`]: callers with long-lived tensors (the
-    /// trainer's parameter list) avoid a full host copy per step —
-    /// EXPERIMENTS.md §Perf L3-1.
+    /// Deprecated forwarder: the pre-redesign borrowed-input entry point
+    /// (EXPERIMENTS.md §Perf L3-1) — now just [`Engine::prepare`] +
+    /// [`Engine::execute`]. Kept so historical call sites compile.
     pub fn run_refs(&mut self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
-        self.run_prepared(name, inputs)
+        self.execute(name, inputs)
     }
 
-    /// Shared-reference execution of an already-[`prepare`]d artifact —
-    /// the entry point for pool fan-outs that score batches concurrently
-    /// (`Trainer::eval`). Errors if the artifact was never compiled.
+    /// Deprecated forwarder: the pre-redesign name of [`Engine::execute`].
+    /// Kept so historical call sites compile.
+    pub fn run_prepared(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute(name, inputs)
+    }
+
+    /// Execute an already-[`prepare`]d artifact — **the** canonical
+    /// execution entry point. Shared-reference (`&self`), so trainer
+    /// fan-outs and the serving pool dispatch batches concurrently
+    /// against one engine. Inputs must match the manifest signature
+    /// order; outputs come back in manifest order (the lowered module
+    /// returns a tuple — `return_tuple=True` — which is decomposed
+    /// here). Errors if the artifact was never compiled.
     ///
     /// [`prepare`]: Engine::prepare
-    pub fn run_prepared(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = self.manifest.artifact(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(

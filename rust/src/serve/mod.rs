@@ -1,0 +1,142 @@
+//! Forward-only serving subsystem — the ROADMAP "inference/serving stack"
+//! item: open the millions-of-users workload the training substrate was
+//! built for (ISSUE 9).
+//!
+//! Three pieces, smallest to largest:
+//!
+//! * [`Model`] — a read-only handle built by [`Checkpoint::load_model`]:
+//!   weights + manifest + a prepared engine, shared as `Arc<Model>`. No
+//!   optimizer state, no `Trainer` — the obs state-bytes gauge reads 0 in
+//!   a serve process.
+//! * [`score_batched`] / the [`queue`]-fed [`serve_loop`] — the
+//!   continuous-batching front end: arrivals coalesce into width-bucketed
+//!   batches under a [`BatchPolicy`] (max-batch / max-wait), each batch
+//!   fans out over the persistent `util::pool`, and every request's
+//!   enqueue→scored latency is tracked end to end.
+//! * [`TcpServer`] / [`run_client`] — the networked driver: serving-plane
+//!   `Request`/`Response` frames over the `dist/transport.rs` frame
+//!   machinery (same handshake, validation, and obs wire accounting).
+//!
+//! # Determinism contract
+//!
+//! Batching is scheduling, never numerics: a batched score is bitwise
+//! identical to scoring the same request alone, at every pool width and
+//! bucket size. The contract holds because each request gets its own
+//! [`ScoreSource::score`] call — the batcher only decides *when* and *on
+//! which thread* that call runs. `tests/serve_parity.rs` pins it at
+//! widths {1, 4}, across bucket sizes, through the in-process queue and
+//! over TCP. Trace spans and obs counters on this path are observational
+//! only, like everywhere else in the repo.
+//!
+//! [`Checkpoint::load_model`]: crate::coordinator::Checkpoint::load_model
+
+pub mod model;
+pub mod net;
+pub mod queue;
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+use crate::util::{pool, Pcg};
+
+pub use model::Model;
+pub use net::{run_client, ServeReport, TcpServer};
+pub use queue::{
+    latency_summary, queue, score_batched, score_digest, serve_loop, BatchPolicy, Ingress,
+    LatencySummary, Request, Response, ServeQueue,
+};
+
+/// Produces one request's score. Implementations must be pure in
+/// `(id, tokens)` — the serving determinism contract (batching is
+/// scheduling, never numerics) rests on a score being independent of
+/// which batch carried the request, and when it was dispatched.
+pub trait ScoreSource: Sync {
+    fn score(&self, id: u64, tokens: &HostTensor) -> Result<f32>;
+}
+
+/// Deterministic stand-in for the engine-backed [`Model`] (the serving
+/// analogue of `dist::SyntheticGradSource`): the score is a pure function
+/// of `(id, tokens)` via FNV-1a + Pcg, so parity tests and benches run
+/// with no artifacts at all.
+pub struct SyntheticScoreSource {
+    /// Side length of a busywork matmul emulating forward cost (0 = none).
+    pub work: usize,
+}
+
+impl ScoreSource for SyntheticScoreSource {
+    fn score(&self, id: u64, tokens: &HostTensor) -> Result<f32> {
+        // FNV-1a over the token block: the score depends on the data, not
+        // just the id, like a real forward pass would
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &t in tokens.as_i32()? {
+            h = (h ^ t as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        let mut rng = Pcg::new(h ^ id.wrapping_mul(0x9e37_79b9), 0x5c0e);
+        let mut cost = 0.0f32;
+        if self.work > 0 {
+            let n = self.work;
+            // serial inner matmul: the busywork stays inside this request's
+            // task, so batch cost is a clean function of batch size
+            let a = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+            let prod = pool::with_threads(1, || a.matmul(&a));
+            cost = std::hint::black_box(prod.data[0]) * 1e-30;
+        }
+        Ok(2.0 + rng.f32() + cost)
+    }
+}
+
+/// Deterministic request stream: `n` token blocks of shape
+/// `[batch, seq]` with ids `0..n`, drawn from a seeded Pcg — request `i`
+/// is a pure function of `(seed, i)`, so every driver (loopback CLI, TCP
+/// client, parity tests, fig8) can regenerate the identical stream.
+pub fn synthetic_requests(
+    n: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Pcg::new(seed, 0x5e4e);
+    (0..n as u64)
+        .map(|id| {
+            let data: Vec<i32> = (0..batch * seq)
+                .map(|_| rng.below(vocab.max(1)) as i32)
+                .collect();
+            Request { id, tokens: HostTensor::i32(vec![batch, seq], data) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_requests_are_reproducible_and_shaped() {
+        let a = synthetic_requests(3, 2, 4, 997, 0x5eed);
+        let b = synthetic_requests(3, 2, 4, 997, 0x5eed);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.tokens.shape(), &[2, 4]);
+            assert!(x.tokens.as_i32().unwrap().iter().all(|&t| (0..997).contains(&t)));
+        }
+        let c = synthetic_requests(3, 2, 4, 997, 0x5eee);
+        assert_ne!(a[0].tokens, c[0].tokens, "seed must matter");
+    }
+
+    #[test]
+    fn synthetic_score_is_pure_in_id_and_tokens() {
+        let src = SyntheticScoreSource { work: 0 };
+        let reqs = synthetic_requests(2, 1, 8, 97, 9);
+        let s0 = src.score(reqs[0].id, &reqs[0].tokens).unwrap();
+        let again = src.score(reqs[0].id, &reqs[0].tokens).unwrap();
+        assert_eq!(s0.to_bits(), again.to_bits());
+        let other_id = src.score(reqs[1].id, &reqs[0].tokens).unwrap();
+        assert_ne!(s0.to_bits(), other_id.to_bits(), "id must matter");
+        let other_toks = src.score(reqs[0].id, &reqs[1].tokens).unwrap();
+        assert_ne!(s0.to_bits(), other_toks.to_bits(), "tokens must matter");
+    }
+}

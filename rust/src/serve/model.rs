@@ -1,0 +1,89 @@
+//! Read-only servable model: weights + manifest + a prepared engine.
+//!
+//! Built by [`Checkpoint::load_model`] — the serving half of the
+//! checkpoint split. `Trainer::restore` rebuilds *everything* (params,
+//! optimizer state, RNG stream); this loader decodes *only* the
+//! `param.*` blobs, through the same shape-checked
+//! [`Checkpoint::decode_params`] decoder, so the two paths cannot
+//! drift. No optimizer state is ever materialized: the obs state-bytes
+//! gauge reads 0 for the lifetime of a serve process
+//! (`tests/serve_parity.rs` pins it).
+//!
+//! Scoring goes through [`Engine::execute`] — the canonical `&self`
+//! execution entry point — against the `eval_loss` artifact prepared
+//! once at load. `&self` scoring is what lets a single `Arc<Model>` be
+//! shared across the pool and every server connection without locks.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Checkpoint;
+use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::util::trace;
+
+use super::ScoreSource;
+
+/// An immutable, forward-only model: checkpoint weights bound to a
+/// prepared engine. Construction is the only `&mut` moment; after that
+/// every method is `&self`.
+pub struct Model {
+    engine: Engine,
+    params: Vec<HostTensor>,
+    /// Training step the weights were checkpointed at.
+    pub step: u64,
+}
+
+impl Model {
+    /// Bind checkpoint weights to `engine`: decode the `param.*` blobs
+    /// (manifest order, shape-checked) and prepare the `eval_loss`
+    /// artifact so [`Model::score_block`] needs no mutable access.
+    pub fn new(ck: &Checkpoint, mut engine: Engine) -> Result<Self> {
+        let params = ck.decode_params(&engine.manifest.params)?;
+        engine.prepare("eval_loss")?;
+        Ok(Model { engine, params, step: ck.step })
+    }
+
+    /// The artifact manifest the model was loaded against.
+    pub fn manifest(&self) -> &Manifest {
+        &self.engine.manifest
+    }
+
+    /// Token-block shape `(batch, seq)` every request must match.
+    pub fn block_shape(&self) -> (usize, usize) {
+        let m = &self.engine.manifest.model;
+        (m.batch, m.seq)
+    }
+
+    /// Score one `[batch, seq]` token block: mean eval loss, bitwise
+    /// identical to `Trainer::eval` on the same block (same artifact,
+    /// same params, same engine path).
+    pub fn score_block(&self, tokens: &HostTensor) -> Result<f32> {
+        let _sp = trace::span("serve", "score");
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(tokens);
+        inputs.extend(self.params.iter());
+        let outs = self.engine.execute("eval_loss", &inputs)?;
+        outs[0].scalar()
+    }
+}
+
+impl ScoreSource for Model {
+    fn score(&self, _id: u64, tokens: &HostTensor) -> Result<f32> {
+        self.score_block(tokens)
+    }
+}
+
+impl Checkpoint {
+    /// Load a servable [`Model`] from this checkpoint: weights only, no
+    /// optimizer state, no `Trainer`. The `param.*` blobs are decoded
+    /// through [`Checkpoint::decode_params`] — the same shape-checked
+    /// decoder `Trainer::restore` uses — while `state.*`,
+    /// `trainer.stream`, and dist blobs are never touched, so the obs
+    /// state-bytes gauge stays 0 in a serve process.
+    pub fn load_model(&self, artifacts: impl AsRef<Path>) -> Result<Arc<Model>> {
+        let engine = Engine::new(artifacts)?;
+        Ok(Arc::new(Model::new(self, engine)?))
+    }
+}

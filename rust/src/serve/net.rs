@@ -1,0 +1,346 @@
+//! Networked serving driver: the serving-plane `Request`/`Response`
+//! frames (wire proto v3) over the exact `dist/transport.rs` machinery —
+//! same length-prefixed codec, same `Hello`/`Welcome`/`Reject` handshake
+//! and run-id validation, same per-connection reader threads feeding one
+//! event channel, same obs wire accounting per frame kind.
+//!
+//! The server is the TCP face of `queue::serve_loop`: arrivals from any
+//! connection coalesce into one continuous-batching queue under a
+//! [`BatchPolicy`], each batch fans out over `util::pool`, and every
+//! response is routed back to the connection that asked. Batching across
+//! connections is still scheduling only — scores stay bitwise identical
+//! to scoring alone (`tests/serve_parity.rs` pins the TCP path too).
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::transport::{
+    enc_done, enc_hello, enc_reject, enc_request, enc_response, enc_welcome, read_frame,
+    reader_loop, send_frame, Event, Frame, PROTO_VERSION,
+};
+use crate::obs;
+use crate::util::{pool, trace};
+
+use super::{BatchPolicy, Request, Response, ScoreSource};
+
+/// One queued request with its origin connection and arrival stamp.
+struct Q {
+    conn: u64,
+    id: u64,
+    tokens: crate::runtime::HostTensor,
+    at: Instant,
+}
+
+/// What a serve run did (returned for tests / the CLI summary line).
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    /// Requests scored and answered.
+    pub served: usize,
+    /// Batches dispatched across the pool.
+    pub batches: usize,
+    /// Per-request enqueue→scored latency, dispatch order.
+    pub latencies_s: Vec<f64>,
+}
+
+/// Server side of the serving plane: owns the listener, one reader
+/// thread per connection (the same [`reader_loop`] the dist coordinator
+/// uses), and the write halves keyed by connection id.
+pub struct TcpServer {
+    addr: SocketAddr,
+    rx: Receiver<Event>,
+    /// Kept so the channel never disconnects while readers come and go.
+    _tx: Sender<Event>,
+    conns: HashMap<u64, TcpStream>,
+    run_id: String,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0`) and start accepting clients.
+    /// Clients are admitted lazily as [`TcpServer::serve`] pumps events.
+    pub fn bind(listen: &str, run_id: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("ar-serve-accept".to_string())
+                .spawn(move || {
+                    let next = AtomicUsize::new(0);
+                    loop {
+                        let stream = match listener.accept() {
+                            Ok((s, _)) => s,
+                            Err(_) => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                continue;
+                            }
+                        };
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let conn = next.fetch_add(1, Ordering::SeqCst) as u64;
+                        let tx = tx.clone();
+                        let _ = std::thread::Builder::new()
+                            .name(format!("ar-serve-conn-{conn}"))
+                            .spawn(move || reader_loop(conn, stream, tx));
+                    }
+                })
+                .context("spawning serve accept thread")?
+        };
+        Ok(TcpServer {
+            addr,
+            rx,
+            _tx: tx,
+            conns: HashMap::new(),
+            run_id: run_id.to_string(),
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (port resolved when binding `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Handle one reader event: handshake validation (proto + run-id,
+    /// same policy as the dist coordinator's `admit`), request intake,
+    /// or departure (a dead connection's queued requests are voided —
+    /// nobody is left to answer them).
+    fn handle_event(&mut self, ev: Event, joined: &mut usize, pending: &mut VecDeque<Q>) {
+        match ev {
+            Event::Hello { conn, mut stream, proto, run_id } => {
+                if proto != PROTO_VERSION || run_id != self.run_id {
+                    let _ = send_frame(
+                        &mut stream,
+                        &enc_reject(&format!(
+                            "handshake mismatch: proto {proto} (want {PROTO_VERSION}), \
+                             run-id {run_id:?} (want {:?})",
+                            self.run_id
+                        )),
+                    );
+                    return;
+                }
+                if send_frame(&mut stream, &enc_welcome(conn, 0)).is_ok() {
+                    self.conns.insert(conn, stream);
+                    *joined += 1;
+                }
+            }
+            Event::Frame { conn, frame: Frame::Request { id, tokens } } => {
+                obs::SERVE_REQUESTS.incr();
+                obs::SERVE_REQ_BYTES.add((tokens.elems() * 4) as u64);
+                pending.push_back(Q { conn, id, tokens, at: Instant::now() });
+                obs::SERVE_QUEUE_DEPTH.set(pending.len() as u64);
+            }
+            Event::Frame { .. } => {}
+            Event::Closed { conn } => {
+                self.conns.remove(&conn);
+                pending.retain(|q| q.conn != conn);
+            }
+        }
+    }
+
+    /// Run the continuous-batching serve loop over every connection:
+    /// admit clients, coalesce their requests under `policy`, score each
+    /// batch across the pool, and answer each request on the connection
+    /// it arrived on. Returns when `max_requests` have been served
+    /// (`0` = unbounded), or when at least one client joined and every
+    /// connection has since departed with the queue drained. Errors if
+    /// no client joins within `idle_timeout`.
+    pub fn serve(
+        &mut self,
+        src: &dyn ScoreSource,
+        policy: &BatchPolicy,
+        max_requests: usize,
+        idle_timeout: Duration,
+    ) -> Result<ServeReport> {
+        let _reg = trace::region("serve", "tcp_serve");
+        let max_batch = policy.max_batch.max(1);
+        let start = Instant::now();
+        let mut joined = 0usize;
+        let mut pending: VecDeque<Q> = VecDeque::new();
+        let mut report = ServeReport::default();
+        loop {
+            if max_requests > 0 && report.served >= max_requests {
+                break;
+            }
+            if joined > 0 && self.conns.is_empty() && pending.is_empty() {
+                break;
+            }
+            if pending.is_empty() {
+                if joined == 0 && start.elapsed() > idle_timeout {
+                    bail!("no client joined {} within {idle_timeout:?}", self.addr);
+                }
+                // idle tick: short enough that the exit/timeout conditions
+                // above are re-checked promptly
+                match self.rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(ev) => self.handle_event(ev, &mut joined, &mut pending),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                continue;
+            }
+            // coalesce until the batch fills or the head request's wait is up
+            let deadline = pending[0].at + policy.max_wait;
+            while pending.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(ev) => self.handle_event(ev, &mut joined, &mut pending),
+                    Err(_) => break,
+                }
+            }
+            let take = pending.len().min(max_batch);
+            let batch: Vec<Q> = pending.drain(..take).collect();
+            obs::SERVE_QUEUE_DEPTH.set(pending.len() as u64);
+            let scores = {
+                let _sp = trace::span("serve", "dispatch");
+                obs::serve_fill(batch.len(), max_batch);
+                pool::map(batch.len(), |j| src.score(batch[j].id, &batch[j].tokens))
+            };
+            let mut dead = Vec::new();
+            for (q, s) in batch.iter().zip(scores) {
+                let score = s?;
+                let lat = q.at.elapsed().as_secs_f64();
+                report.served += 1;
+                report.latencies_s.push(lat);
+                if let Some(stream) = self.conns.get_mut(&q.conn) {
+                    if send_frame(stream, &enc_response(q.id, score, lat)).is_err() {
+                        dead.push(q.conn);
+                    }
+                }
+            }
+            report.batches += 1;
+            for c in dead {
+                self.conns.remove(&c);
+                pending.retain(|q| q.conn != c);
+            }
+        }
+        obs::SERVE_QUEUE_DEPTH.set(0);
+        Ok(report)
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let done = enc_done();
+        for s in self.conns.values_mut() {
+            let _ = send_frame(s, &done);
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        self.conns.clear();
+        // wake the blocking accept() so its thread can observe `stop`
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect(wake);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Client side: handshake, pipeline every request, then collect exactly
+/// `reqs.len()` responses (arrival order — the server's batching may
+/// reorder relative to submission across connections, but a single
+/// pipelined connection gets its answers in dispatch order). Fails loudly
+/// on rejection or early server departure — never a silent short count.
+pub fn run_client(connect: &str, run_id: &str, reqs: &[Request]) -> Result<Vec<Response>> {
+    let _reg = trace::region("serve", "client");
+    let mut stream =
+        TcpStream::connect(connect).with_context(|| format!("connecting to {connect}"))?;
+    let _ = stream.set_nodelay(true);
+    send_frame(&mut stream, &enc_hello(run_id))?;
+    // Bound every read: a server that never answers fails the client
+    // instead of hanging it.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+    match read_frame(&mut stream)? {
+        Some(Frame::Welcome { .. }) => {}
+        Some(Frame::Reject { reason }) => bail!("server rejected join: {reason}"),
+        other => bail!("expected Welcome, got {other:?}"),
+    }
+    // pipeline everything up front: the server's continuous batcher is
+    // what coalesces, the client never waits request-by-request
+    for r in reqs {
+        send_frame(&mut stream, &enc_request(r.id, &r.tokens))?;
+    }
+    let mut out = Vec::with_capacity(reqs.len());
+    while out.len() < reqs.len() {
+        match read_frame(&mut stream)? {
+            Some(Frame::Response { id, score, latency_s }) => {
+                out.push(Response { id, score, latency_s })
+            }
+            Some(Frame::Done) | None => {
+                bail!("server closed after {}/{} responses", out.len(), reqs.len())
+            }
+            Some(other) => bail!("unexpected frame {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{synthetic_requests, SyntheticScoreSource};
+    use super::*;
+
+    #[test]
+    fn tcp_roundtrip_scores_bitwise() {
+        let mut server = TcpServer::bind("127.0.0.1:0", "net-test").unwrap();
+        let addr = server.local_addr().to_string();
+        let n = 6;
+        let handle = std::thread::spawn(move || {
+            let src = SyntheticScoreSource { work: 0 };
+            let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) };
+            server.serve(&src, &policy, n, Duration::from_secs(10)).unwrap()
+        });
+        let reqs = synthetic_requests(n, 1, 8, 97, 0xabc);
+        let resps = run_client(&addr, "net-test", &reqs).unwrap();
+        let report = handle.join().unwrap();
+        assert_eq!(report.served, n);
+        assert_eq!(resps.len(), n);
+        let src = SyntheticScoreSource { work: 0 };
+        for r in &resps {
+            let direct = src.score(r.id, &reqs[r.id as usize].tokens).unwrap();
+            assert_eq!(r.score.to_bits(), direct.to_bits());
+            assert!(r.latency_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn wrong_run_id_is_rejected() {
+        let mut server = TcpServer::bind("127.0.0.1:0", "right-id").unwrap();
+        let addr = server.local_addr().to_string();
+        let handle = std::thread::spawn(move || {
+            let src = SyntheticScoreSource { work: 0 };
+            server.serve(&src, &BatchPolicy::default(), 1, Duration::from_millis(300))
+        });
+        let reqs = synthetic_requests(1, 1, 4, 97, 1);
+        let err = run_client(&addr, "wrong-id", &reqs).unwrap_err();
+        assert!(err.to_string().contains("rejected"), "got: {err}");
+        // the server saw no valid join, so it times out with an error too
+        assert!(handle.join().unwrap().is_err());
+    }
+}

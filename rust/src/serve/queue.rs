@@ -1,0 +1,285 @@
+//! Continuous-batching request queue: arrivals coalesce into
+//! width-bucketed batches under a [`BatchPolicy`], dispatch fans out over
+//! the persistent `util::pool`, and per-request latency is tracked from
+//! enqueue to scored.
+//!
+//! Two entry points share one dispatch path:
+//!
+//! * [`score_batched`] — closed-loop: a request slice already in hand,
+//!   scored bucket by bucket ([`crate::data::bucket_spans`] — the same
+//!   ragged-tail arithmetic `Trainer::eval` uses).
+//! * [`serve_loop`] — open-loop: a [`queue`] of timestamped arrivals,
+//!   coalesced until the batch fills (`max_batch`) or the head request
+//!   has waited `max_wait`, then dispatched. Returns every response once
+//!   all [`Ingress`] handles are dropped and the queue is drained — no
+//!   request is ever dropped or duplicated (`tests/serve_parity.rs`
+//!   pins it under a multi-producer chaos burst).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::bucket_spans;
+use crate::obs;
+use crate::runtime::HostTensor;
+use crate::util::{percentile, pool, trace};
+
+use super::ScoreSource;
+
+/// One scoring request: an id chosen by the producer plus the `[batch,
+/// seq]` token block to score.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: HostTensor,
+}
+
+/// One scored response. The score is bitwise what scoring the request
+/// alone would produce; the latency is enqueue→scored wall clock (zero
+/// queue wait on the direct [`score_batched`] path).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub score: f32,
+    pub latency_s: f64,
+}
+
+/// Continuous-batching policy: coalesce arrivals until the batch fills
+/// (`max_batch` requests) or the head request has waited `max_wait`.
+/// Policy changes move latency/throughput trade-offs only — never scores.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Queued {
+    req: Request,
+    at: Instant,
+}
+
+/// Producer handle for [`serve_loop`]: clone one per producer thread;
+/// drop every clone to let the loop drain and return.
+#[derive(Clone)]
+pub struct Ingress {
+    tx: Sender<Queued>,
+}
+
+impl Ingress {
+    /// Enqueue one request, stamping the arrival instant its end-to-end
+    /// latency is measured from. Returns `false` if the serve loop is
+    /// gone (the request is dropped *visibly*, never silently).
+    pub fn submit(&self, id: u64, tokens: HostTensor) -> bool {
+        obs::SERVE_REQUESTS.incr();
+        obs::SERVE_REQ_BYTES.add((tokens.elems() * 4) as u64);
+        self.tx.send(Queued { req: Request { id, tokens }, at: Instant::now() }).is_ok()
+    }
+}
+
+/// Consumer end of the request channel (fed to [`serve_loop`]).
+pub struct ServeQueue {
+    rx: Receiver<Queued>,
+}
+
+/// Create the ingress/queue pair wiring producers to [`serve_loop`].
+pub fn queue() -> (Ingress, ServeQueue) {
+    let (tx, rx) = mpsc::channel();
+    (Ingress { tx }, ServeQueue { rx })
+}
+
+/// Dispatch one coalesced batch across the pool and stamp responses.
+/// Scheduling only: each request gets its own [`ScoreSource::score`]
+/// call, so every score is bitwise identical to scoring alone.
+fn dispatch(
+    src: &dyn ScoreSource,
+    batch: &[Queued],
+    max_batch: usize,
+) -> Result<Vec<Response>> {
+    let _sp = trace::span("serve", "dispatch");
+    obs::serve_fill(batch.len(), max_batch);
+    let scores = pool::map(batch.len(), |j| src.score(batch[j].req.id, &batch[j].req.tokens));
+    batch
+        .iter()
+        .zip(scores)
+        .map(|(q, s)| {
+            Ok(Response {
+                id: q.req.id,
+                score: s?,
+                latency_s: q.at.elapsed().as_secs_f64(),
+            })
+        })
+        .collect()
+}
+
+/// Closed-loop batched scoring of a request slice: width-bucketed spans,
+/// one pool fan-out per bucket, scores returned in request order. The
+/// direct path for "score this eval set now" callers (fig8 closed-loop,
+/// the serve-vs-eval parity test).
+pub fn score_batched(
+    src: &dyn ScoreSource,
+    reqs: &[Request],
+    max_batch: usize,
+) -> Result<Vec<f32>> {
+    let _sp = trace::region("serve", "score_batched");
+    let mut out = Vec::with_capacity(reqs.len());
+    for (lo, len) in bucket_spans(reqs.len(), max_batch) {
+        let _bsp = trace::span("serve", "bucket");
+        obs::serve_fill(len, max_batch.max(1));
+        let scores = pool::map(len, |j| {
+            let r = &reqs[lo + j];
+            src.score(r.id, &r.tokens)
+        });
+        for s in scores {
+            out.push(s?);
+        }
+    }
+    Ok(out)
+}
+
+/// The continuous-batching serve loop: block for the first arrival,
+/// coalesce follow-ups under `policy`, dispatch the batch across the
+/// pool, repeat. Returns every response (dispatch order) once all
+/// [`Ingress`] handles are dropped and the queue has drained.
+pub fn serve_loop(
+    src: &dyn ScoreSource,
+    policy: &BatchPolicy,
+    q: ServeQueue,
+) -> Result<Vec<Response>> {
+    let _sp = trace::region("serve", "serve_loop");
+    let max_batch = policy.max_batch.max(1);
+    let mut out = Vec::new();
+    let mut pending: Vec<Queued> = Vec::new();
+    let mut open = true;
+    while open || !pending.is_empty() {
+        if pending.is_empty() {
+            match q.rx.recv() {
+                Ok(item) => pending.push(item),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        // coalesce until the batch fills or the head request's wait is up
+        let deadline = pending[0].at + policy.max_wait;
+        while open && pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match q.rx.recv_timeout(deadline - now) {
+                Ok(item) => pending.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+        }
+        let take = pending.len().min(max_batch);
+        let batch: Vec<Queued> = pending.drain(..take).collect();
+        obs::SERVE_QUEUE_DEPTH.set(pending.len() as u64);
+        out.extend(dispatch(src, &batch, max_batch)?);
+    }
+    obs::SERVE_QUEUE_DEPTH.set(0);
+    Ok(out)
+}
+
+/// Latency tail summary of a response set (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+}
+
+/// p50/p95/p99/mean over the responses' end-to-end latencies.
+pub fn latency_summary(resps: &[Response]) -> LatencySummary {
+    let lat: Vec<f64> = resps.iter().map(|r| r.latency_s).collect();
+    LatencySummary {
+        p50: percentile(&lat, 0.50),
+        p95: percentile(&lat, 0.95),
+        p99: percentile(&lat, 0.99),
+        mean: crate::util::mean(&lat),
+    }
+}
+
+/// Order-independent digest of a response set: FNV-1a over `(id, score
+/// bits)` in id order. The `digest=` line the loopback and TCP CLI
+/// drivers print — equal digests mean bitwise-equal scores for the same
+/// request stream, whatever batching or transport carried them.
+pub fn score_digest(resps: &[Response]) -> u64 {
+    let mut rows: Vec<(u64, u32)> = resps.iter().map(|r| (r.id, r.score.to_bits())).collect();
+    rows.sort_unstable();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (id, bits) in rows {
+        for b in id.to_le_bytes().into_iter().chain(bits.to_le_bytes()) {
+            h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{synthetic_requests, SyntheticScoreSource};
+    use super::*;
+
+    #[test]
+    fn score_batched_matches_direct_and_handles_ragged_tail() {
+        let src = SyntheticScoreSource { work: 0 };
+        let reqs = synthetic_requests(7, 1, 8, 97, 3);
+        let direct: Vec<u32> = reqs
+            .iter()
+            .map(|r| src.score(r.id, &r.tokens).unwrap().to_bits())
+            .collect();
+        for bucket in [1, 3, 7, 100] {
+            let got = score_batched(&src, &reqs, bucket).unwrap();
+            let bits: Vec<u32> = got.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(bits, direct, "bucket {bucket}");
+        }
+        assert!(score_batched(&src, &[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn serve_loop_drains_everything_submitted() {
+        let src = SyntheticScoreSource { work: 0 };
+        let reqs = synthetic_requests(5, 1, 4, 97, 4);
+        let (ingress, q) = queue();
+        for r in &reqs {
+            assert!(ingress.submit(r.id, r.tokens.clone()));
+        }
+        drop(ingress);
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let resps = serve_loop(&src, &policy, q).unwrap();
+        assert_eq!(resps.len(), 5);
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        for r in &resps {
+            let direct = src.score(r.id, &reqs[r.id as usize].tokens).unwrap();
+            assert_eq!(r.score.to_bits(), direct.to_bits());
+            assert!(r.latency_s >= 0.0);
+        }
+        let s = latency_summary(&resps);
+        assert!(s.p99 >= s.p50 && s.p50 >= 0.0);
+    }
+
+    #[test]
+    fn digest_is_order_independent_and_score_sensitive() {
+        let a = vec![
+            Response { id: 0, score: 1.5, latency_s: 0.1 },
+            Response { id: 1, score: 2.5, latency_s: 0.2 },
+        ];
+        let b = vec![a[1].clone(), a[0].clone()];
+        assert_eq!(score_digest(&a), score_digest(&b));
+        let mut c = a.clone();
+        c[0].score = 1.25;
+        assert_ne!(score_digest(&a), score_digest(&c));
+    }
+}

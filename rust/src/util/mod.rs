@@ -67,6 +67,21 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Nearest-rank percentile, `q` in `[0, 1]` (sorts a copy; 0.0 for an
+/// empty slice). Same `total_cmp` comparator policy as [`median`], so a
+/// NaN sample degrades the tail statistic instead of panicking. `q = 0.5`
+/// is the nearest-rank median (not the interpolated [`median`]); the
+/// serving latency report uses p50/p95/p99.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = (q.clamp(0.0, 1.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +100,20 @@ mod tests {
         assert!((median(&xs) - 2.5).abs() < 1e-12);
         assert!((std_dev(&xs) - 1.118033988).abs() < 1e-6);
         assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // out-of-range q clamps rather than panicking
+        assert_eq!(percentile(&xs, 2.0), 100.0);
     }
 
     #[test]

@@ -26,6 +26,7 @@ fn check_parity(e: &mut Engine, opt_name: &str, rows: usize, cols: usize, steps:
         return;
     }
     let spec = e.manifest.artifact(&art).unwrap().clone();
+    e.prepare(&art).expect(&art);
     // hyperparams must match what aot.py baked in
     let hp = manifest_hyper(e);
     let opt = build(opt_name, &hp).unwrap();
@@ -60,7 +61,8 @@ fn check_parity(e: &mut Engine, opt_name: &str, rows: usize, cols: usize, steps:
             HostTensor::scalar_f32(t as f32),
         ];
         inputs.extend(state.iter().cloned());
-        let outs = e.run(&art, &inputs).expect(&art);
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let outs = e.execute(&art, &refs).expect(&art);
         let hlo_delta = outs[0].as_f32().unwrap().to_vec();
         state = outs.into_iter().skip(1).collect();
 

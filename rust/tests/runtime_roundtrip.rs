@@ -31,6 +31,13 @@ fn init_params(e: &Engine, seed: u64) -> Vec<HostTensor> {
         .collect()
 }
 
+/// prepare + execute over owned inputs — the canonical entry point pair.
+fn exec(e: &mut Engine, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+    e.prepare(name)?;
+    let refs: Vec<&HostTensor> = inputs.iter().collect();
+    e.execute(name, &refs)
+}
+
 fn tokens(e: &Engine, seed: u64) -> HostTensor {
     let m = &e.manifest.model;
     let mut rng = Pcg::seeded(seed);
@@ -46,7 +53,7 @@ fn grad_step_loss_near_uniform_and_grads_finite() {
     let params = init_params(&e, 1);
     let mut inputs = vec![tokens(&e, 2)];
     inputs.extend(params.iter().cloned());
-    let outs = e.run("grad_step", &inputs).expect("grad_step");
+    let outs = exec(&mut e, "grad_step", &inputs).expect("grad_step");
     let loss = outs[0].scalar().unwrap();
     let uniform = (e.manifest.model.vocab as f32).ln();
     assert!(
@@ -70,8 +77,8 @@ fn eval_loss_is_deterministic() {
     let params = init_params(&e, 3);
     let mut inputs = vec![tokens(&e, 4)];
     inputs.extend(params.iter().cloned());
-    let a = e.run("eval_loss", &inputs).unwrap()[0].scalar().unwrap();
-    let b = e.run("eval_loss", &inputs).unwrap()[0].scalar().unwrap();
+    let a = exec(&mut e, "eval_loss", &inputs).unwrap()[0].scalar().unwrap();
+    let b = exec(&mut e, "eval_loss", &inputs).unwrap()[0].scalar().unwrap();
     assert_eq!(a, b, "same inputs must produce bitwise-equal loss");
 }
 
@@ -86,7 +93,7 @@ fn grad_matches_finite_difference_on_final_norm() {
 
     let mut inputs = vec![toks.clone()];
     inputs.extend(params.iter().cloned());
-    let outs = e.run("grad_step", &inputs).unwrap();
+    let outs = exec(&mut e, "grad_step", &inputs).unwrap();
     let loss0 = outs[0].scalar().unwrap();
     let g = outs[1 + idx].as_f32().unwrap().to_vec();
 
@@ -100,7 +107,7 @@ fn grad_matches_finite_difference_on_final_norm() {
     }
     let mut inputs2 = vec![toks];
     inputs2.extend(perturbed.iter().cloned());
-    let loss1 = e.run("eval_loss", &inputs2).unwrap()[0].scalar().unwrap();
+    let loss1 = exec(&mut e, "eval_loss", &inputs2).unwrap()[0].scalar().unwrap();
     let predicted: f32 = g.iter().sum::<f32>() * eps;
     let actual = loss1 - loss0;
     assert!(
@@ -112,7 +119,9 @@ fn grad_matches_finite_difference_on_final_norm() {
 #[test]
 fn manifest_shapes_are_enforced() {
     let Some(mut e) = engine() else { return };
-    // wrong token shape must be rejected before reaching PJRT
+    // wrong token shape must be rejected before reaching PJRT — driven
+    // through the deprecated `run` forwarder, which keeps the compat
+    // shims over `prepare` + `execute` covered
     let bad = HostTensor::i32(vec![1, 3], vec![0, 1, 2]);
     let mut inputs = vec![bad];
     inputs.extend(init_params(&e, 7));
@@ -151,7 +160,7 @@ fn opt_update_artifacts_execute() {
                 }
             })
             .collect();
-        let outs = e.run(&name, &inputs).expect(&name);
+        let outs = exec(&mut e, &name, &inputs).expect(&name);
         assert_eq!(outs.len(), spec.outputs.len(), "{name}");
         assert!(
             outs[0].as_f32().unwrap().iter().all(|x| x.is_finite()),

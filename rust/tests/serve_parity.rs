@@ -1,0 +1,228 @@
+//! Serving determinism contract: batching is scheduling, never numerics.
+//!
+//! * Batched scores are bitwise identical to scoring alone — at pool
+//!   widths {1, 4}, across bucket sizes (CI widens the sweep via
+//!   `AR_SERVE_BUCKETS`), through the open-loop queue under a
+//!   multi-producer chaos burst, and over TCP.
+//! * A checkpoint served through `Checkpoint::load_model` scores the
+//!   in-trainer eval stream to the bitwise-identical mean loss, with the
+//!   optimizer state-bytes gauge at 0 (artifact-gated, like the other
+//!   trainer-level suites).
+
+use std::time::Duration;
+
+use alice_racs::obs;
+use alice_racs::serve::{
+    queue, run_client, score_batched, score_digest, serve_loop, synthetic_requests,
+    BatchPolicy, Request, ScoreSource, SyntheticScoreSource, TcpServer,
+};
+use alice_racs::util::pool;
+
+/// Bucket sizes to sweep — CI's serve matrix cell sets `AR_SERVE_BUCKETS`
+/// to a wider list than the local default.
+fn bucket_sweep() -> Vec<usize> {
+    let parsed: Vec<usize> = std::env::var("AR_SERVE_BUCKETS")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .filter(|&b| b > 0)
+                .collect()
+        })
+        .unwrap_or_default();
+    if parsed.is_empty() {
+        vec![1, 4, 16]
+    } else {
+        parsed
+    }
+}
+
+#[test]
+fn batched_equals_sequential_bitwise_across_widths_and_buckets() {
+    let src = SyntheticScoreSource { work: 0 };
+    let reqs = synthetic_requests(23, 2, 16, 997, 0x5eed);
+    let direct: Vec<u32> = reqs
+        .iter()
+        .map(|r| src.score(r.id, &r.tokens).unwrap().to_bits())
+        .collect();
+    for width in [1, 4] {
+        for bucket in bucket_sweep() {
+            let scores =
+                pool::with_threads(width, || score_batched(&src, &reqs, bucket)).unwrap();
+            let bits: Vec<u32> = scores.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(bits, direct, "width {width}, bucket {bucket}");
+        }
+    }
+}
+
+#[test]
+fn open_loop_chaos_burst_drops_and_duplicates_nothing() {
+    const PRODUCERS: usize = 4;
+    const PER: usize = 32;
+    let src = SyntheticScoreSource { work: 0 };
+    // disjoint id ranges per producer; every (id, tokens) pair is known
+    // up front so responses can be checked bitwise against direct scores
+    let all: Vec<Vec<Request>> = (0..PRODUCERS)
+        .map(|p| {
+            synthetic_requests(PER, 1, 8, 997, 0xc4a0 + p as u64)
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut r)| {
+                    r.id = (p * 100 + i) as u64;
+                    r
+                })
+                .collect()
+        })
+        .collect();
+    let (ingress, q) = queue();
+    let producers: Vec<_> = all
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(p, reqs)| {
+            let ingress = ingress.clone();
+            std::thread::spawn(move || {
+                for (i, r) in reqs.into_iter().enumerate() {
+                    // jittered bursts: arrival pattern varies, results must not
+                    if (i + p) % 7 == 0 {
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                    assert!(ingress.submit(r.id, r.tokens));
+                }
+            })
+        })
+        .collect();
+    drop(ingress);
+    let policy = BatchPolicy { max_batch: 5, max_wait: Duration::from_millis(1) };
+    let resps = serve_loop(&src, &policy, q).unwrap();
+    for h in producers {
+        h.join().unwrap();
+    }
+    assert_eq!(resps.len(), PRODUCERS * PER);
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let mut want: Vec<u64> = all.iter().flatten().map(|r| r.id).collect();
+    want.sort_unstable();
+    assert_eq!(ids, want, "every request answered exactly once");
+    for r in &resps {
+        let req = &all[r.id as usize / 100][r.id as usize % 100];
+        let direct = src.score(req.id, &req.tokens).unwrap();
+        assert_eq!(r.score.to_bits(), direct.to_bits(), "id {}", r.id);
+    }
+}
+
+#[test]
+fn tcp_roundtrip_is_bitwise_and_width_invariant() {
+    let n = 17;
+    let reqs = synthetic_requests(n, 1, 8, 997, 0x7c9);
+    let mut digests = Vec::new();
+    for width in [1usize, 4] {
+        let mut server =
+            TcpServer::bind("127.0.0.1:0", "serve-parity").unwrap();
+        let addr = server.local_addr().to_string();
+        let handle = std::thread::spawn(move || {
+            let src = SyntheticScoreSource { work: 0 };
+            let policy =
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+            pool::with_threads(width, || {
+                server.serve(&src, &policy, n, Duration::from_secs(30))
+            })
+            .unwrap()
+        });
+        let resps = run_client(&addr, "serve-parity", &reqs).unwrap();
+        let report = handle.join().unwrap();
+        assert_eq!(report.served, n);
+        assert_eq!(resps.len(), n);
+        let src = SyntheticScoreSource { work: 0 };
+        for r in &resps {
+            let direct = src.score(r.id, &reqs[r.id as usize].tokens).unwrap();
+            assert_eq!(r.score.to_bits(), direct.to_bits(), "width {width}, id {}", r.id);
+        }
+        digests.push(score_digest(&resps));
+    }
+    assert_eq!(digests[0], digests[1], "pool width must not change wire scores");
+}
+
+// ------------------------------------------------- artifact-gated below ---
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping trainer-level serve parity: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn load_model_scoring_matches_in_trainer_eval_bitwise() {
+    use alice_racs::config::RunConfig;
+    use alice_racs::coordinator::{Checkpoint, Trainer};
+    use alice_racs::data::{CorpusConfig, SyncBatcher};
+    use alice_racs::runtime::HostTensor;
+
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = RunConfig::default().tuned_for("adam");
+    cfg.artifacts = "artifacts".into();
+    cfg.out_dir = format!(
+        "{}/alice_racs_test_serve_{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    cfg.steps = 6;
+    cfg.eval_every = 0;
+    cfg.log_every = 1000;
+    let mix = cfg.corpus_mix;
+    let corpus_seed = cfg.corpus_seed;
+    let mut tr = Trainer::new(cfg).unwrap();
+    for _ in 0..6 {
+        tr.train_step(0.01).unwrap();
+    }
+    let ck = tr.checkpoint();
+    let nb = 6;
+    let ev = tr.eval(nb).unwrap();
+    let eval_seed = tr.eval_seed();
+    // the serve process never holds a trainer: drop it, zero the ledger,
+    // and demand the state-bytes gauge stays 0 through load + scoring
+    drop(tr);
+    obs::reset_all();
+    let path = std::env::temp_dir()
+        .join(format!("serve_parity_{}.ckpt", std::process::id()));
+    ck.save(&path).unwrap();
+    let model = Checkpoint::load(&path).unwrap().load_model("artifacts").unwrap();
+    let _ = std::fs::remove_file(&path);
+    let (b, s) = model.block_shape();
+    let corpus = CorpusConfig {
+        vocab: model.manifest().model.vocab,
+        mix,
+        seed: corpus_seed,
+        ..Default::default()
+    };
+    // regenerate the trainer's eval stream and serve it as requests
+    let mut batcher = SyncBatcher::new(corpus, b, s, eval_seed);
+    let reqs: Vec<Request> = (0..nb)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: HostTensor::i32(vec![b, s], batcher.next()),
+        })
+        .collect();
+    for width in [1, 4] {
+        let scores =
+            pool::with_threads(width, || score_batched(&*model, &reqs, 2)).unwrap();
+        let mut acc = 0.0f32;
+        for sc in &scores {
+            acc += *sc;
+        }
+        let mean = acc / nb as f32;
+        assert_eq!(
+            mean.to_bits(),
+            ev.to_bits(),
+            "served eval mean must be bitwise the trainer's (width {width})"
+        );
+    }
+    assert_eq!(
+        obs::STATE_BYTES.get(),
+        0,
+        "a serve process must allocate zero optimizer state"
+    );
+}
