@@ -4,11 +4,17 @@
 //! makes the comparison meaningful (every worker count reduces to the
 //! *same* gradient, so speedup is free of numerical drift).
 //!
-//! Two sections:
+//! Three sections:
 //! * **Synthetic rounds** (no artifacts needed): the dist pipeline over a
 //!   `SyntheticGradSource` whose per-microbatch cost is a fixed dense
 //!   matmul — a clean stand-in for `grad_step`. Reports per-round time,
 //!   speedup, and imbalance at dp ∈ {1, 2, 4} (plus `AR_DP_WORKERS`).
+//! * **Round overlap** (no artifacts needed): the same synthetic rounds
+//!   driven phased vs pipelined — eager segment reduce plus the fused
+//!   per-parameter fold/optimizer fan-out — with live bitwise asserts
+//!   that both modes step to identical losses *and* weights. Reports
+//!   per-mode wall clock, speedup, and the hidden reduce time
+//!   (`EagerRound::reduce_overlap_secs`).
 //! * **Trainer rounds** (needs `make artifacts`): full coordinator-path
 //!   training with `[dist] sim = true`, reporting the `dp_grad_exec`
 //!   profile phase and tokens/s per worker count.
@@ -22,7 +28,11 @@ use alice_racs::bench::{
     artifacts_available, bench_cfg, bench_steps, dp_sweep, smoke, write_summary, TablePrinter,
 };
 use alice_racs::coordinator::{run_with, Trainer};
-use alice_racs::dist::{run_round, transport, DistConfig, SyntheticGradSource};
+use alice_racs::dist::{
+    run_round, run_round_pipelined, transport, DistConfig, SyntheticGradSource,
+};
+use alice_racs::linalg::Mat;
+use alice_racs::opt::{build, Hyper, Slot};
 use alice_racs::runtime::HostTensor;
 use alice_racs::util::json::{num, obj, s};
 use alice_racs::util::{mean, pool, trace, Json, Pcg, Timer};
@@ -110,6 +120,150 @@ fn synthetic_section() -> Json {
     ])
 }
 
+/// Phased vs pipelined round loop on the synthetic source, with a real
+/// optimizer fan-out after every round (adam slots on the same gradient
+/// geometry). Both modes are timed end to end — round + optimizer — and
+/// every round's loss bits and every final weight bit are asserted equal:
+/// overlap is scheduling, never merge order.
+fn overlap_section() -> Json {
+    let micro = 8;
+    let rounds = if smoke() { 3 } else { 6 };
+    let shapes = if smoke() {
+        vec![(128usize, 64usize), (64, 128), (1, 128)]
+    } else {
+        vec![(256, 128), (128, 256), (1, 256), (64, 512)]
+    };
+    let work = if smoke() { 64 } else { 160 };
+    println!(
+        "\n== round overlap: phased vs pipelined, {micro} microbatches/round, \
+         {rounds} rounds, work n={work} =="
+    );
+    let mut rng = Pcg::seeded(0xf177);
+    let tokens: Vec<HostTensor> = (0..micro)
+        .map(|_| HostTensor::i32(vec![32], (0..32).map(|_| rng.below(997) as i32).collect()))
+        .collect();
+    let src = SyntheticGradSource { shapes: shapes.clone(), work };
+    let hp = Hyper::default();
+    let new_slots = || -> Vec<Slot> {
+        shapes
+            .iter()
+            .map(|&(r, c)| Slot::new(build("adam", &hp).expect("registry"), r, c))
+            .collect()
+    };
+
+    let mut table = TablePrinter::new(&[
+        "dp_workers",
+        "phased ms",
+        "pipelined ms",
+        "speedup",
+        "reduce ovl ms",
+        "loss bits",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    for dp in dp_sweep() {
+        let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
+
+        // phased reference: monolithic reduce, then a serial slot loop
+        let mut coord = dist.coordinator();
+        let mut slots = new_slots();
+        let mut weights: Vec<Mat> = shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+        let mut times = Vec::new();
+        let mut loss_bits = Vec::new();
+        for r in 0..rounds {
+            let t = (r + 1) as u64;
+            let tm = Timer::start();
+            let out = run_round(&mut coord, &src, &tokens).expect("phased round");
+            for ((slot, w), g) in slots.iter_mut().zip(weights.iter_mut()).zip(&out.grads) {
+                if t == 1 {
+                    slot.refresh(g, 0xf177 ^ t);
+                }
+                let delta = slot.step(g, t);
+                w.ema_(1.0, &delta, -0.01);
+            }
+            if r > 0 {
+                times.push(tm.millis()); // round 0 is warmup
+            }
+            loss_bits.push(out.loss.to_bits());
+        }
+        let phased_ms = mean(&times);
+        let phased_w: Vec<Vec<u32>> = weights
+            .iter()
+            .map(|w| w.data.iter().map(|x| x.to_bits()).collect())
+            .collect();
+
+        // pipelined twin: eager reduce + fused per-parameter fan-out
+        let mut coord = dist.coordinator();
+        let mut slots = new_slots();
+        let mut weights: Vec<Mat> = shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+        let mut times = Vec::new();
+        let mut ovl = Vec::new();
+        for r in 0..rounds {
+            let t = (r + 1) as u64;
+            let tm = Timer::start();
+            let round =
+                run_round_pipelined(&mut coord, &src, &tokens).expect("pipelined round");
+            assert_eq!(
+                round.fold_loss().to_bits(),
+                loss_bits[r],
+                "pipelined loss bits diverged at dp={dp}, round {r}"
+            );
+            let slots_ptr = pool::SendPtr(slots.as_mut_ptr());
+            let weights_ptr = pool::SendPtr(weights.as_mut_ptr());
+            pool::run(slots.len(), |p| {
+                let g = round.fold_param(p);
+                // SAFETY: the region hands each index to exactly one task,
+                // so these are the only live references to slots[p] /
+                // weights[p].
+                let slot = unsafe { &mut *slots_ptr.0.add(p) };
+                let w = unsafe { &mut *weights_ptr.0.add(p) };
+                if t == 1 {
+                    slot.refresh(&g, 0xf177 ^ t);
+                }
+                let delta = slot.step(&g, t);
+                w.ema_(1.0, &delta, -0.01);
+            });
+            if r > 0 {
+                times.push(tm.millis());
+                ovl.push(round.reduce_overlap_secs * 1e3);
+            }
+        }
+        let pipelined_ms = mean(&times);
+        let pipelined_w: Vec<Vec<u32>> = weights
+            .iter()
+            .map(|w| w.data.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        assert_eq!(
+            pipelined_w, phased_w,
+            "pipelined weights diverged from phased at dp={dp}"
+        );
+
+        let ovl_ms = mean(&ovl);
+        let bits = *loss_bits.last().expect("rounds ran");
+        table.row(vec![
+            dp.to_string(),
+            format!("{phased_ms:.2}"),
+            format!("{pipelined_ms:.2}"),
+            format!("{:.2}x", phased_ms / pipelined_ms.max(1e-9)),
+            format!("{ovl_ms:.2}"),
+            format!("{bits:08x}"),
+        ]);
+        json_rows.push(obj(vec![
+            ("dp_workers", num(dp as f64)),
+            ("phased_ms", num(phased_ms)),
+            ("pipelined_ms", num(pipelined_ms)),
+            ("speedup", num(phased_ms / pipelined_ms.max(1e-9))),
+            ("reduce_overlap_ms", num(ovl_ms)),
+            ("loss_bits", s(&format!("{bits:08x}"))),
+        ]));
+    }
+    table.print();
+    println!("(losses and weights bitwise equal per row: overlap is scheduling only)");
+    obj(vec![
+        ("parity", s("pipelined == phased bitwise (losses and weights) per dp_workers")),
+        ("rounds", Json::Arr(json_rows)),
+    ])
+}
+
 fn trainer_section() {
     if !artifacts_available() {
         return;
@@ -151,7 +305,13 @@ fn main() {
     // AR_TRACE=1 (or =PATH) turns on the span tracer for the whole bench;
     // scheduling-only, so every parity assert above stays bitwise live
     trace::init_resolved("");
-    let summary = synthetic_section();
+    let synthetic = synthetic_section();
+    let overlap = overlap_section();
+    let summary = obj(vec![
+        ("smoke", Json::Bool(smoke())),
+        ("synthetic", synthetic),
+        ("overlap", overlap),
+    ]);
     match write_summary("fig7_dp_scaling", &summary) {
         Ok(path) => println!("summary → {path}"),
         Err(e) => eprintln!("could not write fig7 summary: {e:#}"),

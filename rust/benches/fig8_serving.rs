@@ -43,7 +43,7 @@ fn drain(
     let (ingress, q) = queue();
     let t = Timer::start();
     for r in reqs {
-        ingress.submit(r.id, r.tokens.clone());
+        ingress.submit(r.id, r.tokens.clone()).expect("unbounded submit");
     }
     drop(ingress);
     let resps = serve_loop(src, policy, q).expect("serve loop");
@@ -67,8 +67,11 @@ fn closed_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
     let mut rows: Vec<Json> = Vec::new();
     for width in [1usize, 4] {
         for max_batch in [1usize, 3, 8] {
-            let policy =
-                BatchPolicy { max_batch, max_wait: Duration::from_millis(1) };
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                max_queue_depth: 0,
+            };
             let (secs, resps) =
                 pool::with_threads(width, || drain(src, reqs, &policy));
             assert_eq!(resps.len(), reqs.len());
@@ -112,7 +115,11 @@ fn closed_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
 
 fn open_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
     println!("\n== open-loop: producer thread, deterministic arrival gaps ==");
-    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        max_queue_depth: 0,
+    };
     let (ingress, q) = queue();
     let producer_reqs: Vec<Request> = reqs.to_vec();
     let producer = std::thread::spawn(move || {
@@ -122,7 +129,7 @@ fn open_loop_section(src: &SyntheticScoreSource, reqs: &[Request]) -> Json {
             if i % 16 != 0 {
                 std::thread::sleep(Duration::from_micros(200));
             }
-            assert!(ingress.submit(r.id, r.tokens));
+            ingress.submit(r.id, r.tokens).expect("unbounded submit");
         }
     });
     let t = Timer::start();

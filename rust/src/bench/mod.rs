@@ -135,6 +135,18 @@ pub fn bench_transport() -> crate::dist::TransportKind {
     }
 }
 
+/// Round-loop schedule for the dist tests (the CI matrix sets
+/// `AR_ROUND=pipelined` on one dist cell so the overlapped schedule —
+/// eager segment reduce, per-layer optimizer fan-out, double-buffered
+/// rounds — rides the same parity suites as the phased cells;
+/// unset/other = the phased reference default).
+pub fn bench_round() -> crate::dist::RoundMode {
+    match std::env::var("AR_ROUND") {
+        Ok(v) if v.trim() == "pipelined" => crate::dist::RoundMode::Pipelined,
+        _ => crate::dist::RoundMode::Phased,
+    }
+}
+
 /// The dist dp-worker sweep shared by `fig7_dp_scaling` and
 /// `tests/dist_parity.rs`: {1, 2, 4} ∪ {`AR_DP_WORKERS`} — one place, so
 /// what CI tests and what the bench reports cannot diverge.
@@ -328,6 +340,11 @@ mod tests {
         std::env::set_var("AR_TRANSPORT", "tcp");
         assert_eq!(bench_transport(), crate::dist::TransportKind::Tcp);
         std::env::remove_var("AR_TRANSPORT");
+        std::env::remove_var("AR_ROUND");
+        assert_eq!(bench_round(), crate::dist::RoundMode::Phased);
+        std::env::set_var("AR_ROUND", "pipelined");
+        assert_eq!(bench_round(), crate::dist::RoundMode::Pipelined);
+        std::env::remove_var("AR_ROUND");
     }
 
     #[test]

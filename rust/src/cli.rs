@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{ExecPath, RunConfig};
 use crate::coordinator;
-use crate::dist::{self, demo, DistConfig, TcpCoordinator, TransportKind, WorkerCfg};
+use crate::dist::{self, demo, DistConfig, RoundMode, TcpCoordinator, TransportKind, WorkerCfg};
 use crate::opt;
 use crate::runtime::Engine;
 use crate::serve;
@@ -98,6 +98,11 @@ USAGE:
                                      (tcp = this process coordinates real
                                       worker processes over sockets; see
                                       `dist-demo` for the worker side)
+                     [--round phased|pipelined]
+                                     (pipelined = overlap shard compute,
+                                      segment reduce and per-layer
+                                      optimizer fan-out; scheduling only —
+                                      bitwise identical to phased)
                      [--log-level error|warn|info|debug|trace]
                                      (ALICE_RACS_LOG still wins)
                      [--trace [PATH]] (Chrome trace-event JSON; bare flag
@@ -116,6 +121,7 @@ USAGE:
                                   [--fail-after-micro N] (drop the
                                    connection mid-shard, for requeue tests)
                      shared:      [--micro N] [--steps N]
+                                  [--round phased|pipelined]
                                   [--trace [PATH]] [--log-level LEVEL]
                                   [--witness PATH] (append per-round
                                    witness telemetry as JSON lines;
@@ -128,6 +134,9 @@ USAGE:
                      shared:   [--ckpt FILE] [--artifacts DIR] |
                                [--synthetic] [--synthetic-work N]
                                [--max-batch N] [--max-wait-ms N]
+                               [--max-queue-depth N] (bound the ingress
+                                queue; over-bound requests are shed with
+                                a typed reject; 0 = unbounded, default)
                                [--requests N] [--batch N] [--seq N]
                                [--vocab N] [--seed N] [--run-id ID]
                                [--trace [PATH]] [--log-level LEVEL]
@@ -197,6 +206,9 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(t) = args.get("transport") {
         cfg.dist.transport = TransportKind::parse(t)?;
+    }
+    if let Some(r) = args.get("round") {
+        cfg.dist.round = RoundMode::parse(r)?;
     }
     if let Some(l) = args.get("listen") {
         cfg.dist.listen = l.to_string();
@@ -323,6 +335,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let policy = serve::BatchPolicy {
         max_batch: args.usize_or("max-batch", 8)?.max(1),
         max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
+        max_queue_depth: args.usize_or("max-queue-depth", 0)?,
     };
     let run_id = args.get("run-id").unwrap_or("serve").to_string();
     let seed = args.usize_or("seed", 0x5eed)? as u64;
@@ -337,20 +350,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 args.usize_or("vocab", dv)?,
                 seed,
             );
-            let (ingress, q) = serve::queue();
+            let (ingress, q) = serve::queue_bounded(policy.max_queue_depth);
             let t = Timer::start();
+            let mut rejected = 0usize;
             for r in &reqs {
-                ingress.submit(r.id, r.tokens.clone());
+                // closed-loop driver: a bounded queue sheds the overflow
+                // visibly; the digest still covers every scored request
+                if ingress.submit(r.id, r.tokens.clone()).is_err() {
+                    rejected += 1;
+                }
             }
             drop(ingress); // closed-loop: everything queued, let it drain
             let resps = serve::serve_loop(src.as_dyn(), &policy, q)?;
             let secs = t.secs();
             let lat = serve::latency_summary(&resps);
             println!(
-                "serve digest={:016x} served={} batches={} state_bytes={}",
+                "serve digest={:016x} served={} batches={} rejected={} state_bytes={}",
                 serve::score_digest(&resps),
                 resps.len(),
                 crate::obs::SERVE_BATCHES.get(),
+                rejected,
                 crate::obs::STATE_BYTES.get()
             );
             println!(
@@ -376,9 +395,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Duration::from_secs_f64(args.f64_or("idle-timeout-s", 30.0)?),
             )?;
             println!(
-                "served={} batches={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                "served={} batches={} rejected={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
                 report.served,
                 report.batches,
+                report.rejected,
                 crate::util::percentile(&report.latencies_s, 0.50) * 1e3,
                 crate::util::percentile(&report.latencies_s, 0.95) * 1e3,
                 crate::util::percentile(&report.latencies_s, 0.99) * 1e3
@@ -424,6 +444,10 @@ fn cmd_dist_demo(args: &Args) -> Result<()> {
         micro: args.usize_or("micro", 8)?.max(1),
         steps: args.usize_or("steps", 4)?.max(1) as u64,
         witness_path: args.get("witness").map(std::path::PathBuf::from),
+        round: match args.get("round") {
+            Some(r) => RoundMode::parse(r)?,
+            None => RoundMode::Phased,
+        },
     };
     let print_demo = |out: &demo::DemoOut| {
         let losses: Vec<String> =
@@ -652,6 +676,33 @@ mod tests {
         assert_eq!(cfg.dist.run_id, "pr7");
         let bad = Args::parse(&argv(&["train", "--transport", "smoke-signal"])).unwrap();
         assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn round_flag_overrides() {
+        let a = Args::parse(&argv(&[
+            "train", "--dp-workers", "2", "--round", "pipelined",
+        ]))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.dist.round, RoundMode::Pipelined);
+        // default stays the phased reference schedule
+        let d = Args::parse(&argv(&["train", "--dp-workers", "2"])).unwrap();
+        assert_eq!(config_from_args(&d).unwrap().dist.round, RoundMode::Phased);
+        let bad = Args::parse(&argv(&["train", "--round", "overlapped"])).unwrap();
+        assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_loopback_bounded_queue_runs() {
+        // closed-loop loopback with a tiny bound: overflow is shed
+        // visibly, the admitted requests still score
+        let a = Args::parse(&argv(&[
+            "serve", "--synthetic", "--requests", "8", "--max-batch", "2",
+            "--max-queue-depth", "4",
+        ]))
+        .unwrap();
+        cmd_serve(&a).unwrap();
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::dist::{DistConfig, TransportKind};
+use crate::dist::{DistConfig, RoundMode, TransportKind};
 use crate::opt::{Compen, Hyper, Refresh, Switch};
 use toml::View;
 
@@ -165,6 +165,7 @@ impl RunConfig {
                 as u32,
             straggler_factor: v.f64_or("dist", "straggler_factor", dist_d.straggler_factor),
             transport: TransportKind::parse(&v.str_or("dist", "transport", "loopback"))?,
+            round: RoundMode::parse(&v.str_or("dist", "round", "phased"))?,
             listen: v.str_or("dist", "listen", &dist_d.listen),
             connect: v.str_or("dist", "connect", &dist_d.connect),
             run_id: v.str_or("dist", "run_id", &dist_d.run_id),
@@ -285,8 +286,13 @@ mod tests {
         let z = RunConfig::from_toml("[dist]\ndp_workers = 0\nsim = true\n").unwrap();
         assert_eq!(z.dist.dp_workers, 1);
         assert!(z.dist.enabled());
-        // wire keys ride in the same section; loopback is the default
+        // wire keys ride in the same section; loopback is the default,
+        // and the round loop defaults to the phased reference schedule
         assert_eq!(z.dist.transport, TransportKind::Loopback);
+        assert_eq!(z.dist.round, RoundMode::Phased);
+        let p = RunConfig::from_toml("[dist]\ndp_workers = 2\nround = \"pipelined\"\n").unwrap();
+        assert_eq!(p.dist.round, RoundMode::Pipelined);
+        assert!(RunConfig::from_toml("[dist]\nround = \"overlapped\"\n").is_err());
         let w = RunConfig::from_toml(
             "[dist]\ndp_workers = 2\ntransport = \"tcp\"\nlisten = \"127.0.0.1:7401\"\n\
              run_id = \"exp9\"\ntick_ms = 2\njoin_timeout_s = 5.5\nround_timeout_s = 60\n",

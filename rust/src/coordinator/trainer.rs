@@ -26,7 +26,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{ExecPath, RunConfig};
 use crate::data::{bucket_spans, CorpusConfig, SyncBatcher};
-use crate::dist::{self, GradSource, RoundCoordinator, RoundRecord, Transport, TransportKind};
+use crate::dist::{
+    self, GradSource, RoundCoordinator, RoundMode, RoundRecord, Transport, TransportKind,
+};
 use crate::info;
 use crate::linalg::Mat;
 use crate::obs;
@@ -45,6 +47,17 @@ use super::schedule::LrSchedule;
 pub enum Route {
     Candidate,
     Adam,
+}
+
+/// Token batches for the *next* pipelined step, drawn during this step's
+/// fused optimizer fan-out (`[dist] round = "pipelined"` only), plus the
+/// batcher stream position captured *before* the draw. A checkpoint taken
+/// while the stash is live records the pre-draw words, so a resumed run
+/// re-draws exactly these batches — keeping checkpoints bitwise identical
+/// to the phased path, which has not drawn them yet.
+struct Prefetch {
+    tokens: Vec<HostTensor>,
+    pre_words: (u64, u64),
 }
 
 pub struct Trainer {
@@ -70,6 +83,8 @@ pub struct Trainer {
     /// How rounds execute: in-process loopback (default) or the TCP
     /// coordinator serving remote workers (`[dist] transport = "tcp"`).
     transport: Box<dyn Transport>,
+    /// Next step's token batches, pre-drawn inside the pipelined fan-out.
+    prefetch: Option<Prefetch>,
 }
 
 impl Trainer {
@@ -223,6 +238,7 @@ impl Trainer {
             cos_log: Vec::new(),
             dist,
             transport,
+            prefetch: None,
         })
     }
 
@@ -255,12 +271,52 @@ impl Trainer {
     // ------------------------------------------------- coordinator path ---
     fn step_coordinator(&mut self, lr: f32) -> Result<f32> {
         let micro = self.cfg.grad_accum * self.cfg.workers;
+        if self.dist.is_some() && self.cfg.dist.round == RoundMode::Pipelined {
+            return self.step_pipelined(micro, lr);
+        }
         let (loss, grads) = if self.dist.is_some() {
             self.accumulate_dist(micro)?
         } else {
             self.accumulate_serial(micro)?
         };
         self.optimizer_update(&grads, lr)?;
+        Ok(loss)
+    }
+
+    /// Pipelined round loop (`[dist] round = "pipelined"`): sibling merges
+    /// overlap still-running shards ([`dist::run_round_pipelined_via`]),
+    /// the per-parameter ragged fold and optimizer update run as one fused
+    /// fan-out (a parameter's refresh/step launches the moment its own
+    /// gradient is folded), and the *next* step's token batches are drawn
+    /// inside the same region — the engine-legal slice of gradient
+    /// double-buffering (real `grad_step` gradients depend on the params
+    /// this step is updating, so shard compute itself cannot legally start
+    /// early; the data phase can). Scheduling-only: losses, weights, RNG
+    /// stream, and checkpoints stay bitwise identical to the phased path
+    /// (`rust/tests/dist_parity.rs`).
+    fn step_pipelined(&mut self, micro: usize, lr: f32) -> Result<f32> {
+        let t_data = Timer::start();
+        let token_batches: Vec<HostTensor> = match self.prefetch.take() {
+            Some(p) => p.tokens,
+            None => {
+                let _sp = trace::span("train", "data");
+                (0..micro).map(|_| self.tokens_input()).collect()
+            }
+        };
+        self.profile.add("data", t_data.secs());
+        self.engine.prepare("grad_step")?;
+        let mut coord = self.dist.take().expect("dist coordinator present");
+        let out = {
+            let src = EngineGradSource { engine: &self.engine, params: &self.params };
+            dist::run_round_pipelined_via(&mut *self.transport, &mut coord, &src, &token_batches)
+        };
+        self.dist = Some(coord);
+        let round = out?;
+        self.profile.add("dp_grad_exec", round.grad_secs);
+        self.profile.add("dp_reduce", round.reduce_secs);
+        self.profile.add("dp_reduce_overlap", round.reduce_overlap_secs);
+        let loss = round.fold_loss();
+        self.optimizer_update_pipelined(&round, micro, lr)?;
         Ok(loss)
     }
 
@@ -424,6 +480,154 @@ impl Trainer {
         Ok(())
     }
 
+    /// The pipelined analogue of [`Self::optimizer_update`]: one fused
+    /// pool region whose task `i` folds parameter `i`'s mean gradient out
+    /// of the round's maximal blocks ([`dist::EagerRound::fold_param`] —
+    /// the identical additions in the identical grouping as the phased
+    /// monolithic fold), then refreshes/steps/applies it, so early
+    /// parameters' optimizer math runs while later parameters are still
+    /// folding. One extra task pre-draws the next step's token batches
+    /// (the batcher is touched by that task alone, so the draw sequence
+    /// matches the serial data phase exactly). Refresh seeds are pre-drawn
+    /// serially on this thread in parameter order — the identical RNG
+    /// stream to the phased path at every pool width.
+    fn optimizer_update_pipelined(
+        &mut self,
+        round: &dist::EagerRound,
+        micro: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let k = self.cfg.hp.interval.max(1) as u64;
+        let do_refresh = self.step == 1 || self.step % k == 0;
+        let seeds: Vec<Option<u64>> = (0..self.params.len())
+            .map(|i| {
+                if do_refresh && self.routes[i] == Route::Candidate {
+                    Some(self.rng.next_u64() ^ (i as u64))
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        struct LayerOut {
+            cos: Option<(String, Vec<f32>)>,
+            prof: Profile,
+            err: Option<String>,
+            /// Seconds from the region epoch to the end of this
+            /// parameter's fold — when its optimizer work launched.
+            fold_end: f64,
+            opt_secs: f64,
+        }
+        enum FanOut {
+            Layer(LayerOut),
+            Tokens(Vec<HostTensor>),
+        }
+
+        let t0 = Timer::start();
+        let _sp = trace::region("train", "opt_update_pipelined");
+        let np = self.params.len();
+        let step = self.step;
+        let names = &self.engine.manifest.params;
+        let model = self.engine.manifest.model.clone();
+        // the stash must carry the *pre-draw* stream position: a
+        // checkpoint taken while it is live restores to re-draw these
+        // exact batches (bitwise parity with phased checkpoints)
+        let pre_words = self.batcher.rng_words();
+        // Disjoint-index raw pointers for the region: task i < np owns
+        // slots[i]/params[i] exclusively, task np owns the batcher, and
+        // the region retires before any of these fields are touched again.
+        let slots_ptr = pool::SendPtr(self.slots.as_mut_ptr());
+        let params_ptr = pool::SendPtr(self.params.as_mut_ptr());
+        let batcher_ptr = pool::SendPtr(&mut self.batcher as *mut SyncBatcher);
+        let epoch = Timer::start();
+        let mut outs: Vec<Option<LayerOut>> = (0..np).map(|_| None).collect();
+        let mut fetched: Option<Vec<HostTensor>> = None;
+        pool::map_consume(
+            np + 1,
+            |i| {
+                if i == np {
+                    let _sp = trace::span("train", "data_prefetch");
+                    // SAFETY: the only task of this region touching the
+                    // batcher; the pointee outlives the region.
+                    let batcher = unsafe { &mut *batcher_ptr.0 };
+                    let toks = (0..micro)
+                        .map(|_| {
+                            HostTensor::i32(vec![model.batch, model.seq], batcher.next())
+                        })
+                        .collect();
+                    return FanOut::Tokens(toks);
+                }
+                let _sp = trace::span("opt", "layer");
+                let mut prof = Profile::new();
+                let tf = Timer::start();
+                let grad = round.fold_param(i);
+                prof.add("opt_fold_layer", tf.secs());
+                let fold_end = epoch.secs();
+                let t_opt = Timer::start();
+                // SAFETY: the region hands each index to exactly one task,
+                // so these are the only live references to slots[i] /
+                // params[i]; i < np = both lengths.
+                let slot = unsafe { &mut *slots_ptr.0.add(i) };
+                let param = unsafe { &mut *params_ptr.0.add(i) };
+                let mut cos = None;
+                if let Some(seed) = seeds[i] {
+                    let _rsp = trace::span("opt", "refresh");
+                    let tr = Timer::start();
+                    slot.refresh(&grad, seed);
+                    prof.add("opt_refresh_layer", tr.secs());
+                    if let Some(c) = slot.state.vecs.get("diag_cos") {
+                        cos = Some((names[i].name.clone(), c.clone()));
+                    }
+                }
+                let ts = Timer::start();
+                let delta = slot.step(&grad, step);
+                let err = match param.as_f32_mut() {
+                    Ok(w) => {
+                        for (wi, &di) in w.iter_mut().zip(&delta.data) {
+                            *wi -= lr * di;
+                        }
+                        None
+                    }
+                    Err(e) => Some(format!("{e:#}")),
+                };
+                prof.add("opt_step_layer", ts.secs());
+                FanOut::Layer(LayerOut { cos, prof, err, fold_end, opt_secs: t_opt.secs() })
+            },
+            |i, out| match out {
+                FanOut::Layer(l) => outs[i] = Some(l),
+                FanOut::Tokens(toks) => fetched = Some(toks),
+            },
+        );
+        let outs: Vec<LayerOut> =
+            outs.into_iter().map(|o| o.expect("fused opt task not executed")).collect();
+        // overlap ledger: optimizer seconds that ran while at least one
+        // other parameter was still folding — the latency the fused
+        // fan-out hid (0 when everything serialized, e.g. width 1)
+        let last_fold = outs.iter().fold(0.0f64, |m, o| m.max(o.fold_end));
+        let opt_overlap: f64 = outs
+            .iter()
+            .map(|o| o.opt_secs.min((last_fold - o.fold_end).max(0.0)))
+            .sum();
+        obs::OPT_OVERLAP_US.add((opt_overlap * 1e6) as u64);
+        self.profile.add("opt_overlap", opt_overlap);
+        for (i, out) in outs.into_iter().enumerate() {
+            if let Some(e) = out.err {
+                bail!("updating param {:?}: {e}", names[i].name);
+            }
+            self.profile.absorb(&out.prof);
+            if let Some((name, cos)) = out.cos {
+                self.cos_log.push((self.step, name, cos));
+            }
+        }
+        self.prefetch = Some(Prefetch {
+            tokens: fetched.expect("prefetch task not executed"),
+            pre_words,
+        });
+        obs::STATE_BYTES.set(self.state_elems() * 4);
+        self.profile.add("opt_update", t0.secs());
+        Ok(())
+    }
+
     // ------------------------------------------------------- fused path ---
     fn step_fused(&mut self, lr: f32) -> Result<f32> {
         let name = format!("train_step_{}", self.cfg.optimizer);
@@ -572,7 +776,14 @@ impl Trainer {
             }
         }
         let (rs, ri) = self.rng.state_words();
-        let (bs, bi) = self.batcher.rng_words();
+        // a live prefetch stash means the batcher has already drawn the
+        // *next* step's batches — record the captured pre-draw position,
+        // so this checkpoint is bit-identical to the phased path's and a
+        // resumed run re-draws the stashed batches itself
+        let (bs, bi) = match &self.prefetch {
+            Some(p) => p.pre_words,
+            None => self.batcher.rng_words(),
+        };
         let mut stream = Vec::with_capacity(16);
         for w in [rs, ri, bs, bi] {
             stream.extend_from_slice(&u64_to_chunks(w));
@@ -602,6 +813,9 @@ impl Trainer {
 
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         self.step = ck.step;
+        // checkpoints carry the pre-draw stream position (see above), so
+        // any stashed prefetch is stale — drop it and re-draw on demand
+        self.prefetch = None;
         // Parameters route through the same decoder as the read-only
         // serving loader (`Checkpoint::load_model`) — one shape-checked
         // path, so trainer restore and serve load can't drift.
@@ -819,6 +1033,13 @@ pub fn run_with(trainer: &mut Trainer) -> Result<Summary> {
     // cost/memory ledger: the optimizer state-bytes gauge plus wire
     // traffic (0/0 for loopback runs) ride along in every summary
     extra.push(("state_bytes", num(obs::STATE_BYTES.get() as f64)));
+    // pipelined-round overlap ledger: merge/optimizer microseconds that
+    // ran hidden behind still-executing work (0/absent on phased runs)
+    let (reduce_ov, opt_ov) = (obs::REDUCE_OVERLAP_US.get(), obs::OPT_OVERLAP_US.get());
+    if reduce_ov + opt_ov > 0 {
+        extra.push(("dp_reduce_overlap_us", num(reduce_ov as f64)));
+        extra.push(("dp_opt_overlap_us", num(opt_ov as f64)));
+    }
     let (wire_in, wire_out) = obs::wire_totals();
     if wire_in + wire_out > 0 {
         extra.push(("wire_bytes_in", num(wire_in as f64)));

@@ -8,16 +8,30 @@
 //! `transport_e2e` tests all call [`drive`]; bitwise identity across
 //! transports is checked on the per-step loss bits and an FNV-1a digest
 //! of the final weight bits.
+//!
+//! [`DemoCfg::round`] selects the round scheduling: the phased reference
+//! loop, or the pipelined dataflow (eager segment reduce + fused per-
+//! parameter fold/optimizer fan-out). On the loopback transport the
+//! pipelined driver additionally **double-buffers gradients**: round
+//! `t+1`'s shard compute shares one pool region with round `t`'s
+//! optimizer fan-out — legal here because the synthetic gradients are
+//! pure in `(index, tokens)` and independent of the weights being
+//! updated. All of it is scheduling only: the merge and fold arithmetic
+//! is identical, so every mode and transport produces the same bits.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
 use crate::opt::{build, Hyper, Slot};
 use crate::runtime::HostTensor;
-use crate::util::pool;
+use crate::util::{pool, Timer};
 
-use super::worker::SyntheticGradSource;
-use super::{run_round_via, DistConfig, Loopback, RoundCoordinator, Transport};
+use super::reduce::EagerReduce;
+use super::worker::{run_shard, ShardOut, SyntheticGradSource};
+use super::{
+    run_round_pipelined_via, run_round_via, DistConfig, EagerRound, Loopback, RoundCoordinator,
+    RoundMode, Transport,
+};
 
 /// Deterministic token blocks, exactly the `dist_parity` formula — any
 /// process that agrees on `(micro, step)` regenerates identical data.
@@ -41,6 +55,8 @@ pub struct DemoCfg {
     /// Microbatches per optimizer step (global, sharded over members).
     pub micro: usize,
     pub steps: u64,
+    /// Round scheduling: phased reference or the pipelined dataflow.
+    pub round: RoundMode,
     /// Where the *driver* appends one witness JSON line per round (the
     /// coordinator/loopback-side `witness.jsonl`; TCP workers write their
     /// own copy via `WorkerCfg::witness_path`). `None` = no file.
@@ -49,7 +65,7 @@ pub struct DemoCfg {
 
 impl Default for DemoCfg {
     fn default() -> Self {
-        DemoCfg { micro: 8, steps: 4, witness_path: None }
+        DemoCfg { micro: 8, steps: 4, round: RoundMode::Phased, witness_path: None }
     }
 }
 
@@ -84,27 +100,86 @@ fn weight_blob(weights: &[Mat]) -> Vec<u8> {
     out
 }
 
+fn demo_slots(s: &SyntheticGradSource) -> Result<Vec<Slot>> {
+    let hp = Hyper::default();
+    s.shapes
+        .iter()
+        .map(|&(r, c)| -> Result<Slot> { Ok(Slot::new(build("adam", &hp)?, r, c)) })
+        .collect()
+}
+
+fn demo_out(
+    weights: &[Mat],
+    loss_bits: Vec<u32>,
+    coord: &RoundCoordinator,
+) -> DemoOut {
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a(&mut digest, &weight_blob(weights));
+    DemoOut {
+        loss_bits,
+        weight_digest: digest,
+        rounds: coord.round,
+        requeues: coord.log.iter().map(|l| l.requeues).sum(),
+    }
+}
+
+/// Fused per-parameter fold + optimizer update (the pipelined opt
+/// fan-out): task `p` folds its own mean gradient out of the round's
+/// maximal blocks and immediately refreshes/steps/applies it, so early
+/// parameters' optimizer work overlaps later parameters' folds. The
+/// per-parameter arithmetic is exactly the phased loop's
+/// (`EagerRound::fold_param` reproduces the monolithic fold's grouping).
+fn opt_fanout(round: &EagerRound, slots: &mut [Slot], weights: &mut [Mat], t: u64) {
+    let slots_ptr = pool::SendPtr(slots.as_mut_ptr());
+    let weights_ptr = pool::SendPtr(weights.as_mut_ptr());
+    pool::run(slots.len(), |p| {
+        let g = round.fold_param(p);
+        // SAFETY: the region hands each index to exactly one task, so
+        // these are the only live references to slots[p] / weights[p].
+        let slot = unsafe { &mut *slots_ptr.0.add(p) };
+        let w = unsafe { &mut *weights_ptr.0.add(p) };
+        if t == 1 {
+            slot.refresh(&g, 0xd157 ^ t);
+        }
+        let delta = slot.step(&g, t);
+        w.ema_(1.0, &delta, -0.01);
+    });
+}
+
 /// Run `cfg.steps` optimizer steps of the synthetic training loop over
 /// `transport`, publishing the weight blob after every step (so late
 /// joiners always receive the newest state). The transport is shut down
-/// before returning.
+/// before returning. `cfg.round` picks the per-step scheduling; both
+/// modes return identical bits.
 pub fn drive(
     transport: &mut dyn Transport,
     coord: &mut RoundCoordinator,
     cfg: &DemoCfg,
 ) -> Result<DemoOut> {
     let s = demo_src();
-    let hp = Hyper::default();
-    let mut slots: Vec<Slot> = s
-        .shapes
-        .iter()
-        .map(|&(r, c)| -> Result<Slot> { Ok(Slot::new(build("adam", &hp)?, r, c)) })
-        .collect::<Result<_>>()?;
+    let mut slots = demo_slots(&s)?;
     let mut weights: Vec<Mat> = s.shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
     let mut loss_bits = Vec::new();
     for t in 1..=cfg.steps {
         let toks = token_block(cfg.micro, 1000 * t as i32);
-        let out = run_round_via(transport, coord, &s, &toks)?;
+        match cfg.round {
+            RoundMode::Phased => {
+                let out = run_round_via(transport, coord, &s, &toks)?;
+                loss_bits.push(out.loss.to_bits());
+                for ((slot, w), g) in slots.iter_mut().zip(&mut weights).zip(&out.grads) {
+                    if t == 1 {
+                        slot.refresh(g, 0xd157 ^ t);
+                    }
+                    let delta = slot.step(g, t);
+                    w.ema_(1.0, &delta, -0.01);
+                }
+            }
+            RoundMode::Pipelined => {
+                let round = run_round_pipelined_via(transport, coord, &s, &toks)?;
+                loss_bits.push(round.fold_loss().to_bits());
+                opt_fanout(&round, &mut slots, &mut weights, t);
+            }
+        }
         // round-end telemetry: broadcast the health ledger to the workers
         // and (optionally) append it to the driver-side witness.jsonl.
         // Observational only — nothing below reads it back.
@@ -114,36 +189,151 @@ pub fn drive(
                 super::transport::append_witness_line(path, &w);
             }
         }
-        loss_bits.push(out.loss.to_bits());
-        for ((slot, w), g) in slots.iter_mut().zip(&mut weights).zip(&out.grads) {
-            if t == 1 {
-                slot.refresh(g, 0xd157 ^ t);
-            }
-            let delta = slot.step(g, t);
-            w.ema_(1.0, &delta, -0.01);
-        }
         if transport.wants_state() {
             transport.publish_state(t, &coord.snapshot(), &weight_blob(&weights))?;
         }
     }
     transport.shutdown();
-    let mut digest = 0xcbf2_9ce4_8422_2325u64;
-    fnv1a(&mut digest, &weight_blob(&weights));
-    Ok(DemoOut {
-        loss_bits,
-        weight_digest: digest,
-        rounds: coord.round,
-        requeues: coord.log.iter().map(|l| l.requeues).sum(),
-    })
+    Ok(demo_out(&weights, loss_bits, coord))
+}
+
+/// Double-buffered pipelined loopback driver: one pool region per step
+/// runs round `t`'s shards **and** round `t-1`'s per-parameter optimizer
+/// fan-out side by side; shard results stream into the eager reduce at
+/// consume time (on this thread), exactly like the loopback transport's
+/// pipelined round. The synthetic gradients never read the weights, so
+/// starting round `t`'s compute before round `t-1`'s update has drained
+/// changes nothing but the schedule — the bits match the phased drive.
+fn drive_loopback_pipelined(
+    coord: &mut RoundCoordinator,
+    cfg: &DemoCfg,
+) -> Result<DemoOut> {
+    let s = demo_src();
+    let mut slots = demo_slots(&s)?;
+    let mut weights: Vec<Mat> = s.shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+    let np = weights.len();
+    let mut loss_bits = Vec::new();
+    // the previous round's folded-deferred blocks, optimizer work pending
+    let mut pend: Option<(u64, EagerRound)> = None;
+    let mut lb = Loopback;
+    for t in 1..=cfg.steps {
+        let toks = token_block(cfg.micro, 1000 * t as i32);
+        if coord.mid_round() {
+            coord.resume_round(toks.len())?;
+        } else {
+            lb.advance_to_train(coord)?;
+            coord.begin_round(toks.len())?;
+        }
+        let assignments = coord.assignments().to_vec();
+        let dp = assignments.len();
+        let k = if pend.is_some() { np } else { 0 };
+
+        enum Out {
+            Shard(Result<ShardOut>),
+            Opt,
+        }
+        let mut er = EagerReduce::new();
+        let mut merge_secs = 0.0f64;
+        let mut failed: Option<anyhow::Error> = None;
+        let t0 = Timer::start();
+        let slots_ptr = pool::SendPtr(slots.as_mut_ptr());
+        let weights_ptr = pool::SendPtr(weights.as_mut_ptr());
+        let pend_ref = &pend;
+        pool::map_consume(
+            dp + k,
+            |i| {
+                if i < dp {
+                    return Out::Shard(run_shard(&s, &assignments[i], &toks));
+                }
+                let p = i - dp;
+                let (pt, round) = pend_ref.as_ref().expect("pending opt work present");
+                let g = round.fold_param(p);
+                // SAFETY: the region hands each index to exactly one
+                // task, so these are the only live references to
+                // slots[p] / weights[p].
+                let slot = unsafe { &mut *slots_ptr.0.add(p) };
+                let w = unsafe { &mut *weights_ptr.0.add(p) };
+                if *pt == 1 {
+                    slot.refresh(&g, 0xd157 ^ *pt);
+                }
+                let delta = slot.step(&g, *pt);
+                w.ema_(1.0, &delta, -0.01);
+                Out::Opt
+            },
+            |i, out| {
+                if let Out::Shard(res) = out {
+                    match res {
+                        Ok(o) => {
+                            coord.complete(i, o.secs);
+                            let spans: Vec<(usize, usize)> =
+                                o.nodes.iter().map(|n| (n.lo, n.len)).collect();
+                            coord.deliver_segments(&spans);
+                            let tm = Timer::start();
+                            er.offer_all(o.nodes);
+                            merge_secs += tm.secs();
+                        }
+                        Err(e) => {
+                            if failed.is_none() {
+                                failed = Some(e.context(format!("dp worker {i}")));
+                            }
+                        }
+                    }
+                }
+            },
+        );
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        let grad_secs = t0.secs();
+        coord.tick(); // RoundTrain → Reduce
+        if !coord.segments_complete() {
+            return Err(anyhow!(
+                "pipelined round delivered {} of {} microbatches",
+                coord.delivered_micro(),
+                toks.len()
+            ));
+        }
+        let blocks = er.finish();
+        if blocks.is_empty() {
+            return Err(anyhow!("round produced no gradient nodes"));
+        }
+        coord.finish_reduce(merge_secs);
+        coord.tick(); // Reduce → Cooldown
+        if let Some(w) = coord.witness() {
+            lb.publish_witness(&w)?;
+            if let Some(path) = &cfg.witness_path {
+                super::transport::append_witness_line(path, &w);
+            }
+        }
+        let round = EagerRound {
+            blocks,
+            micro: toks.len(),
+            grad_secs,
+            reduce_secs: merge_secs,
+            reduce_overlap_secs: 0.0,
+        };
+        loss_bits.push(round.fold_loss().to_bits());
+        pend = Some((t, round));
+    }
+    // drain the final round's optimizer work — no next round to overlap
+    if let Some((t, round)) = pend.take() {
+        opt_fanout(&round, &mut slots, &mut weights, t);
+    }
+    lb.shutdown();
+    Ok(demo_out(&weights, loss_bits, coord))
 }
 
 /// The in-process reference run: `dp` simulated workers on the loopback
-/// transport at pool width `width`.
+/// transport at pool width `width`. `cfg.round = pipelined` routes to the
+/// double-buffered driver.
 pub fn run_loopback(cfg: &DemoCfg, dp: usize, width: usize) -> Result<DemoOut> {
     pool::with_threads(width, || {
         let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
         let mut coord = dist.coordinator();
-        drive(&mut Loopback, &mut coord, cfg)
+        match cfg.round {
+            RoundMode::Phased => drive(&mut Loopback, &mut coord, cfg),
+            RoundMode::Pipelined => drive_loopback_pipelined(&mut coord, cfg),
+        }
     })
 }
 
@@ -160,5 +350,40 @@ mod tests {
         assert_eq!(a.weight_digest, b.weight_digest);
         assert_eq!(b.rounds, 3);
         assert_eq!(b.requeues, 0);
+    }
+
+    #[test]
+    fn double_buffered_loopback_matches_phased_bitwise() {
+        let phased =
+            run_loopback(&DemoCfg { micro: 6, steps: 3, ..DemoCfg::default() }, 2, 2).unwrap();
+        for (dp, width) in [(1usize, 1usize), (2, 2), (3, 4)] {
+            let cfg = DemoCfg {
+                micro: 6,
+                steps: 3,
+                round: RoundMode::Pipelined,
+                ..DemoCfg::default()
+            };
+            let got = run_loopback(&cfg, dp, width).unwrap();
+            assert_eq!(got.loss_bits, phased.loss_bits, "dp={dp} width={width}");
+            assert_eq!(got.weight_digest, phased.weight_digest, "dp={dp} width={width}");
+            assert_eq!(got.rounds, 3);
+        }
+    }
+
+    #[test]
+    fn pipelined_drive_matches_phased_over_any_transport_shape() {
+        // the generic (transport-driven) pipelined arm, pinned on
+        // loopback so the TCP parity tests inherit a known-good base
+        let base = DemoCfg { micro: 5, steps: 2, ..DemoCfg::default() };
+        let phased = run_loopback(&base, 2, 2).unwrap();
+        let cfg = DemoCfg { round: RoundMode::Pipelined, ..base };
+        let got = pool::with_threads(2, || {
+            let dist = DistConfig { dp_workers: 2, ..DistConfig::default() };
+            let mut coord = dist.coordinator();
+            drive(&mut Loopback, &mut coord, &cfg)
+        })
+        .unwrap();
+        assert_eq!(got.loss_bits, phased.loss_bits);
+        assert_eq!(got.weight_digest, phased.weight_digest);
     }
 }

@@ -62,6 +62,10 @@ pub struct DistConfig {
     pub straggler_factor: f64,
     /// Which [`Transport`] carries the rounds.
     pub transport: TransportKind,
+    /// Round scheduling: barriered reference phases, or the pipelined
+    /// dataflow (eager reduce + per-layer optimizer fan-out). Scheduling
+    /// only — both modes produce bitwise-identical losses and weights.
+    pub round: RoundMode,
     /// Coordinator bind address (TCP transport; `:0` picks a free port).
     pub listen: String,
     /// Coordinator address a worker process connects to.
@@ -93,6 +97,29 @@ impl TransportKind {
     }
 }
 
+/// Round-loop scheduling selector for the `[dist]` section / `--round`
+/// flag. Phased is the default and the bitwise reference; pipelined
+/// overlaps segment reduce and optimizer fan-out with shard compute and
+/// must match it bit for bit (`tests/dist_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Three barriered phases: all shards → tree reduce → optimizer step.
+    Phased,
+    /// Eager dataflow: siblings merge as shards land, each parameter's
+    /// optimizer update launches as soon as its gradient is folded.
+    Pipelined,
+}
+
+impl RoundMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "phased" => RoundMode::Phased,
+            "pipelined" => RoundMode::Pipelined,
+            _ => return Err(anyhow!("unknown round mode {s:?} (want phased|pipelined)")),
+        })
+    }
+}
+
 impl Default for DistConfig {
     fn default() -> Self {
         DistConfig {
@@ -103,6 +130,7 @@ impl Default for DistConfig {
             cooldown_ticks: 1,
             straggler_factor: 3.0,
             transport: TransportKind::Loopback,
+            round: RoundMode::Phased,
             listen: "127.0.0.1:0".to_string(),
             connect: String::new(),
             run_id: "run".to_string(),
@@ -172,6 +200,10 @@ pub struct RoundOutput {
     /// Gradient-phase wall clock (the worker fan-out).
     pub grad_secs: f64,
     pub reduce_secs: f64,
+    /// Merge wall clock that ran *while shards were still executing* —
+    /// the pipelined win. Always 0.0 on the phased path, where every
+    /// merge waits for the slowest shard.
+    pub reduce_overlap_secs: f64,
 }
 
 /// Drive one full data-parallel round over an explicit [`Transport`]:
@@ -221,6 +253,7 @@ pub fn run_round_via(
         grads: root.grads.into_iter().map(|g| g.scale(scale)).collect(),
         grad_secs,
         reduce_secs,
+        reduce_overlap_secs: 0.0,
     })
 }
 
@@ -232,6 +265,145 @@ pub fn run_round<S: GradSource>(
     tokens: &[HostTensor],
 ) -> Result<RoundOutput> {
     run_round_via(&mut Loopback, coord, src, tokens)
+}
+
+/// A pipelined round's result with the final ragged fold still deferred:
+/// the maximal aligned blocks (binary decomposition of the microbatch
+/// count), so the caller can fold **per parameter** inside its optimizer
+/// fan-out instead of waiting for one monolithic root. `fold_loss` /
+/// `fold_param` / [`EagerRound::into_output`] all reproduce exactly the
+/// grouping `reduce::fold_blocks` (hence the phased path) uses.
+#[derive(Debug)]
+pub struct EagerRound {
+    /// Maximal merged blocks in index order (`reduce::EagerReduce::finish`).
+    pub blocks: Vec<reduce::Node<reduce::GradNode>>,
+    /// Microbatches in the round (the mean-gradient scale is `1/micro`).
+    pub micro: usize,
+    pub grad_secs: f64,
+    /// Total sibling-merge wall clock (the pipelined `reduce_secs`).
+    pub reduce_secs: f64,
+    /// Merge time that overlapped still-running shards (every delivery's
+    /// merge except the last — that one, by definition, had nothing left
+    /// to hide behind).
+    pub reduce_overlap_secs: f64,
+}
+
+impl EagerRound {
+    /// Scalar mean loss: the per-block losses folded right-to-left with
+    /// the left operand as accumulator — `GradNode::merge`'s loss chain,
+    /// bitwise — then scaled by `1/micro`.
+    pub fn fold_loss(&self) -> f32 {
+        let k = self.blocks.len();
+        let mut acc = self.blocks[k - 1].value.loss;
+        for j in (0..k - 1).rev() {
+            acc = self.blocks[j].value.loss + acc;
+        }
+        acc * (1.0 / self.micro as f32)
+    }
+
+    /// One parameter's mean gradient: that parameter's slice of each
+    /// block folded right-to-left via `ema_(1.0, ·, 1.0)` with the left
+    /// operand as accumulator — the identical additions in the identical
+    /// grouping as `GradNode::merge` under `fold_blocks` — then scaled.
+    pub fn fold_param(&self, param: usize) -> Mat {
+        let k = self.blocks.len();
+        let mut acc = self.blocks[k - 1].value.grads[param].clone();
+        for j in (0..k - 1).rev() {
+            let mut left = self.blocks[j].value.grads[param].clone();
+            left.ema_(1.0, &acc, 1.0);
+            acc = left;
+        }
+        acc.scale(1.0 / self.micro as f32)
+    }
+
+    /// Collapse to the phased [`RoundOutput`] (bitwise identical): the
+    /// whole-node fold the phased `combine` tail runs, then the same
+    /// mean scaling.
+    pub fn into_output(self) -> RoundOutput {
+        let scale = 1.0 / self.micro as f32;
+        let root = reduce::fold_blocks(self.blocks).expect("non-empty round");
+        RoundOutput {
+            loss: root.loss * scale,
+            grads: root.grads.into_iter().map(|g| g.scale(scale)).collect(),
+            grad_secs: self.grad_secs,
+            reduce_secs: self.reduce_secs,
+            reduce_overlap_secs: self.reduce_overlap_secs,
+        }
+    }
+}
+
+/// Pipelined analogue of [`run_round_via`]: identical coordinator phase
+/// discipline (resume / advance+begin, `RoundTrain → Reduce → Cooldown`),
+/// but shard results stream into an [`reduce::EagerReduce`] as they land
+/// — sibling merges overlap the still-running shards — and the final
+/// ragged fold is deferred to the returned [`EagerRound`] so the caller
+/// can run it per parameter inside its optimizer fan-out.
+///
+/// Scheduling-only by construction: the eager closure performs the same
+/// additions in the same grouping as `reduce::combine`, so every bit of
+/// loss, gradient, and checkpoint matches the phased path.
+pub fn run_round_pipelined_via(
+    transport: &mut dyn Transport,
+    coord: &mut RoundCoordinator,
+    src: &dyn GradSource,
+    tokens: &[HostTensor],
+) -> Result<EagerRound> {
+    let _sp = trace::region("round", "dp_round_pipelined");
+    if coord.mid_round() {
+        coord.resume_round(tokens.len())?;
+    } else {
+        transport.advance_to_train(coord)?;
+        coord.begin_round(tokens.len())?;
+    }
+
+    let mut er = reduce::EagerReduce::new();
+    let mut merge_secs = 0.0f64;
+    let mut last_merge = 0.0f64;
+    let grad_secs = {
+        let sink = &mut |nodes: Vec<reduce::Node<reduce::GradNode>>| {
+            let _sp = trace::span("dist", "eager_merge");
+            let t = Timer::start();
+            er.offer_all(nodes);
+            last_merge = t.secs();
+            merge_secs += last_merge;
+        };
+        transport.execute_round_eager(coord, src, tokens, sink)?
+    };
+    coord.tick(); // RoundTrain → Reduce
+    if !coord.segments_complete() {
+        return Err(anyhow!(
+            "pipelined round delivered {} of {} microbatches",
+            coord.delivered_micro(),
+            tokens.len()
+        ));
+    }
+    let blocks = er.finish();
+    if blocks.is_empty() {
+        return Err(anyhow!("round produced no gradient nodes"));
+    }
+    coord.finish_reduce(merge_secs);
+    coord.tick(); // Reduce → Cooldown
+
+    // every merge before the final delivery ran under still-executing
+    // shards; surface that hidden time in the obs ledger
+    let reduce_overlap_secs = (merge_secs - last_merge).max(0.0);
+    crate::obs::REDUCE_OVERLAP_US.add((reduce_overlap_secs * 1e6) as u64);
+    Ok(EagerRound {
+        blocks,
+        micro: tokens.len(),
+        grad_secs,
+        reduce_secs: merge_secs,
+        reduce_overlap_secs,
+    })
+}
+
+/// [`run_round_pipelined_via`] on the in-process [`Loopback`] transport.
+pub fn run_round_pipelined<S: GradSource>(
+    coord: &mut RoundCoordinator,
+    src: &S,
+    tokens: &[HostTensor],
+) -> Result<EagerRound> {
+    run_round_pipelined_via(&mut Loopback, coord, src, tokens)
 }
 
 #[cfg(test)]
@@ -255,6 +427,58 @@ mod tests {
         assert_eq!(c.round_cfg().min_workers, 2);
         let c = DistConfig { dp_workers: 4, min_workers: 0, ..DistConfig::default() };
         assert_eq!(c.round_cfg().min_workers, 1);
+    }
+
+    #[test]
+    fn round_mode_parse() {
+        assert_eq!(RoundMode::parse("phased").unwrap(), RoundMode::Phased);
+        assert_eq!(RoundMode::parse("pipelined").unwrap(), RoundMode::Pipelined);
+        assert!(RoundMode::parse("eager").is_err());
+        assert_eq!(DistConfig::default().round, RoundMode::Phased, "phased stays the default");
+    }
+
+    #[test]
+    fn pipelined_round_matches_phased_bitwise() {
+        let src = SyntheticGradSource { shapes: vec![(4, 4), (2, 3)], work: 0 };
+        for dp in [1usize, 2, 3, 4] {
+            for micro in [1usize, 5, 8, 13] {
+                if micro < dp {
+                    continue;
+                }
+                let cfg = DistConfig { dp_workers: dp, sim: true, ..DistConfig::default() };
+                let tokens: Vec<HostTensor> = (0..micro)
+                    .map(|i| HostTensor::i32(vec![2], vec![i as i32, 2 * i as i32 + 1]))
+                    .collect();
+                let phased = {
+                    let mut coord = cfg.coordinator();
+                    run_round(&mut coord, &src, &tokens).unwrap()
+                };
+                let mut coord = cfg.coordinator();
+                let eager = run_round_pipelined(&mut coord, &src, &tokens).unwrap();
+                // the deferred per-param folds must equal the monolithic fold
+                assert_eq!(
+                    eager.fold_loss().to_bits(),
+                    phased.loss.to_bits(),
+                    "dp={dp} micro={micro} loss"
+                );
+                for (p, want) in phased.grads.iter().enumerate() {
+                    assert_eq!(
+                        eager.fold_param(p).data,
+                        want.data,
+                        "dp={dp} micro={micro} param {p}"
+                    );
+                }
+                let out = eager.into_output();
+                assert_eq!(out.loss.to_bits(), phased.loss.to_bits());
+                for (a, b) in out.grads.iter().zip(&phased.grads) {
+                    assert_eq!(a.data, b.data);
+                }
+                // both modes drive the round machine identically
+                assert_eq!(coord.round, 1);
+                assert_eq!(coord.log.len(), 1);
+                assert_eq!(coord.log[0].micro, micro);
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,8 @@
 //! Memory: a worker holds at most `log2(shard) + 1` in-flight nodes — each
 //! a full gradient set — instead of one node per microbatch.
 
+use std::collections::BTreeMap;
+
 use crate::linalg::Mat;
 
 /// Payload that can be summed pairwise into tree nodes.
@@ -162,14 +164,109 @@ pub fn combine<T: Merge>(mut parts: Vec<Node<T>>) -> Option<T> {
         }
         acc.push_node(part);
     }
-    // right-to-left fold of the leftover maximal blocks:
-    // b0 ⊕ (b1 ⊕ (b2 ⊕ …)) — one fixed grouping for the ragged tail
-    let mut blocks = acc.nodes;
+    fold_blocks(acc.nodes)
+}
+
+/// Right-to-left fold of the leftover maximal blocks of a ragged `M`:
+/// `b0 ⊕ (b1 ⊕ (b2 ⊕ …))` — one fixed grouping, a pure function of `M`.
+/// Shared tail of [`combine`] and the pipelined round's deferred fold.
+pub fn fold_blocks<T: Merge>(mut blocks: Vec<Node<T>>) -> Option<T> {
     while blocks.len() >= 2 {
         let right = blocks.pop().expect("len >= 2");
         blocks.last_mut().expect("len >= 1").value.merge(right.value);
     }
     blocks.pop().map(|n| n.value)
+}
+
+/// Out-of-order sibling closure for the pipelined round: workers' subtree
+/// roots are offered **as each shard finishes** (any arrival order), and
+/// every aligned-sibling merge runs the moment both halves are present —
+/// the upper tree levels overlap the still-running shards instead of
+/// waiting for the last one.
+///
+/// Bitwise-legal by the same argument as [`combine`]: each canonical tree
+/// node's value is a fixed recursive function of its span — (left half) ⊕
+/// (right half), with the left operand as the accumulator — so the unique
+/// sibling closure is reached through the identical additions in the
+/// identical grouping regardless of *when* the siblings became available.
+/// [`EagerReduce::finish`] yields the same maximal blocks [`combine`]'s
+/// stack would, ready for the same [`fold_blocks`] tail.
+#[derive(Debug)]
+pub struct EagerReduce<T> {
+    /// Maximal merged spans so far, keyed by `lo` (disjoint, sorted).
+    spans: BTreeMap<usize, Node<T>>,
+}
+
+impl<T: Merge> Default for EagerReduce<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Merge> EagerReduce<T> {
+    pub fn new() -> Self {
+        EagerReduce { spans: BTreeMap::new() }
+    }
+
+    /// Offer one reduced subtree root. Spans must be disjoint across all
+    /// offers of a round (each leaf delivered exactly once) — the
+    /// per-segment ledger on the round coordinator enforces this upstream,
+    /// and it is asserted again here.
+    pub fn offer(&mut self, mut node: Node<T>) {
+        loop {
+            // merge with the left neighbor while it is our sibling
+            if let Some((&llo, left)) = self.spans.range(..node.lo).next_back() {
+                assert!(
+                    left.lo + left.len <= node.lo,
+                    "eager offers must cover disjoint index spans"
+                );
+                if left.sibling_of(&node) {
+                    let mut left = self.spans.remove(&llo).expect("present");
+                    left.value.merge(node.value);
+                    left.len *= 2;
+                    node = left;
+                    continue;
+                }
+            }
+            // merge with the right neighbor while we are its left sibling
+            if let Some((&rlo, right)) = self.spans.range(node.lo..).next() {
+                assert!(
+                    node.lo + node.len <= rlo,
+                    "eager offers must cover disjoint index spans"
+                );
+                if node.sibling_of(right) {
+                    let right = self.spans.remove(&rlo).expect("present");
+                    node.value.merge(right.value);
+                    node.len *= 2;
+                    continue;
+                }
+            }
+            break;
+        }
+        self.spans.insert(node.lo, node);
+    }
+
+    /// Offer every node of one shard's output (arrival order within the
+    /// batch is irrelevant — each cascades independently).
+    pub fn offer_all(&mut self, nodes: Vec<Node<T>>) {
+        for n in nodes {
+            self.offer(n);
+        }
+    }
+
+    /// Number of leaves covered so far.
+    pub fn covered(&self) -> usize {
+        self.spans.values().map(|n| n.len).sum()
+    }
+
+    /// The maximal merged blocks, in index order — identical to what
+    /// [`combine`]'s stack holds before its fold, so
+    /// `fold_blocks(er.finish())` ≡ `combine(parts)` bitwise. The fold is
+    /// left to the caller so the pipelined round can run it per-parameter
+    /// inside the optimizer fan-out.
+    pub fn finish(self) -> Vec<Node<T>> {
+        self.spans.into_values().collect()
+    }
 }
 
 /// Canonical tree sum of a dense slice — the serial reference the
@@ -291,6 +388,95 @@ mod tests {
     fn empty_round_is_none() {
         assert_eq!(tree_sum_f32(&[]), None);
         assert!(combine::<f32>(Vec::new()).is_none());
+        assert!(fold_blocks::<f32>(Vec::new()).is_none());
+        assert_eq!(EagerReduce::<f32>::new().covered(), 0);
+        assert!(EagerReduce::<f32>::new().finish().is_empty());
+    }
+
+    /// Build each shard's maximal subtree roots, as a worker would.
+    fn shard_nodes(xs: &[f32], shard: &[usize]) -> Vec<Node<f32>> {
+        let mut order = shard.to_vec();
+        order.sort_unstable();
+        let mut acc = TreeAccum::new();
+        for &i in &order {
+            acc.push(i, xs[i]);
+        }
+        acc.into_nodes()
+    }
+
+    #[test]
+    fn eager_matches_combine_for_every_arrival_order() {
+        let mut rng = Pcg::seeded(0xd157_0002);
+        for m in [1usize, 2, 3, 5, 8, 11, 13, 16, 23] {
+            let xs: Vec<f32> = (0..m)
+                .map(|i| rng.normal() * 10f32.powi((i % 9) as i32 - 4))
+                .collect();
+            let reference = tree_sum_f32(&xs).unwrap();
+            for w in 1..=m.min(5) {
+                let shards: Vec<Vec<usize>> =
+                    (0..w).map(|s| (s * m / w..(s + 1) * m / w).collect()).collect();
+                // every shard-arrival permutation must produce the same bits
+                let mut orders: Vec<Vec<usize>> = vec![(0..w).collect()];
+                for rot in 1..w {
+                    let mut o: Vec<usize> = (0..w).collect();
+                    o.rotate_left(rot);
+                    orders.push(o);
+                }
+                orders.push((0..w).rev().collect());
+                for order in orders {
+                    let mut er = EagerReduce::new();
+                    for &s in &order {
+                        er.offer_all(shard_nodes(&xs, &shards[s]));
+                    }
+                    assert_eq!(er.covered(), m);
+                    let got = fold_blocks(er.finish()).unwrap();
+                    assert_eq!(
+                        got.to_bits(),
+                        reference.to_bits(),
+                        "m={m} w={w} order={order:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eager_blocks_equal_combines_blocks() {
+        // the deferred-fold contract: finish() must yield exactly the
+        // maximal blocks combine's stack folds (binary decomposition of M)
+        let xs: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let shards: Vec<Vec<usize>> = vec![(0..5).collect(), (5..13).collect()];
+        let mut er = EagerReduce::new();
+        for s in shards.iter().rev() {
+            er.offer_all(shard_nodes(&xs, s));
+        }
+        let spans: Vec<(usize, usize)> =
+            er.finish().iter().map(|n| (n.lo, n.len)).collect();
+        assert_eq!(spans, vec![(0, 8), (8, 4), (12, 1)], "13 = 8 + 4 + 1");
+    }
+
+    #[test]
+    fn eager_handles_requeued_non_contiguous_shards() {
+        let xs: Vec<f32> = (0..11).map(|i| (i as f32 + 0.5) * 1e3).collect();
+        let reference = tree_sum_f32(&xs).unwrap();
+        // the same churn partition as invariant_under_non_contiguous_requeue,
+        // delivered in reverse completion order
+        let shards: Vec<Vec<usize>> =
+            vec![vec![0, 1], vec![4, 5, 6, 2], vec![7, 8, 9, 10, 3]];
+        let mut er = EagerReduce::new();
+        for s in shards.iter().rev() {
+            er.offer_all(shard_nodes(&xs, s));
+        }
+        let got = fold_blocks(er.finish()).unwrap();
+        assert_eq!(got.to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint index spans")]
+    fn eager_rejects_double_delivery() {
+        let mut er = EagerReduce::new();
+        er.offer(Node { lo: 0, len: 2, value: 1.0f32 });
+        er.offer(Node { lo: 1, len: 1, value: 1.0f32 });
     }
 
     #[test]

@@ -221,6 +221,14 @@ pub struct RoundCoordinator {
     requeues_this_round: u64,
     reduce_done: bool,
     reduce_secs: f64,
+    /// Per-segment delivery ledger for the pipelined (eager) reduce path:
+    /// aligned `(lo, len)` spans already handed to the eager reducer.
+    /// Transient — never serialized, because a mid-round checkpoint
+    /// restores into full re-execution of every shard ([`resume_round`]
+    /// clears it along with the completion flags).
+    ///
+    /// [`resume_round`]: Self::resume_round
+    delivered: Vec<(usize, usize)>,
     pub log: Vec<RoundRecord>,
 }
 
@@ -239,6 +247,7 @@ impl RoundCoordinator {
             requeues_this_round: 0,
             reduce_done: false,
             reduce_secs: 0.0,
+            delivered: Vec::new(),
             log: Vec::new(),
         }
     }
@@ -268,50 +277,74 @@ impl RoundCoordinator {
     /// order) to the surviving members — deterministically, and without
     /// changing the reduced bits (tree reduce is index-aligned).
     pub fn leave(&mut self, id: usize) {
+        self.leave_undelivered(id, 0);
+    }
+
+    /// [`leave`](Self::leave) for the pipelined (eager-delivery) path: the
+    /// departing member already streamed its first `delivered` assigned
+    /// microbatches into the eager reducer, so only the undelivered suffix
+    /// `assignment[idx][delivered..]` is requeued — the delivered prefix
+    /// stays assigned (its leaves are merged and must not re-execute).
+    /// `delivered = 0` is exactly the phased `leave`.
+    pub fn leave_undelivered(&mut self, id: usize, delivered: usize) {
         let Some(idx) = self.members.iter().position(|m| m.id == id && m.alive) else {
             return;
         };
         self.members[idx].alive = false;
         if self.phase == Phase::RoundTrain && !self.shard_done[idx] {
+            assert!(
+                delivered <= self.assignment[idx].len(),
+                "member {id} delivered {delivered} > assigned {}",
+                self.assignment[idx].len()
+            );
             if !self.members.iter().any(|m| m.alive) {
                 // No survivor to take the shard: keep it assigned and not
                 // done, so the round visibly stalls (all_done stays false)
                 // instead of reducing a silent subset of the microbatches.
                 return;
             }
-            let orphaned = std::mem::take(&mut self.assignment[idx]);
+            let orphaned = self.assignment[idx].split_off(delivered);
             self.shard_done[idx] = true;
-            let survivors: Vec<usize> = self
-                .members
-                .iter()
-                .enumerate()
-                .filter(|(i, m)| m.alive && !self.shard_done[*i])
-                .map(|(i, _)| i)
-                .collect();
-            if survivors.is_empty() {
-                // everyone else already finished: hand the orphans to the
-                // first alive member (it re-runs a second, merged shard —
-                // reverse its earlier credit so complete() counts the
-                // round and its own microbatches exactly once)
-                if let Some(w) = self.members.iter().position(|m| m.alive) {
-                    if self.shard_done[w] && !self.assignment[w].is_empty() {
-                        self.members[w].rounds_done -= 1;
-                        self.members[w].micro_done -= self.assignment[w].len() as u64;
-                    }
-                    self.requeues_this_round += orphaned.len() as u64;
-                    self.members[w].requeued += orphaned.len() as u64;
-                    crate::obs::REQUEUES.add(orphaned.len() as u64);
-                    self.assignment[w].extend(&orphaned);
-                    self.shard_done[w] = false;
+            self.requeue_orphans(orphaned);
+        }
+    }
+
+    /// Distribute a dead member's unexecuted indices: round-robin over the
+    /// still-running survivors, else merged onto the first alive member.
+    fn requeue_orphans(&mut self, orphaned: Vec<usize>) {
+        if orphaned.is_empty() {
+            return;
+        }
+        let survivors: Vec<usize> = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(i, m)| m.alive && !self.shard_done[*i])
+            .map(|(i, _)| i)
+            .collect();
+        if survivors.is_empty() {
+            // everyone else already finished: hand the orphans to the
+            // first alive member (it re-runs a second, merged shard —
+            // reverse its earlier credit so complete() counts the
+            // round and its own microbatches exactly once)
+            if let Some(w) = self.members.iter().position(|m| m.alive) {
+                if self.shard_done[w] && !self.assignment[w].is_empty() {
+                    self.members[w].rounds_done -= 1;
+                    self.members[w].micro_done -= self.assignment[w].len() as u64;
                 }
-            } else {
-                for (k, &mi) in orphaned.iter().enumerate() {
-                    let w = survivors[k % survivors.len()];
-                    self.requeues_this_round += 1;
-                    self.members[w].requeued += 1;
-                    crate::obs::REQUEUES.incr();
-                    self.assignment[w].push(mi);
-                }
+                self.requeues_this_round += orphaned.len() as u64;
+                self.members[w].requeued += orphaned.len() as u64;
+                crate::obs::REQUEUES.add(orphaned.len() as u64);
+                self.assignment[w].extend(&orphaned);
+                self.shard_done[w] = false;
+            }
+        } else {
+            for (k, &mi) in orphaned.iter().enumerate() {
+                let w = survivors[k % survivors.len()];
+                self.requeues_this_round += 1;
+                self.members[w].requeued += 1;
+                crate::obs::REQUEUES.incr();
+                self.assignment[w].push(mi);
             }
         }
     }
@@ -462,6 +495,7 @@ impl RoundCoordinator {
         self.requeues_this_round = 0;
         self.reduce_done = false;
         self.reduce_secs = 0.0;
+        self.delivered.clear();
         Ok(())
     }
 
@@ -525,6 +559,7 @@ impl RoundCoordinator {
             self.shard_done[w] = false;
         }
         self.reduce_done = false;
+        self.delivered.clear();
         Ok(())
     }
 
@@ -546,6 +581,44 @@ impl RoundCoordinator {
 
     pub fn all_done(&self) -> bool {
         self.shard_done.iter().all(|&d| d)
+    }
+
+    // ------------------------------------------- eager-delivery ledger ---
+
+    /// Record aligned `(lo, len)` spans handed to the eager reducer. The
+    /// pipelined path calls this once per shard delivery; the asserts pin
+    /// the exactly-once contract (aligned spans, no overlap) that makes
+    /// out-of-order merging bitwise-legal.
+    pub fn deliver_segments(&mut self, spans: &[(usize, usize)]) {
+        for &(lo, len) in spans {
+            assert!(
+                len.is_power_of_two() && lo % len == 0,
+                "delivered span [{lo}, {}) is not an aligned segment",
+                lo + len
+            );
+            for &(plo, plen) in &self.delivered {
+                assert!(
+                    lo + len <= plo || plo + plen <= lo,
+                    "span [{lo}, {}) overlaps already-delivered [{plo}, {})",
+                    lo + len,
+                    plo + plen
+                );
+            }
+            self.delivered.push((lo, len));
+        }
+    }
+
+    /// Microbatches covered by delivered segments so far this round.
+    pub fn delivered_micro(&self) -> usize {
+        self.delivered.iter().map(|&(_, len)| len).sum()
+    }
+
+    /// Whether every microbatch of the armed round has been delivered to
+    /// the eager reducer (the pipelined analogue of [`all_done`]).
+    ///
+    /// [`all_done`]: Self::all_done
+    pub fn segments_complete(&self) -> bool {
+        self.round_micro > 0 && self.delivered_micro() == self.round_micro
     }
 
     /// Mark the tree reduce finished (ticking then leaves `Reduce`).
@@ -603,6 +676,7 @@ impl RoundCoordinator {
             *d = true;
         }
         self.round_micro = 0;
+        self.delivered.clear();
     }
 
     // ------------------------------------------------ checkpoint codec ---
@@ -1023,6 +1097,104 @@ mod tests {
         assert_eq!(c2.log[0].stragglers, 0);
         assert_eq!(c2.members[1].straggles, 0);
         assert!(c2.log[0].grad_secs.is_finite());
+    }
+
+    #[test]
+    fn delivery_ledger_tracks_exactly_once_coverage() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(6).unwrap();
+        assert!(!c.segments_complete());
+        c.deliver_segments(&[(0, 2), (2, 1)]);
+        assert_eq!(c.delivered_micro(), 3);
+        assert!(!c.segments_complete());
+        c.deliver_segments(&[(4, 2), (3, 1)]);
+        assert_eq!(c.delivered_micro(), 6);
+        assert!(c.segments_complete());
+        // begin_round of the next round clears the ledger
+        c.complete(0, 0.01);
+        c.complete(1, 0.01);
+        c.tick();
+        c.finish_reduce(0.0);
+        c.tick();
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        assert_eq!(c.delivered_micro(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps already-delivered")]
+    fn delivery_ledger_rejects_double_delivery() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        c.deliver_segments(&[(0, 2)]);
+        c.deliver_segments(&[(1, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not an aligned segment")]
+    fn delivery_ledger_rejects_unaligned_spans() {
+        let mut c = training_coord(1);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        c.deliver_segments(&[(1, 2)]);
+    }
+
+    #[test]
+    fn resume_round_clears_the_delivery_ledger() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(6).unwrap();
+        c.deliver_segments(&[(0, 2), (2, 1)]);
+        let snap = c.snapshot();
+        let mut r = RoundCoordinator::restore(c.cfg.clone(), &snap).unwrap();
+        // the ledger is transient: a restored round re-executes every
+        // shard, so nothing counts as delivered yet
+        assert_eq!(r.delivered_micro(), 0);
+        r.resume_round(6).unwrap();
+        r.deliver_segments(&[(0, 2), (2, 1)]);
+        assert_eq!(r.delivered_micro(), 3);
+    }
+
+    #[test]
+    fn leave_undelivered_requeues_only_the_suffix() {
+        let mut c = training_coord(3);
+        c.advance_to_train().unwrap();
+        c.begin_round(9).unwrap();
+        assert_eq!(c.assignments()[1], vec![3, 4, 5]);
+        // worker 1 streamed [3, 4] into the eager reducer, then died: only
+        // index 5 moves; the delivered prefix stays assigned (merged bits
+        // must not re-execute)
+        c.leave_undelivered(1, 2);
+        assert_eq!(c.assignments()[1], vec![3, 4]);
+        let requeued: usize = c.assignments()[0]
+            .iter()
+            .chain(&c.assignments()[2])
+            .filter(|&&i| i == 5)
+            .count();
+        assert_eq!(requeued, 1);
+        assert_eq!(c.members[0].requeued + c.members[2].requeued, 1);
+        c.complete(0, 0.01);
+        c.complete(2, 0.01);
+        assert!(c.all_done());
+        assert_eq!(c.tick(), Phase::Reduce);
+        c.finish_reduce(0.0);
+        c.tick();
+        assert_eq!(c.log[0].requeues, 1);
+    }
+
+    #[test]
+    fn leave_undelivered_everything_delivered_requeues_nothing() {
+        let mut c = training_coord(2);
+        c.advance_to_train().unwrap();
+        c.begin_round(4).unwrap();
+        // worker 1 delivered its whole shard but its complete() was still
+        // in flight when it died: nothing to requeue, round can finish
+        c.leave_undelivered(1, 2);
+        assert_eq!(c.assignments()[1], vec![2, 3]);
+        assert_eq!(c.assignments()[0], vec![0, 1]);
+        assert_eq!(c.members[0].requeued, 0);
     }
 
     #[test]

@@ -114,6 +114,30 @@ pub trait Transport {
         tokens: &[HostTensor],
     ) -> Result<(Vec<Node<GradNode>>, f64)>;
 
+    /// Pipelined variant of [`execute_round`](Self::execute_round): each
+    /// member's subtree nodes are pushed into `sink` (on the calling
+    /// thread) the moment that member's shard completes, after recording
+    /// their spans in the coordinator's delivery ledger — so the caller
+    /// merges early shards while later ones still run. Returns the
+    /// gradient-phase wall clock; the nodes all went through `sink`.
+    ///
+    /// The default is the phased fallback — execute everything, then one
+    /// delivery — so any transport is pipelined-correct before it is
+    /// pipelined-fast.
+    fn execute_round_eager(
+        &mut self,
+        coord: &mut RoundCoordinator,
+        src: &dyn GradSource,
+        tokens: &[HostTensor],
+        sink: &mut dyn FnMut(Vec<Node<GradNode>>),
+    ) -> Result<f64> {
+        let (nodes, grad_secs) = self.execute_round(coord, src, tokens)?;
+        let spans: Vec<(usize, usize)> = nodes.iter().map(|n| (n.lo, n.len)).collect();
+        coord.deliver_segments(&spans);
+        sink(nodes);
+        Ok(grad_secs)
+    }
+
     /// Broadcast the latest checkpoint (round snapshot + opaque blob) and
     /// cache it for late joiners. No-op on the loopback.
     fn publish_state(&mut self, _step: u64, _snap: &[f32], _blob: &[u8]) -> Result<()> {
@@ -165,6 +189,42 @@ impl Transport for Loopback {
             nodes.extend(out.nodes);
         }
         Ok((nodes, grad_secs))
+    }
+
+    /// Genuinely eager: shards fan out via `pool::map_consume`, so each
+    /// finished shard is completed, ledgered, and sunk while the remaining
+    /// shards still run on the pool helpers. At width ≤ 1 delivery is
+    /// worker-order serial — bitwise the same either way (the sink's eager
+    /// closure is arrival-order-invariant).
+    fn execute_round_eager(
+        &mut self,
+        coord: &mut RoundCoordinator,
+        src: &dyn GradSource,
+        tokens: &[HostTensor],
+        sink: &mut dyn FnMut(Vec<Node<GradNode>>),
+    ) -> Result<f64> {
+        let _sp = trace::region("round", "loopback_execute_round_eager");
+        let assignments = coord.assignments().to_vec();
+        let t0 = Timer::start();
+        let mut failed: Option<(usize, anyhow::Error)> = None;
+        worker::run_workers_eager(src, &assignments, tokens, |w, out| match out {
+            Ok(out) => {
+                coord.complete(w, out.secs);
+                let spans: Vec<(usize, usize)> =
+                    out.nodes.iter().map(|n| (n.lo, n.len)).collect();
+                coord.deliver_segments(&spans);
+                sink(out.nodes);
+            }
+            Err(e) => {
+                if failed.is_none() {
+                    failed = Some((w, e));
+                }
+            }
+        });
+        if let Some((w, e)) = failed {
+            return Err(e.context(format!("dp worker {w}")));
+        }
+        Ok(t0.secs())
     }
 }
 
@@ -701,6 +761,12 @@ struct Pend {
     outstanding: usize,
     secs: f64,
     nodes: Vec<Node<GradNode>>,
+    /// Pipelined rounds only: how many of this member's assigned indices
+    /// were already handed to the eager reduce (always the full assignment
+    /// length at the instant of a delivery). A disconnect then requeues
+    /// only `assignment[delivered..]` — delivered leaves are merged and
+    /// must never re-execute. Stays 0 on the phased path.
+    delivered: usize,
 }
 
 /// Coordinator side of the TCP transport: owns the listener, one reader
@@ -874,11 +940,13 @@ impl TcpCoordinator {
 
     /// A connection died. Completed shards stay (their leaves are final
     /// and the ledger is credited); in-flight work is voided and the
-    /// member's whole remaining assignment goes through the *same*
-    /// `leave()` requeue arithmetic as a simulated departure — the
-    /// assignment diff around `leave()` tells us exactly which suffix
-    /// each survivor gained, and that suffix is shipped as a supplemental
-    /// shard message.
+    /// member's remaining assignment goes through the *same* requeue
+    /// arithmetic as a simulated departure — the assignment diff around
+    /// the departure tells us exactly which suffix each survivor gained,
+    /// and that suffix is shipped as a supplemental shard message. On the
+    /// phased path `delivered` is 0 and this is exactly `leave()`; on the
+    /// pipelined path the member's already-merged prefix stays put and
+    /// only the undelivered suffix moves.
     fn handle_disconnect(
         &mut self,
         coord: &mut RoundCoordinator,
@@ -889,14 +957,16 @@ impl TcpCoordinator {
         tokens: &[HostTensor],
     ) {
         self.conns.remove(&conn);
+        let delivered = pend.get(&conn).map(|p| p.delivered).unwrap_or(0);
         if pend.get(&conn).map(|p| p.outstanding > 0).unwrap_or(false) {
-            // mid-shard: every node this member ever produced is voided —
-            // leave() requeues its full merged assignment, so survivors
-            // recompute those leaves (pure execution ⇒ identical bits)
+            // mid-shard: every undelivered node this member produced is
+            // voided — the departure requeues its unmerged suffix, so
+            // survivors recompute those leaves (pure execution ⇒
+            // identical bits)
             pend.remove(&conn);
         }
         let before: Vec<usize> = coord.assignments().iter().map(|a| a.len()).collect();
-        coord.leave(conn as usize);
+        coord.leave_undelivered(conn as usize, delivered);
         for j in 0..coord.assignments().len() {
             let b = before.get(j).copied().unwrap_or(0);
             if coord.assignments()[j].len() > b {
@@ -906,53 +976,23 @@ impl TcpCoordinator {
             }
         }
     }
-}
 
-impl Transport for TcpCoordinator {
-    /// Wall-clock tick loop: absorb joins/departures between ticks until
-    /// the machine reaches an unarmed `RoundTrain`, bailing after
-    /// `join_timeout_s` if membership never satisfies `min_workers`.
-    fn advance_to_train(&mut self, coord: &mut RoundCoordinator) -> Result<()> {
-        let _sp = trace::span("round", "advance_to_train");
-        let tick = Duration::from_millis(self.cfg.tick_ms.max(1));
-        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.join_timeout_s);
-        let mut next = Instant::now();
-        loop {
-            while let Some(ev) = self.next_event(next) {
-                self.handle_idle_event(coord, ev);
-                if Instant::now() >= next {
-                    break;
-                }
-            }
-            coord.tick();
-            if coord.phase == Phase::RoundTrain && !coord.mid_round() {
-                return Ok(());
-            }
-            if Instant::now() >= deadline {
-                bail!(
-                    "transport: timed out after {:.0}s waiting for {} member(s) \
-                     (phase {:?}, {} alive)",
-                    self.cfg.join_timeout_s,
-                    coord.cfg.min_workers,
-                    coord.phase,
-                    coord.alive()
-                );
-            }
-            next += tick;
-        }
-    }
-
-    /// Dispatch every member's shard over its connection and collect
-    /// `ShardDone` nodes until the round machine reports all shards done.
-    /// Joins are admitted mid-round (no shard until next round);
-    /// disconnects go through [`Self::handle_disconnect`].
-    fn execute_round(
+    /// The one TCP round event loop, shared by the phased and pipelined
+    /// paths. With `sink = None` every member's nodes accumulate in its
+    /// `Pend` and come back as one flat vec (the phased contract); with a
+    /// sink, a member's accumulated nodes drain into it the moment the
+    /// member's last outstanding shard lands, and its `delivered` mark
+    /// advances so a later disconnect requeues only the unmerged suffix.
+    fn round_loop(
         &mut self,
         coord: &mut RoundCoordinator,
-        _src: &dyn GradSource,
         tokens: &[HostTensor],
+        mut sink: Option<&mut dyn FnMut(Vec<Node<GradNode>>)>,
     ) -> Result<(Vec<Node<GradNode>>, f64)> {
-        let _sp = trace::span("round", "tcp_execute_round");
+        let _sp = trace::span(
+            "round",
+            if sink.is_some() { "tcp_execute_round_eager" } else { "tcp_execute_round" },
+        );
         let t0 = Timer::start();
         let round = coord.round;
         let mut seq = 0u64;
@@ -1007,6 +1047,14 @@ impl Transport for TcpCoordinator {
                                 .position(|m| m.id as u64 == conn && m.alive)
                             {
                                 coord.complete(i, p.secs);
+                                if let Some(sink) = sink.as_deref_mut() {
+                                    p.delivered = coord.assignments()[i].len();
+                                    let drained = std::mem::take(&mut p.nodes);
+                                    let spans: Vec<(usize, usize)> =
+                                        drained.iter().map(|n| (n.lo, n.len)).collect();
+                                    coord.deliver_segments(&spans);
+                                    sink(drained);
+                                }
                             }
                         }
                     }
@@ -1019,6 +1067,70 @@ impl Transport for TcpCoordinator {
             nodes.extend(p.nodes);
         }
         Ok((nodes, grad_secs))
+    }
+}
+
+impl Transport for TcpCoordinator {
+    /// Wall-clock tick loop: absorb joins/departures between ticks until
+    /// the machine reaches an unarmed `RoundTrain`, bailing after
+    /// `join_timeout_s` if membership never satisfies `min_workers`.
+    fn advance_to_train(&mut self, coord: &mut RoundCoordinator) -> Result<()> {
+        let _sp = trace::span("round", "advance_to_train");
+        let tick = Duration::from_millis(self.cfg.tick_ms.max(1));
+        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.join_timeout_s);
+        let mut next = Instant::now();
+        loop {
+            while let Some(ev) = self.next_event(next) {
+                self.handle_idle_event(coord, ev);
+                if Instant::now() >= next {
+                    break;
+                }
+            }
+            coord.tick();
+            if coord.phase == Phase::RoundTrain && !coord.mid_round() {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "transport: timed out after {:.0}s waiting for {} member(s) \
+                     (phase {:?}, {} alive)",
+                    self.cfg.join_timeout_s,
+                    coord.cfg.min_workers,
+                    coord.phase,
+                    coord.alive()
+                );
+            }
+            next += tick;
+        }
+    }
+
+    /// Dispatch every member's shard over its connection and collect
+    /// `ShardDone` nodes until the round machine reports all shards done.
+    /// Joins are admitted mid-round (no shard until next round);
+    /// disconnects go through [`Self::handle_disconnect`].
+    fn execute_round(
+        &mut self,
+        coord: &mut RoundCoordinator,
+        _src: &dyn GradSource,
+        tokens: &[HostTensor],
+    ) -> Result<(Vec<Node<GradNode>>, f64)> {
+        self.round_loop(coord, tokens, None)
+    }
+
+    /// Same event loop, but each member's accumulated nodes drain into
+    /// `sink` at the instant its `outstanding` count hits zero — upper
+    /// tree levels merge on the coordinator thread while remote shards
+    /// are still executing.
+    fn execute_round_eager(
+        &mut self,
+        coord: &mut RoundCoordinator,
+        _src: &dyn GradSource,
+        tokens: &[HostTensor],
+        sink: &mut dyn FnMut(Vec<Node<GradNode>>),
+    ) -> Result<f64> {
+        let (nodes, grad_secs) = self.round_loop(coord, tokens, Some(sink))?;
+        debug_assert!(nodes.is_empty(), "eager round left undelivered nodes");
+        Ok(grad_secs)
     }
 
     fn publish_state(&mut self, step: u64, snap: &[f32], blob: &[u8]) -> Result<()> {

@@ -71,6 +71,26 @@ pub fn run_workers<S: GradSource + ?Sized>(
     pool::map(assignments.len(), |w| run_shard(src, &assignments[w], tokens))
 }
 
+/// Pipelined variant of [`run_workers`]: each worker's [`ShardOut`] is
+/// handed to `consume` (always on the calling thread) the moment that
+/// shard finishes, instead of being collected into a vec behind the
+/// slowest shard — the caller merges early results into the eager reduce
+/// while later shards are still running. Delivery order is completion
+/// order at pool width > 1 and worker order at width ≤ 1; either way the
+/// eager sibling closure makes the merged bits order-invariant.
+pub fn run_workers_eager<S: GradSource + ?Sized>(
+    src: &S,
+    assignments: &[Vec<usize>],
+    tokens: &[HostTensor],
+    consume: impl FnMut(usize, Result<ShardOut>),
+) {
+    pool::map_consume(
+        assignments.len(),
+        |w| run_shard(src, &assignments[w], tokens),
+        consume,
+    );
+}
+
 /// Deterministic stand-in for the `grad_step` executable: pseudo-random
 /// gradients seeded from the token content and the global microbatch
 /// index, plus an optional fixed slab of dense compute (an `n × n`
@@ -151,6 +171,32 @@ mod tests {
         let spans: Vec<(usize, usize)> =
             out.nodes.iter().map(|n| (n.lo, n.len)).collect();
         assert_eq!(spans, vec![(1, 1), (4, 4)]);
+    }
+
+    #[test]
+    fn eager_fanout_delivers_every_shard_once_and_matches_phased() {
+        let s = src();
+        let toks = tokens(7);
+        let assignments = vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]];
+        let phased = {
+            let outs = run_workers(&s, &assignments, &toks);
+            let nodes: Vec<_> =
+                outs.into_iter().flat_map(|o| o.unwrap().nodes).collect();
+            reduce::combine(nodes).unwrap()
+        };
+        let mut seen = vec![false; assignments.len()];
+        let mut er = reduce::EagerReduce::new();
+        run_workers_eager(&s, &assignments, &toks, |w, out| {
+            assert!(!seen[w], "worker {w} delivered twice");
+            seen[w] = true;
+            er.offer_all(out.unwrap().nodes);
+        });
+        assert!(seen.iter().all(|&d| d));
+        let got = reduce::fold_blocks(er.finish()).unwrap();
+        assert_eq!(got.loss.to_bits(), phased.loss.to_bits());
+        for (a, b) in got.grads.iter().zip(&phased.grads) {
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

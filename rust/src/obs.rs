@@ -80,6 +80,15 @@ pub static SERVE_BATCHES: Counter = Counter::new("serve.batches");
 /// Gauge: requests still waiting in the serve queue after the most
 /// recent enqueue/dispatch.
 pub static SERVE_QUEUE_DEPTH: Counter = Counter::new("serve.queue_depth");
+/// Scoring requests shed at ingress because the queue sat at
+/// `max_queue_depth` (typed reject, never a silent drop).
+pub static SERVE_REJECTS: Counter = Counter::new("serve.rejects");
+/// Pipelined rounds: microseconds of sibling-merge work that ran while
+/// shards were still executing (the reduce latency the overlap hid).
+pub static REDUCE_OVERLAP_US: Counter = Counter::new("dist.reduce_overlap_us");
+/// Pipelined steps: microseconds of per-parameter optimizer work that ran
+/// while other parameters' gradients were still folding.
+pub static OPT_OVERLAP_US: Counter = Counter::new("dist.opt_overlap_us");
 
 static ALL: &[&Counter] = &[
     &REQUEUES,
@@ -92,6 +101,9 @@ static ALL: &[&Counter] = &[
     &SERVE_REQ_BYTES,
     &SERVE_BATCHES,
     &SERVE_QUEUE_DEPTH,
+    &SERVE_REJECTS,
+    &REDUCE_OVERLAP_US,
+    &OPT_OVERLAP_US,
 ];
 
 /// Wire-byte accounting is per frame kind; kinds are the one-byte tags

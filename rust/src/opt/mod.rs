@@ -330,6 +330,16 @@ pub trait Optimizer: Send + Sync {
 }
 
 /// Orientation-aware wrapper: handles the transpose_wide protocol.
+///
+/// **Per-parameter independence contract:** a `Slot` owns *all* mutable
+/// state its optimizer touches — `step`/`refresh` read the passed
+/// gradient and this slot's `State`, and nothing else (randomness enters
+/// only through the caller-supplied refresh seed). Updates to different
+/// parameters therefore commute bitwise: the trainer's per-layer fan-out
+/// and the pipelined fold+update fusion (`[dist] round = "pipelined"`)
+/// may run slots in any order, on any thread, and produce the exact bits
+/// of the parameter-ordered serial loop. Pinned by
+/// `slot_updates_commute_across_parameters` below.
 pub struct Slot {
     pub opt: Box<dyn Optimizer>,
     pub state: State,
@@ -515,6 +525,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn slot_updates_commute_across_parameters() {
+        // the independence contract the pipelined fan-out rests on:
+        // updating slots in a scrambled order must reproduce the ordered
+        // loop bit for bit, for a stateful low-rank method with refresh
+        let hp = Hyper { rank: 4, leading: 2, interval: 10, ..Hyper::default() };
+        let geoms = [(10usize, 6usize), (6, 12), (3, 8)];
+        let mut rng = Pcg::seeded(7);
+        let grads: Vec<Mat> = geoms
+            .iter()
+            .map(|&(r, c)| Mat::from_vec(r, c, rng.normal_vec(r * c, 0.1)))
+            .collect();
+        let run = |order: &[usize]| -> Vec<Vec<u32>> {
+            let mut slots: Vec<Slot> = geoms
+                .iter()
+                .map(|&(r, c)| Slot::new(build("alice", &hp).unwrap(), r, c))
+                .collect();
+            let mut deltas: Vec<Vec<u32>> = vec![Vec::new(); geoms.len()];
+            for t in 1..=3u64 {
+                for &p in order {
+                    if t == 1 {
+                        slots[p].refresh(&grads[p], 0xfeed ^ p as u64);
+                    }
+                    let d = slots[p].step(&grads[p], t);
+                    deltas[p] = d.data.iter().map(|x| x.to_bits()).collect();
+                }
+            }
+            deltas
+        };
+        assert_eq!(run(&[0, 1, 2]), run(&[2, 0, 1]));
     }
 
     #[test]

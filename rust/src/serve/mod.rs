@@ -12,7 +12,10 @@
 //!   continuous-batching front end: arrivals coalesce into width-bucketed
 //!   batches under a [`BatchPolicy`] (max-batch / max-wait), each batch
 //!   fans out over the persistent `util::pool`, and every request's
-//!   enqueue→scored latency is tracked end to end.
+//!   enqueue→scored latency is tracked end to end. Ingress is optionally
+//!   bounded (`max_queue_depth` / [`queue_bounded`]): past the bound,
+//!   submissions shed with a typed [`SubmitError`] and an obs counter —
+//!   never a silent drop.
 //! * [`TcpServer`] / [`run_client`] — the networked driver: serving-plane
 //!   `Request`/`Response` frames over the `dist/transport.rs` frame
 //!   machinery (same handshake, validation, and obs wire accounting).
@@ -43,8 +46,8 @@ use crate::util::{pool, Pcg};
 pub use model::Model;
 pub use net::{run_client, ServeReport, TcpServer};
 pub use queue::{
-    latency_summary, queue, score_batched, score_digest, serve_loop, BatchPolicy, Ingress,
-    LatencySummary, Request, Response, ServeQueue,
+    latency_summary, queue, queue_bounded, score_batched, score_digest, serve_loop,
+    BatchPolicy, Ingress, LatencySummary, Request, Response, ServeQueue, SubmitError,
 };
 
 /// Produces one request's score. Implementations must be pure in

@@ -47,6 +47,11 @@ pub struct ServeReport {
     pub batches: usize,
     /// Per-request enqueue→scored latency, dispatch order.
     pub latencies_s: Vec<f64>,
+    /// Requests shed at ingress because the queue sat at the policy's
+    /// `max_queue_depth` (each also bumps `obs::SERVE_REJECTS`). A shed
+    /// TCP request is never answered — clients opting into a bounded
+    /// server should bound their reads.
+    pub rejected: usize,
 }
 
 /// Server side of the serving plane: owns the listener, one reader
@@ -121,7 +126,14 @@ impl TcpServer {
     /// same policy as the dist coordinator's `admit`), request intake,
     /// or departure (a dead connection's queued requests are voided —
     /// nobody is left to answer them).
-    fn handle_event(&mut self, ev: Event, joined: &mut usize, pending: &mut VecDeque<Q>) {
+    fn handle_event(
+        &mut self,
+        ev: Event,
+        joined: &mut usize,
+        pending: &mut VecDeque<Q>,
+        max_queue_depth: usize,
+        rejected: &mut usize,
+    ) {
         match ev {
             Event::Hello { conn, mut stream, proto, run_id } => {
                 if proto != PROTO_VERSION || run_id != self.run_id {
@@ -141,6 +153,12 @@ impl TcpServer {
                 }
             }
             Event::Frame { conn, frame: Frame::Request { id, tokens } } => {
+                if max_queue_depth > 0 && pending.len() >= max_queue_depth {
+                    // ingress bound: shed visibly, never enqueue past the cap
+                    obs::SERVE_REJECTS.incr();
+                    *rejected += 1;
+                    return;
+                }
                 obs::SERVE_REQUESTS.incr();
                 obs::SERVE_REQ_BYTES.add((tokens.elems() * 4) as u64);
                 pending.push_back(Q { conn, id, tokens, at: Instant::now() });
@@ -188,7 +206,13 @@ impl TcpServer {
                 // idle tick: short enough that the exit/timeout conditions
                 // above are re-checked promptly
                 match self.rx.recv_timeout(Duration::from_millis(25)) {
-                    Ok(ev) => self.handle_event(ev, &mut joined, &mut pending),
+                    Ok(ev) => self.handle_event(
+                        ev,
+                        &mut joined,
+                        &mut pending,
+                        policy.max_queue_depth,
+                        &mut report.rejected,
+                    ),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
@@ -202,7 +226,13 @@ impl TcpServer {
                     break;
                 }
                 match self.rx.recv_timeout(deadline - now) {
-                    Ok(ev) => self.handle_event(ev, &mut joined, &mut pending),
+                    Ok(ev) => self.handle_event(
+                        ev,
+                        &mut joined,
+                        &mut pending,
+                        policy.max_queue_depth,
+                        &mut report.rejected,
+                    ),
                     Err(_) => break,
                 }
             }
@@ -313,7 +343,11 @@ mod tests {
         let n = 6;
         let handle = std::thread::spawn(move || {
             let src = SyntheticScoreSource { work: 0 };
-            let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) };
+            let policy = BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_millis(1),
+                max_queue_depth: 0,
+            };
             server.serve(&src, &policy, n, Duration::from_secs(10)).unwrap()
         });
         let reqs = synthetic_requests(n, 1, 8, 97, 0xabc);
@@ -327,6 +361,33 @@ mod tests {
             assert_eq!(r.score.to_bits(), direct.to_bits());
             assert!(r.latency_s >= 0.0);
         }
+    }
+
+    #[test]
+    fn bounded_server_sheds_past_queue_depth() {
+        let mut server = TcpServer::bind("127.0.0.1:0", "shed-test").unwrap();
+        let addr = server.local_addr().to_string();
+        let handle = std::thread::spawn(move || {
+            let src = SyntheticScoreSource { work: 0 };
+            // depth 1 + a batch that never fills: the first request is
+            // admitted, the other three pipelined ones hit the bound
+            // inside the (long) coalesce window and are shed
+            let policy = BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(500),
+                max_queue_depth: 1,
+            };
+            server.serve(&src, &policy, 1, Duration::from_secs(10)).unwrap()
+        });
+        let reqs = synthetic_requests(4, 1, 8, 97, 0xdef);
+        let err = run_client(&addr, "shed-test", &reqs).unwrap_err();
+        assert!(
+            err.to_string().contains("closed after 1/4"),
+            "shed requests go unanswered, got: {err}"
+        );
+        let report = handle.join().unwrap();
+        assert_eq!(report.served, 1);
+        assert_eq!(report.rejected, 3, "every over-bound request is counted");
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   request is ever dropped or duplicated (`tests/serve_parity.rs`
 //!   pins it under a multi-producer chaos burst).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -52,13 +54,45 @@ pub struct Response {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Ingress bound: requests waiting (queued but not yet dispatched)
+    /// may not exceed this; further submissions are shed with a typed
+    /// [`SubmitError::QueueFull`]. `0` = unbounded (the default — the
+    /// closed-loop drivers queue everything up front).
+    pub max_queue_depth: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue_depth: 0,
+        }
     }
 }
+
+/// Typed ingress rejection — shedding is always the caller's to observe,
+/// never a silent drop (every shed also bumps `obs::SERVE_REJECTS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue already holds `max_queue_depth` waiting requests.
+    QueueFull { depth: usize, max: usize },
+    /// The serve loop is gone (its queue receiver was dropped).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth, max } => {
+                write!(f, "serve queue full ({depth} waiting, max {max})")
+            }
+            SubmitError::Closed => write!(f, "serve loop is gone"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 struct Queued {
     req: Request,
@@ -70,28 +104,73 @@ struct Queued {
 #[derive(Clone)]
 pub struct Ingress {
     tx: Sender<Queued>,
+    /// Requests admitted but not yet dispatched (shared with the loop).
+    depth: Arc<AtomicUsize>,
+    /// Shed threshold (0 = unbounded).
+    max_depth: usize,
 }
 
 impl Ingress {
     /// Enqueue one request, stamping the arrival instant its end-to-end
-    /// latency is measured from. Returns `false` if the serve loop is
-    /// gone (the request is dropped *visibly*, never silently).
-    pub fn submit(&self, id: u64, tokens: HostTensor) -> bool {
+    /// latency is measured from. A full queue or a departed serve loop is
+    /// a typed [`SubmitError`] — the request is shed *visibly*, never
+    /// silently ([`obs::SERVE_REJECTS`] counts queue-full sheds).
+    pub fn submit(&self, id: u64, tokens: HostTensor) -> Result<(), SubmitError> {
+        if self.max_depth > 0 {
+            // reserve a slot first so concurrent producers can't overshoot
+            let mut cur = self.depth.load(Ordering::Relaxed);
+            loop {
+                if cur >= self.max_depth {
+                    obs::SERVE_REJECTS.incr();
+                    return Err(SubmitError::QueueFull { depth: cur, max: self.max_depth });
+                }
+                match self.depth.compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        } else {
+            self.depth.fetch_add(1, Ordering::Relaxed);
+        }
         obs::SERVE_REQUESTS.incr();
         obs::SERVE_REQ_BYTES.add((tokens.elems() * 4) as u64);
-        self.tx.send(Queued { req: Request { id, tokens }, at: Instant::now() }).is_ok()
+        let sent =
+            self.tx.send(Queued { req: Request { id, tokens }, at: Instant::now() });
+        if sent.is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
+        Ok(())
     }
 }
 
 /// Consumer end of the request channel (fed to [`serve_loop`]).
 pub struct ServeQueue {
     rx: Receiver<Queued>,
+    depth: Arc<AtomicUsize>,
 }
 
-/// Create the ingress/queue pair wiring producers to [`serve_loop`].
+/// Create the ingress/queue pair wiring producers to [`serve_loop`],
+/// with unbounded ingress (every submission is admitted).
 pub fn queue() -> (Ingress, ServeQueue) {
+    queue_bounded(0)
+}
+
+/// [`queue`] with an ingress bound: at most `max_queue_depth` requests
+/// may wait undispatched; beyond that [`Ingress::submit`] sheds with
+/// [`SubmitError::QueueFull`]. `0` = unbounded.
+pub fn queue_bounded(max_queue_depth: usize) -> (Ingress, ServeQueue) {
     let (tx, rx) = mpsc::channel();
-    (Ingress { tx }, ServeQueue { rx })
+    let depth = Arc::new(AtomicUsize::new(0));
+    (
+        Ingress { tx, depth: depth.clone(), max_depth: max_queue_depth },
+        ServeQueue { rx, depth },
+    )
 }
 
 /// Dispatch one coalesced batch across the pool and stamp responses.
@@ -182,6 +261,9 @@ pub fn serve_loop(
         }
         let take = pending.len().min(max_batch);
         let batch: Vec<Queued> = pending.drain(..take).collect();
+        // free the dispatched requests' ingress slots before the (slow)
+        // scoring fan-out, so bounded producers can refill meanwhile
+        q.depth.fetch_sub(take, Ordering::Relaxed);
         obs::SERVE_QUEUE_DEPTH.set(pending.len() as u64);
         out.extend(dispatch(src, &batch, max_batch)?);
     }
@@ -252,10 +334,14 @@ mod tests {
         let reqs = synthetic_requests(5, 1, 4, 97, 4);
         let (ingress, q) = queue();
         for r in &reqs {
-            assert!(ingress.submit(r.id, r.tokens.clone()));
+            ingress.submit(r.id, r.tokens.clone()).unwrap();
         }
         drop(ingress);
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            max_queue_depth: 0,
+        };
         let resps = serve_loop(&src, &policy, q).unwrap();
         assert_eq!(resps.len(), 5);
         let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
@@ -268,6 +354,42 @@ mod tests {
         }
         let s = latency_summary(&resps);
         assert!(s.p99 >= s.p50 && s.p50 >= 0.0);
+    }
+
+    #[test]
+    fn bounded_ingress_sheds_visibly_then_recovers() {
+        let src = SyntheticScoreSource { work: 0 };
+        let reqs = synthetic_requests(5, 1, 4, 97, 8);
+        let rejects_before = crate::obs::SERVE_REJECTS.get();
+        let (ingress, q) = queue_bounded(3);
+        for r in reqs.iter().take(3) {
+            ingress.submit(r.id, r.tokens.clone()).unwrap();
+        }
+        // 4th submission finds the queue at its bound: typed shed
+        let err = ingress.submit(reqs[3].id, reqs[3].tokens.clone()).unwrap_err();
+        assert_eq!(err, SubmitError::QueueFull { depth: 3, max: 3 });
+        assert!(crate::obs::SERVE_REJECTS.get() >= rejects_before + 1);
+        // the loop drains the admitted three; their slots free up, so a
+        // fresh bounded queue accepts again after dispatch
+        drop(ingress);
+        let policy = BatchPolicy { max_queue_depth: 3, ..BatchPolicy::default() };
+        let resps = serve_loop(&src, &policy, q).unwrap();
+        assert_eq!(resps.len(), 3, "only admitted requests are scored");
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // scores of admitted requests are untouched by the shed
+        for r in &resps {
+            let direct = src.score(r.id, &reqs[r.id as usize].tokens).unwrap();
+            assert_eq!(r.score.to_bits(), direct.to_bits());
+        }
+        // a departed loop is the other typed error
+        let (ingress2, q2) = queue_bounded(1);
+        drop(q2);
+        assert_eq!(
+            ingress2.submit(0, reqs[0].tokens.clone()).unwrap_err(),
+            SubmitError::Closed
+        );
     }
 
     #[test]

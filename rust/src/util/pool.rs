@@ -446,6 +446,94 @@ unsafe fn helper_entry<F: Fn(usize) + Sync>(header: *const RegionHeader, task: *
     }
 }
 
+/// One completed task's result en route to the consuming caller of a
+/// [`map_consume`] region, or the abort signal that unblocks the caller
+/// when a task panicked (the payload travels via `RegionHeader::panic`).
+enum Delivery<T> {
+    Done(usize, T),
+    Aborted,
+}
+
+/// Region-local delivery queue for [`map_consume`]: helpers push, the
+/// submitting thread drains. Lives on the submitting frame next to the
+/// `RegionHeader`, valid for the same region lifetime.
+struct ConsumeQueue<T> {
+    q: Mutex<VecDeque<Delivery<T>>>,
+    cv: Condvar,
+}
+
+/// Type-erased pointer pair a [`map_consume`] job carries: the task
+/// closure plus the delivery queue, both on the submitting thread's
+/// frame (same validity argument as [`Job`]).
+struct ConsumeTask<T> {
+    f: *const (),
+    q: *const ConsumeQueue<T>,
+}
+
+/// Monomorphized worker-side entry for a [`map_consume`] job: claim
+/// tasks, run them, push each result to the region's delivery queue.
+/// Mirrors [`helper_entry`]'s TLS adoption, panic capture, and completion
+/// handshake.
+///
+/// SAFETY (caller): `header` must point at a live `RegionHeader` and
+/// `task` at the matching `ConsumeTask<T>` of the same region, whose `f`
+/// points at an `F`.
+unsafe fn consume_entry<T: Send, F: Fn(usize) -> T + Sync>(
+    header: *const RegionHeader,
+    task: *const (),
+) {
+    let h = unsafe { &*header };
+    let ct = unsafe { &*(task as *const ConsumeTask<T>) };
+    let f = unsafe { &*(ct.f as *const F) };
+    let queue = unsafe { &*ct.q };
+    let prev = LOCAL_THREADS.with(|c| {
+        let p = c.get();
+        c.set(h.nested_width);
+        p
+    });
+    let prev_ctx = LOCAL_CTX.with(|c| {
+        let p = c.get();
+        c.set(h.nested_ctx);
+        p
+    });
+    let prev_budget = LOCAL_BUDGET.with(|c| {
+        let p = c.get();
+        c.set(h.budget);
+        p
+    });
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        let i = h.next.fetch_add(1, Ordering::Relaxed);
+        if i >= h.n {
+            break;
+        }
+        let v = f(i);
+        lock(&queue.q).push_back(Delivery::Done(i, v));
+        queue.cv.notify_all();
+    }));
+    if let Err(payload) = result {
+        // abort: park the claim counter, store the payload, and unblock
+        // the consuming caller so it can proceed to the retire protocol
+        h.next.store(h.n, Ordering::Relaxed);
+        {
+            let mut slot = lock(&h.panic);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        lock(&queue.q).push_back(Delivery::Aborted);
+        queue.cv.notify_all();
+    }
+    crate::util::trace::flush_thread();
+    LOCAL_BUDGET.with(|c| c.set(prev_budget));
+    LOCAL_CTX.with(|c| c.set(prev_ctx));
+    LOCAL_THREADS.with(|c| c.set(prev));
+    let mut pending = lock(&h.pending);
+    *pending -= 1;
+    if *pending == 0 {
+        h.done_cv.notify_all();
+    }
+}
+
 fn worker_loop() {
     let p = pool();
     loop {
@@ -634,6 +722,171 @@ pub fn map_mut<T: Send, R: Send>(
     })
 }
 
+/// Completion-notification fan-out: run `f(0), …, f(n-1)` across the pool
+/// like [`map`], but hand each task's result to `consume` **as soon as it
+/// is available** instead of collecting a vector — the primitive behind
+/// the pipelined DP round (shard results feed the eager tree reduce while
+/// other shards are still computing).
+///
+/// Contract:
+///
+/// * `consume` always runs on the **calling thread** — single-threaded
+///   sinks need no locks, and trace spans recorded inside it attribute to
+///   the submitting computation.
+/// * Every index is consumed exactly once (unless a task panics, which
+///   aborts the region and re-raises on the caller, like [`run`]).
+/// * Consumption *order* follows completion and is nondeterministic at
+///   width > 1; at width ≤ 1 (or an exhausted root budget) tasks run
+///   inline, interleaved `f(i)` then `consume(i, ·)` in index order.
+///   Callers needing deterministic results must use an order-insensitive
+///   sink — scheduling-only, never merge order.
+pub fn map_consume<T: Send, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    f: F,
+    mut consume: impl FnMut(usize, T),
+) {
+    let width = threads().min(n);
+    if width <= 1 {
+        for i in 0..n {
+            let v = f(i);
+            consume(i, v);
+        }
+        return;
+    }
+    // Root-budget resolution, exactly as in `run_ref`.
+    let inherited = LOCAL_BUDGET.with(|c| c.get());
+    let root_storage;
+    let budget: &Budget = if inherited.is_null() {
+        root_storage = Budget { permits: AtomicUsize::new(threads() - 1) };
+        &root_storage
+    } else {
+        // SAFETY: a non-null TLS budget points at the root region's stack
+        // frame, which outlives every region nested inside it (see Budget).
+        unsafe { &*inherited }
+    };
+    let helpers = budget.try_acquire(width - 1);
+    if helpers == 0 {
+        for i in 0..n {
+            let v = f(i);
+            consume(i, v);
+        }
+        return;
+    }
+    crate::obs::POOL_DISPATCHES.incr();
+    let header = RegionHeader {
+        next: AtomicUsize::new(0),
+        n,
+        nested_width: threads(),
+        nested_ctx: context(),
+        budget: budget as *const Budget,
+        pending: Mutex::new(helpers),
+        done_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    let queue: ConsumeQueue<T> =
+        ConsumeQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() };
+    let ct = ConsumeTask::<T> {
+        f: &f as *const _ as *const (),
+        q: &queue as *const ConsumeQueue<T>,
+    };
+    ensure_workers(helpers);
+    let p = pool();
+    {
+        let mut q = lock(&p.queue);
+        for _ in 0..helpers {
+            q.push_back(Job {
+                header: &header,
+                task: &ct as *const ConsumeTask<T> as *const (),
+                entry: consume_entry::<T, F>,
+            });
+        }
+    }
+    p.work_cv.notify_all();
+    let prev_budget = LOCAL_BUDGET.with(|c| {
+        let pb = c.get();
+        c.set(budget as *const Budget);
+        pb
+    });
+    // The caller is worker 0 of its own region: claim tasks, consume its
+    // own results inline, opportunistically drain helper deliveries
+    // between claims, then block for the stragglers. Every claimed index
+    // produces exactly one delivery (inline or queued), so `n` consumed
+    // means the region's work is fully accounted for.
+    let caller_result = catch_unwind(AssertUnwindSafe(|| {
+        let mut consumed = 0usize;
+        loop {
+            let i = header.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let v = f(i);
+            consume(i, v);
+            consumed += 1;
+            loop {
+                let d = lock(&queue.q).pop_front();
+                match d {
+                    Some(Delivery::Done(j, v)) => {
+                        consume(j, v);
+                        consumed += 1;
+                    }
+                    Some(Delivery::Aborted) => return,
+                    None => break,
+                }
+            }
+        }
+        while consumed < n {
+            let d = {
+                let mut q = lock(&queue.q);
+                loop {
+                    if let Some(d) = q.pop_front() {
+                        break d;
+                    }
+                    q = queue.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            match d {
+                Delivery::Done(j, v) => {
+                    consume(j, v);
+                    consumed += 1;
+                }
+                Delivery::Aborted => return,
+            }
+        }
+    }));
+    LOCAL_BUDGET.with(|c| c.set(prev_budget));
+    if let Err(payload) = caller_result {
+        header.next.store(n, Ordering::Relaxed);
+        let mut slot = lock(&header.panic);
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    // Retire the region exactly as `run_ref` does: reclaim unclaimed
+    // helper jobs, wait out the in-flight ones, release the permits, then
+    // re-raise any captured panic. Undelivered queue entries (abort
+    // paths) drop with this frame.
+    {
+        let mut q = lock(&p.queue);
+        let before = q.len();
+        let me: *const RegionHeader = &header;
+        q.retain(|j| !std::ptr::eq(j.header, me));
+        let removed = before - q.len();
+        drop(q);
+        if removed > 0 {
+            *lock(&header.pending) -= removed;
+        }
+    }
+    let mut pending = lock(&header.pending);
+    while *pending > 0 {
+        pending = header.done_cv.wait(pending).unwrap_or_else(|e| e.into_inner());
+    }
+    drop(pending);
+    budget.release(helpers);
+    if let Some(payload) = lock(&header.panic).take() {
+        resume_unwind(payload);
+    }
+}
+
 /// Split `data` into contiguous chunks of `chunk_len` elements (the last
 /// may be short) and run `f(chunk_index, chunk)` across the pool. The
 /// chunk geometry depends only on `data.len()` and `chunk_len`, keeping
@@ -661,8 +914,12 @@ pub fn for_each_chunk_mut<T: Send>(
 }
 
 /// Raw-pointer wrapper so disjoint-range writers can cross the closure
-/// `Sync` bound. Soundness is argued at each use site.
-pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+/// `Sync` bound. Soundness is argued at each use site: the caller must
+/// guarantee every task index touches a disjoint element/range (the
+/// [`run`]/[`map_consume`] contract of one task per index makes that
+/// easy). Public because external drivers (benches, the dist demo) use
+/// the same disjoint-index fan-out idiom as the in-crate kernels.
+pub struct SendPtr<T>(pub *mut T);
 
 unsafe impl<T> Send for SendPtr<T> {}
 
@@ -701,6 +958,78 @@ mod tests {
         }));
         assert_eq!(items, (1..=50).collect::<Vec<_>>());
         assert_eq!(doubled, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_consume_covers_every_index_once_on_the_caller_thread() {
+        for width in [1, 2, 4, 7] {
+            let caller = std::thread::current().id();
+            let mut seen = vec![0u32; 53];
+            let mut on_caller = true;
+            with_threads(width, || {
+                map_consume(
+                    53,
+                    |i| i * 3,
+                    |i, v| {
+                        assert_eq!(v, i * 3);
+                        seen[i] += 1;
+                        on_caller &= std::thread::current().id() == caller;
+                    },
+                );
+            });
+            assert!(seen.iter().all(|&c| c == 1), "width {width}: {seen:?}");
+            assert!(on_caller, "consume must run on the calling thread");
+        }
+    }
+
+    #[test]
+    fn map_consume_is_index_ordered_at_width_one() {
+        let mut order = Vec::new();
+        with_threads(1, || map_consume(9, |i| i, |i, _| order.push(i)));
+        assert_eq!(order, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_consume_propagates_task_panics() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                map_consume(64, |i| {
+                    if i == 23 {
+                        panic!("boom at 23");
+                    }
+                    i
+                }, |_, _| {});
+            });
+        }));
+        let payload = caught.expect_err("task panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("boom at 23"), "payload preserved, got {msg:?}");
+        // the pool survives and keeps serving regions
+        let out = with_threads(4, || map(16, |i| i + 1));
+        assert_eq!(out, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_consume_nests_inside_regions_and_respects_the_budget() {
+        // opened inside a width-2 root whose budget is already partly
+        // spent, the inner map_consume must still consume every index
+        // (serial-inline fallback when no permits remain)
+        let hits: Vec<AtomicUsize> = (0..4 * 16).map(|_| AtomicUsize::new(0)).collect();
+        with_threads(2, || {
+            run(4, |outer| {
+                let mut local = 0;
+                map_consume(16, |i| i, |i, _| {
+                    hits[outer * 16 + i].fetch_add(1, Ordering::SeqCst);
+                    local += 1;
+                });
+                assert_eq!(local, 16);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     #[test]

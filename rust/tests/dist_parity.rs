@@ -7,7 +7,8 @@
 
 use alice_racs::bench::dp_sweep;
 use alice_racs::dist::{
-    reduce, run_round, worker, DistConfig, Phase, RoundCoordinator, SyntheticGradSource,
+    reduce, run_round, run_round_pipelined, worker, DistConfig, EagerRound, Phase,
+    RoundCoordinator, SyntheticGradSource,
 };
 use alice_racs::linalg::Mat;
 use alice_racs::opt::{build, Hyper, Slot};
@@ -53,6 +54,47 @@ fn drive(dp: usize, width: usize, micro: usize, steps: u64) -> (Vec<u32>, Vec<Ve
                     slot.refresh(g, 0xd157 ^ t);
                 }
                 let delta = slot.step(g, t);
+                w.ema_(1.0, &delta, -0.01);
+            }
+        }
+        (losses, weights.into_iter().map(|w| w.data).collect())
+    })
+}
+
+/// The pipelined twin of [`drive`]: same coordinator, slots, weights and
+/// seeds, but each round runs through the eager-reduce path
+/// ([`run_round_pipelined`]) and the optimizer applies per-parameter
+/// folds ([`EagerRound::fold_param`]) instead of the monolithic reduced
+/// gradients. Overlap is scheduling only, so the bits must match
+/// [`drive`] exactly.
+fn drive_pipelined(
+    dp: usize,
+    width: usize,
+    micro: usize,
+    steps: u64,
+) -> (Vec<u32>, Vec<Vec<f32>>) {
+    pool::with_threads(width, || {
+        let dist = DistConfig { dp_workers: dp, ..DistConfig::default() };
+        let mut coord = dist.coordinator();
+        let s = src();
+        let hp = Hyper::default();
+        let mut slots: Vec<Slot> = s
+            .shapes
+            .iter()
+            .map(|&(r, c)| Slot::new(build("adam", &hp).expect("registry"), r, c))
+            .collect();
+        let mut weights: Vec<Mat> = s.shapes.iter().map(|&(r, c)| Mat::zeros(r, c)).collect();
+        let mut losses = Vec::new();
+        for t in 1..=steps {
+            let toks = tokens(micro, 1000 * t as i32);
+            let round = run_round_pipelined(&mut coord, &s, &toks).expect("pipelined round");
+            losses.push(round.fold_loss().to_bits());
+            for (p, (slot, w)) in slots.iter_mut().zip(weights.iter_mut()).enumerate() {
+                let g = round.fold_param(p);
+                if t == 1 {
+                    slot.refresh(&g, 0xd157 ^ t);
+                }
+                let delta = slot.step(&g, t);
                 w.ema_(1.0, &delta, -0.01);
             }
         }
@@ -208,6 +250,119 @@ fn run_round_drives_a_restored_mid_round_coordinator_to_the_same_bits() {
     // the re-executed round credits member 0 exactly once
     assert_eq!(c.members[0].rounds_done, 1);
     assert_eq!(c.members[0].micro_done, 3);
+}
+
+// ------------------------------------------------ pipelined round parity ---
+
+#[test]
+fn pipelined_round_matches_phased_bitwise_across_dp_width_and_micro() {
+    let steps = 3;
+    for micro in [8usize, 5, 13] {
+        let reference = drive(1, 1, micro, steps);
+        for dp in dp_sweep() {
+            for width in [1usize, 4] {
+                let got = drive_pipelined(dp, width, micro, steps);
+                assert_eq!(
+                    got.0, reference.0,
+                    "pipelined loss bits diverged: micro={micro} dp={dp} width={width}"
+                );
+                assert_eq!(
+                    got.1, reference.1,
+                    "pipelined weights diverged: micro={micro} dp={dp} width={width}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_requeue_mid_round_keeps_the_reduced_bits() {
+    // reference: a clean phased 3-worker round
+    let s = src();
+    let toks = tokens(9, 7);
+    let dist = DistConfig { dp_workers: 3, ..DistConfig::default() };
+    let mut clean = dist.coordinator();
+    let reference = run_round(&mut clean, &s, &toks).expect("clean round");
+
+    // faulty twin, driven through the eager reduce: worker 0's nodes are
+    // merged the moment they land, then worker 1 leaves mid-round and its
+    // shard is requeued onto worker 2 — the late sibling cascades into
+    // the already-merged spans
+    let mut coord = dist.coordinator();
+    coord.advance_to_train().unwrap();
+    coord.begin_round(9).unwrap();
+    let mut er = reduce::EagerReduce::new();
+    let shard0 = worker::run_shard(&s, &coord.assignments()[0], &toks).unwrap();
+    coord.complete(0, shard0.secs);
+    let spans0: Vec<(usize, usize)> = shard0.nodes.iter().map(|n| (n.lo, n.len)).collect();
+    coord.deliver_segments(&spans0);
+    er.offer_all(shard0.nodes);
+    coord.leave(1);
+    let merged = coord.assignments()[2].clone();
+    assert_eq!(merged, vec![6, 7, 8, 3, 4, 5], "requeue appends in index order");
+    let shard2 = worker::run_shard(&s, &merged, &toks).unwrap();
+    coord.complete(2, shard2.secs);
+    let spans2: Vec<(usize, usize)> = shard2.nodes.iter().map(|n| (n.lo, n.len)).collect();
+    coord.deliver_segments(&spans2);
+    er.offer_all(shard2.nodes);
+    assert_eq!(coord.tick(), Phase::Reduce);
+    assert!(coord.segments_complete());
+    assert_eq!(er.covered(), 9);
+    coord.finish_reduce(0.0);
+    coord.tick();
+
+    let round = EagerRound {
+        blocks: er.finish(),
+        micro: 9,
+        grad_secs: 0.0,
+        reduce_secs: 0.0,
+        reduce_overlap_secs: 0.0,
+    };
+    assert_eq!(
+        round.fold_loss().to_bits(),
+        reference.loss.to_bits(),
+        "requeued eager round must fold to the same loss bits"
+    );
+    for (p, r) in reference.grads.iter().enumerate() {
+        assert_eq!(
+            round.fold_param(p).data,
+            r.data,
+            "requeued eager fold must match bitwise (param {p})"
+        );
+    }
+    assert_eq!(coord.log[0].requeues, 3);
+}
+
+#[test]
+fn run_round_pipelined_resumes_a_mid_round_snapshot_to_the_same_bits() {
+    // mid-pipelined-round checkpoint: worker 0 has completed when the
+    // coordinator is snapshotted. The eager-reduce spans are transient
+    // (never checkpointed), so the restored round re-executes every
+    // shard — pure execution, identical bits
+    let s = src();
+    let toks = tokens(6, 42);
+    let dist = DistConfig { dp_workers: 2, ..DistConfig::default() };
+
+    let mut a = dist.coordinator();
+    let reference = run_round(&mut a, &s, &toks).expect("round");
+
+    let mut b = dist.coordinator();
+    b.advance_to_train().unwrap();
+    b.begin_round(6).unwrap();
+    let shard0 = worker::run_shard(&s, &b.assignments()[0], &toks).unwrap();
+    b.complete(0, shard0.secs);
+    let snap = b.snapshot();
+    drop(b);
+
+    let mut c = RoundCoordinator::restore(dist.round_cfg(), &snap).unwrap();
+    let resumed = run_round_pipelined(&mut c, &s, &toks).expect("resumed pipelined round");
+    assert_eq!(resumed.fold_loss().to_bits(), reference.loss.to_bits());
+    for (p, r) in reference.grads.iter().enumerate() {
+        assert_eq!(resumed.fold_param(p).data, r.data, "param {p}");
+    }
+    assert_eq!(c.round, 1);
+    assert_eq!(c.log.len(), 1);
+    assert_eq!(c.members[0].rounds_done, 1);
 }
 
 // ------------------------------------------------- trainer-level parity ---

@@ -86,13 +86,17 @@ fn open_loop_chaos_burst_drops_and_duplicates_nothing() {
                     if (i + p) % 7 == 0 {
                         std::thread::sleep(Duration::from_micros(300));
                     }
-                    assert!(ingress.submit(r.id, r.tokens));
+                    ingress.submit(r.id, r.tokens).unwrap();
                 }
             })
         })
         .collect();
     drop(ingress);
-    let policy = BatchPolicy { max_batch: 5, max_wait: Duration::from_millis(1) };
+    let policy = BatchPolicy {
+        max_batch: 5,
+        max_wait: Duration::from_millis(1),
+        max_queue_depth: 0,
+    };
     let resps = serve_loop(&src, &policy, q).unwrap();
     for h in producers {
         h.join().unwrap();
@@ -121,8 +125,11 @@ fn tcp_roundtrip_is_bitwise_and_width_invariant() {
         let addr = server.local_addr().to_string();
         let handle = std::thread::spawn(move || {
             let src = SyntheticScoreSource { work: 0 };
-            let policy =
-                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+            let policy = BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_queue_depth: 0,
+            };
             pool::with_threads(width, || {
                 server.serve(&src, &policy, n, Duration::from_secs(30))
             })

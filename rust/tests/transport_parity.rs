@@ -13,8 +13,8 @@ use std::thread::{self, JoinHandle};
 use alice_racs::bench;
 use alice_racs::dist::transport::{dec_witness_frame, enc_witness, run_worker, WorkerReport};
 use alice_racs::dist::{
-    demo, run_round_via, DistConfig, TcpCoordinator, Transport, TransportKind, WireCfg,
-    WitnessMember, WitnessReport, WorkerCfg,
+    demo, run_round_via, DistConfig, RoundMode, TcpCoordinator, Transport, TransportKind,
+    WireCfg, WitnessMember, WitnessReport, WorkerCfg,
 };
 
 fn wire(run_id: &str) -> WireCfg {
@@ -122,6 +122,41 @@ fn mid_round_disconnect_requeues_bitwise() {
 }
 
 #[test]
+fn tcp_pipelined_round_matches_loopback_phased_bitwise() {
+    // the pipelined dataflow over the real wire, pinned against the
+    // phased loopback reference: overlap (eager reduce at ShardDone
+    // arrival + per-parameter fan-out) is scheduling only, so even
+    // crossing transport AND round mode at once lands on the same bits
+    let phased = demo::DemoCfg { micro: 6, steps: 3, ..Default::default() };
+    let reference = demo::run_loopback(&phased, 2, 1).unwrap();
+    let pipelined = demo::DemoCfg { round: RoundMode::Pipelined, ..phased };
+    let (out, reports) = run_tcp_demo(&pipelined, "pipelined-parity", &[None, None], 2);
+    assert_eq!(out.loss_bits, reference.loss_bits, "pipelined TCP loss bits diverged");
+    assert_eq!(out.weight_digest, reference.weight_digest, "pipelined TCP weights diverged");
+    assert_eq!(out.rounds, 3);
+    assert_eq!(out.requeues, 0);
+    let total: usize = reports.iter().map(|r| r.micro).sum();
+    assert_eq!(total, 6 * 3, "every microbatch executed exactly once");
+}
+
+#[test]
+fn tcp_pipelined_disconnect_requeues_bitwise() {
+    // the chaos twin of the test above: the failing worker vanishes
+    // mid-round-2 *after* some of its sibling spans may already sit in
+    // the eager-reduce accumulator — the requeued re-execution must
+    // cascade into the same maximal blocks the phased stack builds
+    let phased = demo::DemoCfg { micro: 6, steps: 2, ..Default::default() };
+    let reference = demo::run_loopback(&phased, 2, 1).unwrap();
+    let pipelined = demo::DemoCfg { round: RoundMode::Pipelined, ..phased };
+    let (out, reports) = run_tcp_demo(&pipelined, "chaos-pipelined", &[None, Some(4)], 2);
+    assert_eq!(out.loss_bits, reference.loss_bits, "requeue changed the pipelined loss bits");
+    assert_eq!(out.weight_digest, reference.weight_digest, "requeue changed the weights");
+    assert_eq!(out.requeues, 3, "the dead worker's round-2 shard requeues whole");
+    let failed = reports.iter().find(|r| r.micro == 4).expect("failing worker report");
+    assert_eq!(failed.shards, 1, "crashed mid-shard, so only round 1 counts");
+}
+
+#[test]
 fn witness_frame_roundtrips_the_wire_encoding() {
     // codec-level twin of the broadcast checks above: an arbitrary report
     // survives enc → frame → dec bit-for-bit (f64 fields are exact powers
@@ -218,10 +253,18 @@ fn wrong_run_id_is_rejected() {
 
 #[test]
 fn env_selected_transport_matches_reference() {
-    // the CI dist cell runs this suite twice, AR_TRANSPORT={loopback,tcp}:
-    // both cells must land on the same reference bits
-    let cfg = demo::DemoCfg { micro: 8, steps: 4, ..Default::default() };
-    let reference = demo::run_loopback(&cfg, 2, 1).unwrap();
+    // the CI dist matrix runs this suite per AR_TRANSPORT={loopback,tcp}
+    // × AR_ROUND={phased,pipelined} cell: every cell must land on the
+    // same reference bits (phased loopback, the repo's ground truth)
+    let reference =
+        demo::run_loopback(&demo::DemoCfg { micro: 8, steps: 4, ..Default::default() }, 2, 1)
+            .unwrap();
+    let cfg = demo::DemoCfg {
+        micro: 8,
+        steps: 4,
+        round: bench::bench_round(),
+        ..Default::default()
+    };
     let out = match bench::bench_transport() {
         TransportKind::Loopback => demo::run_loopback(&cfg, 3, 2).unwrap(),
         TransportKind::Tcp => run_tcp_demo(&cfg, "env-axis", &[None, None, None], 3).0,
